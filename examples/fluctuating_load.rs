@@ -1,0 +1,53 @@
+//! Rate-fluctuation adaptation demo (the Fig 14 experiment, compact):
+//! the adaptive server re-schedules every 20 s while two load waves
+//! sweep through, growing and shrinking gpu-let allocations.
+//!
+//!     cargo run --release --example fluctuating_load [duration_s]
+
+use gpulets::coordinator::AdaptiveServer;
+use gpulets::experiments::common::paper_ctx;
+use gpulets::models::ModelId;
+use gpulets::sched::ElasticPartitioning;
+use gpulets::workload::FluctuationTrace;
+
+fn main() {
+    let duration_s: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(600.0);
+    let ctx = paper_ctx(false);
+    let scheduler = ElasticPartitioning::gpulet();
+    let server = AdaptiveServer::new(&ctx, &scheduler);
+    let trace = FluctuationTrace::default();
+
+    println!("== adaptive serving over a fluctuating trace ({duration_s} s) ==");
+    println!("t(s)  total-req/s  alloc%  viol%  reorg");
+    let stats = server.run_trace(&trace, duration_s, 2024);
+    for w in &stats {
+        let total: f64 = w.throughput.iter().sum();
+        let bar_len = (w.allocated_pct / 10) as usize;
+        println!(
+            "{:>4.0} {:>12.0} {:>7} {:>6.2} {:>6} {}",
+            w.t_start_s,
+            total,
+            w.allocated_pct,
+            w.violation_rate * 100.0,
+            if w.reorganized { "*" } else { "" },
+            "#".repeat(bar_len),
+        );
+    }
+
+    let total_thr: f64 = stats.iter().map(|w| w.throughput.iter().sum::<f64>()).sum();
+    let weighted: f64 = stats
+        .iter()
+        .map(|w| w.violation_rate * w.throughput.iter().sum::<f64>())
+        .sum();
+    println!(
+        "\noverall violation share: {:.2}% (paper Fig 14: 0.14%)",
+        100.0 * weighted / total_thr.max(1e-9)
+    );
+    let peak = stats.iter().map(|w| w.allocated_pct).max().unwrap_or(0);
+    let trough = stats.iter().map(|w| w.allocated_pct).min().unwrap_or(0);
+    println!("allocation range: {trough}%..{peak}% of the 400% cluster");
+    let _ = ModelId::ALL; // (doc hint: per-model series available in WindowStats)
+}

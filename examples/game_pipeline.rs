@@ -1,0 +1,80 @@
+//! The `game` multi-model application (Fig 10) served end to end on the
+//! simulated 4-GPU cluster: six parallel LeNet digit recognitions plus
+//! one ResNet-50 image recognition per game frame.
+//!
+//! Shows the full pipeline: app -> induced model rates -> Elastic
+//! Partitioning schedule -> discrete-event serving -> app-level
+//! latency accounting (max over the parallel branches).
+//!
+//!     cargo run --release --example game_pipeline [app_fps]
+
+use gpulets::apps::App;
+use gpulets::coordinator::simserver::{simulate, SimConfig};
+use gpulets::experiments::common::paper_ctx;
+use gpulets::interference::GroundTruth;
+use gpulets::models::ModelId;
+use gpulets::perfmodel::LatencyModel;
+use gpulets::sched::{ElasticPartitioning, Scheduler};
+use gpulets::workload::generate_arrivals;
+
+fn main() -> gpulets::Result<()> {
+    let fps: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120.0);
+    let app = App::game();
+    println!("== {} app at {fps} req/s ==", app.name);
+    println!(
+        "{} model invocations per request; app SLO {} ms",
+        app.invocations_per_request(),
+        app.slo_ms
+    );
+
+    let rates = app.induced_rates(fps);
+    let ctx = paper_ctx(true);
+    let scheduler = ElasticPartitioning::gpulet_int();
+    let schedule = scheduler.schedule(&ctx, &rates)?;
+    println!(
+        "\nschedule: {} gpu-lets, {}% of cluster allocated",
+        schedule.lets.len(),
+        schedule.total_allocated_pct()
+    );
+    for lp in &schedule.lets {
+        let asg: Vec<String> = lp
+            .assignments
+            .iter()
+            .map(|a| format!("{}@b{} {:.0}r/s", a.model.abbrev(), a.batch, a.rate))
+            .collect();
+        println!("  gpu{} {:>3}%: {}", lp.spec.gpu, lp.spec.size_pct, asg.join(" + "));
+    }
+
+    let duration_s = 20.0;
+    let pairs: Vec<(ModelId, f64)> = ModelId::ALL
+        .iter()
+        .map(|&m| (m, rates[m.index()]))
+        .filter(|&(_, r)| r > 0.0)
+        .collect();
+    let arrivals = generate_arrivals(&pairs, duration_s, 33);
+    let lm = LatencyModel::new();
+    let report = simulate(
+        &lm,
+        &GroundTruth::default(),
+        &schedule,
+        &arrivals,
+        duration_s,
+        &SimConfig::default(),
+    );
+    println!("\ncomponent-level metrics:\n{}", report.table());
+
+    // App-level latency estimate: the game frame completes when its
+    // slowest branch does (critical path over p99 component latencies).
+    let app_p99 = app.critical_path_ms(|m| {
+        report.model(m).map_or(0.0, |mm| mm.p99_ms())
+    });
+    println!("app critical-path p99: {app_p99:.1} ms (SLO {} ms)", app.slo_ms);
+    println!(
+        "overall component SLO violations: {:.2}%",
+        report.overall_violation_rate() * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Schedulability sweep: all four practical schedulers + the ideal
+//! exhaustive search over the paper's 1,023-scenario population
+//! (Fig 4 + Fig 15 in one table).
+//!
+//!     cargo run --release --example schedulability_sweep
+
+use std::time::Instant;
+
+use gpulets::experiments::common::paper_ctx;
+use gpulets::sched::{
+    ElasticPartitioning, GuidedSelfTuning, IdealScheduler, Scheduler,
+    SquishyBinPacking,
+};
+use gpulets::workload::enumerate_all_scenarios;
+
+fn main() {
+    let ctx = paper_ctx(false);
+    let ctx_int = paper_ctx(true);
+    let scenarios = enumerate_all_scenarios();
+    println!(
+        "== schedulability over {} scenarios (4 GPUs, rates 0/200/400/600) ==",
+        scenarios.len()
+    );
+
+    let runs: Vec<(&str, Box<dyn Fn(&[f64; 5]) -> bool>)> = vec![
+        ("sbp", {
+            let s = SquishyBinPacking::baseline();
+            let c = &ctx;
+            Box::new(move |r| s.schedule(c, r).is_ok())
+        }),
+        ("sbp+50:50", {
+            let s = SquishyBinPacking::with_even_partitioning();
+            let c = &ctx;
+            Box::new(move |r| s.schedule(c, r).is_ok())
+        }),
+        ("selftune", {
+            let s = GuidedSelfTuning;
+            let c = &ctx;
+            Box::new(move |r| s.schedule(c, r).is_ok())
+        }),
+        ("gpulet", {
+            let s = ElasticPartitioning::gpulet();
+            let c = &ctx;
+            Box::new(move |r| s.schedule(c, r).is_ok())
+        }),
+        ("gpulet+int", {
+            let s = ElasticPartitioning::gpulet_int();
+            let c = &ctx_int;
+            Box::new(move |r| s.schedule(c, r).is_ok())
+        }),
+        ("ideal", {
+            let s = IdealScheduler;
+            let c = &ctx;
+            Box::new(move |r| s.schedule(c, r).is_ok())
+        }),
+    ];
+
+    println!("{:<12} {:>11} {:>9}", "scheduler", "schedulable", "time");
+    for (name, ok) in &runs {
+        let t0 = Instant::now();
+        let n = scenarios.iter().filter(|sc| ok(&sc.rates)).count();
+        println!(
+            "{:<12} {:>6} /1023 {:>8.2?}",
+            name,
+            n,
+            t0.elapsed()
+        );
+    }
+}

@@ -1,0 +1,84 @@
+//! The `traffic` surveillance application (Fig 11) on the simulated
+//! cluster: SSD-MobileNet object detection feeding GoogLeNet and
+//! VGG-16 recognizers (two stages), per camera frame.
+//!
+//! Compares the four schedulers on the same offered load, then runs
+//! the chosen schedule through the simulator.
+//!
+//!     cargo run --release --example traffic_pipeline [camera_fps]
+
+use gpulets::apps::App;
+use gpulets::coordinator::simserver::{simulate, SimConfig};
+use gpulets::experiments::common::paper_ctx;
+use gpulets::interference::GroundTruth;
+use gpulets::models::ModelId;
+use gpulets::perfmodel::LatencyModel;
+use gpulets::sched::{
+    ElasticPartitioning, GuidedSelfTuning, Scheduler, SquishyBinPacking,
+};
+use gpulets::workload::generate_arrivals;
+
+fn main() -> gpulets::Result<()> {
+    let fps: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150.0);
+    let app = App::traffic();
+    println!("== {} app at {fps} frames/s ==", app.name);
+    let rates = app.induced_rates(fps);
+
+    // Which schedulers even accept this load?
+    let ctx = paper_ctx(false);
+    let ctx_int = paper_ctx(true);
+    let sbp = SquishyBinPacking::baseline();
+    let st = GuidedSelfTuning;
+    let gp = ElasticPartitioning::gpulet();
+    let gi = ElasticPartitioning::gpulet_int();
+    println!("\nscheduler admission at this rate:");
+    for (name, ok) in [
+        ("sbp", sbp.schedule(&ctx, &rates).is_ok()),
+        ("selftune", st.schedule(&ctx, &rates).is_ok()),
+        ("gpulet", gp.schedule(&ctx, &rates).is_ok()),
+        ("gpulet+int", gi.schedule(&ctx_int, &rates).is_ok()),
+    ] {
+        println!("  {name:<11} {}", if ok { "Schedulable" } else { "NOT schedulable" });
+    }
+
+    let schedule = gi.schedule(&ctx_int, &rates)?;
+    println!(
+        "\ngpulet+int schedule ({}% allocated):",
+        schedule.total_allocated_pct()
+    );
+    for lp in &schedule.lets {
+        let asg: Vec<String> = lp
+            .assignments
+            .iter()
+            .map(|a| format!("{}@b{} {:.0}r/s", a.model.abbrev(), a.batch, a.rate))
+            .collect();
+        println!("  gpu{} {:>3}%: {}", lp.spec.gpu, lp.spec.size_pct, asg.join(" + "));
+    }
+
+    let duration_s = 20.0;
+    let pairs: Vec<(ModelId, f64)> = ModelId::ALL
+        .iter()
+        .map(|&m| (m, rates[m.index()]))
+        .filter(|&(_, r)| r > 0.0)
+        .collect();
+    let arrivals = generate_arrivals(&pairs, duration_s, 44);
+    let report = simulate(
+        &LatencyModel::new(),
+        &GroundTruth::default(),
+        &schedule,
+        &arrivals,
+        duration_s,
+        &SimConfig::default(),
+    );
+    println!("\n{}", report.table());
+
+    // Two-stage app latency: SSD p99, then max(GoogLeNet, VGG) p99.
+    let p99 = |m: ModelId| report.model(m).map_or(0.0, |mm| mm.p99_ms());
+    let app_p99 = p99(ModelId::SsdMobilenet)
+        + p99(ModelId::Googlenet).max(p99(ModelId::Vgg));
+    println!("app two-stage p99: {app_p99:.1} ms (SLO {} ms)", app.slo_ms);
+    Ok(())
+}

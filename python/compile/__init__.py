@@ -1,0 +1,6 @@
+"""Build-time-only package: L1 Pallas kernels, L2 JAX models, AOT lowering.
+
+Nothing in here is imported at serving time — `make artifacts` runs
+`compile.aot` once and the Rust coordinator consumes the emitted HLO
+text + manifest.
+"""

@@ -1,0 +1,116 @@
+"""AOT lowering: JAX models -> HLO *text* artifacts + manifest for Rust.
+
+HLO text (NOT `lowered.compile().serialize()` / proto bytes) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (behind the `xla` crate)
+rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --outdir ../artifacts
+Emits:  <outdir>/<model>_b<batch>.hlo.txt  for every (model, batch)
+        <outdir>/manifest.json             shapes + SLOs for the runtime
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import BATCH_SIZES, CATALOG, build_model
+
+
+def golden_input(shape) -> np.ndarray:
+    """Deterministic, dtype-stable test input: ((i * 31) % 17) / 17."""
+    n = int(np.prod(shape))
+    flat = ((np.arange(n) * 31) % 17).astype(np.float32) / 17.0
+    return flat.reshape(shape)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    `print_large_constants=True` is essential: the default elides big
+    weight tensors as `constant({...})`, which the Rust-side HLO text
+    parser silently reads as zeros.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def lower_model(name: str, batch: int):
+    """Lower one (model, batch) to HLO text; returns (text, in/out shapes)."""
+    apply_fn, example = build_model(name, batch)
+    lowered = jax.jit(apply_fn).lower(example)
+    out_shape = jax.eval_shape(apply_fn, example)
+    return to_hlo_text(lowered), tuple(example.shape), tuple(out_shape.shape)
+
+
+def artifact_name(name: str, batch: int) -> str:
+    return f"{name}_b{batch}.hlo.txt"
+
+
+def emit(outdir: str, models=None, batches=BATCH_SIZES, verbose=True) -> dict:
+    """Lower every (model, batch) pair into `outdir`; write manifest.json."""
+    os.makedirs(outdir, exist_ok=True)
+    models = list(models or CATALOG)
+    manifest = {"batch_sizes": list(batches), "models": {}}
+    for name in models:
+        info = CATALOG[name]
+        entry = {
+            "abbrev": info.abbrev,
+            "slo_ms": info.slo_ms,
+            "input_shape": list(info.input_shape),
+            "artifacts": {},
+        }
+        for b in batches:
+            text, in_shape, out_shape = lower_model(name, b)
+            fname = artifact_name(name, b)
+            with open(os.path.join(outdir, fname), "w") as f:
+                f.write(text)
+            entry["artifacts"][str(b)] = {
+                "file": fname,
+                "input_shape": list(in_shape),
+                "output_shape": list(out_shape),
+            }
+            if verbose:
+                print(f"  {fname}: in={in_shape} out={out_shape} ({len(text)} chars)")
+        entry["output_dim"] = entry["artifacts"][str(batches[0])]["output_shape"][-1]
+        # Golden vector: the L2 model's own output on a fixed input, so
+        # the Rust runtime can verify end-to-end numerics (catches e.g.
+        # constant elision or layout bugs in the interchange).
+        b0 = batches[0]
+        apply_fn, example = build_model(name, b0)
+        gx = golden_input(example.shape)
+        gy = np.asarray(apply_fn(jnp.asarray(gx)))
+        entry["golden"] = {
+            "batch": int(b0),
+            "output": [round(float(v), 6) for v in gy[0].tolist()],
+        }
+        manifest["models"][name] = entry
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"wrote manifest for {len(models)} models to {outdir}/manifest.json")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=None)
+    ap.add_argument(
+        "--batches", nargs="*", type=int, default=list(BATCH_SIZES)
+    )
+    args = ap.parse_args()
+    emit(args.outdir, models=args.models, batches=tuple(args.batches))
+
+
+if __name__ == "__main__":
+    main()

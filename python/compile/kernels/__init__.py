@@ -1,0 +1,24 @@
+"""Layer-1 Pallas kernels (interpret=True) used by the L2 models.
+
+Every kernel here has a pure-jnp oracle in `ref.py`; pytest asserts
+allclose between the two. Kernels run in Pallas interpret mode so the
+lowered HLO contains plain ops executable by the CPU PJRT client (real
+TPU lowering would emit a Mosaic custom-call — compile-only for us; see
+DESIGN.md §Hardware-Adaptation).
+"""
+
+from .matmul import matmul
+from .conv2d import conv2d, depthwise_conv2d
+from .elementwise import bias_act, add_act
+from .pool import maxpool2d, avgpool2d, global_avgpool
+
+__all__ = [
+    "matmul",
+    "conv2d",
+    "depthwise_conv2d",
+    "bias_act",
+    "add_act",
+    "maxpool2d",
+    "avgpool2d",
+    "global_avgpool",
+]

@@ -1,0 +1,63 @@
+"""Fused elementwise Pallas kernels: bias+activation and residual add.
+
+Fusing bias/activation into one kernel invocation keeps the activation
+tensor resident in VMEM for a single HBM round-trip — the TPU analogue
+of the epilogue fusion GPU serving stacks do in their conv kernels.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_ACTS = ("relu", "none")
+
+
+def _bias_act_kernel(act):
+    def kernel(x_ref, b_ref, o_ref):
+        y = x_ref[...] + b_ref[...]
+        if act == "relu":
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def bias_act(x, b, *, act: str = "relu"):
+    """x + b (broadcast over trailing dim) then activation, fused."""
+    if act not in _ACTS:
+        raise ValueError(f"unknown act {act!r}; expected one of {_ACTS}")
+    if b.ndim != 1 or x.shape[-1] != b.shape[0]:
+        raise ValueError(f"bias shape {b.shape} incompatible with x {x.shape}")
+    bb = jnp.broadcast_to(b, x.shape)
+    return pl.pallas_call(
+        _bias_act_kernel(act),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), bb.astype(jnp.float32))
+
+
+def _add_act_kernel(act):
+    def kernel(x_ref, y_ref, o_ref):
+        z = x_ref[...] + y_ref[...]
+        if act == "relu":
+            z = jnp.maximum(z, 0.0)
+        o_ref[...] = z
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def add_act(x, y, *, act: str = "relu"):
+    """Residual add then activation, fused (ResNet skip connections)."""
+    if act not in _ACTS:
+        raise ValueError(f"unknown act {act!r}; expected one of {_ACTS}")
+    if x.shape != y.shape:
+        raise ValueError(f"shape mismatch {x.shape} vs {y.shape}")
+    return pl.pallas_call(
+        _add_act_kernel(act),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), y.astype(jnp.float32))

@@ -1,0 +1,132 @@
+"""Tiled matmul Pallas kernel — the compute hot-spot of every served model.
+
+TPU mapping of the paper's GPU insight (DESIGN.md §Hardware-Adaptation):
+the grid tiles (M, N, K) into VMEM-resident blocks; each grid step feeds
+one (block_m x block_k) @ (block_k x block_n) MXU matmul and accumulates
+into the output block. BlockSpec expresses the HBM<->VMEM schedule the
+paper expressed with threadblocks; the partition fraction of a gpu-let
+corresponds to the share of parallel grid lanes available.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 64x64 f32 blocks keep the working set
+# (bm*bk + bk*bn + bm*bn) * 4B = 48 KiB far under a ~16 MiB VMEM budget
+# while remaining MXU-shaped (multiples of 8x128 lanes after padding).
+DEFAULT_BLOCK_M = 64
+DEFAULT_BLOCK_N = 64
+DEFAULT_BLOCK_K = 64
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """Grid step (i, j, k): o[i,j] += x[i,k] @ w[k,j], zero-init at k==0."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def effective_block(block: int, dim: int) -> int:
+    """Block actually used for a dimension of size `dim`: clamped to the
+    problem, rounded up to a multiple of 8 for MXU lane alignment."""
+    r8 = -(-max(dim, 1) // 8) * 8
+    return min(block, r8)
+
+
+def _pad_to(x, multiple, axis):
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k")
+)
+def matmul(
+    x,
+    w,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+):
+    """`x @ w` for 2-D f32/bf16 operands via the tiled Pallas kernel.
+
+    Inputs are zero-padded up to block multiples and the result is
+    sliced back, so arbitrary (m, k) x (k, n) shapes are accepted.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape} @ {w.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    m, k = x.shape
+    _, n = w.shape
+
+    # Clamp blocks to the problem so tiny layers stay one tile, but
+    # keep them multiples of 8 (MXU sublane alignment): a 25-wide
+    # contraction gets a 32-wide block, not a ragged 25-wide one.
+    bm = effective_block(block_m, m)
+    bn = effective_block(block_n, n)
+    bk = effective_block(block_k, k)
+
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp.astype(jnp.float32), wp.astype(jnp.float32))
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    dtype_bytes: int = 4,
+) -> int:
+    """Per-grid-step VMEM residency: one x, w and o block (double-buffered x2)."""
+    single = (block_m * block_k + block_k * block_n + block_m * block_n) * dtype_bytes
+    return 2 * single
+
+
+def mxu_utilization_estimate(
+    m: int,
+    n: int,
+    k: int,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> float:
+    """Useful-FLOP fraction after padding to block multiples — the share of
+    MXU issue slots doing real work (structure-level estimate; interpret
+    mode gives no hardware counters)."""
+
+    def _ceil(a, b):
+        return -(-a // b) * b
+
+    useful = 2.0 * m * n * k
+    padded = 2.0 * _ceil(m, block_m) * _ceil(n, block_n) * _ceil(k, block_k)
+    return useful / padded

@@ -1,0 +1,57 @@
+"""Pooling Pallas kernels (NHWC)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref):
+    # x block: (N, H', k, W', k, C) — reduce the two window axes.
+    o_ref[...] = jnp.max(x_ref[...], axis=(2, 4))
+
+
+def _avgpool_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.mean(x_ref[...], axis=(2, 4))
+
+
+def _pool(x, k, kernel):
+    n, h, w, c = x.shape
+    if h % k or w % k:
+        # Edge-crop like PyTorch's floor-mode pooling.
+        x = x[:, : h - h % k, : w - w % k, :]
+        n, h, w, c = x.shape
+    xr = x.reshape(n, h // k, k, w // k, k, c)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, h // k, w // k, c), jnp.float32),
+        interpret=True,
+    )(xr.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def maxpool2d(x, *, k: int = 2):
+    """k x k max pool, stride k."""
+    return _pool(x, k, _maxpool_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def avgpool2d(x, *, k: int = 2):
+    """k x k average pool, stride k."""
+    return _pool(x, k, _avgpool_kernel)
+
+
+def _gap_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.mean(x_ref[...], axis=(1, 2))
+
+
+@jax.jit
+def global_avgpool(x):
+    """(N,H,W,C) -> (N,C) global average pool."""
+    n, h, w, c = x.shape
+    return pl.pallas_call(
+        _gap_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, c), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: python/tests/ asserts
+`assert_allclose(kernel(...), ref.<same>(...))` across shape/dtype
+sweeps (hypothesis) before anything is AOT-lowered for the Rust side.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul(x, w):
+    return jnp.matmul(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _pad_tuple(padding):
+    if padding in ("SAME", "VALID"):
+        return padding
+    return tuple(padding)
+
+
+def conv2d(x, w, *, stride=1, padding="SAME"):
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=_pad_tuple(padding),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def depthwise_conv2d(x, w, *, stride=1, padding="SAME"):
+    c = x.shape[-1]
+    wf = w[:, :, None, :].astype(jnp.float32)  # (kh,kw,1,C) HWIO with groups=C
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        wf,
+        window_strides=(stride, stride),
+        padding=_pad_tuple(padding),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+
+
+def bias_act(x, b, *, act="relu"):
+    y = x.astype(jnp.float32) + b.astype(jnp.float32)
+    return jnp.maximum(y, 0.0) if act == "relu" else y
+
+
+def add_act(x, y, *, act="relu"):
+    z = x.astype(jnp.float32) + y.astype(jnp.float32)
+    return jnp.maximum(z, 0.0) if act == "relu" else z
+
+
+def _pool(x, k, fn):
+    n, h, w, c = x.shape
+    x = x[:, : h - h % k, : w - w % k, :].astype(jnp.float32)
+    n, h, w, c = x.shape
+    return fn(x.reshape(n, h // k, k, w // k, k, c), axis=(2, 4))
+
+
+def maxpool2d(x, *, k=2):
+    return _pool(x, k, jnp.max)
+
+
+def avgpool2d(x, *, k=2):
+    return _pool(x, k, jnp.mean)
+
+
+def global_avgpool(x):
+    return jnp.mean(x.astype(jnp.float32), axis=(1, 2))

@@ -1,0 +1,110 @@
+"""L1 structure/perf report: VMEM footprint + MXU-utilization estimates.
+
+interpret=True gives CPU-numpy timings, which are NOT a TPU proxy
+(DESIGN.md §9): the optimization target at L1 is *structure* — block
+shapes that fit VMEM with double-buffering and keep the MXU issue slots
+full. This report prints, per served model, the matmul-kernel tiles its
+layers lower to and their footprint/utilization estimates.
+
+Usage: cd python && python -m compile.kernels.report
+"""
+
+from ..model import CATALOG, build_model
+from .matmul import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_M,
+    DEFAULT_BLOCK_N,
+    effective_block,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+
+#: The matmul problems each model's conv/dense layers lower to via
+#: im2col at batch 8 (rows = batch * out_h * out_w, k = cin*kh*kw).
+MODEL_MATMULS = {
+    "lenet": [
+        (8 * 28 * 28, 25, 6),
+        (8 * 14 * 14, 150, 16),
+        (8, 784, 120),
+        (8, 120, 84),
+        (8, 84, 10),
+    ],
+    "googlenet": [
+        (8 * 32 * 32, 27, 16),
+        (8 * 16 * 16, 16, 8),
+        (8 * 16 * 16, 72, 16),
+        (8 * 16 * 16, 100, 8),
+        (8 * 16 * 16, 40, 16),
+        (8, 64, 10),
+    ],
+    "resnet": [
+        (8 * 32 * 32, 27, 16),
+        (8 * 32 * 32, 144, 16),
+        (8 * 16 * 16, 144, 32),
+        (8 * 16 * 16, 288, 32),
+        (8 * 8 * 8, 288, 64),
+        (8, 64, 10),
+    ],
+    "ssd_mobilenet": [
+        (8 * 38 * 38, 27, 16),
+        (8 * 38 * 38, 16, 24),
+        (8 * 19 * 19, 24, 32),
+        (8 * 19 * 19, 32, 48),
+        (8 * 10 * 10, 48, 64),
+        (8 * 10 * 10, 576, 24),
+        (8 * 10 * 10, 576, 16),
+    ],
+    "vgg": [
+        (8 * 32 * 32, 27, 24),
+        (8 * 32 * 32, 216, 24),
+        (8 * 16 * 16, 216, 48),
+        (8 * 16 * 16, 432, 48),
+        (8 * 8 * 8, 432, 96),
+        (8 * 8 * 8, 864, 96),
+        (8, 1536, 128),
+        (8, 128, 64),
+        (8, 64, 10),
+    ],
+}
+
+VMEM_BUDGET = 16 * 1024 * 1024  # 16 MiB scratchpad
+
+
+def report() -> str:
+    lines = ["# L1 kernel structure report (batch 8, default tiles)"]
+    lines.append(
+        f"tiles: bm={DEFAULT_BLOCK_M} bn={DEFAULT_BLOCK_N} bk={DEFAULT_BLOCK_K}; "
+        f"per-step VMEM (double-buffered): {vmem_footprint_bytes() / 1024:.0f} KiB "
+        f"({vmem_footprint_bytes() / VMEM_BUDGET * 100:.1f}% of 16 MiB budget)"
+    )
+    for name, mms in MODEL_MATMULS.items():
+        # Use the tiles the kernel actually picks (clamped + 8-aligned).
+        utils = [
+            mxu_utilization_estimate(
+                m, n, k,
+                block_m=effective_block(DEFAULT_BLOCK_M, m),
+                block_n=effective_block(DEFAULT_BLOCK_N, n),
+                block_k=effective_block(DEFAULT_BLOCK_K, k),
+            )
+            for (m, k, n) in mms
+        ]
+        worst = min(utils)
+        mean = sum(utils) / len(utils)
+        lines.append(
+            f"{name:<15} {len(mms)} matmuls  MXU-util mean {mean:.2f}  worst {worst:.2f}"
+        )
+    lines.append(
+        "target: mean >= 0.5 of roofline issue slots (DESIGN.md §9)"
+    )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    print(report())
+    # Sanity: the catalog models actually build (keeps this report honest).
+    for name in CATALOG:
+        build_model(name, 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""L2 model registry — the single entry point the AOT pipeline and tests use.
+
+Catalog metadata mirrors the paper's Table 4 (model set, input data,
+SLO). SLOs are enforced by the Rust coordinator, not here; they ride
+along in the artifact manifest so the serving side needs no Python.
+"""
+
+from dataclasses import dataclass
+
+from .models import BUILDERS
+from .models import googlenet, lenet, resnet, ssd_mobilenet, vgg
+
+#: Batch sizes the paper sweeps (Fig 3) and the max it serves (Table 4).
+BATCH_SIZES = (1, 2, 4, 8, 16, 32)
+
+
+@dataclass(frozen=True)
+class ModelInfo:
+    """Static, serving-relevant facts about one served model."""
+
+    name: str
+    abbrev: str
+    input_shape: tuple  # HWC, per-sample
+    out_dim_hint: str
+    slo_ms: float  # Table 4 SLO (2x solo latency at b=32 on the paper GPU)
+
+
+CATALOG = {
+    "lenet": ModelInfo("lenet", "le", lenet.INPUT_SHAPE, "10 logits", 5.0),
+    "googlenet": ModelInfo("googlenet", "goo", googlenet.INPUT_SHAPE, "10 logits", 44.0),
+    "resnet": ModelInfo("resnet", "res", resnet.INPUT_SHAPE, "10 logits", 95.0),
+    "ssd_mobilenet": ModelInfo(
+        "ssd_mobilenet", "ssd", ssd_mobilenet.INPUT_SHAPE, "cls+loc dets", 136.0
+    ),
+    "vgg": ModelInfo("vgg", "vgg", vgg.INPUT_SHAPE, "10 logits", 130.0),
+}
+
+MODEL_NAMES = tuple(CATALOG)
+
+
+def build_model(name: str, batch: int):
+    """Return `(apply_fn, example_input)` for `name` at `batch`."""
+    if name not in BUILDERS:
+        raise KeyError(f"unknown model {name!r}; have {sorted(BUILDERS)}")
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    return BUILDERS[name](batch)

@@ -1,0 +1,26 @@
+"""Layer-2 served models — tiny JAX analogues of the paper's five DNNs.
+
+Each module exposes `build(batch) -> (apply_fn, example_input)` where
+`apply_fn` closes over deterministic (seeded) parameters and returns a
+single (batch, out_dim) logits/detections tensor. All hot FLOPs flow
+through the L1 Pallas kernels.
+
+The paper served PyTorch GoogLeNet / LeNet / ResNet50 / SSD-MobileNet /
+VGG-16 on 2080 Ti GPUs. Our CPU-PJRT substrate cannot run those at
+serving rates, so we keep the topology *family* (inception branches,
+residual skips, depthwise-separable + detection heads, deep VGG stacks)
+at reduced width/depth, and carry the paper's relative cost ratios in
+the Rust latency model (DESIGN.md §3 substitution table).
+"""
+
+from . import lenet, googlenet, resnet, ssd_mobilenet, vgg
+
+BUILDERS = {
+    "lenet": lenet.build,
+    "googlenet": googlenet.build,
+    "resnet": resnet.build,
+    "ssd_mobilenet": ssd_mobilenet.build,
+    "vgg": vgg.build,
+}
+
+__all__ = ["BUILDERS", "lenet", "googlenet", "resnet", "ssd_mobilenet", "vgg"]

@@ -1,0 +1,93 @@
+"""Shared layer helpers for the L2 models — every layer is built on the
+L1 Pallas kernels (matmul/conv2d/depthwise/bias_act/add_act/pools)."""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import (
+    add_act,
+    avgpool2d,
+    bias_act,
+    conv2d,
+    depthwise_conv2d,
+    global_avgpool,
+    matmul,
+    maxpool2d,
+)
+
+__all__ = [
+    "ParamGen",
+    "conv_relu",
+    "dw_separable",
+    "dense",
+    "residual_block",
+    "flatten",
+    "add_act",
+    "avgpool2d",
+    "global_avgpool",
+    "maxpool2d",
+]
+
+
+class ParamGen:
+    """Deterministic parameter factory: He-style init from a seeded key.
+
+    Serving never trains, so parameters only need stable, well-scaled
+    values — the same seed yields bit-identical artifacts across builds
+    (reproducible `make artifacts`).
+    """
+
+    def __init__(self, seed: int):
+        self._key = jax.random.PRNGKey(seed)
+
+    def _next(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def conv(self, kh, kw, cin, cout):
+        fan_in = kh * kw * cin
+        w = jax.random.normal(self._next(), (kh, kw, cin, cout), jnp.float32)
+        return w * (2.0 / fan_in) ** 0.5
+
+    def dwconv(self, kh, kw, c):
+        w = jax.random.normal(self._next(), (kh, kw, c), jnp.float32)
+        return w * (2.0 / (kh * kw)) ** 0.5
+
+    def dense(self, din, dout):
+        w = jax.random.normal(self._next(), (din, dout), jnp.float32)
+        return w * (2.0 / din) ** 0.5
+
+    def bias(self, d):
+        return jnp.zeros((d,), jnp.float32)
+
+
+def conv_relu(x, w, b, *, stride=1, padding="SAME", act="relu"):
+    """conv2d -> fused bias+activation."""
+    return bias_act(conv2d(x, w, stride=stride, padding=padding), b, act=act)
+
+
+def dw_separable(x, dw_w, dw_b, pw_w, pw_b, *, stride=1):
+    """MobileNet depthwise-separable block: dw conv -> relu -> 1x1 conv -> relu."""
+    y = bias_act(depthwise_conv2d(x, dw_w, stride=stride), dw_b, act="relu")
+    return bias_act(conv2d(y, pw_w, stride=1, padding="SAME"), pw_b, act="relu")
+
+
+def dense(x, w, b, *, act="relu"):
+    """matmul -> fused bias+activation."""
+    return bias_act(matmul(x, w), b, act=act)
+
+
+def residual_block(x, w1, b1, w2, b2, *, stride=1, proj_w=None, proj_b=None):
+    """Two 3x3 convs with a (possibly projected) skip, post-add relu."""
+    y = conv_relu(x, w1, b1, stride=stride)
+    y = bias_act(conv2d(y, w2, stride=1, padding="SAME"), b2, act="none")
+    skip = x
+    if proj_w is not None:
+        skip = bias_act(
+            conv2d(x, proj_w, stride=stride, padding="SAME"), proj_b, act="none"
+        )
+    return add_act(y, skip, act="relu")
+
+
+def flatten(x):
+    return x.reshape(x.shape[0], -1)

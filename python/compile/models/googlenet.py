@@ -1,0 +1,61 @@
+"""GoogLeNet analogue (`goo` in Table 4): inception parallel-branch topology.
+
+Stem conv + two inception blocks (1x1 / 3x3 / 5x5 / pool-proj branches,
+channel-concatenated) + global average pool + classifier (SLO carried
+in Rust: 44 ms).
+"""
+
+import jax.numpy as jnp
+
+from . import common as C
+
+INPUT_SHAPE = (32, 32, 3)
+OUT_DIM = 10
+SEED = 0x600
+
+
+def _inception_params(g, name, cin, b1, b3r, b3, b5r, b5, bp):
+    return {
+        f"{name}_1_w": g.conv(1, 1, cin, b1), f"{name}_1_b": g.bias(b1),
+        f"{name}_3r_w": g.conv(1, 1, cin, b3r), f"{name}_3r_b": g.bias(b3r),
+        f"{name}_3_w": g.conv(3, 3, b3r, b3), f"{name}_3_b": g.bias(b3),
+        f"{name}_5r_w": g.conv(1, 1, cin, b5r), f"{name}_5r_b": g.bias(b5r),
+        f"{name}_5_w": g.conv(5, 5, b5r, b5), f"{name}_5_b": g.bias(b5),
+        f"{name}_p_w": g.conv(1, 1, cin, bp), f"{name}_p_b": g.bias(bp),
+    }
+
+
+def _inception(x, p, name):
+    import jax.numpy as jnp
+
+    b1 = C.conv_relu(x, p[f"{name}_1_w"], p[f"{name}_1_b"])
+    b3 = C.conv_relu(x, p[f"{name}_3r_w"], p[f"{name}_3r_b"])
+    b3 = C.conv_relu(b3, p[f"{name}_3_w"], p[f"{name}_3_b"])
+    b5 = C.conv_relu(x, p[f"{name}_5r_w"], p[f"{name}_5r_b"])
+    b5 = C.conv_relu(b5, p[f"{name}_5_w"], p[f"{name}_5_b"])
+    # Pool branch: 2x2 avg-pool has stride k in our kernel set; inception
+    # wants stride-1 SAME pooling, so approximate with a 1x1 projection
+    # of the input (standard in reduced inception variants).
+    bp = C.conv_relu(x, p[f"{name}_p_w"], p[f"{name}_p_b"])
+    return jnp.concatenate([b1, b3, b5, bp], axis=-1)
+
+
+def build(batch: int):
+    g = C.ParamGen(SEED)
+    p = {"stem_w": g.conv(3, 3, 3, 16), "stem_b": g.bias(16)}
+    # in=16 -> out 8+16+8+8 = 40; in=40 -> out 16+24+12+12 = 64
+    p.update(_inception_params(g, "inc0", 16, 8, 8, 16, 4, 8, 8))
+    p.update(_inception_params(g, "inc1", 40, 16, 12, 24, 6, 12, 12))
+    p["fc_w"] = g.dense(64, OUT_DIM)
+    p["fc_b"] = g.bias(OUT_DIM)
+
+    def apply(x):
+        y = C.conv_relu(x, p["stem_w"], p["stem_b"])
+        y = C.maxpool2d(y, k=2)
+        y = _inception(y, p, "inc0")
+        y = _inception(y, p, "inc1")
+        y = C.global_avgpool(y)
+        return C.dense(y, p["fc_w"], p["fc_b"], act="none")
+
+    example = jnp.zeros((batch,) + INPUT_SHAPE, jnp.float32)
+    return apply, example

@@ -1,0 +1,36 @@
+"""LeNet-5 (`le` in Table 4): MNIST 1x28x28, the paper's short-latency model.
+
+Kept at full original size — LeNet is already tiny.
+"""
+
+import jax.numpy as jnp
+
+from . import common as C
+
+INPUT_SHAPE = (28, 28, 1)  # HWC
+OUT_DIM = 10
+SEED = 0x1E
+
+
+def build(batch: int):
+    g = C.ParamGen(SEED)
+    p = {
+        "c1_w": g.conv(5, 5, 1, 6), "c1_b": g.bias(6),
+        "c2_w": g.conv(5, 5, 6, 16), "c2_b": g.bias(16),
+        "f1_w": g.dense(7 * 7 * 16, 120), "f1_b": g.bias(120),
+        "f2_w": g.dense(120, 84), "f2_b": g.bias(84),
+        "f3_w": g.dense(84, OUT_DIM), "f3_b": g.bias(OUT_DIM),
+    }
+
+    def apply(x):
+        y = C.conv_relu(x, p["c1_w"], p["c1_b"])
+        y = C.maxpool2d(y, k=2)
+        y = C.conv_relu(y, p["c2_w"], p["c2_b"])
+        y = C.maxpool2d(y, k=2)
+        y = C.flatten(y)
+        y = C.dense(y, p["f1_w"], p["f1_b"])
+        y = C.dense(y, p["f2_w"], p["f2_b"])
+        return C.dense(y, p["f3_w"], p["f3_b"], act="none")
+
+    example = jnp.zeros((batch,) + INPUT_SHAPE, jnp.float32)
+    return apply, example

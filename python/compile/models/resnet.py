@@ -1,0 +1,47 @@
+"""ResNet-50 analogue (`res` in Table 4): residual skip topology.
+
+Stem conv + three residual stages (16 -> 32 -> 64 channels, stride-2
+downsampling with projected skips) + global average pool + classifier —
+the ResNet pattern at CPU-serveable width (SLO carried in Rust: 95 ms).
+"""
+
+import jax.numpy as jnp
+
+from . import common as C
+
+INPUT_SHAPE = (32, 32, 3)
+OUT_DIM = 10
+SEED = 0x50
+
+
+def build(batch: int):
+    g = C.ParamGen(SEED)
+    p = {"stem_w": g.conv(3, 3, 3, 16), "stem_b": g.bias(16)}
+    stages = [(16, 16, 1), (16, 32, 2), (32, 64, 2)]
+    for i, (cin, cout, stride) in enumerate(stages):
+        p[f"r{i}_w1"] = g.conv(3, 3, cin, cout)
+        p[f"r{i}_b1"] = g.bias(cout)
+        p[f"r{i}_w2"] = g.conv(3, 3, cout, cout)
+        p[f"r{i}_b2"] = g.bias(cout)
+        if cin != cout or stride != 1:
+            p[f"r{i}_pw"] = g.conv(1, 1, cin, cout)
+            p[f"r{i}_pb"] = g.bias(cout)
+    p["fc_w"] = g.dense(64, OUT_DIM)
+    p["fc_b"] = g.bias(OUT_DIM)
+
+    def apply(x):
+        y = C.conv_relu(x, p["stem_w"], p["stem_b"])
+        for i, (cin, cout, stride) in enumerate(stages):
+            proj_w = p.get(f"r{i}_pw")
+            proj_b = p.get(f"r{i}_pb")
+            y = C.residual_block(
+                y,
+                p[f"r{i}_w1"], p[f"r{i}_b1"],
+                p[f"r{i}_w2"], p[f"r{i}_b2"],
+                stride=stride, proj_w=proj_w, proj_b=proj_b,
+            )
+        y = C.global_avgpool(y)
+        return C.dense(y, p["fc_w"], p["fc_b"], act="none")
+
+    example = jnp.zeros((batch,) + INPUT_SHAPE, jnp.float32)
+    return apply, example

@@ -1,0 +1,50 @@
+"""SSD-MobileNet-V1 analogue (`ssd` in Table 4): depthwise-separable
+backbone + SSD detection heads.
+
+Input mirrors the paper's 300x300 camera frames at reduced resolution
+(38x38, the size of SSD300's first feature map). The backbone is four
+depthwise-separable blocks; two sibling 3x3 conv heads emit per-anchor
+class scores and box regressions, flattened and concatenated into one
+(batch, dets) tensor so every model presents a single output to the
+runtime (SLO carried in Rust: 136 ms).
+"""
+
+import jax.numpy as jnp
+
+from . import common as C
+
+INPUT_SHAPE = (38, 38, 3)
+NUM_ANCHORS = 4
+NUM_CLASSES = 6
+SEED = 0x55D
+
+
+def build(batch: int):
+    g = C.ParamGen(SEED)
+    p = {"stem_w": g.conv(3, 3, 3, 16), "stem_b": g.bias(16)}
+    blocks = [(16, 24, 1), (24, 32, 2), (32, 48, 1), (48, 64, 2)]
+    for i, (cin, cout, _s) in enumerate(blocks):
+        p[f"b{i}_dw_w"] = g.dwconv(3, 3, cin)
+        p[f"b{i}_dw_b"] = g.bias(cin)
+        p[f"b{i}_pw_w"] = g.conv(1, 1, cin, cout)
+        p[f"b{i}_pw_b"] = g.bias(cout)
+    p["cls_w"] = g.conv(3, 3, 64, NUM_ANCHORS * NUM_CLASSES)
+    p["cls_b"] = g.bias(NUM_ANCHORS * NUM_CLASSES)
+    p["loc_w"] = g.conv(3, 3, 64, NUM_ANCHORS * 4)
+    p["loc_b"] = g.bias(NUM_ANCHORS * 4)
+
+    def apply(x):
+        y = C.conv_relu(x, p["stem_w"], p["stem_b"])
+        for i, (_cin, _cout, s) in enumerate(blocks):
+            y = C.dw_separable(
+                y,
+                p[f"b{i}_dw_w"], p[f"b{i}_dw_b"],
+                p[f"b{i}_pw_w"], p[f"b{i}_pw_b"],
+                stride=s,
+            )
+        cls = C.conv_relu(y, p["cls_w"], p["cls_b"], act="none")
+        loc = C.conv_relu(y, p["loc_w"], p["loc_b"], act="none")
+        return jnp.concatenate([C.flatten(cls), C.flatten(loc)], axis=-1)
+
+    example = jnp.zeros((batch,) + INPUT_SHAPE, jnp.float32)
+    return apply, example

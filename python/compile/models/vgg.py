@@ -1,0 +1,46 @@
+"""VGG-16 analogue (`vgg` in Table 4): the paper's heaviest model.
+
+Three double-conv stages (VGG's defining stacked-3x3 pattern) on a
+32x32x3 input plus the classifier MLP. Width is reduced vs the real
+VGG-16 so the CPU PJRT client can serve it; the Rust latency model
+carries the paper's true relative cost (Table 4 SLO = 130 ms).
+"""
+
+import jax.numpy as jnp
+
+from . import common as C
+
+INPUT_SHAPE = (32, 32, 3)
+OUT_DIM = 10
+SEED = 0x5667
+
+
+def build(batch: int):
+    g = C.ParamGen(SEED)
+    widths = [(3, 24), (24, 48), (48, 96)]
+    p = {}
+    for i, (cin, cout) in enumerate(widths):
+        p[f"s{i}_w1"] = g.conv(3, 3, cin, cout)
+        p[f"s{i}_b1"] = g.bias(cout)
+        p[f"s{i}_w2"] = g.conv(3, 3, cout, cout)
+        p[f"s{i}_b2"] = g.bias(cout)
+    p["f1_w"] = g.dense(4 * 4 * 96, 128)
+    p["f1_b"] = g.bias(128)
+    p["f2_w"] = g.dense(128, 64)
+    p["f2_b"] = g.bias(64)
+    p["f3_w"] = g.dense(64, OUT_DIM)
+    p["f3_b"] = g.bias(OUT_DIM)
+
+    def apply(x):
+        y = x
+        for i in range(len(widths)):
+            y = C.conv_relu(y, p[f"s{i}_w1"], p[f"s{i}_b1"])
+            y = C.conv_relu(y, p[f"s{i}_w2"], p[f"s{i}_b2"])
+            y = C.maxpool2d(y, k=2)
+        y = C.flatten(y)
+        y = C.dense(y, p["f1_w"], p["f1_b"])
+        y = C.dense(y, p["f2_w"], p["f2_b"])
+        return C.dense(y, p["f3_w"], p["f3_b"], act="none")
+
+    example = jnp.zeros((batch,) + INPUT_SHAPE, jnp.float32)
+    return apply, example

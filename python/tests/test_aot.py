@@ -1,0 +1,88 @@
+"""AOT pipeline checks: HLO text validity, manifest integrity, determinism."""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import artifact_name, emit, lower_model
+from compile.model import CATALOG
+
+
+def test_lower_model_produces_hlo_text():
+    text, in_shape, out_shape = lower_model("lenet", 2)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    assert in_shape == (2, 28, 28, 1)
+    assert out_shape == (2, 10)
+
+
+def test_hlo_text_has_no_custom_calls():
+    """interpret=True Pallas must lower to plain HLO ops the CPU PJRT
+    client can execute — a Mosaic custom-call would break the Rust side."""
+    for name in ("lenet", "ssd_mobilenet"):
+        text, _, _ = lower_model(name, 1)
+        assert "custom-call" not in text, f"{name} lowered with a custom-call"
+
+
+def test_hlo_text_has_no_elided_constants():
+    """Weights must be printed in full: `constant({...})` elision parses
+    as zeros in the Rust HLO-text loader (regression guard)."""
+    text, _, _ = lower_model("lenet", 1)
+    assert "constant({...})" not in text
+    # The fc1 weight (784x120) must appear with real digits.
+    assert "f32[784,120]" in text
+
+
+def test_emit_writes_golden_vectors(tmp_path):
+    manifest = emit(str(tmp_path), models=["lenet"], batches=(1,), verbose=False)
+    golden = manifest["models"]["lenet"]["golden"]
+    assert golden["batch"] == 1
+    assert len(golden["output"]) == 10
+    assert any(abs(v) > 1e-6 for v in golden["output"])
+
+
+def test_lower_model_deterministic():
+    a, _, _ = lower_model("lenet", 1)
+    b, _, _ = lower_model("lenet", 1)
+    assert a == b
+
+
+def test_emit_manifest(tmp_path):
+    outdir = str(tmp_path)
+    manifest = emit(outdir, models=["lenet"], batches=(1, 2), verbose=False)
+    assert manifest["batch_sizes"] == [1, 2]
+    entry = manifest["models"]["lenet"]
+    assert entry["slo_ms"] == CATALOG["lenet"].slo_ms
+    for b in (1, 2):
+        art = entry["artifacts"][str(b)]
+        path = os.path.join(outdir, art["file"])
+        assert os.path.exists(path)
+        with open(path) as f:
+            assert "HloModule" in f.read(200)
+        assert art["input_shape"][0] == b
+    # manifest.json round-trips
+    with open(os.path.join(outdir, "manifest.json")) as f:
+        disk = json.load(f)
+    assert disk == manifest
+
+
+def test_artifact_name_format():
+    assert artifact_name("vgg", 32) == "vgg_b32.hlo.txt"
+
+
+@pytest.mark.slow
+def test_repo_artifacts_if_present():
+    """If `make artifacts` already ran, validate the real manifest."""
+    art_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(art_dir, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("artifacts/ not built")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    assert set(manifest["models"]) == set(CATALOG)
+    for name, entry in manifest["models"].items():
+        for b, art in entry["artifacts"].items():
+            assert os.path.exists(os.path.join(art_dir, art["file"])), (
+                f"missing artifact {art['file']}"
+            )

@@ -1,0 +1,78 @@
+"""L1 conv kernels (im2col+matmul, depthwise) vs lax oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import conv2d, depthwise_conv2d
+from compile.kernels import ref
+
+RNG = np.random.default_rng(11)
+
+
+def _rand(shape):
+    return jnp.asarray(RNG.standard_normal(shape), np.float32)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+@pytest.mark.parametrize(
+    "n,h,w,cin,cout,k",
+    [
+        (1, 8, 8, 1, 4, 3),
+        (2, 10, 10, 3, 5, 3),
+        (1, 28, 28, 1, 6, 5),  # LeNet c1
+        (3, 7, 9, 2, 3, 3),  # non-square spatial
+        (1, 5, 5, 4, 4, 1),  # 1x1 projection
+    ],
+)
+def test_conv2d_matches_ref(n, h, w, cin, cout, k, stride, padding):
+    x = _rand((n, h, w, cin))
+    wgt = _rand((k, k, cin, cout))
+    got = conv2d(x, wgt, stride=stride, padding=padding)
+    want = ref.conv2d(x, wgt, stride=stride, padding=padding)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_explicit_padding():
+    x = _rand((1, 6, 6, 2))
+    wgt = _rand((3, 3, 2, 3))
+    pad = ((2, 0), (0, 2))
+    np.testing.assert_allclose(
+        conv2d(x, wgt, padding=pad),
+        ref.conv2d(x, wgt, padding=pad),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_conv2d_rejects_channel_mismatch():
+    with pytest.raises(ValueError):
+        conv2d(_rand((1, 4, 4, 3)), _rand((3, 3, 2, 4)))
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize(
+    "n,h,w,c,k",
+    [(1, 8, 8, 3, 3), (2, 10, 10, 4, 3), (1, 9, 7, 2, 5)],
+)
+def test_depthwise_matches_ref(n, h, w, c, k, stride):
+    x = _rand((n, h, w, c))
+    wgt = _rand((k, k, c))
+    got = depthwise_conv2d(x, wgt, stride=stride)
+    want = ref.depthwise_conv2d(x, wgt, stride=stride)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_depthwise_rejects_channel_mismatch():
+    with pytest.raises(ValueError):
+        depthwise_conv2d(_rand((1, 4, 4, 3)), _rand((3, 3, 5)))
+
+
+def test_conv2d_identity_kernel():
+    # 1x1 identity conv must reproduce the input exactly.
+    x = _rand((2, 6, 6, 3))
+    eye = jnp.eye(3, dtype=jnp.float32).reshape(1, 1, 3, 3)
+    np.testing.assert_allclose(conv2d(x, eye), x, rtol=1e-6, atol=1e-6)

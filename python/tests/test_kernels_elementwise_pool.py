@@ -1,0 +1,89 @@
+"""L1 fused elementwise + pooling kernels vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import (
+    add_act,
+    avgpool2d,
+    bias_act,
+    global_avgpool,
+    maxpool2d,
+)
+from compile.kernels import ref
+
+RNG = np.random.default_rng(13)
+
+
+def _rand(shape):
+    return jnp.asarray(RNG.standard_normal(shape), np.float32)
+
+
+@pytest.mark.parametrize("act", ["relu", "none"])
+@pytest.mark.parametrize("shape", [(4, 8), (2, 5, 5, 3), (1, 10)])
+def test_bias_act(shape, act):
+    x = _rand(shape)
+    b = _rand((shape[-1],))
+    np.testing.assert_allclose(
+        bias_act(x, b, act=act), ref.bias_act(x, b, act=act), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_bias_act_relu_clamps():
+    x = jnp.asarray([[-5.0, 5.0]], jnp.float32)
+    b = jnp.zeros((2,), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(bias_act(x, b)), [[0.0, 5.0]])
+
+
+def test_bias_act_rejects_bad_bias():
+    with pytest.raises(ValueError):
+        bias_act(_rand((2, 3)), _rand((4,)))
+    with pytest.raises(ValueError):
+        bias_act(_rand((2, 3)), _rand((3, 1)))
+    with pytest.raises(ValueError):
+        bias_act(_rand((2, 3)), _rand((3,)), act="gelu")
+
+
+@pytest.mark.parametrize("act", ["relu", "none"])
+def test_add_act(act):
+    x, y = _rand((2, 4, 4, 3)), _rand((2, 4, 4, 3))
+    np.testing.assert_allclose(
+        add_act(x, y, act=act), ref.add_act(x, y, act=act), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_add_act_rejects_mismatch():
+    with pytest.raises(ValueError):
+        add_act(_rand((2, 3)), _rand((3, 2)))
+
+
+@pytest.mark.parametrize("k", [2, 3])
+@pytest.mark.parametrize("shape", [(1, 8, 8, 2), (2, 9, 7, 3), (1, 6, 6, 1)])
+def test_maxpool(shape, k):
+    x = _rand(shape)
+    got, want = maxpool2d(x, k=k), ref.maxpool2d(x, k=k)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("k", [2, 3])
+def test_avgpool(k):
+    x = _rand((2, 12, 12, 4))
+    np.testing.assert_allclose(
+        avgpool2d(x, k=k), ref.avgpool2d(x, k=k), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_global_avgpool():
+    x = _rand((3, 7, 5, 6))
+    got = global_avgpool(x)
+    assert got.shape == (3, 6)
+    np.testing.assert_allclose(got, ref.global_avgpool(x), rtol=1e-5, atol=1e-6)
+
+
+def test_maxpool_constant_regions():
+    x = jnp.full((1, 4, 4, 1), 3.5, jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(maxpool2d(x, k=2)), np.full((1, 2, 2, 1), 3.5)
+    )

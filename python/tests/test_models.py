@@ -1,0 +1,70 @@
+"""L2 model forward-pass checks: shapes, determinism, finiteness, batching."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import BATCH_SIZES, CATALOG, MODEL_NAMES, build_model
+
+
+@pytest.mark.parametrize("name", MODEL_NAMES)
+def test_model_shapes(name):
+    fn, ex = build_model(name, 3)
+    info = CATALOG[name]
+    assert ex.shape == (3,) + tuple(info.input_shape)
+    out = fn(ex)
+    assert out.shape[0] == 3
+    assert out.ndim == 2
+
+
+@pytest.mark.parametrize("name", MODEL_NAMES)
+def test_model_outputs_finite(name):
+    fn, ex = build_model(name, 2)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal(ex.shape), jnp.float32)
+    out = np.asarray(fn(x))
+    assert np.isfinite(out).all()
+    # Seeded-init nets on random input must not be degenerate (all-zero).
+    assert np.abs(out).max() > 0
+
+
+@pytest.mark.parametrize("name", MODEL_NAMES)
+def test_model_deterministic_params(name):
+    """Two builds must produce identical outputs (reproducible artifacts)."""
+    fn1, ex = build_model(name, 1)
+    fn2, _ = build_model(name, 1)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal(ex.shape), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(fn1(x)), np.asarray(fn2(x)))
+
+
+@pytest.mark.parametrize("name", MODEL_NAMES)
+def test_model_batch_consistency(name):
+    """Row i of a batched forward equals the single-sample forward."""
+    fn4, ex4 = build_model(name, 4)
+    fn1, _ = build_model(name, 1)
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal(ex4.shape), jnp.float32)
+    batched = np.asarray(fn4(x))
+    for i in range(4):
+        single = np.asarray(fn1(x[i : i + 1]))
+        np.testing.assert_allclose(batched[i], single[0], rtol=1e-4, atol=1e-4)
+
+
+def test_catalog_slos_match_paper_table4():
+    assert CATALOG["lenet"].slo_ms == 5.0
+    assert CATALOG["googlenet"].slo_ms == 44.0
+    assert CATALOG["resnet"].slo_ms == 95.0
+    assert CATALOG["ssd_mobilenet"].slo_ms == 136.0
+    assert CATALOG["vgg"].slo_ms == 130.0
+
+
+def test_batch_sizes_cover_paper_sweep():
+    assert BATCH_SIZES == (1, 2, 4, 8, 16, 32)
+
+
+def test_build_model_rejects_bad_args():
+    with pytest.raises(KeyError):
+        build_model("alexnet", 1)
+    with pytest.raises(ValueError):
+        build_model("lenet", 0)

@@ -1,0 +1,10 @@
+//! Bench target for Fig 3: regenerates the batch-latency vs gpu-let-size
+//! table for all five models and times the latency-model evaluation.
+use gpulets::util::benchkit;
+
+fn main() {
+    let table = benchkit::run("fig03: full L(b,p) grid + knees", 2, 10, || {
+        gpulets::experiments::fig03::run()
+    });
+    println!("\n{table}");
+}

@@ -1,0 +1,10 @@
+//! Bench target for Fig 4: SBP schedulability over the 1,023-scenario
+//! population, with and without even 50:50 GPU partitioning.
+use gpulets::util::benchkit;
+
+fn main() {
+    let out = benchkit::run("fig04: 2x 1023-scenario SBP sweep", 1, 3, || {
+        gpulets::experiments::fig04::run()
+    });
+    println!("\n{out}");
+}

@@ -1,0 +1,10 @@
+//! Bench target for Fig 5: SLO violation vs rate for LeNet+VGG under
+//! temporal sharing, MPS(default) and MPS(20:80) static partitioning.
+use gpulets::util::benchkit;
+
+fn main() {
+    let out = benchkit::run("fig05: 3-mode rate sweep (sim)", 0, 1, || {
+        gpulets::experiments::fig05::run()
+    });
+    println!("\n{out}");
+}

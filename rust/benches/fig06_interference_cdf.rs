@@ -1,0 +1,10 @@
+//! Bench target for Fig 6: consolidation-overhead CDF over the 250-pair
+//! population (both victims observed).
+use gpulets::util::benchkit;
+
+fn main() {
+    let out = benchkit::run("fig06: 500-observation overhead CDF", 2, 10, || {
+        gpulets::experiments::fig06::run()
+    });
+    println!("\n{out}");
+}

@@ -1,0 +1,10 @@
+//! Bench target for Fig 9: least-squares fit of the linear interference
+//! model + held-out error CDF (the paper's 70/30 split).
+use gpulets::util::benchkit;
+
+fn main() {
+    let out = benchkit::run("fig09: profile + fit + validate", 1, 5, || {
+        gpulets::experiments::fig09::run()
+    });
+    println!("\n{out}");
+}

@@ -1,0 +1,11 @@
+//! Bench target for Fig 12 — the paper's HEADLINE table: maximum
+//! achievable throughput of sbp / selftune / gpulet / gpulet+int over
+//! the five evaluation workloads (rate escalation + simulation).
+use gpulets::util::benchkit;
+
+fn main() {
+    let out = benchkit::run("fig12: 4-scheduler max-throughput search", 0, 1, || {
+        gpulets::experiments::fig12::run()
+    });
+    println!("\n{out}");
+}

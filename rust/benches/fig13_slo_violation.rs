@@ -1,0 +1,10 @@
+//! Bench target for Fig 13: SLO violation rates at the highest rates the
+//! interference-oblivious scheduler accepts (gpulet vs gpulet+int).
+use gpulets::util::benchkit;
+
+fn main() {
+    let out = benchkit::run("fig13: stress-point violation sweep", 0, 1, || {
+        gpulets::experiments::fig13::run()
+    });
+    println!("\n{out}");
+}

@@ -1,0 +1,10 @@
+//! Bench target for Fig 14: the full 1,800 s rate-fluctuation trace with
+//! periodic rescheduling and background partition re-organization.
+use gpulets::util::benchkit;
+
+fn main() {
+    let out = benchkit::run("fig14: 1800 s adaptive serving trace", 0, 1, || {
+        gpulets::experiments::fig14::run()
+    });
+    println!("\n{out}");
+}

@@ -1,0 +1,10 @@
+//! Bench target for Fig 15: schedulable-scenario counts, ideal
+//! exhaustive search vs gpulet+int, over the 1,023-scenario population.
+use gpulets::util::benchkit;
+
+fn main() {
+    let out = benchkit::run("fig15: ideal-vs-elastic 1023 sweep", 0, 1, || {
+        gpulets::experiments::fig15::run()
+    });
+    println!("\n{out}");
+}

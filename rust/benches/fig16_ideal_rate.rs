@@ -1,0 +1,10 @@
+//! Bench target for Fig 16: max schedulable rate of gpulet+int
+//! normalized to the ideal scheduler, per evaluation workload.
+use gpulets::util::benchkit;
+
+fn main() {
+    let out = benchkit::run("fig16: normalized max-rate search", 0, 1, || {
+        gpulets::experiments::fig16::run()
+    });
+    println!("\n{out}");
+}

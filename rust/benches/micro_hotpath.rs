@@ -1,0 +1,110 @@
+//! Micro-benchmarks of the L3 hot paths (the §Perf targets in
+//! EXPERIMENTS.md):
+//!
+//! * one Elastic Partitioning scheduling pass (the 20 s-period planner)
+//! * the full 1,023-scenario schedulability sweep
+//! * the discrete-event simulator's event throughput
+//! * batch-builder enqueue/dispatch
+//! * interference-model prediction (called inside scheduler loops)
+//! * PJRT end-to-end execution, when `artifacts/` is built
+
+use gpulets::coordinator::batcher::{BatchBuilder, Queued};
+use gpulets::coordinator::simserver::{simulate, SimConfig};
+use gpulets::experiments::common::{fitted_interference, paper_ctx};
+use gpulets::interference::GroundTruth;
+use gpulets::models::ModelId;
+use gpulets::perfmodel::LatencyModel;
+use gpulets::sched::{ElasticPartitioning, Scheduler};
+use gpulets::util::benchkit;
+use gpulets::workload::{enumerate_all_scenarios, generate_arrivals};
+
+fn main() {
+    let ctx = paper_ctx(true);
+    let gi = ElasticPartitioning::gpulet_int();
+
+    // --- scheduler pass ---------------------------------------------------
+    let rates = [100.0, 100.0, 100.0, 50.0, 50.0];
+    benchkit::run("sched: one gpulet+int pass (short-skew)", 10, 200, || {
+        gi.schedule(&ctx, &rates).is_ok()
+    });
+
+    let scenarios = enumerate_all_scenarios();
+    benchkit::run("sched: 1023-scenario gpulet+int sweep", 1, 5, || {
+        scenarios
+            .iter()
+            .filter(|sc| gi.schedule(&ctx, &sc.rates).is_ok())
+            .count()
+    });
+
+    // --- interference prediction ------------------------------------------
+    let model = fitted_interference();
+    benchkit::run("intf: 10k pair predictions", 2, 50, || {
+        let mut acc = 0.0;
+        for i in 0..10_000u32 {
+            let m1 = ModelId::from_index((i % 5) as usize);
+            let m2 = ModelId::from_index(((i / 5) % 5) as usize);
+            acc += model.predict_pair(m1, 8, 0.5, m2, 16, 0.5);
+        }
+        acc
+    });
+
+    // --- simulator event throughput ----------------------------------------
+    let lm = LatencyModel::new();
+    let gt = GroundTruth::default();
+    let schedule = gi.schedule(&ctx, &rates).expect("schedulable");
+    let arrivals = generate_arrivals(
+        &[
+            (ModelId::Lenet, 100.0),
+            (ModelId::Googlenet, 100.0),
+            (ModelId::Resnet, 100.0),
+            (ModelId::SsdMobilenet, 50.0),
+            (ModelId::Vgg, 50.0),
+        ],
+        10.0,
+        5,
+    );
+    let n_arr = arrivals.len();
+    benchkit::run(
+        &format!("sim: 10 s short-skew trace ({n_arr} arrivals)"),
+        2,
+        20,
+        || {
+            simulate(&lm, &gt, &schedule, &arrivals, 10.0, &SimConfig::default())
+                .throughput_rps()
+        },
+    );
+
+    // --- batcher hot path ---------------------------------------------------
+    benchkit::run("batcher: 100k enqueue/dispatch", 2, 20, || {
+        let mut b = BatchBuilder::new(16, 50.0);
+        let mut batches = 0usize;
+        for i in 0..100_000u64 {
+            if b.push(Queued { id: i, arrival_ms: i as f64 * 0.01 }).is_some() {
+                batches += 1;
+            }
+        }
+        batches
+    });
+
+    // --- PJRT execution (needs `make artifacts`) ----------------------------
+    match gpulets::runtime::Engine::cpu().and_then(|engine| {
+        gpulets::runtime::ModelRegistry::load_models(
+            &engine,
+            "artifacts",
+            &[ModelId::Lenet],
+        )
+        .map(|r| (engine, r))
+    }) {
+        Ok((_engine, registry)) => {
+            let entry = registry.manifest.entry(ModelId::Lenet).unwrap();
+            let sample = vec![0.5f32; entry.input_shape.iter().product()];
+            let batch8: Vec<Vec<f32>> = (0..8).map(|_| sample.clone()).collect();
+            benchkit::run("pjrt: lenet batch-8 inference", 3, 50, || {
+                registry.infer(ModelId::Lenet, &batch8).unwrap().len()
+            });
+        }
+        Err(e) => {
+            println!("bench pjrt: skipped (artifacts not built: {e})");
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Real-world multi-model applications (§6.1, Fig 10 / Fig 11).
+//!
+//! * `game` — streamed-video-game analytics: six parallel LeNet digit
+//!   recognitions plus one ResNet-50 image recognition (one stage).
+//! * `traffic` — traffic surveillance: SSD-MobileNet object detection,
+//!   then GoogLeNet and VGG-16 recognizing two object types in parallel
+//!   (two stages).
+//!
+//! An application request at rate `r` induces component-model request
+//! rates (e.g. `game` at `r` → LeNet at `6r`, ResNet at `r`); the
+//! scheduler operates on those induced rates, while the simulator
+//! accounts app-level latency as sum-over-stages of max-over-branches.
+
+use crate::models::ModelId;
+
+/// One stage: a set of (model, parallel invocation count) branches that
+/// run concurrently; the stage completes when all branches do.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Stage {
+    pub branches: Vec<(ModelId, u32)>,
+}
+
+/// A multi-model application DAG (linear chain of parallel stages).
+#[derive(Clone, Debug, PartialEq)]
+pub struct App {
+    pub name: &'static str,
+    pub stages: Vec<Stage>,
+    /// End-to-end SLO (ms), set by doubling the longest component's solo
+    /// latency (§6.1: game 95 ms, traffic 136 ms).
+    pub slo_ms: f64,
+}
+
+impl App {
+    /// The `game` application (Fig 10): 6× LeNet ∥ 1× ResNet-50.
+    pub fn game() -> App {
+        App {
+            name: "game",
+            stages: vec![Stage {
+                branches: vec![(ModelId::Lenet, 6), (ModelId::Resnet, 1)],
+            }],
+            slo_ms: 95.0,
+        }
+    }
+
+    /// The `traffic` application (Fig 11): SSD → (GoogLeNet ∥ VGG-16).
+    pub fn traffic() -> App {
+        App {
+            name: "traffic",
+            stages: vec![
+                Stage { branches: vec![(ModelId::SsdMobilenet, 1)] },
+                Stage {
+                    branches: vec![(ModelId::Googlenet, 1), (ModelId::Vgg, 1)],
+                },
+            ],
+            slo_ms: 136.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<App> {
+        match name {
+            "game" => Some(App::game()),
+            "traffic" => Some(App::traffic()),
+            _ => None,
+        }
+    }
+
+    /// Component-model rates induced by serving this app at `rate` req/s,
+    /// indexed by `ModelId::index`.
+    pub fn induced_rates(&self, rate: f64) -> [f64; 5] {
+        let mut out = [0.0; 5];
+        for stage in &self.stages {
+            for &(m, count) in &stage.branches {
+                out[m.index()] += rate * count as f64;
+            }
+        }
+        out
+    }
+
+    /// Total model invocations per app request.
+    pub fn invocations_per_request(&self) -> u32 {
+        self.stages
+            .iter()
+            .flat_map(|s| s.branches.iter())
+            .map(|&(_, c)| c)
+            .sum()
+    }
+
+    /// Critical-path solo latency estimate given per-model latencies
+    /// (ms): sum over stages of the slowest branch.
+    pub fn critical_path_ms<F: Fn(ModelId) -> f64>(&self, lat: F) -> f64 {
+        self.stages
+            .iter()
+            .map(|s| {
+                s.branches
+                    .iter()
+                    .map(|&(m, _)| lat(m))
+                    .fold(0.0f64, f64::max)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn game_structure() {
+        let g = App::game();
+        assert_eq!(g.stages.len(), 1);
+        assert_eq!(g.invocations_per_request(), 7); // 6 LeNet + 1 ResNet
+        assert_eq!(g.slo_ms, 95.0);
+        let rates = g.induced_rates(100.0);
+        assert_eq!(rates[ModelId::Lenet.index()], 600.0);
+        assert_eq!(rates[ModelId::Resnet.index()], 100.0);
+        assert_eq!(rates[ModelId::Vgg.index()], 0.0);
+    }
+
+    #[test]
+    fn traffic_structure() {
+        let t = App::traffic();
+        assert_eq!(t.stages.len(), 2);
+        assert_eq!(t.invocations_per_request(), 3);
+        assert_eq!(t.slo_ms, 136.0);
+        let rates = t.induced_rates(50.0);
+        assert_eq!(rates[ModelId::SsdMobilenet.index()], 50.0);
+        assert_eq!(rates[ModelId::Googlenet.index()], 50.0);
+        assert_eq!(rates[ModelId::Vgg.index()], 50.0);
+    }
+
+    #[test]
+    fn app_slos_are_twice_longest_component_solo() {
+        // ResNet solo (b=32, full GPU) is 47.5 ms → game SLO 95 ms.
+        // SSD solo is 68 ms → traffic SLO 136 ms.
+        let lm = crate::perfmodel::LatencyModel::new();
+        let game_long = lm.latency_ms(ModelId::Resnet, 32, 1.0);
+        assert!((App::game().slo_ms - 2.0 * game_long).abs() < 1e-9);
+        let traffic_long = lm.latency_ms(ModelId::SsdMobilenet, 32, 1.0);
+        assert!((App::traffic().slo_ms - 2.0 * traffic_long).abs() < 1e-9);
+    }
+
+    #[test]
+    fn critical_path() {
+        let t = App::traffic();
+        let cp = t.critical_path_ms(|m| match m {
+            ModelId::SsdMobilenet => 10.0,
+            ModelId::Googlenet => 5.0,
+            ModelId::Vgg => 8.0,
+            _ => 0.0,
+        });
+        assert_eq!(cp, 18.0); // 10 + max(5, 8)
+    }
+
+    #[test]
+    fn by_name() {
+        assert_eq!(App::by_name("game").unwrap().name, "game");
+        assert_eq!(App::by_name("traffic").unwrap().name, "traffic");
+        assert!(App::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,164 @@
+//! Serving/experiment configuration, loaded from TOML
+//! (`configs/*.toml`) or built programmatically.
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::gpu::ShareMode;
+use crate::models::ModelId;
+use crate::util::tomlmini::TomlDoc;
+
+/// Which scheduling algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    Gpulet,
+    GpuletInt,
+    Sbp,
+    SbpPart,
+    Selftune,
+    Ideal,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Result<Algo> {
+        Ok(match s {
+            "gpulet" => Algo::Gpulet,
+            "gpulet+int" | "gpulet_int" => Algo::GpuletInt,
+            "sbp" => Algo::Sbp,
+            "sbp+part" | "sbp_part" => Algo::SbpPart,
+            "selftune" => Algo::Selftune,
+            "ideal" => Algo::Ideal,
+            other => {
+                return Err(crate::error::Error::parse(format!(
+                    "unknown scheduler {other:?} (gpulet|gpulet+int|sbp|sbp+part|selftune|ideal)"
+                )))
+            }
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Gpulet => "gpulet",
+            Algo::GpuletInt => "gpulet+int",
+            Algo::Sbp => "sbp",
+            Algo::SbpPart => "sbp+part",
+            Algo::Selftune => "selftune",
+            Algo::Ideal => "ideal",
+        }
+    }
+}
+
+/// Full serving configuration (Table 3 defaults).
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of physical GPUs (paper: 4x RTX 2080 Ti).
+    pub num_gpus: usize,
+    pub algo: Algo,
+    pub share_mode: ShareMode,
+    /// Offered rates (req/s) per model.
+    pub rates: [f64; 5],
+    /// Trace duration (s).
+    pub duration_s: f64,
+    pub seed: u64,
+    /// Scheduling period (s) for the adaptive server.
+    pub period_s: f64,
+    /// Background reorganization latency (s).
+    pub reorg_s: f64,
+    /// Artifact directory for the real runtime.
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            num_gpus: 4,
+            algo: Algo::GpuletInt,
+            share_mode: ShareMode::Partitioned,
+            rates: [50.0; 5],
+            duration_s: 30.0,
+            seed: 42,
+            period_s: 20.0,
+            reorg_s: 12.0,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl Config {
+    /// Load from a TOML file; missing keys fall back to defaults.
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Config> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = Config::default();
+        cfg.num_gpus = doc.i64_or("gpu.count", cfg.num_gpus as i64)? as usize;
+        cfg.algo = Algo::parse(&doc.str_or("sched.algo", cfg.algo.name())?)?;
+        cfg.share_mode = match doc.str_or("gpu.share_mode", "partitioned")?.as_str() {
+            "temporal" => ShareMode::TemporalOnly,
+            "mps-default" => ShareMode::MpsDefault,
+            _ => ShareMode::Partitioned,
+        };
+        cfg.duration_s = doc.f64_or("workload.duration_s", cfg.duration_s)?;
+        cfg.seed = doc.i64_or("workload.seed", cfg.seed as i64)? as u64;
+        cfg.period_s = doc.f64_or("sched.period_s", cfg.period_s)?;
+        cfg.reorg_s = doc.f64_or("sched.reorg_s", cfg.reorg_s)?;
+        cfg.artifacts_dir = doc.str_or("runtime.artifacts_dir", &cfg.artifacts_dir)?;
+        for (name, v) in doc.keys_under("rates") {
+            let m = ModelId::parse(name)?;
+            cfg.rates[m.index()] = v.as_f64()?;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_testbed() {
+        let c = Config::default();
+        assert_eq!(c.num_gpus, 4);
+        assert_eq!(c.period_s, 20.0);
+        assert_eq!(c.algo, Algo::GpuletInt);
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let c = Config::parse(
+            r#"
+[gpu]
+count = 2
+share_mode = "temporal"
+[sched]
+algo = "sbp"
+period_s = 10.0
+[workload]
+duration_s = 60.0
+seed = 7
+[rates]
+lenet = 100.0
+vgg = 25.0
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.num_gpus, 2);
+        assert_eq!(c.algo, Algo::Sbp);
+        assert_eq!(c.share_mode, ShareMode::TemporalOnly);
+        assert_eq!(c.duration_s, 60.0);
+        assert_eq!(c.rates[ModelId::Lenet.index()], 100.0);
+        assert_eq!(c.rates[ModelId::Vgg.index()], 25.0);
+        assert_eq!(c.rates[ModelId::Resnet.index()], 50.0); // default
+    }
+
+    #[test]
+    fn algo_names_roundtrip() {
+        for a in [Algo::Gpulet, Algo::GpuletInt, Algo::Sbp, Algo::SbpPart, Algo::Selftune, Algo::Ideal] {
+            assert_eq!(Algo::parse(a.name()).unwrap(), a);
+        }
+        assert!(Algo::parse("nexus").is_err());
+    }
+}

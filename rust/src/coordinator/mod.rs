@@ -1,0 +1,20 @@
+//! The serving coordinator (frontend scheduler + backend executors).
+//!
+//! Two execution paths share the same scheduling/batching logic:
+//!
+//! * `simserver` — discrete-event simulation under the virtual clock;
+//!   runs every paper experiment (partition sizes and MPS semantics
+//!   behave like the paper's 4-GPU testbed).
+//! * `server` — the real path: duty-cycle batching over the PJRT CPU
+//!   runtime executing the AOT artifacts (examples/quickstart).
+//!
+//! `reorganizer` implements the periodic re-scheduling loop with the
+//! 10-15 s background partition re-organization cost (§5, Fig 14).
+
+pub mod batcher;
+pub mod reorganizer;
+pub mod server;
+pub mod simserver;
+
+pub use reorganizer::{AdaptiveServer, WindowStats};
+pub use simserver::{simulate, SimConfig};

@@ -1,0 +1,249 @@
+//! Dynamic partition reorganization (§5, Fig 14).
+//!
+//! The serving loop re-evaluates the schedule every `period_s` (20 s on
+//! the prototype) from EWMA-smoothed observed rates. When the new
+//! schedule's physical layout differs, re-partitioning runs in the
+//! background for `reorg_s` (10–15 s measured on the paper's testbed:
+//! MPS daemon restart + kernel/model reload + warmup); the *old*
+//! schedule keeps serving until the swap completes, so the cost shows
+//! up as adaptation lag, not downtime.
+
+use crate::interference::GroundTruth;
+use crate::metrics::Report;
+use crate::models::ModelId;
+use crate::perfmodel::RateMonitor;
+use crate::sched::{Schedule, Scheduler, SchedCtx};
+use crate::workload::{generator::generate_varying, Arrival, FluctuationTrace};
+
+use super::simserver::{simulate, SimConfig};
+
+/// Per-window telemetry (one row of Fig 14's three stacked series).
+#[derive(Clone, Debug)]
+pub struct WindowStats {
+    pub t_start_s: f64,
+    /// Served req/s per model in this window.
+    pub throughput: [f64; 5],
+    /// Sum of allocated gpu-let sizes (percent of total cluster).
+    pub allocated_pct: u32,
+    /// SLO violation rate (drops included) in this window.
+    pub violation_rate: f64,
+    /// True if a re-organization started in this window.
+    pub reorganized: bool,
+}
+
+/// Periodic re-scheduling server over a rate-fluctuation trace.
+pub struct AdaptiveServer<'a, S: Scheduler> {
+    pub ctx: &'a SchedCtx,
+    pub scheduler: &'a S,
+    pub gt: GroundTruth,
+    pub period_s: f64,
+    /// Background re-organization latency (s).
+    pub reorg_s: f64,
+    /// EWMA smoothing for observed rates.
+    pub ewma_alpha: f64,
+    /// Rate-change threshold that triggers rescheduling.
+    pub change_threshold: f64,
+}
+
+impl<'a, S: Scheduler> AdaptiveServer<'a, S> {
+    pub fn new(ctx: &'a SchedCtx, scheduler: &'a S) -> Self {
+        AdaptiveServer {
+            ctx,
+            scheduler,
+            gt: GroundTruth::default(),
+            period_s: 20.0,
+            reorg_s: 12.0,
+            ewma_alpha: 0.6,
+            change_threshold: 0.10,
+        }
+    }
+
+    /// Run the Fig 14 experiment: serve `trace` for `duration_s`,
+    /// rescheduling each period from observed (EWMA) rates.
+    pub fn run_trace(&self, trace: &FluctuationTrace, duration_s: f64, seed: u64) -> Vec<WindowStats> {
+        let arrivals = generate_varying(
+            &ModelId::ALL,
+            |m, t| trace.rate_at(m, t),
+            duration_s,
+            1.0,
+            seed,
+        );
+        self.run_arrivals(&arrivals, duration_s)
+    }
+
+    /// Serve a pre-generated arrival trace window by window.
+    pub fn run_arrivals(&self, arrivals: &[Arrival], duration_s: f64) -> Vec<WindowStats> {
+        // Simulation/metrics view: true SLOs (ctx.lm is the tightened
+        // planning view the scheduler uses).
+        let lm_true = crate::perfmodel::LatencyModel::new();
+        let lm = &lm_true;
+        let mut monitor = RateMonitor::new(self.ewma_alpha);
+        let mut stats = Vec::new();
+        let mut current: Option<Schedule> = None;
+        let mut pending: Option<(Schedule, f64)> = None; // (next schedule, ready at s)
+        let mut last_sched_rates: [f64; 5] = [0.0; 5];
+
+        let mut t = 0.0;
+        while t < duration_s {
+            let t_end = (t + self.period_s).min(duration_s);
+            // Swap in a pending schedule whose re-org completed.
+            let mut reorganized = false;
+            if let Some((s, ready)) = pending.take() {
+                if ready <= t {
+                    current = Some(s);
+                    reorganized = true;
+                } else {
+                    pending = Some((s, ready));
+                }
+            }
+
+            // This window's arrivals (times re-based to window start).
+            let window: Vec<Arrival> = arrivals
+                .iter()
+                .filter(|a| a.time_ms >= t * 1000.0 && a.time_ms < t_end * 1000.0)
+                .map(|a| Arrival { time_ms: a.time_ms - t * 1000.0, ..*a })
+                .collect();
+
+            // Observe rates.
+            for a in &window {
+                monitor.observe(a.model, 1);
+            }
+            monitor.tick(t_end - t);
+
+            // Bootstrap: first window schedules immediately from observed.
+            let observed: [f64; 5] = {
+                let mut r = [0.0; 5];
+                for m in ModelId::ALL {
+                    r[m.index()] = monitor.rate(m);
+                }
+                r
+            };
+            if current.is_none() {
+                // Initial schedule: no reorg latency at boot.
+                current = self.scheduler.schedule(self.ctx, &headroomed(&observed)).ok();
+                last_sched_rates = observed;
+            }
+
+            // Serve the window with the current schedule.
+            let report = match &current {
+                Some(s) => simulate(
+                    lm,
+                    &self.gt,
+                    s,
+                    &window,
+                    t_end - t,
+                    &SimConfig::default(),
+                ),
+                None => {
+                    // Nothing schedulable: everything drops.
+                    let mut r = Report::new(t_end - t);
+                    for a in &window {
+                        r.model_mut(a.model, lm.slo_ms(a.model)).record_drop();
+                    }
+                    r
+                }
+            };
+
+            let mut throughput = [0.0; 5];
+            for m in ModelId::ALL {
+                if let Some(mm) = report.model(m) {
+                    throughput[m.index()] = mm.served as f64 / (t_end - t);
+                }
+            }
+            stats.push(WindowStats {
+                t_start_s: t,
+                throughput,
+                allocated_pct: current.as_ref().map_or(0, |s| s.total_allocated_pct()),
+                violation_rate: report.overall_violation_rate(),
+                reorganized,
+            });
+
+            // Decide whether to re-schedule for the future.
+            let changed = ModelId::ALL.iter().any(|&m| {
+                let now = observed[m.index()];
+                let base = last_sched_rates[m.index()];
+                (now - base).abs() / base.max(1.0) > self.change_threshold
+            });
+            if changed && pending.is_none() {
+                if let Ok(next) = self.scheduler.schedule(self.ctx, &headroomed(&observed)) {
+                    let differs = match &current {
+                        Some(cur) => {
+                            let a = cur.layout(self.ctx.num_gpus).ok();
+                            let b = next.layout(self.ctx.num_gpus).ok();
+                            match (a, b) {
+                                (Some(a), Some(b)) => !a.diff_gpus(&b).is_empty(),
+                                _ => true,
+                            }
+                        }
+                        None => true,
+                    };
+                    last_sched_rates = observed;
+                    if differs {
+                        pending = Some((next, t_end + self.reorg_s));
+                    } else {
+                        current = Some(next); // same layout: hot re-route
+                    }
+                }
+            }
+
+            t = t_end;
+        }
+        stats
+    }
+}
+
+/// Rate-prediction headroom: schedule for slightly more than observed so
+/// Poisson bursts and rising ramps don't immediately violate (the paper
+/// notes "occasional SLO violations due to errors when predicting rates").
+fn headroomed(rates: &[f64; 5]) -> [f64; 5] {
+    let mut out = *rates;
+    out.iter_mut().for_each(|r| *r *= 1.15);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::ElasticPartitioning;
+
+    #[test]
+    fn adapts_allocation_to_wave() {
+        let ctx = SchedCtx::new(4, None);
+        let sched = ElasticPartitioning::gpulet();
+        let srv = AdaptiveServer::new(&ctx, &sched);
+        let trace = FluctuationTrace::default();
+        // Horizon covering wave-1 rise, peak and the start of the fall.
+        let stats = srv.run_trace(&trace, 400.0, 11);
+        assert!(stats.len() >= 19);
+        // Allocation must grow as the wave rises (early windows see base
+        // rates; the peak windows see 3-4x that).
+        let early = stats
+            .iter()
+            .take(5)
+            .map(|w| w.allocated_pct)
+            .min()
+            .unwrap();
+        let peak = stats.iter().map(|w| w.allocated_pct).max().unwrap();
+        assert!(peak > early, "peak {peak} <= early {early}");
+        // Overall violations stay low (paper: 0.14% of requests).
+        let avg_viol: f64 =
+            stats.iter().map(|w| w.violation_rate).sum::<f64>() / stats.len() as f64;
+        assert!(avg_viol < 0.08, "avg violation {avg_viol}");
+    }
+
+    #[test]
+    fn shrinks_after_wave() {
+        let ctx = SchedCtx::new(4, None);
+        let sched = ElasticPartitioning::gpulet();
+        let srv = AdaptiveServer::new(&ctx, &sched);
+        let trace = FluctuationTrace::default();
+        // 800 s covers wave-1 rise, peak, and fall back to baseline.
+        let stats = srv.run_trace(&trace, 800.0, 13);
+        let peak = stats.iter().map(|w| w.allocated_pct).max().unwrap();
+        let last = stats.last().unwrap().allocated_pct;
+        assert!(
+            last < peak,
+            "allocation must shrink after the wave: last {last} >= peak {peak}"
+        );
+    }
+}

@@ -1,0 +1,51 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for the serving stack.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Manifest / config / trace parse failures.
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    /// I/O wrapper.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// PJRT / XLA runtime failures.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// Unknown model name, missing artifact, bad batch size…
+    #[error("model error: {0}")]
+    Model(String),
+
+    /// Scheduler could not place the offered load within SLOs.
+    #[error("not schedulable: {0}")]
+    NotSchedulable(String),
+
+    /// Invalid gpu-let operation (bad size, over-subscription, …).
+    #[error("gpulet error: {0}")]
+    GpuLet(String),
+
+    /// Anything else.
+    #[error("{0}")]
+    Other(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Convenience constructor for parse errors.
+    pub fn parse(msg: impl Into<String>) -> Self {
+        Error::Parse(msg.into())
+    }
+}

@@ -1,0 +1,196 @@
+//! Shared experiment machinery: scenario vocabulary, schedulability +
+//! maximum-achievable-throughput search (the measurement procedure of
+//! §6.2: "gradually increasing the request rate until SLO violation").
+
+use crate::apps::App;
+use crate::interference::linear_model::{
+    profiling_population, train_val_split, InterferenceModel,
+};
+use crate::interference::GroundTruth;
+use crate::models::ModelId;
+use crate::coordinator::simserver::{simulate, SimConfig};
+use crate::sched::{SchedCtx, Schedule, Scheduler};
+use crate::workload::{generate_arrivals, named_scenarios, Scenario};
+
+/// The five evaluation workloads of Fig 12/13/16: two multi-model apps
+/// plus the three Table 5 request scenarios. Each yields a base
+/// per-model rate vector that the throughput search scales uniformly.
+pub fn eval_workloads() -> Vec<(String, [f64; 5])> {
+    let mut out = Vec::new();
+    // Apps evaluated at a unit rate of 10 req/s (scaled by the search).
+    for app in [App::game(), App::traffic()] {
+        out.push((app.name.to_string(), app.induced_rates(10.0)));
+    }
+    for sc in named_scenarios() {
+        out.push((sc.name.clone(), sc.rates));
+    }
+    out
+}
+
+/// Build the standard interference-aware context: fit the linear model
+/// on the profiled population exactly like §4.4 (70/30 split, seed 42).
+pub fn fitted_interference() -> InterferenceModel {
+    let gt = GroundTruth::default();
+    let (train, _) = train_val_split(profiling_population(&gt), 0.7, 42);
+    InterferenceModel::fit(&train).expect("interference fit")
+}
+
+/// Context factory for a paper-testbed cluster.
+pub fn paper_ctx(interference_aware: bool) -> SchedCtx {
+    SchedCtx::new(4, if interference_aware { Some(fitted_interference()) } else { None })
+}
+
+/// Scale a rate vector.
+pub fn scaled(rates: &[f64; 5], k: f64) -> [f64; 5] {
+    let mut out = *rates;
+    out.iter_mut().for_each(|r| *r *= k);
+    out
+}
+
+/// Run one schedule against a Poisson trace of `rates` and return the
+/// SLO violation rate (drops included).
+pub fn violation_rate_of(
+    _ctx: &SchedCtx,
+    schedule: &Schedule,
+    rates: &[f64; 5],
+    duration_s: f64,
+    seed: u64,
+) -> f64 {
+    let gt = GroundTruth::default();
+    let pairs: Vec<(ModelId, f64)> = ModelId::ALL
+        .iter()
+        .map(|&m| (m, rates[m.index()]))
+        .filter(|&(_, r)| r > 0.0)
+        .collect();
+    let arrivals = generate_arrivals(&pairs, duration_s, seed);
+    // Measure against the TRUE SLOs (the ctx's planning view is
+    // tightened by SLO_PLANNING_SCALE).
+    let lm_true = crate::perfmodel::LatencyModel::new();
+    let report = simulate(&lm_true, &gt, schedule, &arrivals, duration_s, &SimConfig::default());
+    report.overall_violation_rate()
+}
+
+/// Maximum achievable throughput (req/s summed over models): largest
+/// uniform scale of `base` that (a) the scheduler accepts and (b) the
+/// simulated deployment serves with <= `viol_budget` violations.
+/// Returns (scale, total_rate).
+pub fn max_achievable(
+    ctx: &SchedCtx,
+    scheduler: &dyn Scheduler,
+    base: &[f64; 5],
+    viol_budget: f64,
+    sim_duration_s: f64,
+) -> (f64, f64) {
+    let total_base: f64 = base.iter().sum();
+    debug_assert!(total_base > 0.0);
+
+    let ok = |k: f64| -> bool {
+        let rates = scaled(base, k);
+        match scheduler.schedule(ctx, &rates) {
+            Ok(s) => {
+                violation_rate_of(ctx, &s, &rates, sim_duration_s, 99) <= viol_budget
+            }
+            Err(_) => false,
+        }
+    };
+
+    // The violation rate is not monotone in the scale (schedule shapes
+    // jump at batch/partition thresholds), so a bisection can get stuck
+    // in a local violation pocket. Instead: find the scheduler-level
+    // limit, then scan a descending grid and report the highest scale
+    // whose deployment actually holds the violation budget — exactly
+    // the paper's "gradually increasing the request rate" sweep, run
+    // from the top.
+    let k_max = max_schedulable(ctx, scheduler, base);
+    if k_max <= 0.0 {
+        return (0.0, 0.0);
+    }
+    const GRID: usize = 24;
+    for i in (1..=GRID).rev() {
+        let k = k_max * i as f64 / GRID as f64;
+        if ok(k) {
+            return (k, k * total_base);
+        }
+    }
+    (0.0, 0.0)
+}
+
+/// Pure-scheduler maximum schedulable scale (no simulation): used for
+/// Fig 16's "maximum schedulable rate" comparison.
+pub fn max_schedulable(ctx: &SchedCtx, scheduler: &dyn Scheduler, base: &[f64; 5]) -> f64 {
+    let ok = |k: f64| scheduler.schedule(ctx, &scaled(base, k)).is_ok();
+    let mut lo = 0.0;
+    let mut hi = 1.0;
+    if ok(1.0) {
+        lo = 1.0;
+        while ok(hi * 2.0) {
+            hi *= 2.0;
+            lo = hi / 2.0;
+            if hi > 1e5 {
+                break;
+            }
+        }
+        hi *= 2.0;
+    }
+    for _ in 0..14 {
+        let mid = 0.5 * (lo + hi);
+        if ok(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Render a scenario's rates compactly for logs.
+pub fn fmt_rates(rates: &[f64; 5]) -> String {
+    let parts: Vec<String> = ModelId::ALL
+        .iter()
+        .map(|&m| format!("{}={:.0}", m.abbrev(), rates[m.index()]))
+        .collect();
+    parts.join(" ")
+}
+
+/// Scenario helper used by schedulability studies.
+pub fn scenario_rates(s: &Scenario) -> [f64; 5] {
+    s.rates
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::ElasticPartitioning;
+
+    #[test]
+    fn eval_workloads_cover_fig12() {
+        let w = eval_workloads();
+        let names: Vec<&str> = w.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["game", "traffic", "equal", "long-only", "short-skew"]);
+        // game at unit rate 10: 60 lenet + 10 resnet.
+        assert_eq!(w[0].1[ModelId::Lenet.index()], 60.0);
+        assert_eq!(w[0].1[ModelId::Resnet.index()], 10.0);
+    }
+
+    #[test]
+    fn max_schedulable_bracketing() {
+        let ctx = paper_ctx(false);
+        let sched = ElasticPartitioning::gpulet();
+        let k = max_schedulable(&ctx, &sched, &[50.0; 5]);
+        assert!(k > 1.0, "equal scenario must be schedulable beyond 1x, got {k}");
+        // The found scale is feasible, slightly above is not.
+        assert!(sched.schedule(&ctx, &scaled(&[50.0; 5], k)).is_ok());
+        assert!(sched.schedule(&ctx, &scaled(&[50.0; 5], k * 1.05)).is_err());
+    }
+
+    #[test]
+    fn max_achievable_not_above_schedulable() {
+        let ctx = paper_ctx(false);
+        let sched = ElasticPartitioning::gpulet();
+        let base = [50.0; 5];
+        let (k_a, total) = max_achievable(&ctx, &sched, &base, 0.01, 10.0);
+        let k_s = max_schedulable(&ctx, &sched, &base);
+        assert!(k_a <= k_s * 1.01, "achievable {k_a} > schedulable {k_s}");
+        assert!(total > 0.0);
+    }
+}

@@ -1,0 +1,45 @@
+//! Fig 3: batch inference latency vs gpu-let size (20%..100%) for each
+//! model, batch 1..32. The paper reads these curves off real 2080 Ti
+//! partitions; we read them off the calibrated latency substrate — the
+//! shape (steep for large batches, flat beyond the knee for small ones)
+//! is the reproduction target.
+
+use crate::models::ModelId;
+use crate::perfmodel::{LatencyModel, BATCHES};
+use crate::perfmodel::profile_table::PARTITIONS;
+
+pub fn run() -> String {
+    let lm = LatencyModel::new();
+    let mut out = String::new();
+    out.push_str("# Fig 3: batch latency (ms) vs gpu-let size\n");
+    for m in ModelId::ALL {
+        out.push_str(&format!("\n## {}\nbatch", m.name()));
+        for p in PARTITIONS {
+            out.push_str(&format!("  {p:>3}%"));
+        }
+        out.push('\n');
+        for &b in &BATCHES {
+            out.push_str(&format!("{b:>5}"));
+            for p in PARTITIONS {
+                out.push_str(&format!(" {:>5.1}", lm.latency_ms(m, b, p as f64 / 100.0)));
+            }
+            out.push('\n');
+        }
+        // The knee summary the scheduler actually uses.
+        let kn = crate::perfmodel::latency::knee(&lm.rate_curve(m, &PARTITIONS));
+        out.push_str(&format!("knee (MaxEfficientPartition): {kn}%\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders_all_models_and_knees() {
+        let s = super::run();
+        for name in ["lenet", "googlenet", "resnet", "ssd_mobilenet", "vgg"] {
+            assert!(s.contains(name), "{name} missing");
+        }
+        assert_eq!(s.matches("knee").count(), 5);
+    }
+}

@@ -1,0 +1,71 @@
+//! Fig 9: CDF of the linear interference model's relative prediction
+//! error on a held-out validation set. Paper headline: 90% of cases
+//! within 10.26% error, 95% within 13.98%.
+
+use crate::interference::linear_model::{
+    profiling_population, train_val_split, InterferenceModel,
+};
+use crate::interference::GroundTruth;
+use crate::util::stats;
+
+pub struct Fig09 {
+    pub coef: [f64; 5],
+    pub n_train: usize,
+    pub n_val: usize,
+    pub p90_err: f64,
+    pub p95_err: f64,
+    pub errors: Vec<f64>,
+}
+
+pub fn compute() -> Fig09 {
+    let gt = GroundTruth::default();
+    let population = profiling_population(&gt);
+    let (train, val) = train_val_split(population, 0.7, 42);
+    let model = InterferenceModel::fit(&train).expect("fit");
+    let errors = model.validation_errors(&val);
+    Fig09 {
+        coef: model.coef,
+        n_train: train.len(),
+        n_val: val.len(),
+        p90_err: stats::percentile(&errors, 90.0),
+        p95_err: stats::percentile(&errors, 95.0),
+        errors,
+    }
+}
+
+pub fn run() -> String {
+    let r = compute();
+    let mut out = format!(
+        "# Fig 9: interference model prediction error CDF\n\
+         train/val: {}/{}\n\
+         coefficients c1..c5: {:.4} {:.4} {:.4} {:.4} {:.4}\n\
+         quantile  error%\n",
+        r.n_train, r.n_val, r.coef[0], r.coef[1], r.coef[2], r.coef[3], r.coef[4]
+    );
+    for q in [50.0, 75.0, 90.0, 95.0, 99.0] {
+        out.push_str(&format!(
+            "{:>8.0} {:>7.2}\n",
+            q,
+            stats::percentile(&r.errors, q) * 100.0
+        ));
+    }
+    out.push_str(&format!(
+        "p90 error {:.2}% (paper 10.26%), p95 error {:.2}% (paper 13.98%)\n",
+        r.p90_err * 100.0,
+        r.p95_err * 100.0
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn error_cdf_in_paper_regime() {
+        let r = super::compute();
+        assert!(r.n_train > r.n_val);
+        assert!(r.p90_err < 0.16, "p90 {}", r.p90_err);
+        assert!(r.p95_err < 0.20, "p95 {}", r.p95_err);
+        // Memory-bandwidth terms should matter (positive weight).
+        assert!(r.coef[2] + r.coef[3] > 0.0);
+    }
+}

@@ -1,0 +1,94 @@
+//! Fig 12: maximum achievable throughput of the four schedulers over
+//! the five evaluation workloads. Paper headlines: gpulet ~ +106% and
+//! gpulet+int ~ +102.6% over SBP; gpulet+int ~ +74.8% over guided
+//! self-tuning.
+
+use crate::sched::{
+    ElasticPartitioning, GuidedSelfTuning, Scheduler, SquishyBinPacking,
+};
+
+use super::common::{eval_workloads, max_achievable, paper_ctx};
+
+pub struct Row {
+    pub workload: String,
+    /// Total achieved req/s per scheduler: [sbp, selftune, gpulet, gpulet+int].
+    pub rps: [f64; 4],
+}
+
+pub const SCHED_NAMES: [&str; 4] = ["sbp", "selftune", "gpulet", "gpulet+int"];
+
+pub fn compute(viol_budget: f64, sim_duration_s: f64) -> Vec<Row> {
+    let ctx_plain = paper_ctx(false);
+    let ctx_int = paper_ctx(true);
+    let sbp = SquishyBinPacking::baseline();
+    let st = GuidedSelfTuning;
+    let gp = ElasticPartitioning::gpulet();
+    let gi = ElasticPartitioning::gpulet_int();
+
+    eval_workloads()
+        .into_iter()
+        .map(|(name, base)| {
+            let mut rps = [0.0; 4];
+            let runs: [(&dyn Scheduler, &crate::sched::SchedCtx); 4] = [
+                (&sbp, &ctx_plain),
+                (&st, &ctx_plain),
+                (&gp, &ctx_plain),
+                (&gi, &ctx_int),
+            ];
+            for (i, (s, ctx)) in runs.iter().enumerate() {
+                let (_, total) = max_achievable(ctx, *s, &base, viol_budget, sim_duration_s);
+                rps[i] = total;
+            }
+            Row { workload: name, rps }
+        })
+        .collect()
+}
+
+pub fn render(rows: &[Row]) -> String {
+    let mut out = String::from(
+        "# Fig 12: maximum achievable throughput (req/s)\n\
+         workload       sbp  selftune    gpulet  gpulet+int   g+i/sbp\n",
+    );
+    let mut gains = Vec::new();
+    for r in rows {
+        let gain = if r.rps[0] > 0.0 { r.rps[3] / r.rps[0] } else { f64::NAN };
+        gains.push(gain);
+        out.push_str(&format!(
+            "{:<11} {:>6.0} {:>9.0} {:>9.0} {:>11.0} {:>8.2}x\n",
+            r.workload, r.rps[0], r.rps[1], r.rps[2], r.rps[3], gain
+        ));
+    }
+    let avg_gain: f64 = gains.iter().sum::<f64>() / gains.len() as f64;
+    out.push_str(&format!(
+        "average gpulet+int / sbp: {:.2}x (paper: ~2.03x / +102.6%)\n",
+        avg_gain
+    ));
+    out
+}
+
+pub fn run() -> String {
+    render(&compute(0.01, 12.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpulet_beats_sbp_on_average() {
+        // Short sim windows keep the test affordable; the ordering is
+        // what the paper claims, not the absolute numbers.
+        let rows = compute(0.01, 6.0);
+        assert_eq!(rows.len(), 5);
+        let avg = |i: usize| -> f64 { rows.iter().map(|r| r.rps[i]).sum::<f64>() / 5.0 };
+        let sbp = avg(0);
+        let selftune = avg(1);
+        let gpulet = avg(2);
+        let gpulet_int = avg(3);
+        assert!(gpulet > sbp * 1.3, "gpulet {gpulet} vs sbp {sbp}");
+        assert!(gpulet_int > sbp * 1.3, "gpulet+int {gpulet_int} vs sbp {sbp}");
+        assert!(gpulet_int > selftune, "gpulet+int {gpulet_int} vs selftune {selftune}");
+        // Interference-aware is the (slightly) conservative variant.
+        assert!(gpulet_int <= gpulet * 1.1);
+    }
+}

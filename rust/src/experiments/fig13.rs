@@ -1,0 +1,95 @@
+//! Fig 13: SLO violation rates of gpulet vs gpulet+int at the highest
+//! rates either accepts. Paper point: the interference-oblivious
+//! variant admits rates it then violates (>1% for equal/short-skew);
+//! gpulet+int filters those by classifying them unschedulable or
+//! scheduling around the interference.
+
+use crate::sched::{ElasticPartitioning, Scheduler};
+
+use super::common::{eval_workloads, max_schedulable, paper_ctx, scaled, violation_rate_of};
+
+pub struct Row {
+    pub workload: String,
+    /// Scale factor probed (max the oblivious scheduler accepts).
+    pub scale: f64,
+    pub viol_gpulet: f64,
+    /// None = gpulet+int classified the rate Not Schedulable.
+    pub viol_gpulet_int: Option<f64>,
+}
+
+pub fn compute(sim_duration_s: f64) -> Vec<Row> {
+    let ctx_plain = paper_ctx(false);
+    let ctx_int = paper_ctx(true);
+    let gp = ElasticPartitioning::gpulet();
+    let gi = ElasticPartitioning::gpulet_int();
+
+    eval_workloads()
+        .into_iter()
+        .map(|(name, base)| {
+            // The stress point: the highest rate the oblivious variant
+            // still accepts (the paper probes until both say no).
+            let k = max_schedulable(&ctx_plain, &gp, &base);
+            let rates = scaled(&base, k);
+            let viol_gp = match gp.schedule(&ctx_plain, &rates) {
+                Ok(s) => violation_rate_of(&ctx_plain, &s, &rates, sim_duration_s, 131),
+                Err(_) => 1.0,
+            };
+            let viol_gi = gi
+                .schedule(&ctx_int, &rates)
+                .ok()
+                .map(|s| violation_rate_of(&ctx_int, &s, &rates, sim_duration_s, 131));
+            Row { workload: name, scale: k, viol_gpulet: viol_gp, viol_gpulet_int: viol_gi }
+        })
+        .collect()
+}
+
+pub fn run() -> String {
+    let mut out = String::from(
+        "# Fig 13: SLO violation at max gpulet-accepted rates\n\
+         workload      scale  gpulet-viol%  gpulet+int\n",
+    );
+    for r in compute(12.0) {
+        let gi = match r.viol_gpulet_int {
+            Some(v) => format!("{:.2}%", v * 100.0),
+            None => "NotSchedulable".to_string(),
+        };
+        out.push_str(&format!(
+            "{:<12} {:>6.2} {:>12.2} {:>13}\n",
+            r.workload,
+            r.scale,
+            r.viol_gpulet * 100.0,
+            gi
+        ));
+    }
+    out.push_str("(paper: gpulet exceeds 1% on equal/short-skew; gpulet+int filters them)\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn int_variant_filters_or_matches() {
+        let rows = super::compute(6.0);
+        assert_eq!(rows.len(), 5);
+        for r in &rows {
+            // Whenever gpulet+int does accept the stress rate, it must
+            // not be *more* violating than the oblivious variant
+            // (allowing sim noise).
+            if let Some(v) = r.viol_gpulet_int {
+                assert!(
+                    v <= r.viol_gpulet + 0.02,
+                    "{}: int {v} vs oblivious {}",
+                    r.workload,
+                    r.viol_gpulet
+                );
+            }
+        }
+        // At least one workload must show the paper's filtering effect:
+        // the oblivious variant violating more, or int refusing the rate.
+        assert!(
+            rows.iter().any(|r| r.viol_gpulet_int.is_none()
+                || r.viol_gpulet > r.viol_gpulet_int.unwrap() + 1e-4),
+            "no workload shows interference filtering"
+        );
+    }
+}

@@ -1,0 +1,68 @@
+//! Fig 15: schedulable scenarios (of 1,023) — ideal exhaustive scheduler
+//! vs gpulet+int. Paper: gpulet+int schedules 18 fewer, i.e. within
+//! 1.8% of ideal.
+
+use crate::sched::{ElasticPartitioning, IdealScheduler, Scheduler};
+use crate::workload::enumerate_all_scenarios;
+
+use super::common::paper_ctx;
+
+pub struct Fig15 {
+    pub ideal: usize,
+    pub gpulet_int: usize,
+    pub total: usize,
+    /// Scenarios ideal schedules but gpulet+int does not.
+    pub gap: usize,
+}
+
+pub fn compute() -> Fig15 {
+    let ctx_int = paper_ctx(true);
+    let ctx_ideal = paper_ctx(false);
+    let gi = ElasticPartitioning::gpulet_int();
+    let ideal = IdealScheduler;
+    let scenarios = enumerate_all_scenarios();
+    let mut n_ideal = 0;
+    let mut n_gi = 0;
+    let mut gap = 0;
+    for sc in &scenarios {
+        let ok_ideal = ideal.schedule(&ctx_ideal, &sc.rates).is_ok();
+        let ok_gi = gi.schedule(&ctx_int, &sc.rates).is_ok();
+        n_ideal += ok_ideal as usize;
+        n_gi += ok_gi as usize;
+        gap += (ok_ideal && !ok_gi) as usize;
+    }
+    Fig15 { ideal: n_ideal, gpulet_int: n_gi, total: scenarios.len(), gap }
+}
+
+pub fn run() -> String {
+    let r = compute();
+    format!(
+        "# Fig 15: schedulable scenarios out of {}\n\
+         ideal (exhaustive): {}\n\
+         gpulet+int:         {}\n\
+         ideal-only gap:     {} ({:.1}% of population; paper: 18 = 1.8%)\n",
+        r.total,
+        r.ideal,
+        r.gpulet_int,
+        r.gap,
+        r.gap as f64 / r.total as f64 * 100.0
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn gpulet_int_close_to_ideal() {
+        let r = super::compute();
+        assert_eq!(r.total, 1023);
+        assert!(r.ideal >= r.gpulet_int, "ideal must dominate");
+        // Within a small gap of ideal (paper: 1.8%; we allow < 8%).
+        assert!(
+            (r.gap as f64) < 0.08 * r.total as f64,
+            "gap {} too large vs ideal {}",
+            r.gap,
+            r.ideal
+        );
+        assert!(r.gpulet_int > 300, "gpulet+int schedules too few: {}", r.gpulet_int);
+    }
+}

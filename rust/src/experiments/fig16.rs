@@ -1,0 +1,81 @@
+//! Fig 16: maximum schedulable rate of gpulet+int normalized to the
+//! ideal exhaustive scheduler, per evaluation workload. Paper: 92.3%
+//! of ideal on average, worst case traffic at 87.7%.
+
+use crate::sched::{ElasticPartitioning, IdealScheduler};
+
+use super::common::{eval_workloads, max_schedulable, paper_ctx};
+
+pub struct Row {
+    pub workload: String,
+    pub ideal_scale: f64,
+    pub gpulet_int_scale: f64,
+}
+
+impl Row {
+    pub fn normalized(&self) -> f64 {
+        if self.ideal_scale > 0.0 {
+            self.gpulet_int_scale / self.ideal_scale
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+pub fn compute() -> Vec<Row> {
+    let ctx_int = paper_ctx(true);
+    let ctx_ideal = paper_ctx(false);
+    let gi = ElasticPartitioning::gpulet_int();
+    let ideal = IdealScheduler;
+    eval_workloads()
+        .into_iter()
+        .map(|(name, base)| Row {
+            workload: name,
+            ideal_scale: max_schedulable(&ctx_ideal, &ideal, &base),
+            gpulet_int_scale: max_schedulable(&ctx_int, &gi, &base),
+        })
+        .collect()
+}
+
+pub fn run() -> String {
+    let rows = compute();
+    let mut out = String::from(
+        "# Fig 16: max schedulable rate normalized to ideal\n\
+         workload      ideal-scale  gpulet+int  normalized\n",
+    );
+    let mut sum = 0.0;
+    for r in &rows {
+        sum += r.normalized();
+        out.push_str(&format!(
+            "{:<12} {:>11.2} {:>11.2} {:>10.1}%\n",
+            r.workload,
+            r.ideal_scale,
+            r.gpulet_int_scale,
+            r.normalized() * 100.0
+        ));
+    }
+    out.push_str(&format!(
+        "average: {:.1}% of ideal (paper: 92.3%)\n",
+        sum / rows.len() as f64 * 100.0
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn gpulet_int_achieves_large_fraction_of_ideal() {
+        let rows = super::compute();
+        assert_eq!(rows.len(), 5);
+        let avg: f64 =
+            rows.iter().map(|r| r.normalized()).sum::<f64>() / rows.len() as f64;
+        assert!(avg > 0.75, "average normalized rate {avg}");
+        for r in &rows {
+            assert!(
+                r.gpulet_int_scale <= r.ideal_scale * 1.05,
+                "{}: heuristic cannot beat ideal meaningfully",
+                r.workload
+            );
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Experiment harnesses — one per paper figure/table (DESIGN.md §5).
+//!
+//! Each module exposes `run(...) -> String` producing the same
+//! rows/series the paper reports, so `gpulets experiment figN`, the
+//! bench targets, and the integration tests all share one code path.
+
+pub mod common;
+pub mod fig03;
+pub mod fig04;
+pub mod fig05;
+pub mod fig06;
+pub mod fig09;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;
+pub mod fig16;
+pub mod tables;

@@ -1,0 +1,160 @@
+//! Cluster layout state: which gpu-lets currently exist on each GPU.
+//!
+//! The `DynamicPartitionReorganizer` (coordinator) diffs two layouts to
+//! know which physical GPUs must be re-partitioned (a 10–15 s background
+//! operation on the paper's testbed).
+
+use crate::error::{Error, Result};
+use crate::gpu::gpulet::{is_valid_size, GpuLetSpec, MAX_LETS_PER_GPU};
+
+/// Partition layout of a homogeneous multi-GPU server.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClusterLayout {
+    /// Per-GPU list of gpu-let sizes (percent), at most `MAX_LETS_PER_GPU`.
+    gpus: Vec<Vec<u32>>,
+}
+
+impl ClusterLayout {
+    /// All GPUs whole (one 100% gpu-let each) — the boot layout.
+    pub fn whole(num_gpus: usize) -> Self {
+        ClusterLayout { gpus: vec![vec![100]; num_gpus] }
+    }
+
+    /// Build from explicit per-GPU size lists, validating invariants.
+    pub fn from_sizes(sizes: Vec<Vec<u32>>) -> Result<Self> {
+        let layout = ClusterLayout { gpus: sizes };
+        layout.validate()?;
+        Ok(layout)
+    }
+
+    /// Structural invariants: every size valid, <= 2 lets per GPU, total
+    /// <= 100 per GPU, no empty GPU entry.
+    pub fn validate(&self) -> Result<()> {
+        for (g, lets) in self.gpus.iter().enumerate() {
+            if lets.is_empty() {
+                return Err(Error::GpuLet(format!("gpu {g} has no gpu-lets")));
+            }
+            if lets.len() > MAX_LETS_PER_GPU {
+                return Err(Error::GpuLet(format!(
+                    "gpu {g} has {} gpu-lets (max {MAX_LETS_PER_GPU})",
+                    lets.len()
+                )));
+            }
+            for &s in lets {
+                if !is_valid_size(s) {
+                    return Err(Error::GpuLet(format!("gpu {g}: invalid size {s}%")));
+                }
+            }
+            let total: u32 = lets.iter().sum();
+            if total > 100 {
+                return Err(Error::GpuLet(format!("gpu {g}: total {total}% > 100%")));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    /// gpu-let sizes on one GPU.
+    pub fn lets_on(&self, gpu: usize) -> &[u32] {
+        &self.gpus[gpu]
+    }
+
+    /// Every gpu-let in the cluster as a spec list.
+    pub fn all_lets(&self) -> Vec<GpuLetSpec> {
+        self.gpus
+            .iter()
+            .enumerate()
+            .flat_map(|(gpu, lets)| {
+                lets.iter().map(move |&size_pct| GpuLetSpec { gpu, size_pct })
+            })
+            .collect()
+    }
+
+    /// Sum of allocated partition percentage across the cluster —
+    /// Fig 14's "sum of utilized gpu-lets" series.
+    pub fn total_allocated_pct(&self) -> u32 {
+        self.gpus.iter().flat_map(|l| l.iter()).sum()
+    }
+
+    /// Replace one GPU's partitioning.
+    pub fn set_gpu(&mut self, gpu: usize, mut lets: Vec<u32>) -> Result<()> {
+        lets.sort_unstable();
+        let old = std::mem::replace(&mut self.gpus[gpu], lets);
+        if let Err(e) = self.validate() {
+            self.gpus[gpu] = old;
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// GPUs whose partitioning differs between two layouts — these must
+    /// be reorganized (MPS daemon restart + model reload + warmup).
+    pub fn diff_gpus(&self, other: &ClusterLayout) -> Vec<usize> {
+        let n = self.num_gpus().max(other.num_gpus());
+        (0..n)
+            .filter(|&g| {
+                let a = self.gpus.get(g);
+                let b = other.gpus.get(g);
+                match (a, b) {
+                    (Some(x), Some(y)) => {
+                        let mut xs = x.clone();
+                        let mut ys = y.clone();
+                        xs.sort_unstable();
+                        ys.sort_unstable();
+                        xs != ys
+                    }
+                    _ => true,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whole_layout() {
+        let l = ClusterLayout::whole(4);
+        assert_eq!(l.num_gpus(), 4);
+        assert_eq!(l.all_lets().len(), 4);
+        assert_eq!(l.total_allocated_pct(), 400);
+        l.validate().unwrap();
+    }
+
+    #[test]
+    fn from_sizes_validates() {
+        assert!(ClusterLayout::from_sizes(vec![vec![20, 80], vec![100]]).is_ok());
+        assert!(ClusterLayout::from_sizes(vec![vec![30, 70]]).is_err()); // invalid sizes
+        assert!(ClusterLayout::from_sizes(vec![vec![50, 50, 20]]).is_err()); // >2 lets... also >100
+        assert!(ClusterLayout::from_sizes(vec![vec![80, 80]]).is_err()); // >100%
+        assert!(ClusterLayout::from_sizes(vec![vec![]]).is_err()); // empty gpu
+    }
+
+    #[test]
+    fn undersubscribed_gpu_allowed() {
+        // A GPU may run a single 60% gpu-let with 40% idle.
+        ClusterLayout::from_sizes(vec![vec![60]]).unwrap().validate().unwrap();
+    }
+
+    #[test]
+    fn set_gpu_rolls_back_on_error() {
+        let mut l = ClusterLayout::whole(2);
+        assert!(l.set_gpu(0, vec![20, 80]).is_ok());
+        assert_eq!(l.lets_on(0), &[20, 80]);
+        assert!(l.set_gpu(0, vec![80, 80]).is_err());
+        assert_eq!(l.lets_on(0), &[20, 80], "failed set must roll back");
+    }
+
+    #[test]
+    fn diff_detects_changes_order_insensitive() {
+        let a = ClusterLayout::from_sizes(vec![vec![20, 80], vec![100]]).unwrap();
+        let b = ClusterLayout::from_sizes(vec![vec![80, 20], vec![50, 50]]).unwrap();
+        assert_eq!(a.diff_gpus(&b), vec![1]); // gpu0 same up to order
+        assert_eq!(a.diff_gpus(&a), Vec::<usize>::new());
+    }
+}

@@ -1,0 +1,109 @@
+//! gpu-let size arithmetic: valid sizes, split/merge, best-fit rounding.
+
+use crate::error::{Error, Result};
+
+/// Valid gpu-let sizes in percent. These are the paper's evaluated MPS
+/// split ratios (2:8, 4:6, 5:5, 6:4, 8:2) plus the whole GPU.
+pub const VALID_SIZES: [u32; 6] = [20, 40, 50, 60, 80, 100];
+
+/// Post-Volta MPS on the paper's testbed provides at most two isolated
+/// partitions per physical GPU ("up-to two virtual gpu-lets").
+pub const MAX_LETS_PER_GPU: usize = 2;
+
+/// A (physical GPU, size) pair identifying one gpu-let slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GpuLetSpec {
+    /// Physical GPU index.
+    pub gpu: usize,
+    /// Partition size in percent (member of `VALID_SIZES`).
+    pub size_pct: u32,
+}
+
+impl GpuLetSpec {
+    pub fn new(gpu: usize, size_pct: u32) -> Result<Self> {
+        if !VALID_SIZES.contains(&size_pct) {
+            return Err(Error::GpuLet(format!("invalid gpu-let size {size_pct}%")));
+        }
+        Ok(GpuLetSpec { gpu, size_pct })
+    }
+
+    /// Size as a fraction of the GPU.
+    pub fn fraction(&self) -> f64 {
+        self.size_pct as f64 / 100.0
+    }
+}
+
+/// True if `size` is an allowed gpu-let size.
+pub fn is_valid_size(size_pct: u32) -> bool {
+    VALID_SIZES.contains(&size_pct)
+}
+
+/// Smallest valid size >= `want_pct` (clamped to 100).
+pub fn round_up_size(want_pct: u32) -> u32 {
+    for &s in &VALID_SIZES {
+        if s >= want_pct {
+            return s;
+        }
+    }
+    100
+}
+
+/// SPLIT (Algorithm 1 line 24): divide a whole GPU into
+/// `(ideal, remainder)` where both halves are valid sizes and
+/// `ideal >= want_pct`. Returns None when `want_pct` needs the whole GPU.
+pub fn split_of(want_pct: u32) -> Option<(u32, u32)> {
+    let ideal = round_up_size(want_pct);
+    if ideal >= 100 {
+        return None;
+    }
+    let rem = 100 - ideal;
+    debug_assert!(is_valid_size(rem), "complement {rem} of {ideal} invalid");
+    Some((ideal, rem))
+}
+
+/// MERGE / REVERTSPLIT helper: true if two sizes recombine into a whole GPU.
+pub fn merges_to_whole(a_pct: u32, b_pct: u32) -> bool {
+    a_pct + b_pct == 100 && is_valid_size(a_pct) && is_valid_size(b_pct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_sizes_have_valid_complements() {
+        for &s in &VALID_SIZES {
+            if s < 100 {
+                assert!(is_valid_size(100 - s), "complement of {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_up() {
+        assert_eq!(round_up_size(1), 20);
+        assert_eq!(round_up_size(20), 20);
+        assert_eq!(round_up_size(21), 40);
+        assert_eq!(round_up_size(55), 60);
+        assert_eq!(round_up_size(81), 100);
+        assert_eq!(round_up_size(150), 100);
+    }
+
+    #[test]
+    fn split_round_trip() {
+        for want in [1u32, 20, 35, 50, 79, 80] {
+            let (a, b) = split_of(want).unwrap();
+            assert!(a >= want);
+            assert!(merges_to_whole(a, b), "{a}+{b}");
+        }
+        assert!(split_of(81).is_none());
+        assert!(split_of(100).is_none());
+    }
+
+    #[test]
+    fn spec_validation() {
+        assert!(GpuLetSpec::new(0, 50).is_ok());
+        assert!(GpuLetSpec::new(0, 30).is_err());
+        assert_eq!(GpuLetSpec::new(1, 20).unwrap().fraction(), 0.2);
+    }
+}

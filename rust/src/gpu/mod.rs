@@ -1,0 +1,17 @@
+//! The *gpu-let* abstraction (§4) and the simulated multi-GPU cluster.
+//!
+//! A gpu-let is a virtual GPU: a spatial fraction of one physical GPU,
+//! created through MPS-style partitioning. On the paper's Turing
+//! testbed each physical GPU hosts up to two gpu-lets whose sizes are
+//! drawn from the MPS active-thread-percentage ratios {20, 40, 50, 60,
+//! 80, 100}. This module owns the size arithmetic (split/merge), the
+//! cluster layout state, and the sharing-mode semantics the simulator
+//! implements (Fig 5: temporal vs MPS-default vs partitioned).
+
+pub mod cluster;
+pub mod gpulet;
+pub mod share;
+
+pub use cluster::ClusterLayout;
+pub use gpulet::{round_up_size, split_of, GpuLetSpec, MAX_LETS_PER_GPU, VALID_SIZES};
+pub use share::ShareMode;

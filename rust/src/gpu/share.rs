@@ -1,0 +1,69 @@
+//! GPU consolidation semantics (Fig 2 / Fig 5).
+
+/// How co-located inference executions share one physical GPU.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShareMode {
+    /// Nexus-style temporal sharing: one execution owns the whole GPU at
+    /// a time; co-located work serializes (kernel-granularity switches).
+    TemporalOnly,
+    /// MPS without static provisioning: contexts run concurrently with
+    /// no resource isolation — high utilization but volatile contention.
+    MpsDefault,
+    /// MPS with static partitioning into gpu-lets (the paper's system):
+    /// each execution sees its fraction, with residual interference on
+    /// shared L2 / DRAM bandwidth.
+    Partitioned,
+}
+
+impl ShareMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShareMode::TemporalOnly => "temporal",
+            ShareMode::MpsDefault => "mps-default",
+            ShareMode::Partitioned => "partitioned",
+        }
+    }
+
+    /// Contention amplification vs the partitioned ground truth. With no
+    /// static provisioning MPS lets kernels fight for SMs as well as
+    /// bandwidth, so observed interference is larger and more volatile
+    /// (§2.3: "resource contention could lead to high performance
+    /// volatility").
+    pub fn contention_amplification(self) -> f64 {
+        match self {
+            ShareMode::TemporalOnly => 0.0, // never concurrent
+            ShareMode::MpsDefault => 3.0,
+            ShareMode::Partitioned => 1.0,
+        }
+    }
+
+    /// Volatility of the contention term (std-dev multiplier on the
+    /// interference factor) — zero under static partitioning isolation.
+    pub fn contention_volatility(self) -> f64 {
+        match self {
+            ShareMode::TemporalOnly => 0.0,
+            ShareMode::MpsDefault => 0.40,
+            ShareMode::Partitioned => 0.05,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_and_ordering() {
+        assert_eq!(ShareMode::Partitioned.name(), "partitioned");
+        // MPS-default must contend harder than partitioned; temporal never.
+        assert!(
+            ShareMode::MpsDefault.contention_amplification()
+                > ShareMode::Partitioned.contention_amplification()
+        );
+        assert_eq!(ShareMode::TemporalOnly.contention_amplification(), 0.0);
+        assert!(
+            ShareMode::MpsDefault.contention_volatility()
+                > ShareMode::Partitioned.contention_volatility()
+        );
+    }
+}

@@ -1,0 +1,142 @@
+//! Dense linear algebra just big enough for ordinary least squares:
+//! normal equations + Gaussian elimination with partial pivoting.
+
+use crate::error::{Error, Result};
+
+/// Solve `A x = b` for square `A` (row-major, n x n) in place.
+pub fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Result<Vec<f64>> {
+    let n = a.len();
+    if n == 0 || a.iter().any(|row| row.len() != n) || b.len() != n {
+        return Err(Error::Other("solve: non-square system".into()));
+    }
+    for col in 0..n {
+        // Partial pivot.
+        let pivot = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        if a[pivot][col].abs() < 1e-12 {
+            return Err(Error::Other("solve: singular matrix".into()));
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        // Eliminate below.
+        for row in col + 1..n {
+            let f = a[row][col] / a[col][col];
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    // Back substitution.
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for k in row + 1..n {
+            acc -= a[row][k] * x[k];
+        }
+        x[row] = acc / a[row][row];
+    }
+    Ok(x)
+}
+
+/// Ordinary least squares: find beta minimizing ||X beta - y||^2 via the
+/// normal equations X'X beta = X'y. `xs` rows are feature vectors.
+pub fn least_squares(xs: &[Vec<f64>], y: &[f64]) -> Result<Vec<f64>> {
+    if xs.is_empty() || xs.len() != y.len() {
+        return Err(Error::Other("least_squares: empty or mismatched data".into()));
+    }
+    let d = xs[0].len();
+    if xs.iter().any(|r| r.len() != d) {
+        return Err(Error::Other("least_squares: ragged rows".into()));
+    }
+    // X'X (d x d) and X'y (d).
+    let mut xtx = vec![vec![0.0; d]; d];
+    let mut xty = vec![0.0; d];
+    for (row, &yi) in xs.iter().zip(y) {
+        for i in 0..d {
+            xty[i] += row[i] * yi;
+            for j in i..d {
+                xtx[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    for i in 0..d {
+        for j in 0..i {
+            xtx[i][j] = xtx[j][i];
+        }
+        // Tiny ridge for numerical safety on collinear features.
+        xtx[i][i] += 1e-9;
+    }
+    solve(xtx, xty)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_known_system() {
+        // x + 2y = 5; 3x - y = 1  =>  x = 1, y = 2
+        let x = solve(vec![vec![1.0, 2.0], vec![3.0, -1.0]], vec![5.0, 1.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-9);
+        assert!((x[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pivoting_handles_zero_leading() {
+        // First pivot is zero; requires row swap.
+        let x = solve(vec![vec![0.0, 1.0], vec![1.0, 0.0]], vec![3.0, 4.0]).unwrap();
+        assert!((x[0] - 4.0).abs() < 1e-9);
+        assert!((x[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_singular() {
+        assert!(solve(vec![vec![1.0, 2.0], vec![2.0, 4.0]], vec![1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn least_squares_recovers_exact_linear_fn() {
+        // y = 2*a - 3*b + 0.5 over a grid.
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..10 {
+            for j in 0..10 {
+                let (a, b) = (i as f64 / 10.0, j as f64 / 10.0);
+                xs.push(vec![a, b, 1.0]);
+                ys.push(2.0 * a - 3.0 * b + 0.5);
+            }
+        }
+        let beta = least_squares(&xs, &ys).unwrap();
+        assert!((beta[0] - 2.0).abs() < 1e-6);
+        assert!((beta[1] + 3.0).abs() < 1e-6);
+        assert!((beta[2] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn least_squares_minimizes_noisy_fit() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(5);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..500 {
+            let a = rng.f64();
+            xs.push(vec![a, 1.0]);
+            ys.push(4.0 * a + 1.0 + rng.normal(0.0, 0.01));
+        }
+        let beta = least_squares(&xs, &ys).unwrap();
+        assert!((beta[0] - 4.0).abs() < 0.05, "slope {}", beta[0]);
+        assert!((beta[1] - 1.0).abs() < 0.05, "intercept {}", beta[1]);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(least_squares(&[], &[]).is_err());
+        assert!(least_squares(&[vec![1.0]], &[1.0, 2.0]).is_err());
+        assert!(least_squares(&[vec![1.0], vec![1.0, 2.0]], &[1.0, 2.0]).is_err());
+    }
+}

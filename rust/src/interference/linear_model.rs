@@ -1,0 +1,217 @@
+//! The paper's interference estimator (§4.4):
+//!
+//! `factor = c1*l2_m1 + c2*l2_m2 + c3*mem_m1 + c4*mem_m2 + c5`
+//!
+//! Features are the two tasks' *solo* L2 and memory-bandwidth
+//! utilizations at their assigned partitions; coefficients come from
+//! least squares over profiled pairs. `gpulet+int` adds the predicted
+//! overhead to the SLO feasibility check (Algorithm 1, line 28).
+
+use crate::error::Result;
+use crate::interference::ground_truth::{GroundTruth, TaskDemand};
+use crate::interference::linalg::least_squares;
+use crate::models::{profile, ModelId};
+use crate::perfmodel::BATCHES;
+use crate::util::rng::Pcg32;
+
+/// One profiled consolidation observation.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    /// Victim's solo L2 utilization.
+    pub l2_m1: f64,
+    /// Aggressor's solo L2 utilization.
+    pub l2_m2: f64,
+    /// Victim's solo memory-bandwidth utilization.
+    pub mem_m1: f64,
+    /// Aggressor's solo memory-bandwidth utilization.
+    pub mem_m2: f64,
+    /// Measured interference factor (latency stretch − 1).
+    pub factor: f64,
+}
+
+impl Sample {
+    fn features(&self) -> Vec<f64> {
+        vec![self.l2_m1, self.l2_m2, self.mem_m1, self.mem_m2, 1.0]
+    }
+}
+
+/// Fitted linear interference model (c1..c5).
+#[derive(Clone, Debug)]
+pub struct InterferenceModel {
+    pub coef: [f64; 5],
+}
+
+impl InterferenceModel {
+    /// Fit by ordinary least squares.
+    pub fn fit(samples: &[Sample]) -> Result<InterferenceModel> {
+        let xs: Vec<Vec<f64>> = samples.iter().map(|s| s.features()).collect();
+        let ys: Vec<f64> = samples.iter().map(|s| s.factor).collect();
+        let beta = least_squares(&xs, &ys)?;
+        Ok(InterferenceModel { coef: [beta[0], beta[1], beta[2], beta[3], beta[4]] })
+    }
+
+    /// Predicted interference factor for a victim/aggressor pair.
+    pub fn predict(&self, l2_m1: f64, l2_m2: f64, mem_m1: f64, mem_m2: f64) -> f64 {
+        (self.coef[0] * l2_m1
+            + self.coef[1] * l2_m2
+            + self.coef[2] * mem_m1
+            + self.coef[3] * mem_m2
+            + self.coef[4])
+            .max(0.0)
+    }
+
+    /// Predicted factor for model `m1` (batch `b1`, partition `p1`)
+    /// co-resident with `m2` — the form the scheduler calls.
+    pub fn predict_pair(
+        &self,
+        m1: ModelId,
+        b1: u32,
+        p1: f64,
+        m2: ModelId,
+        b2: u32,
+        p2: f64,
+    ) -> f64 {
+        let pr1 = profile(m1);
+        let pr2 = profile(m2);
+        self.predict(
+            pr1.l2_util(p1, b1),
+            pr2.l2_util(p2, b2),
+            pr1.bw_util(p1, b1),
+            pr2.bw_util(p2, b2),
+        )
+    }
+
+    /// Relative prediction errors |pred − true| / (1 + true) on a
+    /// validation set — the Fig 9 metric (error on the latency stretch).
+    pub fn validation_errors(&self, samples: &[Sample]) -> Vec<f64> {
+        samples
+            .iter()
+            .map(|s| {
+                let pred = self.predict(s.l2_m1, s.l2_m2, s.mem_m1, s.mem_m2);
+                (pred - s.factor).abs() / (1.0 + s.factor)
+            })
+            .collect()
+    }
+}
+
+/// Generate the paper's profiling population: pairs of the five models
+/// with per-side batches from {2,4,8,16,32} on splits {2:8, 4:6, 5:5,
+/// 6:4, 8:2}, "measured" against the ground truth. Every co-residency
+/// yields two observations (each side suffers its own factor, §4.4) —
+/// comfortably more than the paper's 2,500 data points.
+pub fn profiling_population(gt: &GroundTruth) -> Vec<Sample> {
+    let splits = [(0.2, 0.8), (0.4, 0.6), (0.5, 0.5), (0.6, 0.4), (0.8, 0.2)];
+    let batches: Vec<u32> = BATCHES.iter().copied().filter(|&b| b >= 2).collect();
+    let mut samples = Vec::new();
+    for m1 in ModelId::ALL {
+        for m2 in ModelId::ALL {
+            for &b1 in &batches {
+                for &b2 in &batches {
+                    for &(p1, p2) in &splits {
+                        let pr1 = profile(m1);
+                        let pr2 = profile(m2);
+                        let d1 = TaskDemand {
+                            model: m1, batch: b1,
+                            l2: pr1.l2_util(p1, b1), bw: pr1.bw_util(p1, b1),
+                        };
+                        let d2 = TaskDemand {
+                            model: m2, batch: b2,
+                            l2: pr2.l2_util(p2, b2), bw: pr2.bw_util(p2, b2),
+                        };
+                        let (f1, f2) = gt.pair_factors(&d1, &d2);
+                        samples.push(Sample {
+                            l2_m1: d1.l2, l2_m2: d2.l2,
+                            mem_m1: d1.bw, mem_m2: d2.bw, factor: f1,
+                        });
+                        samples.push(Sample {
+                            l2_m1: d2.l2, l2_m2: d1.l2,
+                            mem_m1: d2.bw, mem_m2: d1.bw, factor: f2,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    samples
+}
+
+/// Shuffle and split into (train, validation) like the paper's 1,750/750.
+pub fn train_val_split(
+    mut samples: Vec<Sample>,
+    train_frac: f64,
+    seed: u64,
+) -> (Vec<Sample>, Vec<Sample>) {
+    let mut rng = Pcg32::seeded(seed);
+    rng.shuffle(&mut samples);
+    let cut = ((samples.len() as f64) * train_frac).round() as usize;
+    let val = samples.split_off(cut.min(samples.len()));
+    (samples, val)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::percentile;
+
+    #[test]
+    fn fits_exact_linear_ground_truth() {
+        // If the world IS linear, the fit must be near-perfect.
+        let mut samples = Vec::new();
+        let mut rng = Pcg32::seeded(1);
+        for _ in 0..400 {
+            let (a, b, c, d) = (rng.f64(), rng.f64(), rng.f64(), rng.f64());
+            samples.push(Sample {
+                l2_m1: a, l2_m2: b, mem_m1: c, mem_m2: d,
+                factor: 0.1 * a + 0.2 * b + 0.3 * c + 0.4 * d + 0.05,
+            });
+        }
+        let m = InterferenceModel::fit(&samples).unwrap();
+        for (i, want) in [0.1, 0.2, 0.3, 0.4, 0.05].iter().enumerate() {
+            assert!((m.coef[i] - want).abs() < 1e-6, "c{}={}", i + 1, m.coef[i]);
+        }
+    }
+
+    #[test]
+    fn fig9_error_cdf_on_nonlinear_truth() {
+        // The paper: 90% of validation cases within ~10.3% error, 95%
+        // within ~14%. Our nonlinear ground truth should land in the
+        // same regime for a linear fit.
+        let gt = GroundTruth::default();
+        let population = profiling_population(&gt);
+        assert!(population.len() >= 2_500, "population {}", population.len());
+        let (train, val) = train_val_split(population, 0.7, 42);
+        let m = InterferenceModel::fit(&train).unwrap();
+        let errs = m.validation_errors(&val);
+        let p90 = percentile(&errs, 90.0);
+        let p95 = percentile(&errs, 95.0);
+        assert!(p90 < 0.20, "p90 error {p90}");
+        assert!(p95 < 0.25, "p95 error {p95}");
+    }
+
+    #[test]
+    fn predict_pair_uses_solo_profiles() {
+        let gt = GroundTruth::default();
+        let (train, _) = train_val_split(profiling_population(&gt), 0.7, 7);
+        let m = InterferenceModel::fit(&train).unwrap();
+        let heavy = m.predict_pair(ModelId::Vgg, 32, 0.5, ModelId::Vgg, 32, 0.5);
+        let light = m.predict_pair(ModelId::Lenet, 1, 0.2, ModelId::Lenet, 1, 0.2);
+        assert!(heavy > light, "heavy={heavy} light={light}");
+        assert!(heavy > 0.05);
+    }
+
+    #[test]
+    fn prediction_clamped_nonnegative() {
+        let m = InterferenceModel { coef: [0.0, 0.0, 0.0, 0.0, -1.0] };
+        assert_eq!(m.predict(0.5, 0.5, 0.5, 0.5), 0.0);
+    }
+
+    #[test]
+    fn split_fractions() {
+        let gt = GroundTruth::default();
+        let pop = profiling_population(&gt);
+        let n = pop.len();
+        let (tr, va) = train_val_split(pop, 0.7, 3);
+        assert_eq!(tr.len() + va.len(), n);
+        assert!((tr.len() as f64 / n as f64 - 0.7).abs() < 0.01);
+    }
+}

@@ -1,0 +1,15 @@
+//! Interference modeling for consolidated executions (§3.2, §4.4).
+//!
+//! * `ground_truth` — the hidden, nonlinear contention behaviour of the
+//!   simulated GPU (stands in for real-hardware measurements; shaped to
+//!   reproduce the Fig 6 overhead CDF).
+//! * `linear_model` — the paper's contribution: a 5-coefficient linear
+//!   predictor over solo L2 / DRAM-bandwidth utilizations, fit by least
+//!   squares (`linalg`), evaluated exactly like Fig 9.
+
+pub mod ground_truth;
+pub mod linalg;
+pub mod linear_model;
+
+pub use ground_truth::GroundTruth;
+pub use linear_model::{InterferenceModel, Sample};

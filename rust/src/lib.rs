@@ -1,0 +1,32 @@
+//! # gpu-lets: multi-model ML inference serving with GPU spatial partitioning
+//!
+//! Reproduction of Choi et al., *"Multi-model Machine Learning Inference
+//! Serving with GPU Spatial Partitioning"* (2021), as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: the *gpu-let* virtual
+//!   GPU abstraction, the Elastic Partitioning scheduler (Algorithm 1),
+//!   the interference model, duty-cycle batching, and the serving runtime.
+//! * **L2/L1 (python/, build-time only)** — JAX models over Pallas kernels,
+//!   AOT-lowered to `artifacts/*.hlo.txt`, executed here through the PJRT
+//!   CPU client (`runtime`). Python is never on the request path.
+//!
+//! See `DESIGN.md` for the module inventory and the experiment index
+//! mapping every paper figure/table to a bench target.
+pub mod apps;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod experiments;
+pub mod gpu;
+pub mod interference;
+pub mod metrics;
+pub mod models;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sched;
+pub mod simclock;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};

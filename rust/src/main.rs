@@ -1,0 +1,268 @@
+//! `gpulets` — CLI launcher for the gpu-let inference serving stack.
+//!
+//! ```text
+//! gpulets experiment <fig3|fig4|fig5|fig6|fig9|fig12|fig13|fig14|fig15|fig16|all>
+//! gpulets serve [--config <toml>] [--algo A] [--gpus N] [--duration S] [--rate M=R ...]
+//! gpulets serve-real [--artifacts DIR] [--duration S] [--rate M=R ...]
+//! gpulets profile            # dump the offline L(b,p) profile grid
+//! gpulets models             # Table 4
+//! gpulets scenarios          # Table 5
+//! ```
+//!
+//! (clap is unavailable offline — see Cargo.toml — so argument parsing
+//! is a small hand-rolled matcher.)
+
+use gpulets::config::{Algo, Config};
+use gpulets::coordinator::server::RealServer;
+use gpulets::coordinator::simserver::{simulate, SimConfig};
+use gpulets::error::Result;
+use gpulets::experiments as ex;
+use gpulets::interference::GroundTruth;
+use gpulets::models::ModelId;
+use gpulets::runtime::{Engine, ModelRegistry};
+use gpulets::sched::{
+    ElasticPartitioning, GuidedSelfTuning, IdealScheduler, SchedCtx, Scheduler,
+    SquishyBinPacking,
+};
+use gpulets::workload::generate_arrivals;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("experiment") => experiment(args.get(1).map(String::as_str).unwrap_or("all")),
+        Some("serve") => serve(&args[1..]),
+        Some("serve-real") => serve_real(&args[1..]),
+        Some("profile") => {
+            print!("{}", ex::fig03::run());
+            Ok(())
+        }
+        Some("models") => {
+            print!("{}", ex::tables::table4());
+            Ok(())
+        }
+        Some("scenarios") => {
+            print!("{}", ex::tables::table5());
+            Ok(())
+        }
+        Some("help") | None => {
+            print_usage();
+            Ok(())
+        }
+        Some(other) => {
+            print_usage();
+            Err(gpulets::Error::Other(format!("unknown command {other:?}")))
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "gpulets — multi-model inference serving with GPU spatial partitioning\n\
+         \n\
+         USAGE:\n\
+         \x20 gpulets experiment <fig3|fig4|fig5|fig6|fig9|fig12|fig13|fig14|fig15|fig16|tables|all>\n\
+         \x20 gpulets serve [--config F] [--algo A] [--gpus N] [--duration S] [--seed X] [--rate model=R]...\n\
+         \x20 gpulets serve-real [--artifacts DIR] [--duration S] [--rate model=R]...\n\
+         \x20 gpulets profile | models | scenarios | help\n\
+         \n\
+         schedulers: gpulet gpulet+int sbp sbp+part selftune ideal"
+    );
+}
+
+fn experiment(which: &str) -> Result<()> {
+    let all = [
+        ("fig3", ex::fig03::run as fn() -> String),
+        ("fig4", ex::fig04::run),
+        ("fig5", ex::fig05::run),
+        ("fig6", ex::fig06::run),
+        ("fig9", ex::fig09::run),
+        ("fig12", ex::fig12::run),
+        ("fig13", ex::fig13::run),
+        ("fig14", ex::fig14::run),
+        ("fig15", ex::fig15::run),
+        ("fig16", ex::fig16::run),
+    ];
+    if which == "tables" {
+        print!("{}", ex::tables::table3());
+        print!("{}", ex::tables::table4());
+        print!("{}", ex::tables::table5());
+        return Ok(());
+    }
+    if which == "all" {
+        print!("{}", ex::tables::table3());
+        print!("{}", ex::tables::table4());
+        print!("{}", ex::tables::table5());
+        for (name, f) in all {
+            eprintln!("[running {name}]");
+            println!("{}", f());
+        }
+        return Ok(());
+    }
+    for (name, f) in all {
+        if name == which {
+            print!("{}", f());
+            return Ok(());
+        }
+    }
+    Err(gpulets::Error::Other(format!("unknown experiment {which:?}")))
+}
+
+/// Parse `--key value` style flags plus repeated `--rate model=R`.
+fn parse_flags(args: &[String], cfg: &mut Config) -> Result<()> {
+    let mut i = 0;
+    while i < args.len() {
+        let flag = args[i].as_str();
+        let val = args.get(i + 1).cloned();
+        let need = |name: &str| -> Result<String> {
+            val.clone().ok_or_else(|| {
+                gpulets::Error::Other(format!("flag {name} needs a value"))
+            })
+        };
+        match flag {
+            "--config" => *cfg = Config::load(need("--config")?)?,
+            "--algo" => cfg.algo = Algo::parse(&need("--algo")?)?,
+            "--gpus" => {
+                cfg.num_gpus = need("--gpus")?.parse().map_err(|_| {
+                    gpulets::Error::Other("--gpus expects an integer".into())
+                })?
+            }
+            "--duration" => {
+                cfg.duration_s = need("--duration")?.parse().map_err(|_| {
+                    gpulets::Error::Other("--duration expects seconds".into())
+                })?
+            }
+            "--seed" => {
+                cfg.seed = need("--seed")?.parse().map_err(|_| {
+                    gpulets::Error::Other("--seed expects an integer".into())
+                })?
+            }
+            "--artifacts" => cfg.artifacts_dir = need("--artifacts")?,
+            "--rate" => {
+                let spec = need("--rate")?;
+                let (name, rate) = spec.split_once('=').ok_or_else(|| {
+                    gpulets::Error::Other("--rate expects model=req_per_s".into())
+                })?;
+                let m = ModelId::parse(name)?;
+                cfg.rates[m.index()] = rate.parse().map_err(|_| {
+                    gpulets::Error::Other(format!("bad rate {rate:?}"))
+                })?;
+            }
+            other => {
+                return Err(gpulets::Error::Other(format!("unknown flag {other:?}")))
+            }
+        }
+        i += 2;
+    }
+    Ok(())
+}
+
+/// Simulated serving: schedule the configured rates, run the trace,
+/// print the schedule and the per-model report.
+fn serve(args: &[String]) -> Result<()> {
+    let mut cfg = Config::default();
+    parse_flags(args, &mut cfg)?;
+
+    let interference_aware = cfg.algo == Algo::GpuletInt;
+    let ctx = SchedCtx::new(
+        cfg.num_gpus,
+        if interference_aware {
+            Some(ex::common::fitted_interference())
+        } else {
+            None
+        },
+    );
+    let scheduler: Box<dyn Scheduler> = match cfg.algo {
+        Algo::Gpulet => Box::new(ElasticPartitioning::gpulet()),
+        Algo::GpuletInt => Box::new(ElasticPartitioning::gpulet_int()),
+        Algo::Sbp => Box::new(SquishyBinPacking::baseline()),
+        Algo::SbpPart => Box::new(SquishyBinPacking::with_even_partitioning()),
+        Algo::Selftune => Box::new(GuidedSelfTuning),
+        Algo::Ideal => Box::new(IdealScheduler),
+    };
+
+    println!(
+        "scheduling {} on {} GPUs: {}",
+        scheduler.name(),
+        cfg.num_gpus,
+        ex::common::fmt_rates(&cfg.rates)
+    );
+    let schedule = scheduler.schedule(&ctx, &cfg.rates)?;
+    println!("allocated {}% of cluster over {} gpu-lets:", schedule.total_allocated_pct(), schedule.lets.len());
+    for lp in &schedule.lets {
+        let asg: Vec<String> = lp
+            .assignments
+            .iter()
+            .map(|a| format!("{}@b{} {:.0}req/s", a.model.abbrev(), a.batch, a.rate))
+            .collect();
+        println!("  gpu{} {:>3}%: {}", lp.spec.gpu, lp.spec.size_pct, asg.join(" + "));
+    }
+
+    let pairs: Vec<(ModelId, f64)> = ModelId::ALL
+        .iter()
+        .map(|&m| (m, cfg.rates[m.index()]))
+        .filter(|&(_, r)| r > 0.0)
+        .collect();
+    let arrivals = generate_arrivals(&pairs, cfg.duration_s, cfg.seed);
+    println!("\nsimulating {} requests over {}s ({})...", arrivals.len(), cfg.duration_s, cfg.share_mode.name());
+    let report = simulate(
+        &ctx.lm,
+        &GroundTruth::default(),
+        &schedule,
+        &arrivals,
+        cfg.duration_s,
+        &SimConfig { mode: cfg.share_mode, seed: cfg.seed, ..Default::default() },
+    );
+    println!("\n{}", report.table());
+    println!(
+        "throughput {:.0} req/s, goodput {:.0} req/s, violations {:.2}%",
+        report.throughput_rps(),
+        report.goodput_rps(),
+        report.overall_violation_rate() * 100.0
+    );
+    Ok(())
+}
+
+/// Real serving on the PJRT CPU runtime (the `real` clock path).
+fn serve_real(args: &[String]) -> Result<()> {
+    let mut cfg = Config::default();
+    // Modest defaults for CPU execution.
+    cfg.rates = [20.0, 5.0, 5.0, 2.0, 5.0];
+    cfg.duration_s = 5.0;
+    parse_flags(args, &mut cfg)?;
+
+    println!("loading artifacts from {}/ ...", cfg.artifacts_dir);
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {} ({} devices)", engine.platform(), engine.device_count());
+    let registry = ModelRegistry::load(&engine, &cfg.artifacts_dir)?;
+    println!("compiled {} (model, batch) executables", registry.len());
+
+    let pairs: Vec<(ModelId, f64)> = ModelId::ALL
+        .iter()
+        .map(|&m| (m, cfg.rates[m.index()]))
+        .filter(|&(_, r)| r > 0.0)
+        .collect();
+    let arrivals = generate_arrivals(&pairs, cfg.duration_s, cfg.seed);
+    println!("serving {} requests over {}s...", arrivals.len(), cfg.duration_s);
+
+    let server = RealServer::new(&registry);
+    let outcome = server.serve(&arrivals, cfg.duration_s)?;
+    println!("\n{}", outcome.report.table());
+    println!(
+        "throughput {:.0} req/s, PJRT busy {:.2}s, batches: {:?}",
+        outcome.report.throughput_rps(),
+        outcome.exec_wall_s,
+        outcome.batches
+    );
+    Ok(())
+}

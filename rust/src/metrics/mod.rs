@@ -1,0 +1,221 @@
+//! Serving metrics: per-model latency/SLO accounting, throughput, and
+//! the report rows the experiment harnesses print.
+
+use std::collections::BTreeMap;
+
+use crate::models::ModelId;
+use crate::util::stats::Histogram;
+
+/// Accumulates per-model serving outcomes over a measurement window.
+#[derive(Clone, Debug)]
+pub struct ModelMetrics {
+    pub slo_ms: f64,
+    pub served: u64,
+    pub violations: u64,
+    pub dropped: u64,
+    hist: Histogram,
+}
+
+impl ModelMetrics {
+    fn new(slo_ms: f64) -> Self {
+        // 0.5 ms bins up to 1 s; the overflow bin catches stragglers.
+        ModelMetrics { slo_ms, served: 0, violations: 0, dropped: 0, hist: Histogram::new(0.5, 2000) }
+    }
+
+    /// Record a completed request with end-to-end latency `ms`.
+    pub fn record(&mut self, ms: f64) {
+        self.served += 1;
+        self.hist.record(ms);
+        if ms > self.slo_ms {
+            self.violations += 1;
+        }
+    }
+
+    /// Record a dropped request — counted as an SLO violation (§6.2:
+    /// "counting dropped tasks also as SLO violating cases").
+    pub fn record_drop(&mut self) {
+        self.dropped += 1;
+    }
+
+    /// Total requests that entered the system.
+    pub fn total(&self) -> u64 {
+        self.served + self.dropped
+    }
+
+    /// SLO violation rate including drops, in [0, 1].
+    pub fn violation_rate(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            0.0
+        } else {
+            (self.violations + self.dropped) as f64 / total as f64
+        }
+    }
+
+    /// Goodput fraction: served within SLO / total offered.
+    pub fn goodput_fraction(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            1.0
+        } else {
+            (self.served - self.violations) as f64 / total as f64
+        }
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.hist.percentile(50.0)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.hist.percentile(99.0)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.hist.mean()
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.hist.max()
+    }
+}
+
+/// Whole-run metrics: one `ModelMetrics` per served model.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    models: BTreeMap<ModelId, ModelMetrics>,
+    /// Measurement window (s) for throughput computation.
+    pub window_s: f64,
+}
+
+impl Report {
+    pub fn new(window_s: f64) -> Self {
+        Report { models: BTreeMap::new(), window_s }
+    }
+
+    pub fn model_mut(&mut self, m: ModelId, slo_ms: f64) -> &mut ModelMetrics {
+        self.models.entry(m).or_insert_with(|| ModelMetrics::new(slo_ms))
+    }
+
+    pub fn model(&self, m: ModelId) -> Option<&ModelMetrics> {
+        self.models.get(&m)
+    }
+
+    pub fn models(&self) -> impl Iterator<Item = (&ModelId, &ModelMetrics)> {
+        self.models.iter()
+    }
+
+    /// Aggregate SLO violation rate across all models (drops included).
+    pub fn overall_violation_rate(&self) -> f64 {
+        let total: u64 = self.models.values().map(|m| m.total()).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let bad: u64 = self
+            .models
+            .values()
+            .map(|m| m.violations + m.dropped)
+            .sum();
+        bad as f64 / total as f64
+    }
+
+    /// Requests served per second over the window.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.window_s <= 0.0 {
+            return 0.0;
+        }
+        let served: u64 = self.models.values().map(|m| m.served).sum();
+        served as f64 / self.window_s
+    }
+
+    /// Requests served *within SLO* per second.
+    pub fn goodput_rps(&self) -> f64 {
+        if self.window_s <= 0.0 {
+            return 0.0;
+        }
+        let good: u64 = self
+            .models
+            .values()
+            .map(|m| m.served - m.violations)
+            .sum();
+        good as f64 / self.window_s
+    }
+
+    /// Pretty per-model table (used by the CLI and examples).
+    pub fn table(&self) -> String {
+        let mut s = String::from(
+            "model           served  dropped  viol%   p50ms   p99ms    max\n",
+        );
+        for (m, mm) in &self.models {
+            s.push_str(&format!(
+                "{:<15} {:>6} {:>8} {:>6.2} {:>7.1} {:>7.1} {:>6.1}\n",
+                m.name(),
+                mm.served,
+                mm.dropped,
+                mm.violation_rate() * 100.0,
+                mm.p50_ms(),
+                mm.p99_ms(),
+                mm.max_ms(),
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn violation_accounting_includes_drops() {
+        let mut r = Report::new(10.0);
+        let mm = r.model_mut(ModelId::Lenet, 5.0);
+        mm.record(3.0); // ok
+        mm.record(6.0); // violation
+        mm.record_drop(); // violation
+        assert_eq!(mm.total(), 3);
+        assert!((mm.violation_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((r.overall_violation_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_and_goodput() {
+        let mut r = Report::new(2.0);
+        let mm = r.model_mut(ModelId::Vgg, 130.0);
+        for _ in 0..10 {
+            mm.record(50.0);
+        }
+        mm.record(200.0); // served but violating
+        assert!((r.throughput_rps() - 5.5).abs() < 1e-12);
+        assert!((r.goodput_rps() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_track_latencies() {
+        let mut r = Report::new(1.0);
+        let mm = r.model_mut(ModelId::Resnet, 95.0);
+        for i in 1..=100 {
+            mm.record(i as f64);
+        }
+        assert!(mm.p50_ms() >= 45.0 && mm.p50_ms() <= 55.0);
+        assert!(mm.p99_ms() >= 95.0);
+        assert_eq!(mm.max_ms(), 100.0);
+        assert!((mm.mean_ms() - 50.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn empty_report() {
+        let r = Report::new(1.0);
+        assert_eq!(r.overall_violation_rate(), 0.0);
+        assert_eq!(r.throughput_rps(), 0.0);
+        assert!(r.model(ModelId::Lenet).is_none());
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut r = Report::new(1.0);
+        r.model_mut(ModelId::Lenet, 5.0).record(1.0);
+        let t = r.table();
+        assert!(t.contains("lenet"));
+        assert!(t.lines().count() >= 2);
+    }
+}

@@ -1,0 +1,296 @@
+//! The latency function `L(b, p)` and derived scheduling quantities.
+//!
+//! `L(b, p) = t0 + w1*b / min(p, need(b))`
+//!
+//! * For `p >= need(b)` latency is flat — extra resource is wasted
+//!   (Fig 3's flat region; the motivation for spatial partitioning).
+//! * For `p < need(b)` latency scales as `1/p` (the steep region).
+//!
+//! Derived quantities implemented here, used by every scheduler:
+//! * `max_rate(p)` — the highest request rate a gpu-let of size `p` can
+//!   sustain for the model within its SLO (squishy bin-packing math:
+//!   batch-collection time + execution time <= SLO, execution <= collection
+//!   for stability).
+//! * `best_batch(p)` — the batch size achieving `max_rate(p)`.
+//! * `knee(rates)` — Kneedle-style most-cost-effective partition
+//!   (`MaxEfficientPartition` in Algorithm 1).
+
+use crate::models::{ModelId, ModelProfile};
+
+/// Analytic latency model over the full model catalog.
+///
+/// `slo_scale` tightens the SLOs this model reports: schedulers plan
+/// against `slo * slo_scale` (< 1) so the deployed schedule keeps
+/// headroom for Poisson burstiness and residual interference, while
+/// the simulator/metrics measure against the true SLO (scale 1.0).
+#[derive(Clone, Debug)]
+pub struct LatencyModel {
+    profiles: [ModelProfile; 5],
+    slo_scale: f64,
+}
+
+impl Default for LatencyModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyModel {
+    pub fn new() -> Self {
+        LatencyModel { profiles: crate::models::catalog(), slo_scale: 1.0 }
+    }
+
+    /// Planning-view model with tightened SLOs (see `SchedCtx`).
+    pub fn with_slo_scale(slo_scale: f64) -> Self {
+        assert!(slo_scale > 0.0 && slo_scale <= 1.0);
+        LatencyModel { profiles: crate::models::catalog(), slo_scale }
+    }
+
+    pub fn profile(&self, m: ModelId) -> &ModelProfile {
+        &self.profiles[m.index()]
+    }
+
+    /// Batch-`b` execution latency (ms) on a gpu-let of size `p` (0..=1].
+    pub fn latency_ms(&self, m: ModelId, b: u32, p: f64) -> f64 {
+        let prof = self.profile(m);
+        assert!(b >= 1, "batch must be >= 1");
+        assert!(p > 0.0 && p <= 1.0, "partition fraction out of (0,1]: {p}");
+        let eff = p.min(prof.need(b));
+        prof.t0_ms + prof.w1_ms * b as f64 / eff
+    }
+
+    /// SLO bound for the model (ms), scaled by the planning margin.
+    pub fn slo_ms(&self, m: ModelId) -> f64 {
+        self.profile(m).slo_ms * self.slo_scale
+    }
+
+    /// Max sustainable rate (req/s) for model `m` alone on a gpu-let of
+    /// size `p`, with the batch that achieves it. Returns None if even
+    /// batch 1 cannot meet the SLO.
+    ///
+    /// Squishy bin-packing feasibility for batch `b` at rate `r`:
+    ///   collect = b/r,  exec = L(b,p)
+    ///   (i) exec <= collect        (stability: drain as fast as we fill)
+    ///   (ii) collect + exec <= SLO (worst-case first-request latency)
+    /// The max rate for a given b is r = b / max(L, SLO - L), feasible
+    /// iff 2L <= SLO or L <= SLO - L ... i.e. L <= SLO/2 guarantees both
+    /// with r = b/L; for SLO/2 < L < SLO the rate is throttled to
+    /// r = b/L but collect (b/r = L) + L = 2L > SLO violates (ii), so
+    /// the feasibility cutoff is L <= SLO/2.
+    pub fn max_rate(&self, m: ModelId, p: f64) -> Option<(f64, u32)> {
+        let slo = self.slo_ms(m);
+        let mut best: Option<(f64, u32)> = None;
+        for b in super::BATCHES {
+            let l = self.latency_ms(m, b, p);
+            if 2.0 * l > slo {
+                continue;
+            }
+            // At rate r = b/collect with collect = SLO - L >= L, both
+            // constraints hold; the throughput-optimal choice is
+            // collect = L (duty cycle = exec time), r = b / L.
+            let r = b as f64 / l * 1000.0; // L in ms -> req/s
+            if best.map_or(true, |(br, _)| r > br) {
+                best = Some((r, b));
+            }
+        }
+        best
+    }
+
+    /// The largest batch whose latency meets `budget_ms` on size `p`
+    /// (Algorithm 1 line 27: argmax_b L(b, p) <= budget).
+    pub fn max_batch_within(&self, m: ModelId, p: f64, budget_ms: f64) -> Option<u32> {
+        let mut best = None;
+        for b in super::BATCHES {
+            if self.latency_ms(m, b, p) <= budget_ms {
+                best = Some(b);
+            }
+        }
+        best
+    }
+
+    /// Affordable-rate curve over the given partition sizes (percent).
+    pub fn rate_curve(&self, m: ModelId, sizes_pct: &[u32]) -> Vec<(u32, f64)> {
+        sizes_pct
+            .iter()
+            .map(|&s| {
+                let r = self.max_rate(m, s as f64 / 100.0).map_or(0.0, |(r, _)| r);
+                (s, r)
+            })
+            .collect()
+    }
+}
+
+/// `MaxEfficientPartition`: the knee of the affordable-rate curve —
+/// the size where the discrete curvature is most negative, i.e. where
+/// the marginal rate gain collapses (Fig 8: "the knee, where the
+/// curvature has the local maximum, implies the most cost-effective
+/// sweet spot").
+///
+/// `curve` is (size_pct, rate) sorted ascending by size; infeasible
+/// sizes carry rate 0 and are excluded. If the feasible curve never
+/// bends (convex/linear — the model keeps gaining from more resource),
+/// the whole GPU is the cost-effective choice.
+pub fn knee(curve: &[(u32, f64)]) -> u32 {
+    debug_assert!(!curve.is_empty());
+    let pts: Vec<(f64, f64)> = curve
+        .iter()
+        .filter(|&&(_, r)| r > 0.0)
+        .map(|&(s, r)| (s as f64, r))
+        .collect();
+    let fallback = curve[curve.len() - 1].0;
+    if pts.len() < 3 {
+        // Too few feasible points to measure curvature: take the best.
+        return pts
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map_or(fallback, |&(s, _)| s as u32);
+    }
+    let slope = |a: (f64, f64), b: (f64, f64)| (b.1 - a.1) / (b.0 - a.0);
+    let mut best: Option<(u32, f64)> = None; // (size, curvature)
+    for i in 1..pts.len() - 1 {
+        let curv = slope(pts[i], pts[i + 1]) - slope(pts[i - 1], pts[i]);
+        if curv < -1e-9 && best.map_or(true, |(_, c)| curv < c) {
+            best = Some((pts[i].0 as u32, curv));
+        }
+    }
+    // Flat tail with no interior bend: the first point where the curve
+    // stops improving; otherwise (still gaining at the top) take 100%.
+    best.map_or_else(
+        || {
+            for w in pts.windows(2) {
+                if w[1].1 <= w[0].1 * (1.0 + 1e-9) {
+                    return w[0].0 as u32;
+                }
+            }
+            pts[pts.len() - 1].0 as u32
+        },
+        |(s, _)| s,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelId;
+
+    fn lm() -> LatencyModel {
+        LatencyModel::new()
+    }
+
+    #[test]
+    fn latency_monotone_decreasing_in_p() {
+        let m = lm();
+        for id in ModelId::ALL {
+            for b in super::super::BATCHES {
+                let mut prev = f64::INFINITY;
+                for pct in [20, 40, 50, 60, 80, 100] {
+                    let l = m.latency_ms(id, b, pct as f64 / 100.0);
+                    assert!(l <= prev + 1e-12, "{id:?} b={b} p={pct}: {l} > {prev}");
+                    prev = l;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn latency_monotone_increasing_in_b() {
+        let m = lm();
+        for id in ModelId::ALL {
+            for pct in [20, 50, 100] {
+                let mut prev = 0.0;
+                for b in super::super::BATCHES {
+                    let l = m.latency_ms(id, b, pct as f64 / 100.0);
+                    assert!(l > prev, "{id:?} p={pct} b={b}");
+                    prev = l;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_batch_flat_beyond_knee() {
+        // Fig 3: with batch 1, extra resource beyond the knee is wasted.
+        let m = lm();
+        let l50 = m.latency_ms(ModelId::Lenet, 1, 0.5);
+        let l100 = m.latency_ms(ModelId::Lenet, 1, 1.0);
+        assert!((l50 - l100).abs() < 1e-12, "lenet b=1 should be flat 50->100%");
+        // Large batch on VGG keeps improving up to 100%.
+        let v50 = m.latency_ms(ModelId::Vgg, 32, 0.5);
+        let v100 = m.latency_ms(ModelId::Vgg, 32, 1.0);
+        assert!(v50 > v100 * 1.5, "vgg b=32 must gain from more resource");
+    }
+
+    #[test]
+    fn b32_full_gpu_hits_half_slo() {
+        let m = lm();
+        for id in ModelId::ALL {
+            let l = m.latency_ms(id, 32, 1.0);
+            assert!((l - m.slo_ms(id) / 2.0).abs() < 1e-9, "{id:?}");
+        }
+    }
+
+    #[test]
+    fn max_rate_monotone_in_p() {
+        let m = lm();
+        for id in ModelId::ALL {
+            let mut prev = 0.0;
+            for pct in [20, 40, 50, 60, 80, 100] {
+                let r = m.max_rate(id, pct as f64 / 100.0).map_or(0.0, |(r, _)| r);
+                assert!(r >= prev - 1e-9, "{id:?} p={pct}");
+                prev = r;
+            }
+            assert!(prev > 0.0, "{id:?} must be servable at p=1");
+        }
+    }
+
+    #[test]
+    fn max_rate_prefers_bigger_batches_on_bigger_lets() {
+        let m = lm();
+        let (_, b_small) = m.max_rate(ModelId::Vgg, 0.2).unwrap();
+        let (_, b_big) = m.max_rate(ModelId::Vgg, 1.0).unwrap();
+        assert!(b_big > b_small, "b at 100% ({b_big}) vs 20% ({b_small})");
+        assert_eq!(b_big, 32); // calibration makes b=32 optimal at p=1
+    }
+
+    #[test]
+    fn max_batch_within_budget() {
+        let m = lm();
+        let slo = m.slo_ms(ModelId::Vgg);
+        let b = m.max_batch_within(ModelId::Vgg, 1.0, slo / 2.0).unwrap();
+        assert_eq!(b, 32);
+        assert!(m.max_batch_within(ModelId::Vgg, 0.2, 0.1).is_none());
+    }
+
+    #[test]
+    fn knee_detection_on_synthetic_curves() {
+        // Saturating curve: knee where the slope collapses.
+        let curve = vec![(20, 100.0), (40, 190.0), (50, 200.0), (60, 202.0), (80, 203.0), (100, 204.0)];
+        assert_eq!(knee(&curve), 40);
+        // Superlinear curve: keeps gaining — take the whole GPU.
+        let sup = vec![(20, 0.0), (40, 40.0), (50, 60.0), (60, 90.0), (80, 160.0), (100, 300.0)];
+        assert_eq!(knee(&sup), 100);
+        // All-zero: only a whole GPU could ever help.
+        let zero: Vec<(u32, f64)> = [20, 40, 100].iter().map(|&s| (s, 0.0)).collect();
+        assert_eq!(knee(&zero), 100);
+        // Hard saturation: flat tail with no interior bend.
+        let flat = vec![(20, 0.0), (40, 500.0), (50, 500.0), (60, 500.0), (80, 500.0), (100, 500.0)];
+        assert_eq!(knee(&flat), 40);
+    }
+
+    #[test]
+    fn knee_small_for_lenet_large_for_vgg() {
+        let m = lm();
+        let sizes = [20, 40, 50, 60, 80, 100];
+        let kl = knee(&m.rate_curve(ModelId::Lenet, &sizes));
+        let kv = knee(&m.rate_curve(ModelId::Vgg, &sizes));
+        assert!(kl <= 40, "lenet knee {kl}");
+        assert!(kv >= 50, "vgg knee {kv}");
+        assert!(kv > kl, "vgg knee {kv} <= lenet knee {kl}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_partition() {
+        lm().latency_ms(ModelId::Lenet, 1, 0.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! Performance modeling: the profiled latency function `L(b, p)`, the
+//! knee/affordable-rate analysis behind `MaxEfficientPartition`, profile
+//! tables, and the EWMA request-rate monitor.
+//!
+//! The paper profiles each model offline on real 2080 Ti gpu-lets; our
+//! substrate is the calibrated analytic model in `latency` (DESIGN.md
+//! §3), which the discrete `ProfileTable` snapshots exactly like the
+//! paper's offline profiling pass would.
+
+pub mod latency;
+pub mod profile_table;
+pub mod rate;
+
+pub use latency::LatencyModel;
+pub use profile_table::ProfileTable;
+pub use rate::RateMonitor;
+
+/// Batch sizes the paper profiles (Fig 3) and serves (Table 4 cap).
+pub const BATCHES: [u32; 6] = [1, 2, 4, 8, 16, 32];
+
+/// Largest batch the server will form (Table 4: "we use the batch size
+/// of 32, since larger engenders the SLO unrealistically long").
+pub const MAX_BATCH: u32 = 32;

@@ -1,0 +1,123 @@
+//! Discrete profile tables — the paper's offline profiling output.
+//!
+//! The scheduler never queries the analytic model directly at runtime;
+//! it reads a `ProfileTable` built once per model over the (batch,
+//! partition) grid — exactly the artifact the paper's profiler produces
+//! on real gpu-lets. Lookups between grid points are conservative
+//! (round batch up, partition down) so scheduling errs on the safe side.
+
+use std::collections::BTreeMap;
+
+use crate::models::ModelId;
+use crate::perfmodel::{LatencyModel, BATCHES};
+
+/// Valid gpu-let sizes in percent (paper §3.2 split ratios + whole GPU).
+pub const PARTITIONS: [u32; 6] = [20, 40, 50, 60, 80, 100];
+
+/// Profiled latency grid for all models.
+#[derive(Clone, Debug)]
+pub struct ProfileTable {
+    /// latency_ms[(model, batch, partition_pct)]
+    grid: BTreeMap<(ModelId, u32, u32), f64>,
+}
+
+impl ProfileTable {
+    /// Build by "profiling" the latency substrate over the full grid —
+    /// the sim-clock analogue of the paper's offline profiling pass.
+    pub fn build(model: &LatencyModel) -> Self {
+        let mut grid = BTreeMap::new();
+        for m in ModelId::ALL {
+            for &b in &BATCHES {
+                for &p in &PARTITIONS {
+                    grid.insert((m, b, p), model.latency_ms(m, b, p as f64 / 100.0));
+                }
+            }
+        }
+        ProfileTable { grid }
+    }
+
+    /// Exact grid lookup.
+    pub fn get(&self, m: ModelId, b: u32, p_pct: u32) -> Option<f64> {
+        self.grid.get(&(m, b, p_pct)).copied()
+    }
+
+    /// Conservative lookup for arbitrary (b, p): round the batch up to
+    /// the next profiled size and the partition down to the previous
+    /// profiled size. Returns None if b exceeds the profiled maximum or
+    /// p is below the smallest profiled partition.
+    pub fn latency_ms(&self, m: ModelId, b: u32, p_pct: u32) -> Option<f64> {
+        let b_up = BATCHES.iter().copied().find(|&x| x >= b)?;
+        let p_down = PARTITIONS.iter().copied().rev().find(|&x| x <= p_pct)?;
+        self.get(m, b_up, p_down)
+    }
+
+    /// Number of profiled grid points.
+    pub fn len(&self) -> usize {
+        self.grid.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.grid.is_empty()
+    }
+
+    /// Dump rows for one model (Fig 3 regeneration): (batch, partition, ms).
+    pub fn rows(&self, m: ModelId) -> Vec<(u32, u32, f64)> {
+        self.grid
+            .iter()
+            .filter(|((id, _, _), _)| *id == m)
+            .map(|(&(_, b, p), &l)| (b, p, l))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> ProfileTable {
+        ProfileTable::build(&LatencyModel::new())
+    }
+
+    #[test]
+    fn full_grid_profiled() {
+        let t = table();
+        assert_eq!(t.len(), 5 * BATCHES.len() * PARTITIONS.len());
+        assert!(!t.is_empty());
+    }
+
+    #[test]
+    fn exact_lookup_matches_model() {
+        let t = table();
+        let m = LatencyModel::new();
+        let want = m.latency_ms(ModelId::Vgg, 16, 0.6);
+        assert_eq!(t.get(ModelId::Vgg, 16, 60).unwrap(), want);
+    }
+
+    #[test]
+    fn conservative_rounding() {
+        let t = table();
+        // b=5 rounds up to 8; p=75 rounds down to 60.
+        let got = t.latency_ms(ModelId::Resnet, 5, 75).unwrap();
+        let want = t.get(ModelId::Resnet, 8, 60).unwrap();
+        assert_eq!(got, want);
+        // Conservative: must over-estimate the true (b=5, p=0.75) latency.
+        let truth = LatencyModel::new().latency_ms(ModelId::Resnet, 5, 0.75);
+        assert!(got >= truth);
+    }
+
+    #[test]
+    fn out_of_range_lookups() {
+        let t = table();
+        assert!(t.latency_ms(ModelId::Lenet, 64, 100).is_none()); // b too big
+        assert!(t.latency_ms(ModelId::Lenet, 1, 10).is_none()); // p too small
+        assert!(t.latency_ms(ModelId::Lenet, 1, 100).is_some());
+    }
+
+    #[test]
+    fn rows_cover_one_model() {
+        let t = table();
+        let rows = t.rows(ModelId::Lenet);
+        assert_eq!(rows.len(), BATCHES.len() * PARTITIONS.len());
+        assert!(rows.iter().all(|&(_, _, l)| l > 0.0));
+    }
+}

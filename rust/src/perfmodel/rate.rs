@@ -1,0 +1,120 @@
+//! Request-rate monitoring (§4.3: "incoming request rates of each model
+//! are tracked with an exponentially-weighted moving average").
+
+use std::collections::BTreeMap;
+
+use crate::models::ModelId;
+use crate::util::stats::Ewma;
+
+/// Per-model EWMA rate tracker with windowed counting.
+///
+/// `observe` records arrivals; `tick(window_s)` folds the window's count
+/// into the EWMA and resets the window. `rates()` is what the scheduler
+/// consumes each period.
+#[derive(Clone, Debug)]
+pub struct RateMonitor {
+    alpha: f64,
+    counts: BTreeMap<ModelId, u64>,
+    ewmas: BTreeMap<ModelId, Ewma>,
+}
+
+impl RateMonitor {
+    pub fn new(alpha: f64) -> Self {
+        RateMonitor { alpha, counts: BTreeMap::new(), ewmas: BTreeMap::new() }
+    }
+
+    /// Record `n` arrivals for `m` in the current window.
+    pub fn observe(&mut self, m: ModelId, n: u64) {
+        *self.counts.entry(m).or_insert(0) += n;
+    }
+
+    /// Close the window of `window_s` seconds; update EWMAs.
+    pub fn tick(&mut self, window_s: f64) {
+        assert!(window_s > 0.0);
+        for m in ModelId::ALL {
+            let count = self.counts.get(&m).copied().unwrap_or(0);
+            let rate = count as f64 / window_s;
+            self.ewmas
+                .entry(m)
+                .or_insert_with(|| Ewma::new(self.alpha))
+                .update(rate);
+        }
+        self.counts.clear();
+    }
+
+    /// Smoothed rate for one model (0 until the first tick).
+    pub fn rate(&self, m: ModelId) -> f64 {
+        self.ewmas.get(&m).and_then(|e| e.get()).unwrap_or(0.0)
+    }
+
+    /// Smoothed rates for all models, descending by rate (the scheduler
+    /// sorts models this way — Algorithm 1 line 2).
+    pub fn rates_desc(&self) -> Vec<(ModelId, f64)> {
+        let mut v: Vec<(ModelId, f64)> =
+            ModelId::ALL.iter().map(|&m| (m, self.rate(m))).collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+
+    /// True if any model's smoothed rate moved more than `threshold`
+    /// (relative) vs `baseline` — the re-scheduling trigger.
+    pub fn changed_vs(&self, baseline: &BTreeMap<ModelId, f64>, threshold: f64) -> bool {
+        ModelId::ALL.iter().any(|&m| {
+            let now = self.rate(m);
+            let base = baseline.get(&m).copied().unwrap_or(0.0);
+            let denom = base.max(1e-9);
+            (now - base).abs() / denom > threshold
+        })
+    }
+
+    /// Snapshot of the smoothed rates.
+    pub fn snapshot(&self) -> BTreeMap<ModelId, f64> {
+        ModelId::ALL.iter().map(|&m| (m, self.rate(m))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_produce_rates() {
+        let mut mon = RateMonitor::new(1.0); // no smoothing: rate = last window
+        mon.observe(ModelId::Lenet, 100);
+        mon.tick(2.0);
+        assert_eq!(mon.rate(ModelId::Lenet), 50.0);
+        assert_eq!(mon.rate(ModelId::Vgg), 0.0);
+    }
+
+    #[test]
+    fn ewma_smooths() {
+        let mut mon = RateMonitor::new(0.5);
+        mon.observe(ModelId::Vgg, 100);
+        mon.tick(1.0); // rate 100
+        mon.tick(1.0); // rate 0 -> ewma 50
+        assert!((mon.rate(ModelId::Vgg) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rates_desc_sorted() {
+        let mut mon = RateMonitor::new(1.0);
+        mon.observe(ModelId::Lenet, 10);
+        mon.observe(ModelId::Vgg, 100);
+        mon.tick(1.0);
+        let rates = mon.rates_desc();
+        assert_eq!(rates[0].0, ModelId::Vgg);
+        assert!(rates.windows(2).all(|w| w[0].1 >= w[1].1));
+    }
+
+    #[test]
+    fn change_detection() {
+        let mut mon = RateMonitor::new(1.0);
+        mon.observe(ModelId::Lenet, 100);
+        mon.tick(1.0);
+        let baseline = mon.snapshot();
+        assert!(!mon.changed_vs(&baseline, 0.1));
+        mon.observe(ModelId::Lenet, 200);
+        mon.tick(1.0);
+        assert!(mon.changed_vs(&baseline, 0.1));
+    }
+}

@@ -1,0 +1,187 @@
+//! `artifacts/manifest.json` — the contract between the Python AOT
+//! pipeline and the Rust runtime: which HLO file serves which
+//! (model, batch), with input/output shapes and the model's SLO.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::models::ModelId;
+use crate::util::json::Json;
+
+/// One (model, batch) artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactInfo {
+    pub file: PathBuf,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+}
+
+impl ArtifactInfo {
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+}
+
+/// Golden end-to-end vector: the Python-side model output on a fixed
+/// deterministic input (`((i*31) % 17) / 17`), used to verify the Rust
+/// runtime's numerics against L2.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Golden {
+    pub batch: u32,
+    pub output: Vec<f64>,
+}
+
+/// All artifacts for one model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelEntry {
+    pub model: ModelId,
+    pub slo_ms: f64,
+    pub input_shape: Vec<usize>,
+    /// batch -> artifact
+    pub artifacts: BTreeMap<u32, ArtifactInfo>,
+    /// Optional cross-language verification vector.
+    pub golden: Option<Golden>,
+}
+
+impl ModelEntry {
+    /// Smallest emitted batch >= `want` (serving pads up to it).
+    pub fn batch_for(&self, want: u32) -> Option<u32> {
+        self.artifacts.keys().copied().find(|&b| b >= want)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub batch_sizes: Vec<u32>,
+    pub models: BTreeMap<ModelId, ModelEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Parse(format!("cannot read {}: {e} (run `make artifacts`)", path.display()))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON with `dir` as the artifact root.
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = Json::parse(text)?;
+        let batch_sizes = root
+            .get("batch_sizes")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_usize()? as u32))
+            .collect::<Result<Vec<u32>>>()?;
+        let mut models = BTreeMap::new();
+        for (name, entry) in root.get("models")?.as_obj()? {
+            let model = ModelId::parse(name)?;
+            let slo_ms = entry.get("slo_ms")?.as_f64()?;
+            let input_shape = shape_of(entry.get("input_shape")?)?;
+            let mut artifacts = BTreeMap::new();
+            for (bstr, art) in entry.get("artifacts")?.as_obj()? {
+                let b: u32 = bstr
+                    .parse()
+                    .map_err(|_| Error::parse(format!("bad batch key {bstr:?}")))?;
+                artifacts.insert(
+                    b,
+                    ArtifactInfo {
+                        file: dir.join(art.get("file")?.as_str()?),
+                        input_shape: shape_of(art.get("input_shape")?)?,
+                        output_shape: shape_of(art.get("output_shape")?)?,
+                    },
+                );
+            }
+            if artifacts.is_empty() {
+                return Err(Error::Model(format!("{name}: no artifacts")));
+            }
+            let golden = match entry.opt("golden") {
+                Some(g) => Some(Golden {
+                    batch: g.get("batch")?.as_usize()? as u32,
+                    output: g
+                        .get("output")?
+                        .as_arr()?
+                        .iter()
+                        .map(|v| v.as_f64())
+                        .collect::<Result<Vec<f64>>>()?,
+                }),
+                None => None,
+            };
+            models.insert(model, ModelEntry { model, slo_ms, input_shape, artifacts, golden });
+        }
+        Ok(Manifest { batch_sizes, models, dir })
+    }
+
+    pub fn entry(&self, m: ModelId) -> Result<&ModelEntry> {
+        self.models
+            .get(&m)
+            .ok_or_else(|| Error::Model(format!("{m} not in manifest")))
+    }
+}
+
+fn shape_of(v: &Json) -> Result<Vec<usize>> {
+    v.as_arr()?.iter().map(|x| x.as_usize()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "batch_sizes": [1, 2],
+      "models": {
+        "lenet": {
+          "abbrev": "le", "slo_ms": 5.0, "input_shape": [28, 28, 1],
+          "output_dim": 10,
+          "artifacts": {
+            "1": {"file": "lenet_b1.hlo.txt", "input_shape": [1,28,28,1], "output_shape": [1,10]},
+            "2": {"file": "lenet_b2.hlo.txt", "input_shape": [2,28,28,1], "output_shape": [2,10]}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/a")).unwrap();
+        assert_eq!(m.batch_sizes, vec![1, 2]);
+        let e = m.entry(ModelId::Lenet).unwrap();
+        assert_eq!(e.slo_ms, 5.0);
+        assert_eq!(e.artifacts.len(), 2);
+        let a = &e.artifacts[&2];
+        assert_eq!(a.file, PathBuf::from("/a/lenet_b2.hlo.txt"));
+        assert_eq!(a.input_len(), 2 * 28 * 28);
+        assert_eq!(a.output_len(), 20);
+    }
+
+    #[test]
+    fn batch_for_rounds_up() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/a")).unwrap();
+        let e = m.entry(ModelId::Lenet).unwrap();
+        assert_eq!(e.batch_for(1), Some(1));
+        assert_eq!(e.batch_for(2), Some(2));
+        assert_eq!(e.batch_for(3), None);
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/a")).unwrap();
+        assert!(m.entry(ModelId::Vgg).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+        assert!(Manifest::parse("not json", PathBuf::new()).is_err());
+    }
+}

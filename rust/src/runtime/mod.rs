@@ -1,0 +1,11 @@
+//! PJRT execution runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`
+//! emitted by `python/compile/aot.py`) and runs them on the CPU PJRT
+//! client from the L3 hot path. Python is never involved at runtime.
+
+pub mod engine;
+pub mod manifest;
+pub mod registry;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactInfo, Golden, Manifest, ModelEntry};
+pub use registry::ModelRegistry;

@@ -1,0 +1,107 @@
+//! Model registry: every (model, batch) artifact compiled and held ready.
+//!
+//! The backend executors index into this registry on the hot path; all
+//! compilation happens at startup (the serving analogue of the paper's
+//! "loading required models and warming up" during reorganization).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::models::ModelId;
+use crate::runtime::engine::{Engine, Executable};
+use crate::runtime::manifest::Manifest;
+
+/// Compiled executables for every (model, batch) in the manifest.
+pub struct ModelRegistry {
+    pub manifest: Manifest,
+    exes: BTreeMap<(ModelId, u32), Executable>,
+}
+
+impl ModelRegistry {
+    /// Load the manifest from `dir` and compile every artifact.
+    pub fn load(engine: &Engine, dir: impl AsRef<Path>) -> Result<ModelRegistry> {
+        let manifest = Manifest::load(dir)?;
+        Self::from_manifest(engine, manifest)
+    }
+
+    /// Compile all artifacts referenced by an already-parsed manifest.
+    pub fn from_manifest(engine: &Engine, manifest: Manifest) -> Result<ModelRegistry> {
+        let mut exes = BTreeMap::new();
+        for (m, entry) in &manifest.models {
+            for (&b, art) in &entry.artifacts {
+                let exe = engine.load_hlo_text(&art.file)?;
+                exes.insert((*m, b), exe);
+            }
+        }
+        Ok(ModelRegistry { manifest, exes })
+    }
+
+    /// Load only selected models (faster startup for examples).
+    pub fn load_models(
+        engine: &Engine,
+        dir: impl AsRef<Path>,
+        models: &[ModelId],
+    ) -> Result<ModelRegistry> {
+        let mut manifest = Manifest::load(dir)?;
+        manifest.models.retain(|m, _| models.contains(m));
+        if manifest.models.is_empty() {
+            return Err(Error::Model("no requested models in manifest".into()));
+        }
+        Self::from_manifest(engine, manifest)
+    }
+
+    /// Number of compiled executables.
+    pub fn len(&self) -> usize {
+        self.exes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.exes.is_empty()
+    }
+
+    /// Execute a batch: pads `inputs` (per-sample flattened f32) up to
+    /// the smallest emitted batch >= the actual count, runs, and returns
+    /// one output vector per real sample.
+    pub fn infer(&self, m: ModelId, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if inputs.is_empty() {
+            return Ok(vec![]);
+        }
+        let entry = self.manifest.entry(m)?;
+        let want = inputs.len() as u32;
+        let b = entry.batch_for(want).ok_or_else(|| {
+            Error::Model(format!("{m}: batch {want} exceeds max emitted batch"))
+        })?;
+        let art = &entry.artifacts[&b];
+        let sample_len: usize = entry.input_shape.iter().product();
+        for (i, s) in inputs.iter().enumerate() {
+            if s.len() != sample_len {
+                return Err(Error::Model(format!(
+                    "{m}: sample {i} has {} elements, expected {sample_len}",
+                    s.len()
+                )));
+            }
+        }
+        // Pad with zeros to the artifact batch.
+        let mut flat = Vec::with_capacity(art.input_len());
+        for s in inputs {
+            flat.extend_from_slice(s);
+        }
+        flat.resize(art.input_len(), 0.0);
+
+        let exe = self
+            .exes
+            .get(&(m, b))
+            .ok_or_else(|| Error::Model(format!("{m} b={b}: not compiled")))?;
+        let out = exe.run_f32(&flat, &art.input_shape)?;
+        let out_dim = art.output_len() / b as usize;
+        Ok(out
+            .chunks(out_dim)
+            .take(inputs.len())
+            .map(|c| c.to_vec())
+            .collect())
+    }
+}
+
+// Registry correctness over real artifacts is exercised by
+// rust/tests/integration_runtime.rs (requires `make artifacts`).

@@ -1,0 +1,497 @@
+//! Elastic Partitioning — the paper's Algorithm 1.
+//!
+//! For every model in descending request-rate order, repeatedly:
+//! 1. `MaxEfficientPartition` — the knee of the affordable-rate curve
+//!    (most cost-effective gpu-let size).
+//! 2. `MinRequiredPartition` — the smallest size that can absorb the
+//!    still-unassigned rate within the SLO.
+//! 3. `p_ideal = min(p_eff, p_req)`; `FindBestFit` scans the remaining
+//!    gpu-lets ascending by size, splitting a whole GPU when needed
+//!    (SPLIT), picks the SLO-max batch, and — if the placement can
+//!    instead ride an already-allocated gpu-let via temporal sharing —
+//!    MERGEs there and reverts the split (REVERTSPLIT).
+//!
+//! The `gpulet+int` variant adds the fitted linear interference
+//! prediction to every SLO feasibility check (line 28), both for the
+//! new placement and for the co-resident gpu-let it would disturb.
+
+use crate::error::{Error, Result};
+use crate::gpu::gpulet::{split_of, GpuLetSpec};
+use crate::models::ModelId;
+use crate::perfmodel::latency::knee;
+use crate::perfmodel::profile_table::PARTITIONS;
+use crate::sched::types::{Assignment, LetPlan, SchedCtx, Schedule, Scheduler};
+
+/// Residual-rate epsilon: request rates below this are considered served.
+const EPS_RATE: f64 = 1e-6;
+
+/// Elastic Partitioning scheduler (Algorithm 1).
+#[derive(Clone, Copy, Debug)]
+pub struct ElasticPartitioning {
+    /// `true` = `gpulet+int` (interference-aware), `false` = `gpulet`.
+    pub interference_aware: bool,
+}
+
+impl ElasticPartitioning {
+    pub fn gpulet() -> Self {
+        ElasticPartitioning { interference_aware: false }
+    }
+
+    pub fn gpulet_int() -> Self {
+        ElasticPartitioning { interference_aware: true }
+    }
+
+    /// MAXEFFICIENTPARTITION: knee of the affordable-rate curve.
+    /// (Computed once per model per `schedule()` call — the curve only
+    /// depends on the profiled latency model, not on placements.)
+    fn max_efficient_partition(&self, ctx: &SchedCtx, m: ModelId) -> u32 {
+        knee(&ctx.lm.rate_curve(m, &PARTITIONS))
+    }
+
+    /// MINREQUIREDPARTITION: smallest size sustaining `rate` solo.
+    fn min_required_partition(&self, ctx: &SchedCtx, m: ModelId, rate: f64) -> u32 {
+        for &p in &PARTITIONS {
+            if let Some((r, _)) = ctx.lm.max_rate(m, p as f64 / 100.0) {
+                if r * crate::sched::types::CAPACITY_FRACTION >= rate {
+                    return p;
+                }
+            }
+        }
+        100
+    }
+
+    /// Predicted interference stretch for a hypothetical plan on `spec`,
+    /// given the allocated co-resident let on the same GPU (if any).
+    fn intf_for(
+        &self,
+        ctx: &SchedCtx,
+        alloc: &[LetPlan],
+        probe: &LetPlan,
+    ) -> f64 {
+        if !self.interference_aware {
+            return 0.0;
+        }
+        alloc
+            .iter()
+            .filter(|lp| lp.spec.gpu == probe.spec.gpu && lp.spec != probe.spec)
+            .map(|lp| ctx.predicted_intf(probe, lp))
+            .fold(0.0, f64::max)
+    }
+
+    /// Co-resident plans of `probe`'s GPU must stay feasible once it
+    /// lands next to them (interference-aware only). Because batch sizes
+    /// are *squishy*, a disturbed neighbor may shrink its batches to
+    /// re-fit — this returns the adapted neighbor plans (indexes into
+    /// `alloc`) or `None` when no adaptation works.
+    fn adapt_neighbors(
+        &self,
+        ctx: &SchedCtx,
+        alloc: &[LetPlan],
+        probe: &LetPlan,
+    ) -> Option<Vec<(usize, LetPlan)>> {
+        if !self.interference_aware {
+            return Some(vec![]);
+        }
+        let mut adapted = Vec::new();
+        for (i, lp) in alloc.iter().enumerate() {
+            if lp.spec.gpu != probe.spec.gpu || lp.spec == probe.spec {
+                continue;
+            }
+            let intf = ctx.predicted_intf(lp, probe);
+            if lp.feasible(&ctx.lm, intf) {
+                continue;
+            }
+            let new_plan = crate::sched::types::squish_plan(&ctx.lm, lp, intf)?;
+            adapted.push((i, new_plan));
+        }
+        Some(adapted)
+    }
+
+    /// Try to MERGE `m` (rate `want`) into an allocated plan via temporal
+    /// sharing. Returns the absorbed rate on success.
+    fn try_merge(
+        &self,
+        ctx: &SchedCtx,
+        alloc: &mut [LetPlan],
+        m: ModelId,
+        want: f64,
+    ) -> Option<f64> {
+        // Prefer the smallest-size plan that can absorb the whole want
+        // (saves big lets for heavy models).
+        let mut order: Vec<usize> = (0..alloc.len()).collect();
+        order.sort_by_key(|&i| alloc[i].spec.size_pct);
+        for i in order {
+            let (spec, intf) = {
+                let plan = &alloc[i];
+                let others: Vec<&LetPlan> = alloc
+                    .iter()
+                    .filter(|lp| lp.spec.gpu == plan.spec.gpu && lp.spec != plan.spec)
+                    .collect();
+                let mut worst: f64 = 0.0;
+                if self.interference_aware {
+                    for o in &others {
+                        worst = worst.max(ctx.predicted_intf(plan, o));
+                    }
+                }
+                (plan.spec, worst)
+            };
+            let p = spec.fraction();
+            // Largest batch that could work on this partition at all.
+            let Some(max_b) = ctx.lm.max_batch_within(m, p, ctx.lm.slo_ms(m) / 2.0)
+            else {
+                continue;
+            };
+            // Find the largest batch whose merged duty cycle still fits.
+            let mut best: Option<(u32, f64)> = None;
+            for &b in crate::perfmodel::BATCHES.iter().filter(|&&b| b <= max_b) {
+                let head = alloc[i].headroom_rate(&ctx.lm, m, b, intf);
+                if head >= want - EPS_RATE {
+                    best = Some((b, head));
+                }
+            }
+            if let Some((b, _)) = best {
+                alloc[i].assignments.push(Assignment { model: m, batch: b, rate: want });
+                debug_assert!(alloc[i].feasible(&ctx.lm, intf));
+                return Some(want);
+            }
+        }
+        None
+    }
+
+    /// FINDBESTFIT: place (m, remaining) on the best-fitting free gpu-let
+    /// or merge into an allocated one. Mutates `remain`/`alloc`; returns
+    /// the rate absorbed.
+    fn find_best_fit(
+        &self,
+        ctx: &SchedCtx,
+        remain: &mut Vec<GpuLetSpec>,
+        alloc: &mut Vec<LetPlan>,
+        m: ModelId,
+        p_ideal: u32,
+        remaining: f64,
+    ) -> Option<f64> {
+        // Best fit over the *post-split* size: a whole GPU that can SPLIT
+        // down to exactly p_ideal is a perfect fit (fit 0), an oversized
+        // leftover ranks by its excess. Equal fits tie-break on the
+        // predicted interference against that GPU's allocated
+        // co-residents (interference-aware only — this is what steers
+        // two heavy models onto different GPUs), then on the smaller
+        // original size (conserve whole GPUs). This is line 20's
+        // ascending-size sweep generalized to the SPLIT option.
+        let mut order: Vec<(u32, u32, u32, usize)> = remain
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.size_pct >= p_ideal)
+            .map(|(idx, s)| {
+                let use_size = if s.size_pct == 100 && p_ideal < 100 {
+                    split_of(p_ideal).map_or(100, |(a, _)| a)
+                } else {
+                    s.size_pct
+                };
+                let intf_key = if self.interference_aware {
+                    let b_guess = ctx
+                        .lm
+                        .max_batch_within(m, use_size as f64 / 100.0, ctx.lm.slo_ms(m) / 2.0)
+                        .unwrap_or(1);
+                    let probe = LetPlan {
+                        spec: GpuLetSpec { gpu: s.gpu, size_pct: use_size },
+                        assignments: vec![Assignment { model: m, batch: b_guess, rate: 0.0 }],
+                    };
+                    (self.intf_for(ctx, alloc, &probe) * 1000.0) as u32
+                } else {
+                    0
+                };
+                (use_size - p_ideal, intf_key, s.size_pct, idx)
+            })
+            .collect();
+        order.sort_unstable();
+
+        for (_, _, _, idx) in order {
+            let cand = remain[idx];
+            // SPLIT a whole GPU down to the ideal size (line 23-25).
+            let (use_spec, leftover) = if cand.size_pct == 100 && p_ideal < 100 {
+                match split_of(p_ideal) {
+                    Some((a, rem)) => (
+                        GpuLetSpec { gpu: cand.gpu, size_pct: a },
+                        Some(GpuLetSpec { gpu: cand.gpu, size_pct: rem }),
+                    ),
+                    None => (cand, None),
+                }
+            } else {
+                (cand, None)
+            };
+
+            let p = use_spec.fraction();
+            // Line 27: b = argmax_b L(b, size) <= SLO budget. The duty-
+            // cycle rule (2D <= SLO) makes the budget SLO/2 for a solo let.
+            let Some(b) = ctx.lm.max_batch_within(m, p, ctx.lm.slo_ms(m) / 2.0) else {
+                continue;
+            };
+            // Build the probe plan to evaluate interference (line 28).
+            let mut probe = LetPlan {
+                spec: use_spec,
+                assignments: vec![Assignment { model: m, batch: b, rate: 0.0 }],
+            };
+            let intf = self.intf_for(ctx, alloc, &probe);
+            let exec = ctx.lm.latency_ms(m, b, p) * (1.0 + intf);
+            if 2.0 * exec > ctx.lm.slo_ms(m) {
+                // Interference pushes past SLO: try a smaller batch first.
+                let Some(bb) = crate::perfmodel::BATCHES
+                    .iter()
+                    .copied()
+                    .filter(|&bb| {
+                        2.0 * ctx.lm.latency_ms(m, bb, p) * (1.0 + intf)
+                            <= ctx.lm.slo_ms(m)
+                    })
+                    .last()
+                else {
+                    continue;
+                };
+                probe.assignments[0].batch = bb;
+            }
+            let b = probe.assignments[0].batch;
+            let exec = ctx.lm.latency_ms(m, b, p) * (1.0 + intf);
+            let capacity =
+                b as f64 * 1000.0 / exec * crate::sched::types::CAPACITY_FRACTION;
+            if capacity <= 0.0 {
+                continue;
+            }
+            let Some(adapted) = self.adapt_neighbors(ctx, alloc, &probe) else {
+                continue;
+            };
+            let assigned = remaining.min(capacity);
+            probe.assignments[0].rate = assigned;
+            debug_assert!(probe.feasible(&ctx.lm, intf));
+
+            // Lines 33-38: prefer temporal-sharing MERGE when an already
+            // allocated gpu-let can absorb this same load — then the
+            // split is reverted and the free let stays free.
+            if let Some(merged) = self.try_merge(ctx, alloc, m, assigned) {
+                return Some(merged); // REVERTSPLIT: `remain` untouched.
+            }
+
+            // Commit: consume the candidate, release the leftover half,
+            // re-squish disturbed neighbors.
+            for (i, plan) in adapted {
+                alloc[i] = plan;
+            }
+            remain.swap_remove(idx);
+            if let Some(rest) = leftover {
+                remain.push(rest);
+            }
+            alloc.push(probe);
+            return Some(assigned);
+        }
+
+        // No free gpu-let fits; merging into allocated capacity is the
+        // last resort (keeps Algorithm 1's spirit: use what exists).
+        self.try_merge(ctx, alloc, m, remaining)
+    }
+}
+
+impl Scheduler for ElasticPartitioning {
+    fn name(&self) -> &'static str {
+        if self.interference_aware {
+            "gpulet+int"
+        } else {
+            "gpulet"
+        }
+    }
+
+    fn schedule(&self, ctx: &SchedCtx, rates: &[f64; 5]) -> Result<Schedule> {
+        // Reset remain_gpulets: every GPU whole (lines 2-4).
+        let mut remain: Vec<GpuLetSpec> = (0..ctx.num_gpus)
+            .map(|gpu| GpuLetSpec { gpu, size_pct: 100 })
+            .collect();
+        let mut alloc: Vec<LetPlan> = Vec::new();
+
+        // Models sorted by rate, descending (line 3).
+        let mut models: Vec<(ModelId, f64)> = ModelId::ALL
+            .iter()
+            .map(|&m| (m, rates[m.index()]))
+            .filter(|&(_, r)| r > 0.0)
+            .collect();
+        models.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+
+        // Knees are placement-independent: compute once per *offered*
+        // model (most of the 1023-scenario population offers only a
+        // subset) instead of once per placement round.
+        let mut knees = [0u32; 5];
+        for &(m, _) in &models {
+            knees[m.index()] = self.max_efficient_partition(ctx, m);
+        }
+
+        for (m, rate) in models {
+            let mut remaining = rate;
+            let mut rounds = 0usize;
+            while remaining > EPS_RATE {
+                rounds += 1;
+                if rounds > 4 * ctx.num_gpus.max(1) * PARTITIONS.len() {
+                    return Err(Error::NotSchedulable(format!(
+                        "{m}: no progress after {rounds} placement rounds"
+                    )));
+                }
+                let p_eff = knees[m.index()];
+                let p_req = self.min_required_partition(ctx, m, remaining);
+                let p_ideal = p_eff.min(p_req);
+                match self.find_best_fit(ctx, &mut remain, &mut alloc, m, p_ideal, remaining)
+                {
+                    Some(assigned) if assigned > EPS_RATE => remaining -= assigned,
+                    _ => {
+                        return Err(Error::NotSchedulable(format!(
+                            "{m}: {remaining:.1} req/s left with no fitting gpu-let"
+                        )))
+                    }
+                }
+            }
+        }
+
+        let sched = Schedule { lets: alloc };
+        sched.validate(&ctx.lm, ctx.num_gpus)?;
+        Ok(sched)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(gpus: usize) -> SchedCtx {
+        SchedCtx::new(gpus, None)
+    }
+
+    fn ctx_int(gpus: usize) -> SchedCtx {
+        use crate::interference::linear_model::{
+            profiling_population, train_val_split, InterferenceModel,
+        };
+        use crate::interference::GroundTruth;
+        let (train, _) =
+            train_val_split(profiling_population(&GroundTruth::default()), 0.7, 42);
+        SchedCtx::new(gpus, Some(InterferenceModel::fit(&train).unwrap()))
+    }
+
+    #[test]
+    fn schedules_light_load_on_one_gpu() {
+        let c = ctx(4);
+        let s = ElasticPartitioning::gpulet()
+            .schedule(&c, &[50.0, 0.0, 0.0, 0.0, 0.0])
+            .unwrap();
+        s.validate(&c.lm, 4).unwrap();
+        assert!(s.assigned_rates()[ModelId::Lenet.index()] >= 50.0 - 1e-6);
+        // LeNet's knee is small: it must NOT get a whole GPU.
+        assert!(s.lets.iter().all(|l| l.spec.size_pct <= 50));
+    }
+
+    #[test]
+    fn covers_equal_scenario() {
+        let c = ctx(4);
+        let rates = [50.0; 5];
+        let s = ElasticPartitioning::gpulet().schedule(&c, &rates).unwrap();
+        s.validate(&c.lm, 4).unwrap();
+        let assigned = s.assigned_rates();
+        for m in ModelId::ALL {
+            assert!(
+                assigned[m.index()] >= rates[m.index()] - 1e-6,
+                "{m}: assigned {} < offered {}",
+                assigned[m.index()],
+                rates[m.index()]
+            );
+        }
+    }
+
+    #[test]
+    fn int_variant_also_covers_equal() {
+        let c = ctx_int(4);
+        let s = ElasticPartitioning::gpulet_int().schedule(&c, &[50.0; 5]).unwrap();
+        s.validate(&c.lm, 4).unwrap();
+        let assigned = s.assigned_rates();
+        assert!(assigned.iter().sum::<f64>() >= 250.0 - 1e-6);
+    }
+
+    #[test]
+    fn absurd_load_not_schedulable() {
+        let c = ctx(4);
+        let err = ElasticPartitioning::gpulet()
+            .schedule(&c, &[1e9, 1e9, 1e9, 1e9, 1e9])
+            .unwrap_err();
+        assert!(matches!(err, Error::NotSchedulable(_)));
+    }
+
+    #[test]
+    fn zero_rates_produce_empty_schedule() {
+        let c = ctx(4);
+        let s = ElasticPartitioning::gpulet().schedule(&c, &[0.0; 5]).unwrap();
+        assert!(s.lets.is_empty());
+        assert_eq!(s.total_allocated_pct(), 0);
+    }
+
+    #[test]
+    fn heavy_model_gets_multiple_lets() {
+        let c = ctx(4);
+        // Well beyond one GPU's VGG capacity.
+        let (r100, _) = c.lm.max_rate(ModelId::Vgg, 1.0).unwrap();
+        let want = r100 * 2.5;
+        let s = ElasticPartitioning::gpulet()
+            .schedule(&c, &[0.0, 0.0, 0.0, 0.0, want])
+            .unwrap();
+        let vgg_lets = s
+            .lets
+            .iter()
+            .filter(|l| l.assignments.iter().any(|a| a.model == ModelId::Vgg))
+            .count();
+        assert!(vgg_lets >= 3, "vgg spread over {vgg_lets} lets");
+        assert!(s.assigned_rates()[ModelId::Vgg.index()] >= want - 1e-6);
+    }
+
+    #[test]
+    fn partitioning_beats_whole_gpus_for_small_models() {
+        // 4 GPUs of LeNet-only load: without partitioning, 4 lets of 100%
+        // would waste most of each GPU. Elastic must allocate less than
+        // the whole cluster for a load 4 whole GPUs could barely improve.
+        let c = ctx(4);
+        let (r_knee, _) = c.lm.max_rate(ModelId::Lenet, 0.2).unwrap();
+        let s = ElasticPartitioning::gpulet()
+            .schedule(&c, &[r_knee * 2.0, 0.0, 0.0, 0.0, 0.0])
+            .unwrap();
+        assert!(s.total_allocated_pct() <= 200, "allocated {}%", s.total_allocated_pct());
+    }
+
+    #[test]
+    fn int_variant_is_more_conservative() {
+        // Find a rate the oblivious variant accepts; the aware variant
+        // must never accept a strictly higher violation risk (i.e. its
+        // max accepted rate is <= the oblivious one for contended mixes).
+        let co = ctx(1);
+        let ci = ctx_int(1);
+        let obl = ElasticPartitioning::gpulet();
+        let aware = ElasticPartitioning::gpulet_int();
+        let mut max_obl = 0.0f64;
+        let mut max_aware = 0.0f64;
+        for step in 1..=40 {
+            let r = step as f64 * 25.0;
+            let rates = [0.0, 0.0, r, 0.0, r];
+            if obl.schedule(&co, &rates).is_ok() {
+                max_obl = r;
+            }
+            if aware.schedule(&ci, &rates).is_ok() {
+                max_aware = r;
+            }
+        }
+        assert!(max_aware <= max_obl, "aware {max_aware} > oblivious {max_obl}");
+        assert!(max_aware > 0.0);
+    }
+
+    #[test]
+    fn respects_cluster_capacity_invariants() {
+        let c = ctx(2);
+        for rates in [
+            [100.0, 100.0, 100.0, 50.0, 50.0],
+            [600.0, 0.0, 0.0, 0.0, 0.0],
+            [0.0, 200.0, 0.0, 200.0, 0.0],
+        ] {
+            if let Ok(s) = ElasticPartitioning::gpulet().schedule(&c, &rates) {
+                s.validate(&c.lm, 2).unwrap();
+            }
+        }
+    }
+}

@@ -1,0 +1,237 @@
+//! Ideal (exhaustive) scheduler — the Fig 15 / Fig 16 comparator.
+//!
+//! Enumerates every per-GPU partition combination from the four cases
+//! the paper uses ({100}, {50,50}, {40,60}, {20,80}) — `4^N` layouts
+//! for `N` GPUs — and, for each, greedily packs the offered rates onto
+//! the fixed gpu-lets (temporal sharing allowed). The first layout that
+//! serves everything within SLOs proves schedulability; the search is
+//! exhaustive, so a `NotSchedulable` verdict is authoritative for this
+//! partition vocabulary and packer.
+
+use crate::error::{Error, Result};
+use crate::gpu::gpulet::GpuLetSpec;
+use crate::models::ModelId;
+use crate::perfmodel::BATCHES;
+use crate::sched::types::{Assignment, LetPlan, SchedCtx, Schedule, Scheduler};
+
+const EPS_RATE: f64 = 1e-6;
+
+/// Per-GPU partition cases (§6.2: "4 GPUs which can be partitioned into
+/// 4 cases" → 4^4 layouts).
+pub const GPU_CASES: [&[u32]; 4] = [&[100], &[50, 50], &[40, 60], &[20, 80]];
+
+/// Exhaustive-search scheduler.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IdealScheduler;
+
+impl IdealScheduler {
+    /// Greedy packer over a fixed gpu-let set. Returns a schedule iff
+    /// every model's full rate fits.
+    fn try_assign(ctx: &SchedCtx, lets: &[GpuLetSpec], rates: &[f64; 5]) -> Option<Schedule> {
+        let mut free: Vec<GpuLetSpec> = lets.to_vec();
+        // Largest first: heavy models claim big lets.
+        free.sort_by(|a, b| b.size_pct.cmp(&a.size_pct).then(a.gpu.cmp(&b.gpu)));
+        let mut alloc: Vec<LetPlan> = Vec::new();
+
+        let mut models: Vec<(ModelId, f64)> = ModelId::ALL
+            .iter()
+            .map(|&m| (m, rates[m.index()]))
+            .filter(|&(_, r)| r > 0.0)
+            .collect();
+        models.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+
+        for (m, rate) in models {
+            let mut remaining = rate;
+            while remaining > EPS_RATE {
+                // Prefer the smallest free let that covers the remainder
+                // (best fit), else the highest-capacity free let.
+                let mut chosen: Option<(usize, f64, u32)> = None; // (idx, cap, batch)
+                let mut best_cover: Option<(usize, f64, u32)> = None;
+                for (i, spec) in free.iter().enumerate() {
+                    let p = spec.fraction();
+                    let Some((cap, b)) = ctx
+                        .lm
+                        .max_rate(m, p)
+                        .map(|(r, b)| (r * crate::sched::types::CAPACITY_FRACTION, b))
+                    else {
+                        continue;
+                    };
+                    if cap >= remaining {
+                        // Covers: keep the smallest such let.
+                        if best_cover
+                            .map_or(true, |(j, _, _)| spec.size_pct < free[j].size_pct)
+                        {
+                            best_cover = Some((i, cap, b));
+                        }
+                    }
+                    if chosen.map_or(true, |(_, c, _)| cap > c) {
+                        chosen = Some((i, cap, b));
+                    }
+                }
+                let pick = best_cover.or(chosen);
+                if let Some((i, cap, b)) = pick {
+                    if cap > EPS_RATE {
+                        let spec = free.swap_remove(i);
+                        let take = remaining.min(cap);
+                        alloc.push(LetPlan {
+                            spec,
+                            assignments: vec![Assignment { model: m, batch: b, rate: take }],
+                        });
+                        remaining -= take;
+                        continue;
+                    }
+                }
+                // No free let helps: temporal-sharing merge.
+                let mut merged = false;
+                for plan in alloc.iter_mut() {
+                    let mut best: Option<(u32, f64)> = None;
+                    for &b in &BATCHES {
+                        let head = plan.headroom_rate(&ctx.lm, m, b, 0.0);
+                        if head > EPS_RATE {
+                            let take = remaining.min(head);
+                            if best.map_or(true, |(_, t)| take > t) {
+                                best = Some((b, take));
+                            }
+                        }
+                    }
+                    if let Some((b, take)) = best {
+                        plan.assignments.push(Assignment { model: m, batch: b, rate: take });
+                        remaining -= take;
+                        merged = true;
+                        break;
+                    }
+                }
+                if !merged {
+                    return None;
+                }
+            }
+        }
+        Some(Schedule { lets: alloc })
+    }
+
+    /// Iterate layouts in mixed-radix order; call `f` until it says stop.
+    fn for_each_layout<F: FnMut(&[GpuLetSpec]) -> bool>(num_gpus: usize, mut f: F) {
+        let mut digits = vec![0usize; num_gpus];
+        loop {
+            let lets: Vec<GpuLetSpec> = digits
+                .iter()
+                .enumerate()
+                .flat_map(|(gpu, &d)| {
+                    GPU_CASES[d].iter().map(move |&size_pct| GpuLetSpec { gpu, size_pct })
+                })
+                .collect();
+            if f(&lets) {
+                return;
+            }
+            // Increment mixed-radix counter.
+            let mut i = 0;
+            loop {
+                if i == num_gpus {
+                    return;
+                }
+                digits[i] += 1;
+                if digits[i] < GPU_CASES.len() {
+                    break;
+                }
+                digits[i] = 0;
+                i += 1;
+            }
+        }
+    }
+}
+
+impl Scheduler for IdealScheduler {
+    fn name(&self) -> &'static str {
+        "ideal"
+    }
+
+    fn schedule(&self, ctx: &SchedCtx, rates: &[f64; 5]) -> Result<Schedule> {
+        let mut found: Option<Schedule> = None;
+        Self::for_each_layout(ctx.num_gpus, |lets| {
+            if let Some(s) = Self::try_assign(ctx, lets, rates) {
+                found = Some(s);
+                true // stop
+            } else {
+                false
+            }
+        });
+        match found {
+            Some(s) => {
+                s.validate(&ctx.lm, ctx.num_gpus)?;
+                Ok(s)
+            }
+            None => Err(Error::NotSchedulable(
+                "ideal: no partition combination serves the load".into(),
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::elastic::ElasticPartitioning;
+
+    fn ctx(gpus: usize) -> SchedCtx {
+        SchedCtx::new(gpus, None)
+    }
+
+    #[test]
+    fn layout_enumeration_counts() {
+        let mut n = 0;
+        IdealScheduler::for_each_layout(2, |_| {
+            n += 1;
+            false
+        });
+        assert_eq!(n, 16); // 4^2
+    }
+
+    #[test]
+    fn schedules_simple_load() {
+        let c = ctx(2);
+        let s = IdealScheduler.schedule(&c, &[50.0, 50.0, 0.0, 0.0, 0.0]).unwrap();
+        s.validate(&c.lm, 2).unwrap();
+        let r = s.assigned_rates();
+        assert!(r[0] >= 50.0 - 1e-6 && r[1] >= 50.0 - 1e-6);
+    }
+
+    #[test]
+    fn ideal_dominates_elastic() {
+        // Whatever elastic can schedule, ideal must also schedule
+        // (it explores every partitioning the elastic one could build).
+        let c = ctx(2);
+        let elastic = ElasticPartitioning::gpulet();
+        for rates in [
+            [50.0; 5],
+            [200.0, 0.0, 0.0, 0.0, 100.0],
+            [0.0, 200.0, 200.0, 0.0, 0.0],
+            [400.0, 100.0, 0.0, 100.0, 0.0],
+        ] {
+            if elastic.schedule(&c, &rates).is_ok() {
+                assert!(
+                    IdealScheduler.schedule(&c, &rates).is_ok(),
+                    "ideal failed where elastic succeeded: {rates:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_impossible_load() {
+        let c = ctx(1);
+        assert!(IdealScheduler.schedule(&c, &[0.0, 0.0, 0.0, 0.0, 1e7]).is_err());
+    }
+
+    #[test]
+    fn uses_partitioning_when_it_helps() {
+        let c = ctx(1);
+        // A LeNet load beyond one whole GPU's rate but within 2x 50% lets.
+        let (r100, _) = c.lm.max_rate(ModelId::Lenet, 1.0).unwrap();
+        let (r50, _) = c.lm.max_rate(ModelId::Lenet, 0.5).unwrap();
+        assert!(2.0 * r50 > r100 * 1.2, "calibration sanity");
+        let s = IdealScheduler
+            .schedule(&c, &[r100 * 1.3, 0.0, 0.0, 0.0, 0.0])
+            .unwrap();
+        assert!(s.lets.len() == 2);
+    }
+}

@@ -1,0 +1,27 @@
+//! SLO-aware schedulers.
+//!
+//! * `elastic` — the paper's contribution: Elastic Partitioning
+//!   (Algorithm 1) in `gpulet` (interference-oblivious) and
+//!   `gpulet+int` (interference-aware) variants.
+//! * `sbp` — the Nexus squishy bin-packing baseline (temporal sharing
+//!   only), with an optional fixed 50:50 partitioning mode (Fig 4).
+//! * `selftune` — GSLICE-style guided self-tuning (spatial only, no
+//!   temporal-sharing merge), guided by profiled optima (§6.1).
+//! * `ideal` — exhaustive search over per-GPU partition combinations
+//!   (Fig 15 / Fig 16 comparator).
+//!
+//! All schedulers consume the same `SchedCtx` (profiled latency +
+//! optional fitted interference model) and produce a `Schedule` that
+//! the simulator can execute and `Schedule::validate` can check.
+
+pub mod elastic;
+pub mod ideal;
+pub mod sbp;
+pub mod selftune;
+pub mod types;
+
+pub use elastic::ElasticPartitioning;
+pub use ideal::IdealScheduler;
+pub use sbp::SquishyBinPacking;
+pub use selftune::GuidedSelfTuning;
+pub use types::{Assignment, LetPlan, SchedCtx, Schedule, Scheduler};

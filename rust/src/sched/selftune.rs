@@ -1,0 +1,210 @@
+//! Guided self-tuning — the GSLICE [16] baseline (§6.1).
+//!
+//! GSLICE spatially shares GPUs but tunes (partition, batch) per model
+//! at runtime and does not temporally share a partition between models.
+//! The paper evaluates a *guided* version: instead of online trial and
+//! error it is handed the profiled batch latencies and each model's
+//! precomputed optimal partition — the same information our elastic
+//! scheduler uses — to make the comparison fair.
+//!
+//! Concretely: each model gets dedicated gpu-lets of its profiled
+//! optimal size (the knee, bumped up until the rate fits the available
+//! let count), packed best-fit onto GPUs with at most two lets each.
+//! No temporal-sharing merge — the paper attributes guided self-tuning's
+//! losses on `game` exactly to this missing capability.
+
+use crate::error::{Error, Result};
+use crate::gpu::gpulet::{GpuLetSpec, MAX_LETS_PER_GPU};
+use crate::models::ModelId;
+use crate::perfmodel::latency::knee;
+use crate::perfmodel::profile_table::PARTITIONS;
+use crate::sched::types::{Assignment, LetPlan, SchedCtx, Schedule, Scheduler};
+
+const EPS_RATE: f64 = 1e-6;
+
+/// GSLICE-style guided self-tuning scheduler.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GuidedSelfTuning;
+
+/// Mutable per-GPU packing state.
+struct GpuState {
+    used_pct: u32,
+    lets: usize,
+}
+
+impl GuidedSelfTuning {
+    /// Place one gpu-let of `size` on the first GPU with room (best-fit
+    /// by remaining space).
+    fn place(
+        gpus: &mut [GpuState],
+        size: u32,
+    ) -> Option<usize> {
+        let mut best: Option<(usize, u32)> = None; // (gpu, leftover)
+        for (g, st) in gpus.iter().enumerate() {
+            if st.lets >= MAX_LETS_PER_GPU {
+                continue;
+            }
+            if st.used_pct + size > 100 {
+                continue;
+            }
+            let leftover = 100 - st.used_pct - size;
+            if best.map_or(true, |(_, l)| leftover < l) {
+                best = Some((g, leftover));
+            }
+        }
+        let (g, _) = best?;
+        gpus[g].used_pct += size;
+        gpus[g].lets += 1;
+        Some(g)
+    }
+}
+
+impl Scheduler for GuidedSelfTuning {
+    fn name(&self) -> &'static str {
+        "selftune"
+    }
+
+    fn schedule(&self, ctx: &SchedCtx, rates: &[f64; 5]) -> Result<Schedule> {
+        let mut gpus: Vec<GpuState> = (0..ctx.num_gpus)
+            .map(|_| GpuState { used_pct: 0, lets: 0 })
+            .collect();
+        let mut alloc: Vec<LetPlan> = Vec::new();
+
+        let mut models: Vec<(ModelId, f64)> = ModelId::ALL
+            .iter()
+            .map(|&m| (m, rates[m.index()]))
+            .filter(|&(_, r)| r > 0.0)
+            .collect();
+        models.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+
+        for (m, rate) in models {
+            // Profiled optimal partition: the knee of the rate curve.
+            let p_opt = knee(&ctx.lm.rate_curve(m, &PARTITIONS));
+            let mut remaining = rate;
+            // Bump the size up from the knee until the per-let rate and
+            // the let count fit the cluster; GSLICE adjusts its partition
+            // "to a suitable GPU partition size during runtime" — guided
+            // here by the profile.
+            let sizes_from_knee: Vec<u32> =
+                PARTITIONS.iter().copied().filter(|&s| s >= p_opt).collect();
+
+            'fill: while remaining > EPS_RATE {
+                let progressed = false;
+                for &size in &sizes_from_knee {
+                    let p = size as f64 / 100.0;
+                    let Some((cap, b)) = ctx
+                        .lm
+                        .max_rate(m, p)
+                        .map(|(r, b)| (r * crate::sched::types::CAPACITY_FRACTION, b))
+                    else {
+                        continue;
+                    };
+                    if cap <= EPS_RATE {
+                        continue;
+                    }
+                    // Tentatively place a let of this size.
+                    let snapshot: Vec<(u32, usize)> =
+                        gpus.iter().map(|g| (g.used_pct, g.lets)).collect();
+                    if let Some(g) = Self::place(&mut gpus, size) {
+                        let take = remaining.min(cap);
+                        // If this size cannot cover the remainder and a
+                        // bigger one could, prefer bigger (fewer lets).
+                        if take < remaining - EPS_RATE && size != 100 {
+                            let bigger_helps = sizes_from_knee
+                                .iter()
+                                .any(|&s2| {
+                                    s2 > size
+                                        && ctx
+                                            .lm
+                                            .max_rate(m, s2 as f64 / 100.0)
+                                            .map_or(false, |(c2, _)| {
+                                                c2 * crate::sched::types::CAPACITY_FRACTION > cap
+                                            })
+                                });
+                            if bigger_helps {
+                                // Roll back and try the bigger size.
+                                for (st, (u, l)) in gpus.iter_mut().zip(snapshot) {
+                                    st.used_pct = u;
+                                    st.lets = l;
+                                }
+                                continue;
+                            }
+                        }
+                        alloc.push(LetPlan {
+                            spec: GpuLetSpec { gpu: g, size_pct: size },
+                            assignments: vec![Assignment { model: m, batch: b, rate: take }],
+                        });
+                        remaining -= take;
+                        continue 'fill;
+                    }
+                }
+                if !progressed {
+                    return Err(Error::NotSchedulable(format!(
+                        "selftune: {m} has {remaining:.1} req/s unplaced"
+                    )));
+                }
+            }
+        }
+
+        // Snap each GPU's lets onto a valid layout: sizes already valid;
+        // per-GPU counts enforced by `place`.
+        let sched = Schedule { lets: alloc };
+        sched.validate(&ctx.lm, ctx.num_gpus)?;
+        Ok(sched)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(gpus: usize) -> SchedCtx {
+        SchedCtx::new(gpus, None)
+    }
+
+    #[test]
+    fn schedules_single_model() {
+        let c = ctx(4);
+        let s = GuidedSelfTuning.schedule(&c, &[100.0, 0.0, 0.0, 0.0, 0.0]).unwrap();
+        s.validate(&c.lm, 4).unwrap();
+        assert!(s.assigned_rates()[ModelId::Lenet.index()] >= 100.0 - 1e-6);
+        // One model per gpu-let (no temporal sharing).
+        assert!(s.lets.iter().all(|l| l.assignments.len() == 1));
+    }
+
+    #[test]
+    fn never_temporally_shares() {
+        let c = ctx(4);
+        if let Ok(s) = GuidedSelfTuning.schedule(&c, &[50.0; 5]) {
+            assert!(s.lets.iter().all(|l| l.assignments.len() == 1));
+        }
+    }
+
+    #[test]
+    fn game_like_mix_weaker_than_elastic() {
+        // The paper: guided self-tuning underperforms on game (many
+        // LeNets + one ResNet) because it cannot temporally share.
+        use crate::sched::elastic::ElasticPartitioning;
+        let c = ctx(4);
+        let game = crate::apps::App::game();
+        let mut max_st = 0.0f64;
+        let mut max_el = 0.0f64;
+        for step in 1..=60 {
+            let r = step as f64 * 50.0;
+            let rates = game.induced_rates(r);
+            if GuidedSelfTuning.schedule(&c, &rates).is_ok() {
+                max_st = r;
+            }
+            if ElasticPartitioning::gpulet().schedule(&c, &rates).is_ok() {
+                max_el = r;
+            }
+        }
+        assert!(max_el >= max_st, "elastic {max_el} < selftune {max_st}");
+    }
+
+    #[test]
+    fn rejects_overload() {
+        let c = ctx(1);
+        assert!(GuidedSelfTuning.schedule(&c, &[0.0, 0.0, 0.0, 0.0, 1e7]).is_err());
+    }
+}

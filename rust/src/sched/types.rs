@@ -1,0 +1,415 @@
+//! Shared scheduling types: schedules, assignments, feasibility math.
+//!
+//! Duty-cycle model (§2.2, Fig 1): a gpu-let serving models S runs a
+//! repeating round. Model i contributes execution time
+//! `E_i = L(b_i, p) * (1 + intf_i)`; the duty cycle is `D = Σ E_i`.
+//! Feasibility of `(m_i, b_i, rate_i)` on the gpu-let:
+//!
+//! * throughput:  `rate_i * D <= b_i * 1000`  (arrivals per round fit the batch; D in ms)
+//! * latency:     `2 D <= SLO_i`  (worst case: miss the batch close, wait
+//!   a full round, then complete within the next round)
+//!
+//! For a solo model with `D = L(b, p)` this degenerates to the classic
+//! `2 L <= SLO` rule used by `LatencyModel::max_rate`.
+
+use crate::error::{Error, Result};
+use crate::gpu::cluster::ClusterLayout;
+use crate::gpu::gpulet::{is_valid_size, GpuLetSpec};
+use crate::interference::InterferenceModel;
+use crate::models::ModelId;
+use crate::perfmodel::{LatencyModel, ProfileTable};
+
+/// Planning SLO tightening: schedulers see `SLO * SLO_PLANNING_SCALE`
+/// so deployed schedules keep latency headroom for Poisson burstiness
+/// and residual (mis-predicted) interference.
+pub const SLO_PLANNING_SCALE: f64 = 0.88;
+
+/// Utilization headroom: schedulers route at most this fraction of a
+/// placement's theoretical capacity (queueing at utilization 1.0 is
+/// unstable under stochastic arrivals).
+pub const CAPACITY_FRACTION: f64 = 0.90;
+
+/// One model's share of a gpu-let.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Assignment {
+    pub model: ModelId,
+    /// Batch size the batcher builds for this model on this gpu-let.
+    pub batch: u32,
+    /// Request rate (req/s) routed here.
+    pub rate: f64,
+}
+
+/// A gpu-let with its assigned models (len > 1 = temporal sharing).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LetPlan {
+    pub spec: GpuLetSpec,
+    pub assignments: Vec<Assignment>,
+}
+
+impl LetPlan {
+    /// Duty cycle (ms) under a uniform interference stretch `intf`.
+    pub fn duty_cycle_ms(&self, lm: &LatencyModel, intf: f64) -> f64 {
+        let p = self.spec.fraction();
+        self.assignments
+            .iter()
+            .map(|a| lm.latency_ms(a.model, a.batch, p) * (1.0 + intf))
+            .sum()
+    }
+
+    /// Check throughput + latency feasibility of every assignment under
+    /// interference stretch `intf`.
+    pub fn feasible(&self, lm: &LatencyModel, intf: f64) -> bool {
+        let d = self.duty_cycle_ms(lm, intf);
+        self.assignments.iter().all(|a| {
+            a.rate * d <= a.batch as f64 * 1000.0 + 1e-6
+                && 2.0 * d <= lm.slo_ms(a.model) + 1e-9
+        })
+    }
+
+    /// Max additional rate of `model` (batch `b`) this plan could accept
+    /// while staying feasible — used by temporal-sharing merges.
+    pub fn headroom_rate(&self, lm: &LatencyModel, model: ModelId, b: u32, intf: f64) -> f64 {
+        let mut probe = self.clone();
+        probe.assignments.push(Assignment { model, batch: b, rate: 0.0 });
+        let d = probe.duty_cycle_ms(lm, intf);
+        // Existing assignments must stay feasible at the larger cycle.
+        let ok = probe.assignments[..probe.assignments.len() - 1]
+            .iter()
+            .all(|a| {
+                a.rate * d <= a.batch as f64 * 1000.0 + 1e-6
+                    && 2.0 * d <= lm.slo_ms(a.model) + 1e-9
+            })
+            && 2.0 * d <= lm.slo_ms(model) + 1e-9;
+        if !ok {
+            return 0.0;
+        }
+        b as f64 * 1000.0 / d * CAPACITY_FRACTION
+    }
+}
+
+/// Shrink a plan's batches until it is feasible under interference
+/// stretch `intf` while still sustaining its assigned rates — the
+/// "squishy" property of squishy bin packing: batch sizes are the
+/// elastic dimension. Returns the squished plan, or `None`.
+pub fn squish_plan(
+    lm: &LatencyModel,
+    plan: &LetPlan,
+    intf: f64,
+) -> Option<LetPlan> {
+    let mut cur = plan.clone();
+    for _ in 0..64 {
+        if cur.feasible(lm, intf) {
+            return Some(cur);
+        }
+        // Shrink the assignment with the longest execution that can
+        // still shrink; smaller batches shorten the duty cycle.
+        let p = cur.spec.fraction();
+        let mut pick: Option<(usize, f64, u32)> = None; // (idx, exec, next_batch)
+        for (i, a) in cur.assignments.iter().enumerate() {
+            let Some(&next) =
+                crate::perfmodel::BATCHES.iter().rev().find(|&&b| b < a.batch)
+            else {
+                continue;
+            };
+            let exec = lm.latency_ms(a.model, a.batch, p);
+            if pick.map_or(true, |(_, e, _)| exec > e) {
+                pick = Some((i, exec, next));
+            }
+        }
+        let (i, _, next) = pick?;
+        cur.assignments[i].batch = next;
+    }
+    None
+}
+
+/// A complete scheduling decision for the cluster.
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    pub lets: Vec<LetPlan>,
+}
+
+impl Schedule {
+    /// Derived physical layout: allocated gpu-let sizes per GPU.
+    /// GPUs with no allocation get a single whole gpu-let (idle).
+    pub fn layout(&self, num_gpus: usize) -> Result<ClusterLayout> {
+        let mut sizes: Vec<Vec<u32>> = vec![vec![]; num_gpus];
+        for lp in &self.lets {
+            if lp.spec.gpu >= num_gpus {
+                return Err(Error::GpuLet(format!(
+                    "gpu index {} out of range ({num_gpus} gpus)",
+                    lp.spec.gpu
+                )));
+            }
+            sizes[lp.spec.gpu].push(lp.spec.size_pct);
+        }
+        for s in sizes.iter_mut() {
+            if s.is_empty() {
+                s.push(100);
+            }
+            s.sort_unstable();
+        }
+        ClusterLayout::from_sizes(sizes)
+    }
+
+    /// Total rate assigned per model, indexed by `ModelId::index`.
+    pub fn assigned_rates(&self) -> [f64; 5] {
+        let mut out = [0.0; 5];
+        for lp in &self.lets {
+            for a in &lp.assignments {
+                out[a.model.index()] += a.rate;
+            }
+        }
+        out
+    }
+
+    /// Sum of allocated gpu-let sizes (percent) — Fig 14's middle series.
+    pub fn total_allocated_pct(&self) -> u32 {
+        self.lets.iter().map(|l| l.spec.size_pct).sum()
+    }
+
+    /// Structural + feasibility validation (interference stretch 0 —
+    /// schedulers that model interference check stronger bounds
+    /// themselves):
+    /// 1. every gpu-let size valid; per-GPU count/size caps hold;
+    /// 2. every assignment has positive rate and batch within limits;
+    /// 3. every let's duty cycle is feasible.
+    pub fn validate(&self, lm: &LatencyModel, num_gpus: usize) -> Result<()> {
+        self.layout(num_gpus)?; // (1) via ClusterLayout::validate
+        for lp in &self.lets {
+            if !is_valid_size(lp.spec.size_pct) {
+                return Err(Error::GpuLet(format!("invalid size {}", lp.spec.size_pct)));
+            }
+            if lp.assignments.is_empty() {
+                return Err(Error::GpuLet("allocated gpu-let with no assignments".into()));
+            }
+            for a in &lp.assignments {
+                if a.rate <= 0.0 {
+                    return Err(Error::GpuLet(format!("{}: non-positive rate", a.model)));
+                }
+                if a.batch == 0 || a.batch > crate::perfmodel::MAX_BATCH {
+                    return Err(Error::GpuLet(format!("{}: bad batch {}", a.model, a.batch)));
+                }
+            }
+            if !lp.feasible(lm, 0.0) {
+                return Err(Error::NotSchedulable(format!(
+                    "gpu{} let {}%: duty-cycle infeasible",
+                    lp.spec.gpu, lp.spec.size_pct
+                )));
+            }
+        }
+        // A GPU must not host two lets from the same plan twice... (count
+        // and sums already enforced by layout()). Nothing more here.
+        Ok(())
+    }
+
+    /// Worst-case predicted interference stretch for a let, given its
+    /// co-resident let on the same GPU (None if alone).
+    pub fn co_resident_of(&self, idx: usize) -> Option<&LetPlan> {
+        let me = &self.lets[idx];
+        self.lets
+            .iter()
+            .enumerate()
+            .find(|(i, lp)| *i != idx && lp.spec.gpu == me.spec.gpu)
+            .map(|(_, lp)| lp)
+    }
+}
+
+/// Shared scheduler inputs: profiled performance + fitted interference.
+pub struct SchedCtx {
+    pub lm: LatencyModel,
+    pub table: ProfileTable,
+    /// Fitted linear interference model; `None` disables interference
+    /// awareness (the `gpulet` variant).
+    pub intf: Option<InterferenceModel>,
+    pub num_gpus: usize,
+}
+
+impl SchedCtx {
+    pub fn new(num_gpus: usize, intf: Option<InterferenceModel>) -> Self {
+        // Planning view: tightened SLOs (see SLO_PLANNING_SCALE).
+        let lm = LatencyModel::with_slo_scale(SLO_PLANNING_SCALE);
+        let table = ProfileTable::build(&lm);
+        SchedCtx { lm, table, intf, num_gpus }
+    }
+
+    /// Context without planning margins (used by conformance tests that
+    /// reason about exact feasibility boundaries).
+    pub fn unmargined(num_gpus: usize, intf: Option<InterferenceModel>) -> Self {
+        let lm = LatencyModel::new();
+        let table = ProfileTable::build(&lm);
+        SchedCtx { lm, table, intf, num_gpus }
+    }
+
+    /// Predicted worst-case interference stretch between the models of
+    /// two co-resident let plans (0 when no estimator configured).
+    pub fn predicted_intf(&self, a: &LetPlan, b: &LetPlan) -> f64 {
+        let Some(model) = &self.intf else { return 0.0 };
+        let pa = a.spec.fraction();
+        let pb = b.spec.fraction();
+        let mut worst: f64 = 0.0;
+        for x in &a.assignments {
+            for y in &b.assignments {
+                worst = worst.max(model.predict_pair(
+                    x.model, x.batch, pa, y.model, y.batch, pb,
+                ));
+            }
+        }
+        worst
+    }
+}
+
+/// Common scheduler interface. `rates` is the offered per-model load
+/// (req/s, indexed by `ModelId::index`); `Err(NotSchedulable)` when the
+/// cluster cannot serve it within SLOs.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+    fn schedule(&self, ctx: &SchedCtx, rates: &[f64; 5]) -> Result<Schedule>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lm() -> LatencyModel {
+        LatencyModel::new()
+    }
+
+    fn solo_plan(m: ModelId, size: u32, b: u32, rate: f64) -> LetPlan {
+        LetPlan {
+            spec: GpuLetSpec { gpu: 0, size_pct: size },
+            assignments: vec![Assignment { model: m, batch: b, rate }],
+        }
+    }
+
+    #[test]
+    fn solo_feasibility_matches_max_rate() {
+        let lm = lm();
+        let (r, b) = lm.max_rate(ModelId::Vgg, 1.0).unwrap();
+        let plan = solo_plan(ModelId::Vgg, 100, b, r * 0.999);
+        assert!(plan.feasible(&lm, 0.0));
+        let plan_over = solo_plan(ModelId::Vgg, 100, b, r * 1.05);
+        assert!(!plan_over.feasible(&lm, 0.0));
+    }
+
+    #[test]
+    fn interference_stretch_can_break_feasibility() {
+        let lm = lm();
+        let (r, b) = lm.max_rate(ModelId::Vgg, 0.5).unwrap();
+        let plan = solo_plan(ModelId::Vgg, 50, b, r * 0.999);
+        assert!(plan.feasible(&lm, 0.0));
+        assert!(!plan.feasible(&lm, 0.5), "50% stretch must break a tight plan");
+    }
+
+    #[test]
+    fn temporal_sharing_duty_cycle_sums() {
+        let lm = lm();
+        let plan = LetPlan {
+            spec: GpuLetSpec { gpu: 0, size_pct: 100 },
+            assignments: vec![
+                Assignment { model: ModelId::Lenet, batch: 8, rate: 100.0 },
+                Assignment { model: ModelId::Googlenet, batch: 8, rate: 50.0 },
+            ],
+        };
+        let d = plan.duty_cycle_ms(&lm, 0.0);
+        let want = lm.latency_ms(ModelId::Lenet, 8, 1.0)
+            + lm.latency_ms(ModelId::Googlenet, 8, 1.0);
+        assert!((d - want).abs() < 1e-12);
+        // LeNet's 5 ms SLO cannot absorb GoogLeNet's duty cycle.
+        assert!(!plan.feasible(&lm, 0.0));
+    }
+
+    #[test]
+    fn headroom_rate_zero_when_slo_tight() {
+        let lm = lm();
+        let plan = solo_plan(ModelId::Vgg, 100, 32, 100.0);
+        // Adding LeNet (SLO 5ms) to a VGG cycle (65ms) is impossible.
+        assert_eq!(plan.headroom_rate(&lm, ModelId::Lenet, 1, 0.0), 0.0);
+        // Adding GoogLeNet may or may not fit; must be >= 0 and finite.
+        let h = plan.headroom_rate(&lm, ModelId::Googlenet, 8, 0.0);
+        assert!(h.is_finite() && h >= 0.0);
+    }
+
+    #[test]
+    fn schedule_layout_and_validation() {
+        let lm = lm();
+        let (r, b) = lm.max_rate(ModelId::Resnet, 0.6).unwrap();
+        let sched = Schedule {
+            lets: vec![
+                solo_plan(ModelId::Resnet, 60, b, r * 0.9),
+                LetPlan {
+                    spec: GpuLetSpec { gpu: 0, size_pct: 40 },
+                    assignments: vec![Assignment {
+                        model: ModelId::Lenet,
+                        batch: lm.max_rate(ModelId::Lenet, 0.4).unwrap().1,
+                        rate: 50.0,
+                    }],
+                },
+            ],
+        };
+        sched.validate(&lm, 2).unwrap();
+        let layout = sched.layout(2).unwrap();
+        assert_eq!(layout.lets_on(0), &[40, 60]);
+        assert_eq!(layout.lets_on(1), &[100]); // idle whole GPU
+        assert_eq!(sched.total_allocated_pct(), 100);
+        let rates = sched.assigned_rates();
+        assert!(rates[ModelId::Resnet.index()] > 0.0);
+    }
+
+    #[test]
+    fn validation_rejects_oversubscription() {
+        let lm = lm();
+        let sched = Schedule {
+            lets: vec![
+                solo_plan(ModelId::Lenet, 80, 1, 10.0),
+                LetPlan {
+                    spec: GpuLetSpec { gpu: 0, size_pct: 40 },
+                    assignments: vec![Assignment { model: ModelId::Vgg, batch: 1, rate: 1.0 }],
+                },
+            ],
+        };
+        assert!(sched.validate(&lm, 1).is_err()); // 80+40 > 100
+    }
+
+    #[test]
+    fn validation_rejects_empty_and_zero_rate() {
+        let lm = lm();
+        let empty = Schedule {
+            lets: vec![LetPlan {
+                spec: GpuLetSpec { gpu: 0, size_pct: 100 },
+                assignments: vec![],
+            }],
+        };
+        assert!(empty.validate(&lm, 1).is_err());
+        let zero = Schedule { lets: vec![solo_plan(ModelId::Lenet, 100, 1, 0.0)] };
+        assert!(zero.validate(&lm, 1).is_err());
+    }
+
+    #[test]
+    fn co_resident_lookup() {
+        let lm = lm();
+        let _ = lm;
+        let sched = Schedule {
+            lets: vec![
+                solo_plan(ModelId::Lenet, 20, 1, 1.0),
+                LetPlan {
+                    spec: GpuLetSpec { gpu: 0, size_pct: 80 },
+                    assignments: vec![Assignment { model: ModelId::Vgg, batch: 8, rate: 10.0 }],
+                },
+                LetPlan {
+                    spec: GpuLetSpec { gpu: 1, size_pct: 100 },
+                    assignments: vec![Assignment { model: ModelId::Resnet, batch: 8, rate: 10.0 }],
+                },
+            ],
+        };
+        assert_eq!(sched.co_resident_of(0).unwrap().spec.size_pct, 80);
+        assert!(sched.co_resident_of(2).is_none());
+    }
+
+    #[test]
+    fn predicted_intf_zero_without_model() {
+        let ctx = SchedCtx::new(4, None);
+        let a = solo_plan(ModelId::Vgg, 50, 32, 10.0);
+        let b = solo_plan(ModelId::Vgg, 50, 32, 10.0);
+        assert_eq!(ctx.predicted_intf(&a, &b), 0.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Discrete-event simulation clock: a virtual-time event queue.
+//!
+//! All paper experiments run under this clock (DESIGN.md §1 "sim"
+//! mode): simulated milliseconds, deterministic ordering (time, then
+//! insertion sequence), no wall-clock dependence.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Internal heap entry — min-heap by (time, seq).
+struct Entry<E> {
+    time_ms: f64,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time_ms == other.time_ms && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap semantics on BinaryHeap (a max-heap).
+        other
+            .time_ms
+            .partial_cmp(&self.time_ms)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic discrete-event queue over virtual milliseconds.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now_ms: f64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now_ms: 0.0 }
+    }
+
+    /// Current virtual time (ms). Advances on `pop`.
+    pub fn now_ms(&self) -> f64 {
+        self.now_ms
+    }
+
+    /// Schedule `event` at absolute virtual time `time_ms`.
+    ///
+    /// Events in the past are clamped to `now` (they fire next, in
+    /// insertion order) — simpler and safer than panicking inside
+    /// long experiment sweeps.
+    pub fn push_at(&mut self, time_ms: f64, event: E) {
+        assert!(time_ms.is_finite(), "non-finite event time");
+        let t = time_ms.max(self.now_ms);
+        self.heap.push(Entry { time_ms: t, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Schedule `event` after a relative delay.
+    pub fn push_after(&mut self, delay_ms: f64, event: E) {
+        assert!(delay_ms >= 0.0, "negative delay");
+        self.push_at(self.now_ms + delay_ms, event);
+    }
+
+    /// Pop the earliest event, advancing the clock to its time.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        self.heap.pop().map(|e| {
+            debug_assert!(e.time_ms >= self.now_ms);
+            self.now_ms = e.time_ms;
+            (e.time_ms, e.event)
+        })
+    }
+
+    /// Time of the next event without popping.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time_ms)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push_at(5.0, "c");
+        q.push_at(1.0, "a");
+        q.push_at(3.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push_at(1.0, 1);
+        q.push_at(1.0, 2);
+        q.push_at(1.0, 3);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert_eq!(q.pop().unwrap().1, 3);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.push_at(10.0, ());
+        q.push_at(20.0, ());
+        assert_eq!(q.now_ms(), 0.0);
+        q.pop();
+        assert_eq!(q.now_ms(), 10.0);
+        // Past events clamp to now.
+        q.push_at(5.0, ());
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 10.0);
+        q.pop();
+        assert_eq!(q.now_ms(), 20.0);
+    }
+
+    #[test]
+    fn push_after_relative() {
+        let mut q = EventQueue::new();
+        q.push_at(10.0, "x");
+        q.pop();
+        q.push_after(2.5, "y");
+        assert_eq!(q.peek_time(), Some(12.5));
+        assert_eq!(q.len(), 1);
+        assert!(!q.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nan_time() {
+        let mut q = EventQueue::new();
+        q.push_at(f64::NAN, ());
+    }
+}

@@ -1,0 +1,83 @@
+//! Minimal benchmarking harness (offline stand-in for `criterion`).
+//!
+//! `cargo bench` runs the `rust/benches/*.rs` targets (harness = false);
+//! each uses this kit to time its workload with warmup + repeated
+//! measurement and to print a stable, parseable summary line.
+
+use std::time::Instant;
+
+/// One timing summary.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> String {
+        format!(
+            "bench {:<40} {:>5} iters  mean {:>10.3} ms  min {:>10.3} ms  max {:>10.3} ms",
+            self.name, self.iters, self.mean_ms, self.min_ms, self.max_ms
+        )
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs and `iters` measured runs.
+/// The closure's result is returned from the last run so the compiler
+/// cannot elide the work.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> (BenchResult, T) {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    let mut last = None;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        last = Some(std::hint::black_box(f()));
+        times.push(t0.elapsed().as_secs_f64() * 1000.0);
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0f64, f64::max);
+    (
+        BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ms: mean,
+            min_ms: min,
+            max_ms: max,
+        },
+        last.unwrap(),
+    )
+}
+
+/// Convenience: run, print the summary, return the workload result.
+pub fn run<T>(name: &str, warmup: usize, iters: usize, f: impl FnMut() -> T) -> T {
+    let (res, out) = bench(name, warmup, iters, f);
+    println!("{}", res.summary());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_work() {
+        let (res, out) = bench("spin", 1, 3, || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(out, (0..10_000u64).fold(0u64, |a, b| a.wrapping_add(b)));
+        assert_eq!(res.iters, 3);
+        assert!(res.min_ms <= res.mean_ms && res.mean_ms <= res.max_ms + 1e-9);
+        assert!(res.summary().contains("spin"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Self-built substrates that would normally come from crates.io.
+//!
+//! The build environment is offline with only the `xla` dependency
+//! closure cached, so the usual serving-stack dependencies (serde,
+//! rand, tokio, criterion, proptest) are reimplemented here at the
+//! scale this project needs. Each submodule carries its own tests.
+
+pub mod benchkit;
+pub mod json;
+pub mod logging;
+pub mod proptest_mini;
+pub mod rng;
+pub mod stats;
+pub mod tomlmini;

@@ -1,0 +1,133 @@
+//! Miniature property-testing harness (offline stand-in for `proptest`).
+//!
+//! `Runner::run` draws N random cases from a user generator, checks a
+//! property, and on failure retries the failing case through a
+//! user-supplied shrink function until it reaches a local minimum —
+//! then panics with the seed and the minimal counterexample's Debug.
+
+use crate::util::rng::Pcg32;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_iters: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0xC0FFEE, max_shrink_iters: 500 }
+    }
+}
+
+/// Run `property` against `cases` inputs drawn from `gen`.
+///
+/// * `gen`: draws a random case from the RNG.
+/// * `shrink`: proposes strictly "smaller" variants of a failing case
+///   (return an empty vec when no further shrinking is possible).
+/// * `property`: returns `Err(reason)` on violation.
+pub fn run<T, G, S, P>(cfg: Config, mut gen: G, shrink: S, property: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Pcg32) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Pcg32::seeded(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let case = gen(&mut rng);
+        if let Err(first_reason) = property(&case) {
+            // Shrink to a local minimum.
+            let mut best = case;
+            let mut reason = first_reason;
+            let mut iters = 0;
+            'outer: loop {
+                if iters >= cfg.max_shrink_iters {
+                    break;
+                }
+                for candidate in shrink(&best) {
+                    iters += 1;
+                    if let Err(r) = property(&candidate) {
+                        best = candidate;
+                        reason = r;
+                        continue 'outer;
+                    }
+                    if iters >= cfg.max_shrink_iters {
+                        break 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={:#x}, case #{case_idx}): {reason}\nminimal counterexample: {best:#?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Shrinker for vectors: drop one element at a time.
+pub fn shrink_vec_by_removal<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    (0..v.len())
+        .map(|i| {
+            let mut c = v.to_vec();
+            c.remove(i);
+            c
+        })
+        .collect()
+}
+
+/// Shrinker for non-negative numbers: halve toward zero.
+pub fn shrink_f64(x: f64) -> Vec<f64> {
+    if x.abs() < 1e-9 {
+        vec![]
+    } else {
+        vec![0.0, x / 2.0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        run(
+            Config { cases: 64, ..Default::default() },
+            |rng| rng.below(100),
+            |_| vec![],
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_counterexample() {
+        run(
+            Config { cases: 64, ..Default::default() },
+            |rng| rng.below(100) as i64,
+            |&x| if x > 0 { vec![x / 2] } else { vec![] },
+            |&x| {
+                if x < 50 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} >= 50"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinkers() {
+        assert_eq!(shrink_vec_by_removal(&[1, 2, 3]).len(), 3);
+        assert!(shrink_f64(0.0).is_empty());
+        assert_eq!(shrink_f64(8.0), vec![0.0, 4.0]);
+    }
+}

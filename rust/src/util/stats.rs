@@ -1,0 +1,249 @@
+//! Statistics helpers: summaries, percentiles, CDFs, EWMA, online histograms.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile via linear interpolation on the sorted copy. `q` in [0,100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+/// Percentile on an already-sorted slice.
+pub fn percentile_sorted(v: &[f64], q: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 100.0);
+    let rank = q / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let f = rank - lo as f64;
+        v[lo] * (1.0 - f) + v[hi] * f
+    }
+}
+
+/// Empirical CDF evaluated at chosen quantile levels: returns (q, value) rows.
+pub fn cdf_points(xs: &[f64], qs: &[f64]) -> Vec<(f64, f64)> {
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    qs.iter().map(|&q| (q, percentile_sorted(&v, q))).collect()
+}
+
+/// Fraction of samples <= x.
+pub fn cdf_at(xs: &[f64], x: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().filter(|&&v| v <= x).count() as f64 / xs.len() as f64
+}
+
+/// Exponentially-weighted moving average — the paper tracks per-model
+/// request rates with an EWMA to decide when to re-schedule (§4.3).
+#[derive(Clone, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// `alpha` in (0, 1]: weight of the newest observation.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha out of (0,1]");
+        Ewma { alpha, value: None }
+    }
+
+    /// Feed one observation, returning the updated average.
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    /// Current average (None until the first update).
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    /// Reset to the unobserved state.
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+/// Fixed-bin latency histogram (ms) with overflow bin; cheap percentile
+/// queries for serving metrics without retaining every sample.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bin_width: f64,
+    bins: Vec<u64>,
+    overflow: u64,
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Histogram {
+    pub fn new(bin_width: f64, num_bins: usize) -> Self {
+        assert!(bin_width > 0.0 && num_bins > 0);
+        Histogram {
+            bin_width,
+            bins: vec![0; num_bins],
+            overflow: 0,
+            count: 0,
+            sum: 0.0,
+            max: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let idx = (x / self.bin_width) as usize;
+        if idx < self.bins.len() {
+            self.bins[idx] += 1;
+        } else {
+            self.overflow += 1;
+        }
+        self.count += 1;
+        self.sum += x;
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate percentile (bin upper edge).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 100.0) / 100.0 * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.bins.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return (i + 1) as f64 * self.bin_width;
+            }
+        }
+        self.max
+    }
+
+    pub fn reset(&mut self) {
+        self.bins.iter_mut().for_each(|b| *b = 0);
+        self.overflow = 0;
+        self.count = 0;
+        self.sum = 0.0;
+        self.max = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert!((percentile(&xs, 90.0) - 90.1).abs() < 0.2);
+    }
+
+    #[test]
+    fn cdf() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(cdf_at(&xs, 2.0), 0.5);
+        assert_eq!(cdf_at(&xs, 0.0), 0.0);
+        assert_eq!(cdf_at(&xs, 10.0), 1.0);
+        let pts = cdf_points(&xs, &[50.0]);
+        assert_eq!(pts.len(), 1);
+    }
+
+    #[test]
+    fn ewma_behaviour() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.get(), None);
+        assert_eq!(e.update(10.0), 10.0);
+        assert_eq!(e.update(20.0), 15.0);
+        assert_eq!(e.update(20.0), 17.5);
+        e.reset();
+        assert_eq!(e.get(), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ewma_rejects_bad_alpha() {
+        Ewma::new(0.0);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::new(1.0, 200);
+        for i in 1..=100 {
+            h.record(i as f64 - 0.5);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 50.0).abs() < 0.01);
+        let p50 = h.percentile(50.0);
+        assert!((49.0..=51.0).contains(&p50), "p50={p50}");
+        let p99 = h.percentile(99.0);
+        assert!((98.0..=100.0).contains(&p99), "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_overflow_and_reset() {
+        let mut h = Histogram::new(1.0, 10);
+        h.record(100.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile(100.0), 100.0);
+        h.reset();
+        assert_eq!(h.count(), 0);
+    }
+}

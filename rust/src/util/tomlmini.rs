@@ -1,0 +1,271 @@
+//! Minimal TOML-subset parser (offline stand-in for the `toml` crate).
+//!
+//! Supports what `configs/*.toml` uses: `[section]` / `[section.sub]`
+//! headers, `key = value` with string / integer / float / bool / array
+//! values, `#` comments. Values are exposed through dotted-path lookup.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed TOML-subset value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => Err(Error::parse(format!("expected string, got {other:?}"))),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            other => Err(Error::parse(format!("expected integer, got {other:?}"))),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => Err(Error::parse(format!("expected number, got {other:?}"))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => Err(Error::parse(format!("expected bool, got {other:?}"))),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(a) => Ok(a),
+            other => Err(Error::parse(format!("expected array, got {other:?}"))),
+        }
+    }
+}
+
+/// Flat dotted-key table: `[gpu]` + `count = 4` is stored as `gpu.count`.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::parse(format!("line {}: bad section", lineno + 1)))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(Error::parse(format!("line {}: empty section", lineno + 1)));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| Error::parse(format!("line {}: expected key = value", lineno + 1)))?;
+            let key = line[..eq].trim();
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| Error::parse(format!("line {}: {e}", lineno + 1)))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            doc.entries.insert(full, val);
+        }
+        Ok(doc)
+    }
+
+    /// Lookup by dotted path.
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    /// Lookup with a default when missing.
+    pub fn f64_or(&self, path: &str, default: f64) -> Result<f64> {
+        match self.get(path) {
+            None => Ok(default),
+            Some(v) => v.as_f64(),
+        }
+    }
+
+    pub fn i64_or(&self, path: &str, default: i64) -> Result<i64> {
+        match self.get(path) {
+            None => Ok(default),
+            Some(v) => v.as_i64(),
+        }
+    }
+
+    pub fn str_or(&self, path: &str, default: &str) -> Result<String> {
+        match self.get(path) {
+            None => Ok(default.to_string()),
+            Some(v) => Ok(v.as_str()?.to_string()),
+        }
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> Result<bool> {
+        match self.get(path) {
+            None => Ok(default),
+            Some(v) => v.as_bool(),
+        }
+    }
+
+    /// All keys under a dotted prefix (e.g. every `rates.<model>` entry).
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = (&'a str, &'a TomlValue)> {
+        let pfx = format!("{prefix}.");
+        self.entries.iter().filter_map(move |(k, v)| {
+            k.strip_prefix(&pfx).map(|rest| (rest, v))
+        })
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Honour '#' outside of quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> std::result::Result<TomlValue, String> {
+    if text.is_empty() {
+        return Err("empty value".to_string());
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if text == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if text == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items = split_top_level(inner)
+            .into_iter()
+            .map(|s| parse_value(s.trim()))
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        return Ok(TomlValue::Arr(items));
+    }
+    if let Ok(i) = text.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {text:?}"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# cluster config
+name = "paper"
+[gpu]
+count = 4            # four 2080 Ti
+max_lets = 2
+sizes = [20, 40, 50, 60, 80, 100]
+[sched]
+algo = "elastic"
+interference = true
+period_s = 20.0
+[rates]
+lenet = 50.0
+vgg = 50.0
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = TomlDoc::parse(DOC).unwrap();
+        assert_eq!(d.get("name").unwrap().as_str().unwrap(), "paper");
+        assert_eq!(d.get("gpu.count").unwrap().as_i64().unwrap(), 4);
+        assert_eq!(d.get("sched.period_s").unwrap().as_f64().unwrap(), 20.0);
+        assert!(d.get("sched.interference").unwrap().as_bool().unwrap());
+        let sizes = d.get("gpu.sizes").unwrap().as_arr().unwrap();
+        assert_eq!(sizes.len(), 6);
+        assert_eq!(sizes[0].as_i64().unwrap(), 20);
+    }
+
+    #[test]
+    fn defaults_and_prefix_iteration() {
+        let d = TomlDoc::parse(DOC).unwrap();
+        assert_eq!(d.i64_or("gpu.count", 1).unwrap(), 4);
+        assert_eq!(d.i64_or("gpu.missing", 7).unwrap(), 7);
+        let rates: Vec<_> = d.keys_under("rates").collect();
+        assert_eq!(rates.len(), 2);
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let d = TomlDoc::parse(r##"key = "a#b" # trailing"##).unwrap();
+        assert_eq!(d.get("key").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k = [1, 2").is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! Poisson arrival generation (§6.1: "we sample inter-arrival time for
+//! each model from a Poisson random distribution", following Treadmill's
+//! observation that real-world arrivals are Poisson).
+
+use crate::models::ModelId;
+use crate::util::rng::Pcg32;
+
+/// One inference request arrival.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Arrival {
+    /// Virtual arrival time in ms.
+    pub time_ms: f64,
+    /// Requested model.
+    pub model: ModelId,
+    /// Request id, unique within a generated trace.
+    pub id: u64,
+}
+
+/// Generate a merged, time-sorted arrival trace for `duration_s` seconds
+/// where each model's arrivals form an independent Poisson process at
+/// its configured rate (req/s). Zero-rate models produce no arrivals.
+pub fn generate_arrivals(
+    rates: &[(ModelId, f64)],
+    duration_s: f64,
+    seed: u64,
+) -> Vec<Arrival> {
+    let mut out = Vec::new();
+    let horizon_ms = duration_s * 1000.0;
+    let mut id = 0u64;
+    for (i, &(model, rate)) in rates.iter().enumerate() {
+        if rate <= 0.0 {
+            continue;
+        }
+        // Independent stream per model so traces are stable under
+        // changes to the other models' rates.
+        let mut rng = Pcg32::new(seed, i as u64 + 1);
+        let mut t = 0.0;
+        loop {
+            t += rng.exp(rate) * 1000.0; // gap in ms
+            if t >= horizon_ms {
+                break;
+            }
+            out.push(Arrival { time_ms: t, model, id });
+            id += 1;
+        }
+    }
+    out.sort_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap());
+    // Re-number in arrival order for readable logs.
+    for (i, a) in out.iter_mut().enumerate() {
+        a.id = i as u64;
+    }
+    out
+}
+
+/// Generate arrivals for a time-varying rate function by thinning a
+/// piecewise-constant approximation over `step_s` windows (used by the
+/// Fig 14 fluctuation experiment).
+pub fn generate_varying<F>(
+    models: &[ModelId],
+    rate_at: F,
+    duration_s: f64,
+    step_s: f64,
+    seed: u64,
+) -> Vec<Arrival>
+where
+    F: Fn(ModelId, f64) -> f64,
+{
+    let mut out = Vec::new();
+    let mut id = 0u64;
+    for (i, &model) in models.iter().enumerate() {
+        let mut rng = Pcg32::new(seed, i as u64 + 101);
+        let mut window_start = 0.0;
+        while window_start < duration_s {
+            let rate = rate_at(model, window_start);
+            let window_end = (window_start + step_s).min(duration_s);
+            if rate > 0.0 {
+                let mut t = window_start;
+                loop {
+                    t += rng.exp(rate);
+                    if t >= window_end {
+                        break;
+                    }
+                    out.push(Arrival { time_ms: t * 1000.0, model, id });
+                    id += 1;
+                }
+            }
+            window_start = window_end;
+        }
+    }
+    out.sort_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap());
+    for (i, a) in out.iter_mut().enumerate() {
+        a.id = i as u64;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empirical_rate_matches_request() {
+        let arrivals = generate_arrivals(&[(ModelId::Lenet, 200.0)], 30.0, 1);
+        let rate = arrivals.len() as f64 / 30.0;
+        assert!((rate - 200.0).abs() < 15.0, "rate={rate}");
+    }
+
+    #[test]
+    fn sorted_and_unique_ids() {
+        let arrivals = generate_arrivals(
+            &[(ModelId::Lenet, 100.0), (ModelId::Vgg, 50.0)],
+            10.0,
+            2,
+        );
+        assert!(arrivals.windows(2).all(|w| w[0].time_ms <= w[1].time_ms));
+        for (i, a) in arrivals.iter().enumerate() {
+            assert_eq!(a.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn zero_rate_no_arrivals() {
+        let arrivals = generate_arrivals(&[(ModelId::Lenet, 0.0)], 10.0, 3);
+        assert!(arrivals.is_empty());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate_arrivals(&[(ModelId::Resnet, 100.0)], 5.0, 7);
+        let b = generate_arrivals(&[(ModelId::Resnet, 100.0)], 5.0, 7);
+        assert_eq!(a, b);
+        let c = generate_arrivals(&[(ModelId::Resnet, 100.0)], 5.0, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn per_model_streams_independent() {
+        // Adding a second model must not perturb the first's arrivals.
+        let solo = generate_arrivals(&[(ModelId::Lenet, 100.0)], 5.0, 9);
+        let duo = generate_arrivals(
+            &[(ModelId::Lenet, 100.0), (ModelId::Vgg, 100.0)],
+            5.0,
+            9,
+        );
+        let lenet_times: Vec<f64> = duo
+            .iter()
+            .filter(|a| a.model == ModelId::Lenet)
+            .map(|a| a.time_ms)
+            .collect();
+        let solo_times: Vec<f64> = solo.iter().map(|a| a.time_ms).collect();
+        assert_eq!(lenet_times, solo_times);
+    }
+
+    #[test]
+    fn varying_rate_tracks_windows() {
+        let arr = generate_varying(
+            &[ModelId::Lenet],
+            |_, t| if t < 5.0 { 400.0 } else { 50.0 },
+            10.0,
+            1.0,
+            4,
+        );
+        let early = arr.iter().filter(|a| a.time_ms < 5_000.0).count();
+        let late = arr.len() - early;
+        assert!(early > late * 4, "early={early} late={late}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Workload generation: Poisson request arrivals, the paper's request
+//! scenarios (Table 5 + the 1,023-scenario population), and the Fig 14
+//! rate-fluctuation traces.
+
+pub mod generator;
+pub mod scenarios;
+pub mod trace;
+
+pub use generator::{generate_arrivals, Arrival};
+pub use scenarios::{enumerate_all_scenarios, named_scenarios, Scenario};
+pub use trace::FluctuationTrace;

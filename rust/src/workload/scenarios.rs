@@ -1,0 +1,117 @@
+//! Request scenarios: the paper's Table 5 named mixes and the 1,023
+//! scenario population used for the schedulability studies (§3.1,
+//! Fig 4 / Fig 15: rates {0, 200, 400, 600} per model, all-zero excluded).
+
+use crate::models::ModelId;
+
+/// A per-model request-rate vector (req/s), indexed by `ModelId::index`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub rates: [f64; 5],
+}
+
+impl Scenario {
+    pub fn new(name: impl Into<String>, rates: [f64; 5]) -> Self {
+        Scenario { name: name.into(), rates }
+    }
+
+    pub fn rate(&self, m: ModelId) -> f64 {
+        self.rates[m.index()]
+    }
+
+    /// Total offered load (req/s).
+    pub fn total_rate(&self) -> f64 {
+        self.rates.iter().sum()
+    }
+
+    /// Rate pairs for the workload generator (nonzero only).
+    pub fn rate_pairs(&self) -> Vec<(ModelId, f64)> {
+        ModelId::ALL
+            .iter()
+            .map(|&m| (m, self.rate(m)))
+            .filter(|&(_, r)| r > 0.0)
+            .collect()
+    }
+
+    /// Uniformly scale all rates (the "x2.0" escalation in Fig 13).
+    pub fn scaled(&self, factor: f64) -> Scenario {
+        let mut rates = self.rates;
+        rates.iter_mut().for_each(|r| *r *= factor);
+        Scenario::new(format!("{}@x{factor:.2}", self.name), rates)
+    }
+}
+
+/// Table 5: the three particularly chosen request scenarios.
+/// Order: [le, goo, res, ssd, vgg] per `ModelId` index.
+pub fn named_scenarios() -> Vec<Scenario> {
+    vec![
+        Scenario::new("equal", [50.0, 50.0, 50.0, 50.0, 50.0]),
+        Scenario::new("long-only", [0.0, 0.0, 100.0, 100.0, 100.0]),
+        Scenario::new("short-skew", [100.0, 100.0, 100.0, 50.0, 50.0]),
+    ]
+}
+
+/// The full 4^5 − 1 = 1,023 scenario population with per-model rates in
+/// {0, 200, 400, 600} req/s, excluding the all-zero vector (§3.1).
+pub fn enumerate_all_scenarios() -> Vec<Scenario> {
+    const LEVELS: [f64; 4] = [0.0, 200.0, 400.0, 600.0];
+    let mut out = Vec::with_capacity(1023);
+    for a in 0..4 {
+        for b in 0..4 {
+            for c in 0..4 {
+                for d in 0..4 {
+                    for e in 0..4 {
+                        if a + b + c + d + e == 0 {
+                            continue;
+                        }
+                        let rates = [
+                            LEVELS[a], LEVELS[b], LEVELS[c], LEVELS[d], LEVELS[e],
+                        ];
+                        out.push(Scenario::new(
+                            format!("s{a}{b}{c}{d}{e}"),
+                            rates,
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_values() {
+        let s = named_scenarios();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0].rate(ModelId::Lenet), 50.0);
+        assert_eq!(s[1].rate(ModelId::Lenet), 0.0);
+        assert_eq!(s[1].rate(ModelId::Vgg), 100.0);
+        assert_eq!(s[2].rate(ModelId::Googlenet), 100.0);
+        assert_eq!(s[2].rate(ModelId::SsdMobilenet), 50.0);
+    }
+
+    #[test]
+    fn population_is_1023() {
+        let all = enumerate_all_scenarios();
+        assert_eq!(all.len(), 1023);
+        // No all-zero; no duplicates.
+        assert!(all.iter().all(|s| s.total_rate() > 0.0));
+        let mut names: Vec<&str> = all.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 1023);
+    }
+
+    #[test]
+    fn scaling() {
+        let s = Scenario::new("t", [10.0, 0.0, 0.0, 0.0, 30.0]).scaled(2.0);
+        assert_eq!(s.rates, [20.0, 0.0, 0.0, 0.0, 60.0]);
+        assert_eq!(s.total_rate(), 80.0);
+        assert_eq!(s.rate_pairs().len(), 2);
+    }
+}

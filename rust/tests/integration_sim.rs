@@ -1,0 +1,154 @@
+//! End-to-end integration over the simulated serving stack:
+//! scheduler -> schedule -> discrete-event simulation -> metrics,
+//! across scenarios, sharing modes, and the adaptive reorganizer.
+
+use gpulets::coordinator::simserver::{simulate, SimConfig};
+use gpulets::coordinator::AdaptiveServer;
+use gpulets::experiments::common::{paper_ctx, violation_rate_of};
+use gpulets::gpu::ShareMode;
+use gpulets::interference::GroundTruth;
+use gpulets::models::ModelId;
+use gpulets::perfmodel::LatencyModel;
+use gpulets::sched::{
+    ElasticPartitioning, GuidedSelfTuning, Scheduler, SquishyBinPacking,
+};
+use gpulets::workload::{generate_arrivals, named_scenarios, FluctuationTrace};
+
+fn arrivals_for(rates: &[f64; 5], duration_s: f64, seed: u64) -> Vec<gpulets::workload::Arrival> {
+    let pairs: Vec<(ModelId, f64)> = ModelId::ALL
+        .iter()
+        .map(|&m| (m, rates[m.index()]))
+        .filter(|&(_, r)| r > 0.0)
+        .collect();
+    generate_arrivals(&pairs, duration_s, seed)
+}
+
+#[test]
+fn every_table5_scenario_serves_cleanly_under_gpulet_int() {
+    let ctx = paper_ctx(true);
+    let scheduler = ElasticPartitioning::gpulet_int();
+    for sc in named_scenarios() {
+        let schedule = scheduler
+            .schedule(&ctx, &sc.rates)
+            .unwrap_or_else(|e| panic!("{} must be schedulable: {e}", sc.name));
+        schedule.validate(&ctx.lm, 4).unwrap();
+        let viol = violation_rate_of(&ctx, &schedule, &sc.rates, 20.0, 7);
+        assert!(viol < 0.02, "{}: violation rate {viol}", sc.name);
+    }
+}
+
+#[test]
+fn all_schedulers_produce_simulatable_schedules() {
+    let ctx = paper_ctx(false);
+    let rates = [50.0, 30.0, 20.0, 10.0, 10.0];
+    let schedulers: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(SquishyBinPacking::baseline()),
+        Box::new(SquishyBinPacking::with_even_partitioning()),
+        Box::new(GuidedSelfTuning),
+        Box::new(ElasticPartitioning::gpulet()),
+    ];
+    let arrivals = arrivals_for(&rates, 10.0, 3);
+    let lm = LatencyModel::new();
+    let gt = GroundTruth::default();
+    for s in schedulers {
+        let schedule = s
+            .schedule(&ctx, &rates)
+            .unwrap_or_else(|e| panic!("{} failed on light load: {e}", s.name()));
+        let report = simulate(&lm, &gt, &schedule, &arrivals, 10.0, &SimConfig::default());
+        let served: u64 = ModelId::ALL
+            .iter()
+            .filter_map(|&m| report.model(m))
+            .map(|mm| mm.served)
+            .sum();
+        assert!(
+            served as usize >= arrivals.len() * 95 / 100,
+            "{}: served only {served}/{}",
+            s.name(),
+            arrivals.len()
+        );
+    }
+}
+
+#[test]
+fn sharing_mode_ordering_holds_under_pressure() {
+    // Fig 5's macro claim: static partitioning beats whole-GPU temporal
+    // sharing when a short-SLO model is consolidated with a heavy one.
+    let ctx = paper_ctx(false);
+    let scheduler = ElasticPartitioning::gpulet();
+    let rates = [1500.0, 0.0, 0.0, 0.0, 120.0];
+    let Ok(schedule) = scheduler.schedule(&ctx, &rates) else {
+        panic!("consolidated lenet+vgg load must be schedulable");
+    };
+    let lm = LatencyModel::new();
+    let gt = GroundTruth::default();
+    let arrivals = arrivals_for(&rates, 10.0, 11);
+    let viol = |mode: ShareMode| {
+        simulate(
+            &lm, &gt, &schedule, &arrivals, 10.0,
+            &SimConfig { mode, ..Default::default() },
+        )
+        .overall_violation_rate()
+    };
+    let part = viol(ShareMode::Partitioned);
+    let temp = viol(ShareMode::TemporalOnly);
+    assert!(part <= temp + 0.02, "partitioned {part} vs temporal {temp}");
+}
+
+#[test]
+fn requests_are_conserved() {
+    // Every arrival is either served or dropped — never lost.
+    let ctx = paper_ctx(false);
+    let scheduler = ElasticPartitioning::gpulet();
+    let rates = [200.0, 100.0, 400.0, 30.0, 250.0]; // over-capacity on purpose
+    if let Ok(schedule) = scheduler.schedule(&ctx, &[100.0, 50.0, 50.0, 20.0, 30.0]) {
+        let arrivals = arrivals_for(&rates, 8.0, 17);
+        let lm = LatencyModel::new();
+        let report = simulate(
+            &lm,
+            &GroundTruth::default(),
+            &schedule,
+            &arrivals,
+            8.0,
+            &SimConfig::default(),
+        );
+        let total: u64 = ModelId::ALL
+            .iter()
+            .filter_map(|&m| report.model(m))
+            .map(|mm| mm.total())
+            .sum();
+        assert_eq!(total as usize, arrivals.len(), "requests lost or duplicated");
+    }
+}
+
+#[test]
+fn adaptive_server_survives_paper_trace_wave() {
+    // The Fig 14 configuration end to end (shortened to one wave).
+    let ctx = paper_ctx(false);
+    let scheduler = ElasticPartitioning::gpulet();
+    let server = AdaptiveServer::new(&ctx, &scheduler);
+    let stats = server.run_trace(&FluctuationTrace::default(), 700.0, 2024);
+    assert_eq!(stats.len(), 35);
+    let reorgs = stats.iter().filter(|w| w.reorganized).count();
+    assert!(reorgs >= 2, "expected several reorganizations, got {reorgs}");
+    let worst = stats
+        .iter()
+        .map(|w| w.violation_rate)
+        .fold(0.0f64, f64::max);
+    assert!(worst < 0.30, "worst window violation {worst}");
+}
+
+#[test]
+fn interference_aware_not_worse_at_same_rates() {
+    let ctx_p = paper_ctx(false);
+    let ctx_i = paper_ctx(true);
+    let gp = ElasticPartitioning::gpulet();
+    let gi = ElasticPartitioning::gpulet_int();
+    // A contended mix both accept.
+    let rates = [0.0, 150.0, 150.0, 100.0, 150.0];
+    let (Ok(sp), Ok(si)) = (gp.schedule(&ctx_p, &rates), gi.schedule(&ctx_i, &rates)) else {
+        return; // if either rejects, nothing to compare
+    };
+    let vp = violation_rate_of(&ctx_p, &sp, &rates, 15.0, 23);
+    let vi = violation_rate_of(&ctx_i, &si, &rates, 15.0, 23);
+    assert!(vi <= vp + 0.03, "gpulet+int {vi} much worse than gpulet {vp}");
+}

@@ -1,0 +1,241 @@
+//! Property-based invariants (via `util::proptest_mini`) over the
+//! coordinator's core state machines — the DESIGN.md §8 list:
+//! (i) no GPU oversubscribed, (ii) only valid sizes, (iii) accepted
+//! schedules satisfy the modeled SLO, (iv) split/merge round-trips,
+//! (v) batcher cap respected, (vi) routing conserves requests.
+
+use gpulets::coordinator::batcher::{BatchBuilder, Queued};
+use gpulets::coordinator::simserver::{simulate, SimConfig};
+use gpulets::experiments::common::paper_ctx;
+use gpulets::gpu::gpulet::{
+    is_valid_size, merges_to_whole, round_up_size, split_of, MAX_LETS_PER_GPU,
+};
+use gpulets::interference::GroundTruth;
+use gpulets::models::ModelId;
+use gpulets::perfmodel::LatencyModel;
+use gpulets::sched::{ElasticPartitioning, Scheduler};
+use gpulets::util::proptest_mini::{run, Config};
+use gpulets::util::rng::Pcg32;
+use gpulets::workload::generate_arrivals;
+
+#[derive(Clone, Debug)]
+struct RatesCase([f64; 5]);
+
+fn gen_rates(rng: &mut Pcg32) -> RatesCase {
+    let mut rates = [0.0; 5];
+    for r in rates.iter_mut() {
+        if rng.f64() < 0.75 {
+            *r = rng.range(0.0, 600.0);
+        }
+    }
+    RatesCase(rates)
+}
+
+fn shrink_rates(c: &RatesCase) -> Vec<RatesCase> {
+    let mut out = Vec::new();
+    for i in 0..5 {
+        if c.0[i] > 0.0 {
+            let mut zeroed = c.0;
+            zeroed[i] = 0.0;
+            out.push(RatesCase(zeroed));
+            let mut halved = c.0;
+            halved[i] /= 2.0;
+            out.push(RatesCase(halved));
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_schedules_respect_structural_and_slo_invariants() {
+    let ctx = paper_ctx(true);
+    let scheduler = ElasticPartitioning::gpulet_int();
+    run(
+        Config { cases: 120, seed: 0x5EED, ..Default::default() },
+        gen_rates,
+        shrink_rates,
+        |case| {
+            let Ok(schedule) = scheduler.schedule(&ctx, &case.0) else {
+                return Ok(()); // rejection is always allowed
+            };
+            // (i)+(ii): structural validation incl. per-GPU caps.
+            schedule
+                .validate(&ctx.lm, ctx.num_gpus)
+                .map_err(|e| format!("invalid: {e}"))?;
+            // Per-GPU: at most MAX_LETS_PER_GPU lets, sizes valid.
+            let layout = schedule.layout(ctx.num_gpus).map_err(|e| e.to_string())?;
+            for g in 0..layout.num_gpus() {
+                let lets = layout.lets_on(g);
+                if lets.len() > MAX_LETS_PER_GPU {
+                    return Err(format!("gpu {g} has {} lets", lets.len()));
+                }
+                if lets.iter().any(|&s| !is_valid_size(s)) {
+                    return Err(format!("gpu {g} invalid sizes {lets:?}"));
+                }
+            }
+            // (iii): every let's duty cycle honours the (planning) SLOs.
+            for lp in &schedule.lets {
+                if !lp.feasible(&ctx.lm, 0.0) {
+                    return Err(format!(
+                        "infeasible let on gpu{} ({}%)",
+                        lp.spec.gpu, lp.spec.size_pct
+                    ));
+                }
+            }
+            // Coverage: assigned >= offered.
+            let assigned = schedule.assigned_rates();
+            for m in ModelId::ALL {
+                if assigned[m.index()] < case.0[m.index()] - 1e-6 {
+                    return Err(format!("{m} under-assigned"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_split_merge_roundtrip() {
+    run(
+        Config { cases: 200, seed: 0x5117, ..Default::default() },
+        |rng| rng.below(120) as u32 + 1,
+        |&want| if want > 1 { vec![want / 2, want - 1] } else { vec![] },
+        |&want| {
+            let rounded = round_up_size(want.min(100));
+            if !is_valid_size(rounded) {
+                return Err(format!("round_up({want}) = {rounded} invalid"));
+            }
+            if let Some((a, b)) = split_of(want.min(100)) {
+                if !merges_to_whole(a, b) {
+                    return Err(format!("split({want}) = ({a},{b}) doesn't re-merge"));
+                }
+                if a < want.min(100) {
+                    return Err(format!("split({want}) ideal half {a} too small"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_never_exceeds_cap_and_preserves_fifo() {
+    run(
+        Config { cases: 100, seed: 0xBA7C4, ..Default::default() },
+        |rng| {
+            let cap = rng.below(31) as u32 + 1;
+            let n = rng.below(200) + 1;
+            let times: Vec<f64> = {
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += rng.exp(50.0) * 1000.0;
+                        t
+                    })
+                    .collect()
+            };
+            (cap, times)
+        },
+        |_| vec![],
+        |(cap, times)| {
+            let mut b = BatchBuilder::new(*cap, 25.0);
+            let mut seen_ids = Vec::new();
+            for (i, &t) in times.iter().enumerate() {
+                if let Some(batch) = b.push(Queued { id: i as u64, arrival_ms: t }) {
+                    if batch.len() > *cap as usize {
+                        return Err(format!("batch {} > cap {cap}", batch.len()));
+                    }
+                    seen_ids.extend(batch.requests.iter().map(|q| q.id));
+                }
+            }
+            while let Some(batch) = b.flush() {
+                if batch.len() > *cap as usize {
+                    return Err(format!("flush batch {} > cap {cap}", batch.len()));
+                }
+                seen_ids.extend(batch.requests.iter().map(|q| q.id));
+            }
+            if seen_ids.len() != times.len() {
+                return Err(format!("lost requests: {}/{}", seen_ids.len(), times.len()));
+            }
+            if seen_ids.windows(2).any(|w| w[0] >= w[1]) {
+                return Err("FIFO order broken".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simulation_conserves_requests() {
+    let ctx = paper_ctx(false);
+    let scheduler = ElasticPartitioning::gpulet();
+    let lm = LatencyModel::new();
+    let gt = GroundTruth::default();
+    run(
+        Config { cases: 30, seed: 0x51AB, ..Default::default() },
+        |rng| {
+            let sched_rates = gen_rates(rng).0.map(|r| r * 0.3);
+            let offered = gen_rates(rng).0;
+            let seed = rng.next_u64();
+            (sched_rates, offered, seed)
+        },
+        |_| vec![],
+        |(sched_rates, offered, seed)| {
+            let Ok(schedule) = scheduler.schedule(&ctx, sched_rates) else {
+                return Ok(());
+            };
+            let pairs: Vec<(ModelId, f64)> = ModelId::ALL
+                .iter()
+                .map(|&m| (m, offered[m.index()]))
+                .filter(|&(_, r)| r > 0.0)
+                .collect();
+            if pairs.is_empty() {
+                return Ok(());
+            }
+            let arrivals = generate_arrivals(&pairs, 4.0, *seed);
+            let report =
+                simulate(&lm, &gt, &schedule, &arrivals, 4.0, &SimConfig::default());
+            let total: u64 = ModelId::ALL
+                .iter()
+                .filter_map(|&m| report.model(m))
+                .map(|mm| mm.total())
+                .sum();
+            if total as usize != arrivals.len() {
+                return Err(format!(
+                    "conservation broken: {total} accounted vs {} offered",
+                    arrivals.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_latency_model_monotonicity() {
+    let lm = LatencyModel::new();
+    run(
+        Config { cases: 300, seed: 0x1A7, ..Default::default() },
+        |rng| {
+            let m = ModelId::from_index(rng.below(5));
+            let b = rng.below(32) as u32 + 1;
+            let p = rng.range(0.05, 1.0);
+            (m, b, p)
+        },
+        |_| vec![],
+        |&(m, b, p)| {
+            let l = lm.latency_ms(m, b, p);
+            if !(l.is_finite() && l > 0.0) {
+                return Err(format!("L({m},{b},{p}) = {l}"));
+            }
+            // Monotone: more resource never hurts, bigger batch never faster.
+            if lm.latency_ms(m, b, (p + 0.1).min(1.0)) > l + 1e-9 {
+                return Err(format!("L not monotone in p at ({m},{b},{p})"));
+            }
+            if b < 32 && lm.latency_ms(m, b + 1, p) < l - 1e-9 {
+                return Err(format!("L not monotone in b at ({m},{b},{p})"));
+            }
+            Ok(())
+        },
+    );
+}

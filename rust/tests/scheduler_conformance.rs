@@ -1,0 +1,142 @@
+//! Scheduler conformance: every scheduler must produce structurally
+//! valid schedules, cover the offered load it accepted, and respect the
+//! dominance relations the paper reports (ideal >= elastic >= the
+//! baselines on schedulability).
+
+use gpulets::experiments::common::{max_schedulable, paper_ctx};
+use gpulets::models::ModelId;
+use gpulets::sched::{
+    ElasticPartitioning, GuidedSelfTuning, IdealScheduler, SchedCtx, Scheduler,
+    SquishyBinPacking,
+};
+use gpulets::util::rng::Pcg32;
+use gpulets::workload::enumerate_all_scenarios;
+
+fn all_schedulers() -> Vec<Box<dyn Scheduler>> {
+    vec![
+        Box::new(SquishyBinPacking::baseline()),
+        Box::new(SquishyBinPacking::with_even_partitioning()),
+        Box::new(GuidedSelfTuning),
+        Box::new(ElasticPartitioning::gpulet()),
+        Box::new(ElasticPartitioning::gpulet_int()),
+        Box::new(IdealScheduler),
+    ]
+}
+
+fn ctx_for(s: &dyn Scheduler) -> SchedCtx {
+    paper_ctx(s.name() == "gpulet+int")
+}
+
+/// Random rate vectors spanning light to heavy loads.
+fn random_rates(rng: &mut Pcg32) -> [f64; 5] {
+    let mut rates = [0.0; 5];
+    for r in rates.iter_mut() {
+        if rng.f64() < 0.7 {
+            *r = rng.range(0.0, 400.0);
+        }
+    }
+    rates
+}
+
+#[test]
+fn accepted_schedules_are_valid_and_cover_offered_load() {
+    let mut rng = Pcg32::seeded(0xC0DE);
+    let cases: Vec<[f64; 5]> = (0..40).map(|_| random_rates(&mut rng)).collect();
+    for s in all_schedulers() {
+        let ctx = ctx_for(s.as_ref());
+        for rates in &cases {
+            let Ok(schedule) = s.schedule(&ctx, rates) else { continue };
+            schedule
+                .validate(&ctx.lm, ctx.num_gpus)
+                .unwrap_or_else(|e| panic!("{}: invalid schedule: {e}", s.name()));
+            let assigned = schedule.assigned_rates();
+            for m in ModelId::ALL {
+                assert!(
+                    assigned[m.index()] >= rates[m.index()] - 1e-6,
+                    "{}: {m} assigned {} < offered {}",
+                    s.name(),
+                    assigned[m.index()],
+                    rates[m.index()]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_load_yields_empty_schedule_for_all() {
+    for s in all_schedulers() {
+        let ctx = ctx_for(s.as_ref());
+        let schedule = s.schedule(&ctx, &[0.0; 5]).unwrap();
+        assert!(schedule.lets.is_empty(), "{}: non-empty for zero load", s.name());
+    }
+}
+
+#[test]
+fn ideal_dominates_every_practical_scheduler_on_sampled_scenarios() {
+    let ideal = IdealScheduler;
+    let ctx = paper_ctx(false);
+    // Deterministic sample of the 1023-scenario population (full sweep
+    // is the fig15 bench).
+    let scenarios = enumerate_all_scenarios();
+    let sample: Vec<_> = scenarios.iter().step_by(23).collect();
+    for s in all_schedulers() {
+        if s.name() == "ideal" {
+            continue;
+        }
+        let sctx = ctx_for(s.as_ref());
+        for sc in &sample {
+            if s.schedule(&sctx, &sc.rates).is_ok() {
+                assert!(
+                    ideal.schedule(&ctx, &sc.rates).is_ok(),
+                    "{} schedules {} but ideal does not",
+                    s.name(),
+                    sc.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn elastic_schedulability_at_least_sbp_on_eval_workloads() {
+    // The throughput headline at the admission level: elastic must accept
+    // at least the scale SBP accepts on every evaluation workload.
+    let ctx = paper_ctx(false);
+    let sbp = SquishyBinPacking::baseline();
+    let gp = ElasticPartitioning::gpulet();
+    for (name, base) in gpulets::experiments::common::eval_workloads() {
+        let k_sbp = max_schedulable(&ctx, &sbp, &base);
+        let k_gp = max_schedulable(&ctx, &gp, &base);
+        assert!(
+            k_gp >= k_sbp * 0.95,
+            "{name}: gpulet scale {k_gp} < sbp {k_sbp}"
+        );
+    }
+}
+
+#[test]
+fn schedulers_are_deterministic() {
+    let mut rng = Pcg32::seeded(0xBEEF);
+    let rates = random_rates(&mut rng);
+    for s in all_schedulers() {
+        let ctx = ctx_for(s.as_ref());
+        let a = s.schedule(&ctx, &rates).ok().map(|s| format!("{:?}", s.lets));
+        let b = s.schedule(&ctx, &rates).ok().map(|s| format!("{:?}", s.lets));
+        assert_eq!(a, b, "{}: nondeterministic schedule", s.name());
+    }
+}
+
+#[test]
+fn not_schedulable_error_is_informative() {
+    for s in all_schedulers() {
+        let ctx = ctx_for(s.as_ref());
+        let err = s.schedule(&ctx, &[1e9; 5]).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("not schedulable"),
+            "{}: unexpected error {msg:?}",
+            s.name()
+        );
+    }
+}
