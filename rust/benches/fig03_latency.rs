@@ -1,10 +1,8 @@
 //! Bench target for Fig 3: regenerates the batch-latency vs gpu-let-size
-//! table for all five models and times the latency-model evaluation.
-use gpulets::util::benchkit;
+//! table for all five models, times the latency-model evaluation, and
+//! writes BENCH_fig03_latency.json (timing + full L(b,p) grid).
+use gpulets::experiments::{common, fig03};
 
 fn main() {
-    let table = benchkit::run("fig03: full L(b,p) grid + knees", 2, 10, || {
-        gpulets::experiments::fig03::run()
-    });
-    println!("\n{table}");
+    common::run_and_write(&fig03::Experiment, 2, 10).expect("fig03 bench");
 }

@@ -1,10 +1,8 @@
 //! Bench target for Fig 4: SBP schedulability over the 1,023-scenario
-//! population, with and without even 50:50 GPU partitioning.
-use gpulets::util::benchkit;
+//! population, with and without even 50:50 GPU partitioning; writes
+//! BENCH_fig04_schedulability.json (timing + schedulable counts).
+use gpulets::experiments::{common, fig04};
 
 fn main() {
-    let out = benchkit::run("fig04: 2x 1023-scenario SBP sweep", 1, 3, || {
-        gpulets::experiments::fig04::run()
-    });
-    println!("\n{out}");
+    common::run_and_write(&fig04::Experiment, 1, 3).expect("fig04 bench");
 }

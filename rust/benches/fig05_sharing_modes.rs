@@ -1,10 +1,8 @@
 //! Bench target for Fig 5: SLO violation vs rate for LeNet+VGG under
-//! temporal sharing, MPS(default) and MPS(20:80) static partitioning.
-use gpulets::util::benchkit;
+//! temporal sharing, MPS(default) and MPS(20:80) static partitioning;
+//! writes BENCH_fig05_sharing_modes.json (timing + per-rate rows).
+use gpulets::experiments::{common, fig05};
 
 fn main() {
-    let out = benchkit::run("fig05: 3-mode rate sweep (sim)", 0, 1, || {
-        gpulets::experiments::fig05::run()
-    });
-    println!("\n{out}");
+    common::run_and_write(&fig05::Experiment, 0, 1).expect("fig05 bench");
 }

@@ -1,10 +1,8 @@
 //! Bench target for Fig 6: consolidation-overhead CDF over the 250-pair
-//! population (both victims observed).
-use gpulets::util::benchkit;
+//! population (both victims observed); writes
+//! BENCH_fig06_interference_cdf.json (timing + quantiles).
+use gpulets::experiments::{common, fig06};
 
 fn main() {
-    let out = benchkit::run("fig06: 500-observation overhead CDF", 2, 10, || {
-        gpulets::experiments::fig06::run()
-    });
-    println!("\n{out}");
+    common::run_and_write(&fig06::Experiment, 2, 10).expect("fig06 bench");
 }

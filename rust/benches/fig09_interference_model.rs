@@ -1,10 +1,8 @@
 //! Bench target for Fig 9: least-squares fit of the linear interference
-//! model + held-out error CDF (the paper's 70/30 split).
-use gpulets::util::benchkit;
+//! model + held-out error CDF (the paper's 70/30 split); writes
+//! BENCH_fig09_interference_model.json (timing + coefficients + errors).
+use gpulets::experiments::{common, fig09};
 
 fn main() {
-    let out = benchkit::run("fig09: profile + fit + validate", 1, 5, || {
-        gpulets::experiments::fig09::run()
-    });
-    println!("\n{out}");
+    common::run_and_write(&fig09::Experiment, 1, 5).expect("fig09 bench");
 }

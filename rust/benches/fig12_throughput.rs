@@ -1,11 +1,10 @@
 //! Bench target for Fig 12 — the paper's HEADLINE table: maximum
 //! achievable throughput of sbp / selftune / gpulet / gpulet+int over
-//! the five evaluation workloads (rate escalation + simulation).
-use gpulets::util::benchkit;
+//! the five evaluation workloads (rate escalation + simulation); writes
+//! BENCH_fig12_throughput.json (timing + per-scheduler throughput,
+//! scale and SLO-violation numbers).
+use gpulets::experiments::{common, fig12};
 
 fn main() {
-    let out = benchkit::run("fig12: 4-scheduler max-throughput search", 0, 1, || {
-        gpulets::experiments::fig12::run()
-    });
-    println!("\n{out}");
+    common::run_and_write(&fig12::Experiment, 0, 1).expect("fig12 bench");
 }

@@ -1,10 +1,8 @@
 //! Bench target for Fig 13: SLO violation rates at the highest rates the
-//! interference-oblivious scheduler accepts (gpulet vs gpulet+int).
-use gpulets::util::benchkit;
+//! interference-oblivious scheduler accepts (gpulet vs gpulet+int);
+//! writes BENCH_fig13_slo_violation.json (timing + per-workload rows).
+use gpulets::experiments::{common, fig13};
 
 fn main() {
-    let out = benchkit::run("fig13: stress-point violation sweep", 0, 1, || {
-        gpulets::experiments::fig13::run()
-    });
-    println!("\n{out}");
+    common::run_and_write(&fig13::Experiment, 0, 1).expect("fig13 bench");
 }

@@ -1,10 +1,8 @@
 //! Bench target for Fig 14: the full 1,800 s rate-fluctuation trace with
-//! periodic rescheduling and background partition re-organization.
-use gpulets::util::benchkit;
+//! periodic rescheduling and background partition re-organization;
+//! writes BENCH_fig14_fluctuation.json (timing + per-window series).
+use gpulets::experiments::{common, fig14};
 
 fn main() {
-    let out = benchkit::run("fig14: 1800 s adaptive serving trace", 0, 1, || {
-        gpulets::experiments::fig14::run()
-    });
-    println!("\n{out}");
+    common::run_and_write(&fig14::Experiment, 0, 1).expect("fig14 bench");
 }

@@ -1,10 +1,8 @@
 //! Bench target for Fig 15: schedulable-scenario counts, ideal
-//! exhaustive search vs gpulet+int, over the 1,023-scenario population.
-use gpulets::util::benchkit;
+//! exhaustive search vs gpulet+int, over the 1,023-scenario population;
+//! writes BENCH_fig15_ideal_schedulability.json (timing + counts).
+use gpulets::experiments::{common, fig15};
 
 fn main() {
-    let out = benchkit::run("fig15: ideal-vs-elastic 1023 sweep", 0, 1, || {
-        gpulets::experiments::fig15::run()
-    });
-    println!("\n{out}");
+    common::run_and_write(&fig15::Experiment, 0, 1).expect("fig15 bench");
 }

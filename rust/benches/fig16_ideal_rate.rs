@@ -1,10 +1,8 @@
 //! Bench target for Fig 16: max schedulable rate of gpulet+int
-//! normalized to the ideal scheduler, per evaluation workload.
-use gpulets::util::benchkit;
+//! normalized to the ideal scheduler, per evaluation workload; writes
+//! BENCH_fig16_ideal_rate.json (timing + normalized rows).
+use gpulets::experiments::{common, fig16};
 
 fn main() {
-    let out = benchkit::run("fig16: normalized max-rate search", 0, 1, || {
-        gpulets::experiments::fig16::run()
-    });
-    println!("\n{out}");
+    common::run_and_write(&fig16::Experiment, 0, 1).expect("fig16 bench");
 }

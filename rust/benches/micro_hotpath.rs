@@ -1,5 +1,4 @@
-//! Micro-benchmarks of the L3 hot paths (the §Perf targets in
-//! EXPERIMENTS.md):
+//! Micro-benchmarks of the L3 hot paths (DESIGN.md §8 perf targets):
 //!
 //! * one Elastic Partitioning scheduling pass (the 20 s-period planner)
 //! * the full 1,023-scenario schedulability sweep
@@ -7,6 +6,8 @@
 //! * batch-builder enqueue/dispatch
 //! * interference-model prediction (called inside scheduler loops)
 //! * PJRT end-to-end execution, when `artifacts/` is built
+//!
+//! Writes BENCH_micro_hotpath.json with one timing entry per bench.
 
 use gpulets::coordinator::batcher::{BatchBuilder, Queued};
 use gpulets::coordinator::simserver::{simulate, SimConfig};
@@ -19,26 +20,31 @@ use gpulets::util::benchkit;
 use gpulets::workload::{enumerate_all_scenarios, generate_arrivals};
 
 fn main() {
+    let mut timings = Vec::new();
     let ctx = paper_ctx(true);
     let gi = ElasticPartitioning::gpulet_int();
 
     // --- scheduler pass ---------------------------------------------------
     let rates = [100.0, 100.0, 100.0, 50.0, 50.0];
-    benchkit::run("sched: one gpulet+int pass (short-skew)", 10, 200, || {
+    let (t, _) = benchkit::bench("sched: one gpulet+int pass (short-skew)", 10, 200, || {
         gi.schedule(&ctx, &rates).is_ok()
     });
+    println!("{}", t.summary());
+    timings.push(t);
 
     let scenarios = enumerate_all_scenarios();
-    benchkit::run("sched: 1023-scenario gpulet+int sweep", 1, 5, || {
+    let (t, _) = benchkit::bench("sched: 1023-scenario gpulet+int sweep", 1, 5, || {
         scenarios
             .iter()
             .filter(|sc| gi.schedule(&ctx, &sc.rates).is_ok())
             .count()
     });
+    println!("{}", t.summary());
+    timings.push(t);
 
     // --- interference prediction ------------------------------------------
     let model = fitted_interference();
-    benchkit::run("intf: 10k pair predictions", 2, 50, || {
+    let (t, _) = benchkit::bench("intf: 10k pair predictions", 2, 50, || {
         let mut acc = 0.0;
         for i in 0..10_000u32 {
             let m1 = ModelId::from_index((i % 5) as usize);
@@ -47,6 +53,8 @@ fn main() {
         }
         acc
     });
+    println!("{}", t.summary());
+    timings.push(t);
 
     // --- simulator event throughput ----------------------------------------
     let lm = LatencyModel::new();
@@ -64,7 +72,7 @@ fn main() {
         5,
     );
     let n_arr = arrivals.len();
-    benchkit::run(
+    let (t, _) = benchkit::bench(
         &format!("sim: 10 s short-skew trace ({n_arr} arrivals)"),
         2,
         20,
@@ -73,9 +81,11 @@ fn main() {
                 .throughput_rps()
         },
     );
+    println!("{}", t.summary());
+    timings.push(t);
 
     // --- batcher hot path ---------------------------------------------------
-    benchkit::run("batcher: 100k enqueue/dispatch", 2, 20, || {
+    let (t, _) = benchkit::bench("batcher: 100k enqueue/dispatch", 2, 20, || {
         let mut b = BatchBuilder::new(16, 50.0);
         let mut batches = 0usize;
         for i in 0..100_000u64 {
@@ -85,8 +95,10 @@ fn main() {
         }
         batches
     });
+    println!("{}", t.summary());
+    timings.push(t);
 
-    // --- PJRT execution (needs `make artifacts`) ----------------------------
+    // --- PJRT execution (needs `make artifacts` + --features pjrt) ----------
     match gpulets::runtime::Engine::cpu().and_then(|engine| {
         gpulets::runtime::ModelRegistry::load_models(
             &engine,
@@ -99,12 +111,18 @@ fn main() {
             let entry = registry.manifest.entry(ModelId::Lenet).unwrap();
             let sample = vec![0.5f32; entry.input_shape.iter().product()];
             let batch8: Vec<Vec<f32>> = (0..8).map(|_| sample.clone()).collect();
-            benchkit::run("pjrt: lenet batch-8 inference", 3, 50, || {
+            let (t, _) = benchkit::bench("pjrt: lenet batch-8 inference", 3, 50, || {
                 registry.infer(ModelId::Lenet, &batch8).unwrap().len()
             });
+            println!("{}", t.summary());
+            timings.push(t);
         }
         Err(e) => {
-            println!("bench pjrt: skipped (artifacts not built: {e})");
+            println!("bench pjrt: skipped (runtime unavailable: {e})");
         }
     }
+
+    benchkit::write_json("BENCH_micro_hotpath.json", &benchkit::timings_envelope(&timings))
+        .expect("write BENCH_micro_hotpath.json");
+    eprintln!("[wrote BENCH_micro_hotpath.json]");
 }

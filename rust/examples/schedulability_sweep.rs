@@ -22,7 +22,8 @@ fn main() {
         scenarios.len()
     );
 
-    let runs: Vec<(&str, Box<dyn Fn(&[f64; 5]) -> bool>)> = vec![
+    // `+ '_`: the boxed closures borrow the contexts above.
+    let runs: Vec<(&str, Box<dyn Fn(&[f64; 5]) -> bool + '_>)> = vec![
         ("sbp", {
             let s = SquishyBinPacking::baseline();
             let c = &ctx;

@@ -1,0 +1,409 @@
+//! `gpulets` — CLI launcher for the gpu-let inference serving stack.
+//!
+//! ```text
+//! gpulets run-fig <03|04|05|06|09|12|13|14|15|16|all|list>
+//! gpulets sweep [--scheduler <gpulet|gpulet+int|sbp|sbp+part|selftune|ideal|all>] [--gpus N]
+//! gpulets serve [--scenario <equal|long-only|short-skew|game|traffic>] [--scale K]
+//!               [--config <toml>] [--algo A] [--gpus N] [--duration S] [--seed X]
+//!               [--rate model=R ...]
+//! gpulets serve-real [--artifacts DIR] [--duration S] [--rate M=R ...]
+//! gpulets experiment <fig3|...|fig16|tables|all>   # legacy alias of run-fig
+//! gpulets profile            # dump the offline L(b,p) profile grid
+//! gpulets models             # Table 4
+//! gpulets scenarios          # Table 5
+//! ```
+//!
+//! `run-fig N` drives the same `experiments::figNN` harness as the
+//! bench targets and writes the machine-readable `BENCH_fig*.json`
+//! next to the working directory (clap is unavailable offline — see
+//! Cargo.toml — so argument parsing is a small hand-rolled matcher).
+
+use gpulets::apps::App;
+use gpulets::config::{Algo, Config};
+use gpulets::coordinator::server::RealServer;
+use gpulets::coordinator::simserver::{simulate, SimConfig};
+use gpulets::error::Result;
+use gpulets::experiments as ex;
+use gpulets::interference::GroundTruth;
+use gpulets::models::ModelId;
+use gpulets::runtime::{Engine, ModelRegistry};
+use gpulets::sched::{
+    ElasticPartitioning, GuidedSelfTuning, IdealScheduler, SchedCtx, Scheduler,
+    SquishyBinPacking,
+};
+use gpulets::util::benchkit;
+use gpulets::util::json::{obj, Json};
+use gpulets::workload::{enumerate_all_scenarios, generate_arrivals, named_scenarios};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("run-fig") => run_fig(args.get(1).map(String::as_str).unwrap_or("list")),
+        Some("experiment") => experiment(args.get(1).map(String::as_str).unwrap_or("all")),
+        Some("sweep") => sweep(&args[1..]),
+        Some("serve") => serve(&args[1..]),
+        Some("serve-real") => serve_real(&args[1..]),
+        Some("profile") => {
+            print!("{}", ex::fig03::run());
+            Ok(())
+        }
+        Some("models") => {
+            print!("{}", ex::tables::table4());
+            Ok(())
+        }
+        Some("scenarios") => {
+            print!("{}", ex::tables::table5());
+            Ok(())
+        }
+        Some("help") | None => {
+            print_usage();
+            Ok(())
+        }
+        Some(other) => {
+            print_usage();
+            Err(gpulets::Error::Other(format!("unknown command {other:?}")))
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "gpulets — multi-model inference serving with GPU spatial partitioning\n\
+         \n\
+         USAGE:\n\
+         \x20 gpulets run-fig <03|04|05|06|09|12|13|14|15|16|all|list>\n\
+         \x20 gpulets sweep [--scheduler NAME|all] [--gpus N]\n\
+         \x20 gpulets serve [--scenario NAME] [--scale K] [--config F] [--algo A]\n\
+         \x20               [--gpus N] [--duration S] [--seed X] [--rate model=R]...\n\
+         \x20 gpulets serve-real [--artifacts DIR] [--duration S] [--rate model=R]...\n\
+         \x20 gpulets experiment <fig3|...|fig16|tables|all>\n\
+         \x20 gpulets profile | models | scenarios | help\n\
+         \n\
+         schedulers: gpulet gpulet+int sbp sbp+part selftune ideal\n\
+         scenarios:  equal long-only short-skew game traffic\n\
+         \n\
+         run-fig writes BENCH_fig*.json (same envelope as the cargo\n\
+         bench targets); sweep writes BENCH_sweep_schedulability.json\n\
+         (plain counts, no timing envelope). Both land in the CWD."
+    );
+}
+
+/// `run-fig`: drive one (or all) figure experiments through the shared
+/// Runnable harness, printing the report and writing BENCH_fig*.json.
+fn run_fig(which: &str) -> Result<()> {
+    match which {
+        "list" => {
+            println!("available figures:");
+            for e in ex::registry() {
+                println!("  {:<7} {:<55} -> {}", e.name(), e.title(), e.bench_file());
+            }
+            Ok(())
+        }
+        "all" => {
+            for e in ex::registry() {
+                eprintln!("[running {}]", e.name());
+                ex::common::run_and_write(e.as_ref(), 0, 1)?;
+            }
+            Ok(())
+        }
+        name => match ex::find(name) {
+            Some(e) => {
+                ex::common::run_and_write(e.as_ref(), 0, 1)?;
+                Ok(())
+            }
+            None => Err(gpulets::Error::Other(format!(
+                "unknown figure {name:?} (try `gpulets run-fig list`)"
+            ))),
+        },
+    }
+}
+
+/// Legacy `experiment` command: tables stay text-only; figures route
+/// through the same harness as `run-fig`.
+fn experiment(which: &str) -> Result<()> {
+    match which {
+        "tables" => {
+            print!("{}", ex::tables::table3());
+            print!("{}", ex::tables::table4());
+            print!("{}", ex::tables::table5());
+            Ok(())
+        }
+        "all" => {
+            print!("{}", ex::tables::table3());
+            print!("{}", ex::tables::table4());
+            print!("{}", ex::tables::table5());
+            run_fig("all")
+        }
+        name => run_fig(name),
+    }
+}
+
+/// Build the scheduler + context pair the CLI vocabulary names.
+fn scheduler_for(algo: Algo, gpus: usize) -> (Box<dyn Scheduler>, SchedCtx) {
+    let interference_aware = algo == Algo::GpuletInt;
+    let ctx = SchedCtx::new(
+        gpus,
+        if interference_aware {
+            Some(ex::common::fitted_interference())
+        } else {
+            None
+        },
+    );
+    let scheduler: Box<dyn Scheduler> = match algo {
+        Algo::Gpulet => Box::new(ElasticPartitioning::gpulet()),
+        Algo::GpuletInt => Box::new(ElasticPartitioning::gpulet_int()),
+        Algo::Sbp => Box::new(SquishyBinPacking::baseline()),
+        Algo::SbpPart => Box::new(SquishyBinPacking::with_even_partitioning()),
+        Algo::Selftune => Box::new(GuidedSelfTuning),
+        Algo::Ideal => Box::new(IdealScheduler),
+    };
+    (scheduler, ctx)
+}
+
+/// Per-model rates for a named scenario: the Table 5 mixes, or one of
+/// the multi-model applications at a 50 req/s base app rate.
+fn scenario_rates(name: &str) -> Result<[f64; 5]> {
+    for sc in named_scenarios() {
+        if sc.name == name {
+            return Ok(sc.rates);
+        }
+    }
+    if let Some(app) = App::by_name(name) {
+        return Ok(app.induced_rates(50.0));
+    }
+    Err(gpulets::Error::Other(format!(
+        "unknown scenario {name:?} (equal|long-only|short-skew|game|traffic)"
+    )))
+}
+
+/// `sweep`: schedulability of the 1,023-scenario population for one (or
+/// every) scheduler; writes BENCH_sweep_schedulability.json.
+fn sweep(args: &[String]) -> Result<()> {
+    let mut which = "gpulet+int".to_string();
+    let mut gpus = 4usize;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--scheduler" => {
+                which = args
+                    .get(i + 1)
+                    .cloned()
+                    .ok_or_else(|| gpulets::Error::Other("--scheduler needs a value".into()))?;
+            }
+            "--gpus" => {
+                gpus = args
+                    .get(i + 1)
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| gpulets::Error::Other("--gpus expects an integer".into()))?;
+            }
+            other => {
+                return Err(gpulets::Error::Other(format!("unknown flag {other:?}")));
+            }
+        }
+        i += 2;
+    }
+
+    let names: Vec<String> = if which == "all" {
+        ["sbp", "sbp+part", "selftune", "gpulet", "gpulet+int", "ideal"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    } else {
+        vec![which]
+    };
+
+    let scenarios = enumerate_all_scenarios();
+    println!(
+        "# schedulability sweep: {} scenarios on {gpus} GPUs (rates 0/200/400/600)",
+        scenarios.len()
+    );
+    println!("{:<12} {:>11} {:>10}", "scheduler", "schedulable", "elapsed");
+    let mut entries = Vec::new();
+    for name in &names {
+        let algo = Algo::parse(name)?;
+        let (scheduler, ctx) = scheduler_for(algo, gpus);
+        let t0 = std::time::Instant::now();
+        let n = scenarios
+            .iter()
+            .filter(|sc| scheduler.schedule(&ctx, &sc.rates).is_ok())
+            .count();
+        let dt = t0.elapsed().as_secs_f64();
+        println!("{:<12} {:>6}/{:<4} {:>9.2}s", name, n, scenarios.len(), dt);
+        entries.push(obj(vec![
+            ("scheduler", Json::Str(name.clone())),
+            ("schedulable", Json::Num(n as f64)),
+            ("total", Json::Num(scenarios.len() as f64)),
+            ("elapsed_s", Json::Num(dt)),
+        ]));
+    }
+    let doc = obj(vec![
+        ("gpus", Json::Num(gpus as f64)),
+        ("sweep", Json::Arr(entries)),
+    ]);
+    benchkit::write_json("BENCH_sweep_schedulability.json", &doc)?;
+    eprintln!("[wrote BENCH_sweep_schedulability.json]");
+    Ok(())
+}
+
+/// Parse `--key value` style flags plus repeated `--rate model=R`.
+/// `--scenario` loads a named rate vector; a later `--scale K`
+/// multiplies whatever rates are in effect.
+fn parse_flags(args: &[String], cfg: &mut Config) -> Result<()> {
+    let mut i = 0;
+    while i < args.len() {
+        let flag = args[i].as_str();
+        let val = args.get(i + 1).cloned();
+        let need = |name: &str| -> Result<String> {
+            val.clone().ok_or_else(|| {
+                gpulets::Error::Other(format!("flag {name} needs a value"))
+            })
+        };
+        match flag {
+            "--config" => *cfg = Config::load(need("--config")?)?,
+            "--scenario" => cfg.rates = scenario_rates(&need("--scenario")?)?,
+            "--scale" => {
+                let k: f64 = need("--scale")?.parse().map_err(|_| {
+                    gpulets::Error::Other("--scale expects a number".into())
+                })?;
+                cfg.rates.iter_mut().for_each(|r| *r *= k);
+            }
+            "--algo" => cfg.algo = Algo::parse(&need("--algo")?)?,
+            "--gpus" => {
+                cfg.num_gpus = need("--gpus")?.parse().map_err(|_| {
+                    gpulets::Error::Other("--gpus expects an integer".into())
+                })?
+            }
+            "--duration" => {
+                cfg.duration_s = need("--duration")?.parse().map_err(|_| {
+                    gpulets::Error::Other("--duration expects seconds".into())
+                })?
+            }
+            "--seed" => {
+                cfg.seed = need("--seed")?.parse().map_err(|_| {
+                    gpulets::Error::Other("--seed expects an integer".into())
+                })?
+            }
+            "--artifacts" => cfg.artifacts_dir = need("--artifacts")?,
+            "--rate" => {
+                let spec = need("--rate")?;
+                let (name, rate) = spec.split_once('=').ok_or_else(|| {
+                    gpulets::Error::Other("--rate expects model=req_per_s".into())
+                })?;
+                let m = ModelId::parse(name)?;
+                cfg.rates[m.index()] = rate.parse().map_err(|_| {
+                    gpulets::Error::Other(format!("bad rate {rate:?}"))
+                })?;
+            }
+            other => {
+                return Err(gpulets::Error::Other(format!("unknown flag {other:?}")))
+            }
+        }
+        i += 2;
+    }
+    Ok(())
+}
+
+/// Simulated serving: schedule the configured rates, run the trace,
+/// print the schedule and the per-model report.
+fn serve(args: &[String]) -> Result<()> {
+    let mut cfg = Config::default();
+    parse_flags(args, &mut cfg)?;
+
+    let (scheduler, ctx) = scheduler_for(cfg.algo, cfg.num_gpus);
+
+    println!(
+        "scheduling {} on {} GPUs: {}",
+        scheduler.name(),
+        cfg.num_gpus,
+        ex::common::fmt_rates(&cfg.rates)
+    );
+    let schedule = scheduler.schedule(&ctx, &cfg.rates)?;
+    println!(
+        "allocated {}% of cluster over {} gpu-lets:",
+        schedule.total_allocated_pct(),
+        schedule.lets.len()
+    );
+    for lp in &schedule.lets {
+        let asg: Vec<String> = lp
+            .assignments
+            .iter()
+            .map(|a| format!("{}@b{} {:.0}req/s", a.model.abbrev(), a.batch, a.rate))
+            .collect();
+        println!("  gpu{} {:>3}%: {}", lp.spec.gpu, lp.spec.size_pct, asg.join(" + "));
+    }
+
+    let pairs: Vec<(ModelId, f64)> = ModelId::ALL
+        .iter()
+        .map(|&m| (m, cfg.rates[m.index()]))
+        .filter(|&(_, r)| r > 0.0)
+        .collect();
+    let arrivals = generate_arrivals(&pairs, cfg.duration_s, cfg.seed);
+    println!(
+        "\nsimulating {} requests over {}s ({})...",
+        arrivals.len(),
+        cfg.duration_s,
+        cfg.share_mode.name()
+    );
+    let report = simulate(
+        &ctx.lm,
+        &GroundTruth::default(),
+        &schedule,
+        &arrivals,
+        cfg.duration_s,
+        &SimConfig { mode: cfg.share_mode, seed: cfg.seed, ..Default::default() },
+    );
+    println!("\n{}", report.table());
+    println!(
+        "throughput {:.0} req/s, goodput {:.0} req/s, violations {:.2}%",
+        report.throughput_rps(),
+        report.goodput_rps(),
+        report.overall_violation_rate() * 100.0
+    );
+    Ok(())
+}
+
+/// Real serving on the PJRT CPU runtime (the `real` clock path). Without
+/// `--features pjrt` the engine constructor reports the missing runtime.
+fn serve_real(args: &[String]) -> Result<()> {
+    let mut cfg = Config::default();
+    // Modest defaults for CPU execution.
+    cfg.rates = [20.0, 5.0, 5.0, 2.0, 5.0];
+    cfg.duration_s = 5.0;
+    parse_flags(args, &mut cfg)?;
+
+    println!("loading artifacts from {}/ ...", cfg.artifacts_dir);
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {} ({} devices)", engine.platform(), engine.device_count());
+    let registry = ModelRegistry::load(&engine, &cfg.artifacts_dir)?;
+    println!("compiled {} (model, batch) executables", registry.len());
+
+    let pairs: Vec<(ModelId, f64)> = ModelId::ALL
+        .iter()
+        .map(|&m| (m, cfg.rates[m.index()]))
+        .filter(|&(_, r)| r > 0.0)
+        .collect();
+    let arrivals = generate_arrivals(&pairs, cfg.duration_s, cfg.seed);
+    println!("serving {} requests over {}s...", arrivals.len(), cfg.duration_s);
+
+    let server = RealServer::new(&registry);
+    let outcome = server.serve(&arrivals, cfg.duration_s)?;
+    println!("\n{}", outcome.report.table());
+    println!(
+        "throughput {:.0} req/s, PJRT busy {:.2}s, batches: {:?}",
+        outcome.report.throughput_rps(),
+        outcome.exec_wall_s,
+        outcome.batches
+    );
+    Ok(())
+}

@@ -156,7 +156,14 @@ vgg = 25.0
 
     #[test]
     fn algo_names_roundtrip() {
-        for a in [Algo::Gpulet, Algo::GpuletInt, Algo::Sbp, Algo::SbpPart, Algo::Selftune, Algo::Ideal] {
+        for a in [
+            Algo::Gpulet,
+            Algo::GpuletInt,
+            Algo::Sbp,
+            Algo::SbpPart,
+            Algo::Selftune,
+            Algo::Ideal,
+        ] {
             assert_eq!(Algo::parse(a.name()).unwrap(), a);
         }
         assert!(Algo::parse("nexus").is_err());

@@ -60,7 +60,12 @@ impl<'a, S: Scheduler> AdaptiveServer<'a, S> {
 
     /// Run the Fig 14 experiment: serve `trace` for `duration_s`,
     /// rescheduling each period from observed (EWMA) rates.
-    pub fn run_trace(&self, trace: &FluctuationTrace, duration_s: f64, seed: u64) -> Vec<WindowStats> {
+    pub fn run_trace(
+        &self,
+        trace: &FluctuationTrace,
+        duration_s: f64,
+        seed: u64,
+    ) -> Vec<WindowStats> {
         let arrivals = generate_varying(
             &ModelId::ALL,
             |m, t| trace.rate_at(m, t),

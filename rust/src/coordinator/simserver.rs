@@ -181,7 +181,10 @@ pub fn simulate(
                     let asg = &schedule.lets[li].assignments[ai];
                     let timeout =
                         super::batcher::slo_timeout_ms(lm.slo_ms(asg.model), duties[li]);
-                    q.push_after(timeout, Event::Timeout { let_idx: li, asg_idx: ai, armed_at: token });
+                    q.push_after(
+                        timeout,
+                        Event::Timeout { let_idx: li, asg_idx: ai, armed_at: token },
+                    );
                 }
             }
             Event::Timeout { let_idx, asg_idx, armed_at } => {
@@ -473,11 +476,19 @@ mod tests {
                 lets: vec![
                     LetPlan {
                         spec: GpuLetSpec { gpu: 0, size_pct: 20 },
-                        assignments: vec![Assignment { model: ModelId::Lenet, batch: 8, rate: 400.0 }],
+                        assignments: vec![Assignment {
+                            model: ModelId::Lenet,
+                            batch: 8,
+                            rate: 400.0,
+                        }],
                     },
                     LetPlan {
                         spec: GpuLetSpec { gpu: 0, size_pct: 80 },
-                        assignments: vec![Assignment { model: ModelId::Vgg, batch: 16, rate: 150.0 }],
+                        assignments: vec![Assignment {
+                            model: ModelId::Vgg,
+                            batch: 16,
+                            rate: 150.0,
+                        }],
                     },
                 ],
             }

@@ -1,42 +1,62 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (the offline build has no
+//! `thiserror`); the variant messages are part of the public contract —
+//! `scheduler_conformance` asserts on the `not schedulable:` prefix.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for the serving stack.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Manifest / config / trace parse failures.
-    #[error("parse error: {0}")]
     Parse(String),
 
     /// I/O wrapper.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    /// PJRT / XLA runtime failures.
-    #[error("xla error: {0}")]
+    /// PJRT / XLA runtime failures (or the pjrt-less stub refusing to run).
     Xla(String),
 
     /// Unknown model name, missing artifact, bad batch size…
-    #[error("model error: {0}")]
     Model(String),
 
     /// Scheduler could not place the offered load within SLOs.
-    #[error("not schedulable: {0}")]
     NotSchedulable(String),
 
     /// Invalid gpu-let operation (bad size, over-subscription, …).
-    #[error("gpulet error: {0}")]
     GpuLet(String),
 
     /// Anything else.
-    #[error("{0}")]
     Other(String),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Model(m) => write!(f, "model error: {m}"),
+            Error::NotSchedulable(m) => write!(f, "not schedulable: {m}"),
+            Error::GpuLet(m) => write!(f, "gpulet error: {m}"),
+            Error::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }
 
@@ -47,5 +67,28 @@ impl Error {
     /// Convenience constructor for parse errors.
     pub fn parse(msg: impl Into<String>) -> Self {
         Error::Parse(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_are_stable() {
+        assert_eq!(
+            Error::NotSchedulable("too much".into()).to_string(),
+            "not schedulable: too much"
+        );
+        assert_eq!(Error::Parse("x".into()).to_string(), "parse error: x");
+        assert_eq!(Error::Other("free-form".into()).to_string(), "free-form");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().starts_with("io error:"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -1,6 +1,9 @@
 //! Shared experiment machinery: scenario vocabulary, schedulability +
 //! maximum-achievable-throughput search (the measurement procedure of
-//! §6.2: "gradually increasing the request rate until SLO violation").
+//! §6.2: "gradually increasing the request rate until SLO violation"),
+//! and the `Runnable` harness contract that lets the CLI (`gpulets
+//! run-fig N`), the bench targets, and the tests drive one shared code
+//! path per figure.
 
 use crate::apps::App;
 use crate::interference::linear_model::{
@@ -10,7 +13,50 @@ use crate::interference::GroundTruth;
 use crate::models::ModelId;
 use crate::coordinator::simserver::{simulate, SimConfig};
 use crate::sched::{SchedCtx, Schedule, Scheduler};
+use crate::util::benchkit;
+use crate::util::json::Json;
 use crate::workload::{generate_arrivals, named_scenarios, Scenario};
+
+/// Result of one experiment run: the human-readable report plus the
+/// structured payload written to the experiment's BENCH file.
+pub struct RunOutput {
+    /// What `gpulets run-fig N` prints (same rows the paper reports).
+    pub text: String,
+    /// Machine-readable result, diffed across PRs for perf trajectory.
+    pub payload: Json,
+}
+
+/// A paper experiment drivable by the CLI and the bench targets.
+///
+/// Implementations live next to each figure module (`fig03::Experiment`
+/// … `fig16::Experiment`); `crate::experiments::registry()` lists them.
+pub trait Runnable {
+    /// Short name, e.g. `"fig12"`.
+    fn name(&self) -> &'static str;
+    /// One-line description for `gpulets run-fig list`.
+    fn title(&self) -> &'static str;
+    /// BENCH artifact file name, e.g. `"BENCH_fig12_throughput.json"`.
+    fn bench_file(&self) -> &'static str;
+    /// Execute at full (paper) scale.
+    fn run(&self) -> RunOutput;
+}
+
+/// Drive one experiment the way the bench targets do: time it, print
+/// the timing summary + text report, write the BENCH envelope. Returns
+/// the bench file path.
+pub fn run_and_write(
+    exp: &dyn Runnable,
+    warmup: usize,
+    iters: usize,
+) -> crate::error::Result<String> {
+    let label = format!("{}: {}", exp.name(), exp.title());
+    let (timing, out) = benchkit::bench(&label, warmup, iters, || exp.run());
+    println!("{}", timing.summary());
+    println!("\n{}", out.text);
+    benchkit::write_json(exp.bench_file(), &benchkit::envelope(&timing, out.payload))?;
+    eprintln!("[wrote {}]", exp.bench_file());
+    Ok(exp.bench_file().to_string())
+}
 
 /// The five evaluation workloads of Fig 12/13/16: two multi-model apps
 /// plus the three Table 5 request scenarios. Each yields a base
@@ -70,10 +116,25 @@ pub fn violation_rate_of(
     report.overall_violation_rate()
 }
 
+/// Detailed outcome of the maximum-achievable-throughput search.
+#[derive(Clone, Copy, Debug)]
+pub struct Achieved {
+    /// Uniform scale of the base rate vector.
+    pub scale: f64,
+    /// Total achieved throughput (req/s summed over models).
+    pub total_rps: f64,
+    /// Measured SLO violation rate (drops included) at that scale;
+    /// `None` when the search found no acceptable deployment — either
+    /// nothing was schedulable, or every probed scale exceeded the
+    /// violation budget.
+    pub violation_rate: Option<f64>,
+}
+
 /// Maximum achievable throughput (req/s summed over models): largest
 /// uniform scale of `base` that (a) the scheduler accepts and (b) the
 /// simulated deployment serves with <= `viol_budget` violations.
-/// Returns (scale, total_rate).
+/// Returns (scale, total_rate); `max_achievable_detail` also reports
+/// the violation rate measured at the accepted scale.
 pub fn max_achievable(
     ctx: &SchedCtx,
     scheduler: &dyn Scheduler,
@@ -81,18 +142,20 @@ pub fn max_achievable(
     viol_budget: f64,
     sim_duration_s: f64,
 ) -> (f64, f64) {
+    let a = max_achievable_detail(ctx, scheduler, base, viol_budget, sim_duration_s);
+    (a.scale, a.total_rps)
+}
+
+/// See [`max_achievable`].
+pub fn max_achievable_detail(
+    ctx: &SchedCtx,
+    scheduler: &dyn Scheduler,
+    base: &[f64; 5],
+    viol_budget: f64,
+    sim_duration_s: f64,
+) -> Achieved {
     let total_base: f64 = base.iter().sum();
     debug_assert!(total_base > 0.0);
-
-    let ok = |k: f64| -> bool {
-        let rates = scaled(base, k);
-        match scheduler.schedule(ctx, &rates) {
-            Ok(s) => {
-                violation_rate_of(ctx, &s, &rates, sim_duration_s, 99) <= viol_budget
-            }
-            Err(_) => false,
-        }
-    };
 
     // The violation rate is not monotone in the scale (schedule shapes
     // jump at batch/partition thresholds), so a bisection can get stuck
@@ -102,17 +165,24 @@ pub fn max_achievable(
     // the paper's "gradually increasing the request rate" sweep, run
     // from the top.
     let k_max = max_schedulable(ctx, scheduler, base);
-    if k_max <= 0.0 {
-        return (0.0, 0.0);
-    }
-    const GRID: usize = 24;
-    for i in (1..=GRID).rev() {
-        let k = k_max * i as f64 / GRID as f64;
-        if ok(k) {
-            return (k, k * total_base);
+    if k_max > 0.0 {
+        const GRID: usize = 24;
+        for i in (1..=GRID).rev() {
+            let k = k_max * i as f64 / GRID as f64;
+            let rates = scaled(base, k);
+            if let Ok(s) = scheduler.schedule(ctx, &rates) {
+                let v = violation_rate_of(ctx, &s, &rates, sim_duration_s, 99);
+                if v <= viol_budget {
+                    return Achieved {
+                        scale: k,
+                        total_rps: k * total_base,
+                        violation_rate: Some(v),
+                    };
+                }
+            }
         }
     }
-    (0.0, 0.0)
+    Achieved { scale: 0.0, total_rps: 0.0, violation_rate: None }
 }
 
 /// Pure-scheduler maximum schedulable scale (no simulation): used for

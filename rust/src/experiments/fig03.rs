@@ -4,36 +4,131 @@
 //! shape (steep for large batches, flat beyond the knee for small ones)
 //! is the reproduction target.
 
+use std::collections::BTreeMap;
+
+use crate::experiments::common::{Runnable, RunOutput};
 use crate::models::ModelId;
 use crate::perfmodel::{LatencyModel, BATCHES};
 use crate::perfmodel::profile_table::PARTITIONS;
+use crate::util::json::{obj, Json};
 
-pub fn run() -> String {
+/// One model's profiled grid: `(batch, partition_pct, latency_ms)` in
+/// batch-major order, plus the knee the scheduler uses.
+pub struct ModelGrid {
+    pub model: ModelId,
+    pub rows: Vec<(u32, u32, f64)>,
+    pub knee_pct: u32,
+}
+
+pub fn compute() -> Vec<ModelGrid> {
     let lm = LatencyModel::new();
+    ModelId::ALL
+        .iter()
+        .map(|&m| {
+            let mut rows = Vec::with_capacity(BATCHES.len() * PARTITIONS.len());
+            for &b in &BATCHES {
+                for p in PARTITIONS {
+                    rows.push((b, p, lm.latency_ms(m, b, p as f64 / 100.0)));
+                }
+            }
+            let knee_pct = crate::perfmodel::latency::knee(&lm.rate_curve(m, &PARTITIONS));
+            ModelGrid { model: m, rows, knee_pct }
+        })
+        .collect()
+}
+
+pub fn render(grids: &[ModelGrid]) -> String {
     let mut out = String::new();
     out.push_str("# Fig 3: batch latency (ms) vs gpu-let size\n");
-    for m in ModelId::ALL {
-        out.push_str(&format!("\n## {}\nbatch", m.name()));
+    for g in grids {
+        out.push_str(&format!("\n## {}\nbatch", g.model.name()));
         for p in PARTITIONS {
             out.push_str(&format!("  {p:>3}%"));
         }
         out.push('\n');
+        let mut rows = g.rows.iter();
         for &b in &BATCHES {
             out.push_str(&format!("{b:>5}"));
-            for p in PARTITIONS {
-                out.push_str(&format!(" {:>5.1}", lm.latency_ms(m, b, p as f64 / 100.0)));
+            for _ in PARTITIONS {
+                let &(_, _, l) = rows.next().expect("full grid");
+                out.push_str(&format!(" {l:>5.1}"));
             }
             out.push('\n');
         }
         // The knee summary the scheduler actually uses.
-        let kn = crate::perfmodel::latency::knee(&lm.rate_curve(m, &PARTITIONS));
-        out.push_str(&format!("knee (MaxEfficientPartition): {kn}%\n"));
+        out.push_str(&format!("knee (MaxEfficientPartition): {}%\n", g.knee_pct));
     }
     out
 }
 
+pub fn run() -> String {
+    render(&compute())
+}
+
+/// Text + JSON for the CLI / bench harness (one grid pass): the full
+/// L(b, p) grid and the per-model knee the scheduler uses.
+pub fn report() -> RunOutput {
+    let grids = compute();
+    let mut models: BTreeMap<String, Json> = BTreeMap::new();
+    for g in &grids {
+        let grid: Vec<Json> = g
+            .rows
+            .iter()
+            .map(|&(b, p, l)| {
+                obj(vec![
+                    ("batch", Json::Num(b as f64)),
+                    ("partition_pct", Json::Num(p as f64)),
+                    ("latency_ms", Json::Num(l)),
+                ])
+            })
+            .collect();
+        models.insert(
+            g.model.name().to_string(),
+            obj(vec![
+                ("grid", Json::Arr(grid)),
+                ("knee_pct", Json::Num(g.knee_pct as f64)),
+            ]),
+        );
+    }
+    RunOutput {
+        text: render(&grids),
+        payload: obj(vec![
+            ("figure", Json::Str("fig03".into())),
+            ("models", Json::Obj(models)),
+        ]),
+    }
+}
+
+/// Fig 3 as a CLI/bench-drivable experiment.
+pub struct Experiment;
+
+impl Runnable for Experiment {
+    fn name(&self) -> &'static str {
+        "fig03"
+    }
+    fn title(&self) -> &'static str {
+        "batch latency vs gpu-let size (L(b,p) grid + knees)"
+    }
+    fn bench_file(&self) -> &'static str {
+        "BENCH_fig03_latency.json"
+    }
+    fn run(&self) -> RunOutput {
+        report()
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    #[test]
+    fn report_payload_covers_grid() {
+        let out = super::report();
+        let models = out.payload.get("models").unwrap().as_obj().unwrap();
+        assert_eq!(models.len(), 5);
+        let lenet = &models["lenet"];
+        assert_eq!(lenet.get("grid").unwrap().as_arr().unwrap().len(), 36);
+        assert!(lenet.get("knee_pct").unwrap().as_f64().unwrap() <= 40.0);
+    }
+
     #[test]
     fn renders_all_models_and_knees() {
         let s = super::run();

@@ -3,9 +3,10 @@
 //! Paper result: partitioning eliminates most unschedulable scenarios.
 
 use crate::sched::{Scheduler, SquishyBinPacking};
+use crate::util::json::{obj, Json};
 use crate::workload::enumerate_all_scenarios;
 
-use super::common::paper_ctx;
+use super::common::{paper_ctx, Runnable, RunOutput};
 
 pub struct Fig04 {
     pub sbp_plain: usize,
@@ -31,8 +32,7 @@ pub fn compute() -> Fig04 {
     Fig04 { sbp_plain: n_plain, sbp_partitioned: n_part, total: scenarios.len() }
 }
 
-pub fn run() -> String {
-    let r = compute();
+pub fn render(r: &Fig04) -> String {
     format!(
         "# Fig 4: schedulable scenarios out of {}\n\
          SBP (no partitioning):    {}\n\
@@ -43,6 +43,42 @@ pub fn run() -> String {
         r.sbp_partitioned,
         r.sbp_partitioned as i64 - r.sbp_plain as i64,
     )
+}
+
+pub fn run() -> String {
+    render(&compute())
+}
+
+/// Text + JSON for the CLI / bench harness (one `compute()` pass).
+pub fn report() -> RunOutput {
+    let r = compute();
+    RunOutput {
+        text: render(&r),
+        payload: obj(vec![
+            ("figure", Json::Str("fig04".into())),
+            ("total", Json::Num(r.total as f64)),
+            ("sbp_plain", Json::Num(r.sbp_plain as f64)),
+            ("sbp_partitioned", Json::Num(r.sbp_partitioned as f64)),
+        ]),
+    }
+}
+
+/// Fig 4 as a CLI/bench-drivable experiment.
+pub struct Experiment;
+
+impl Runnable for Experiment {
+    fn name(&self) -> &'static str {
+        "fig04"
+    }
+    fn title(&self) -> &'static str {
+        "SBP schedulability with/without 50:50 partitioning (1023 scenarios)"
+    }
+    fn bench_file(&self) -> &'static str {
+        "BENCH_fig04_schedulability.json"
+    }
+    fn run(&self) -> RunOutput {
+        report()
+    }
 }
 
 #[cfg(test)]

@@ -4,12 +4,14 @@
 //! partitioned gpu-lets sustain far higher rates before violating.
 
 use crate::coordinator::simserver::{simulate, SimConfig};
+use crate::experiments::common::{Runnable, RunOutput};
 use crate::gpu::gpulet::GpuLetSpec;
 use crate::gpu::ShareMode;
 use crate::interference::GroundTruth;
 use crate::models::ModelId;
 use crate::perfmodel::LatencyModel;
 use crate::sched::types::{Assignment, LetPlan, Schedule};
+use crate::util::json::{obj, Json};
 use crate::workload::generate_arrivals;
 
 /// The consolidated deployment: LeNet on 20%, VGG on 80% (one GPU).
@@ -24,7 +26,11 @@ fn deployment(lm: &LatencyModel, lenet_rate: f64, vgg_rate: f64) -> Schedule {
         lets: vec![
             LetPlan {
                 spec: GpuLetSpec { gpu: 0, size_pct: 20 },
-                assignments: vec![Assignment { model: ModelId::Lenet, batch: b_le, rate: lenet_rate }],
+                assignments: vec![Assignment {
+                    model: ModelId::Lenet,
+                    batch: b_le,
+                    rate: lenet_rate,
+                }],
             },
             LetPlan {
                 spec: GpuLetSpec { gpu: 0, size_pct: 80 },
@@ -78,12 +84,12 @@ pub fn default_rates() -> Vec<f64> {
     vec![25.0, 50.0, 100.0, 150.0, 200.0, 300.0, 400.0]
 }
 
-pub fn run() -> String {
+pub fn render(rows: &[Row]) -> String {
     let mut out = String::from(
         "# Fig 5: SLO violation %, LeNet+VGG consolidated on one GPU\n\
          rate(req/s each)  temporal  mps-default  mps(20:80)\n",
     );
-    for row in compute(&default_rates()) {
+    for row in rows {
         out.push_str(&format!(
             "{:>16.0} {:>9.1} {:>12.1} {:>11.1}\n",
             row.rate_each,
@@ -93,6 +99,51 @@ pub fn run() -> String {
         ));
     }
     out
+}
+
+pub fn run() -> String {
+    render(&compute(&default_rates()))
+}
+
+/// Text + JSON for the CLI / bench harness (one `compute()` pass).
+pub fn report() -> RunOutput {
+    let rows = compute(&default_rates());
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("rate_each_rps", Json::Num(r.rate_each)),
+                ("temporal", Json::Num(r.temporal)),
+                ("mps_default", Json::Num(r.mps_default)),
+                ("partitioned", Json::Num(r.partitioned)),
+            ])
+        })
+        .collect();
+    RunOutput {
+        text: render(&rows),
+        payload: obj(vec![
+            ("figure", Json::Str("fig05".into())),
+            ("rows", Json::Arr(json_rows)),
+        ]),
+    }
+}
+
+/// Fig 5 as a CLI/bench-drivable experiment.
+pub struct Experiment;
+
+impl Runnable for Experiment {
+    fn name(&self) -> &'static str {
+        "fig05"
+    }
+    fn title(&self) -> &'static str {
+        "sharing-mode SLO violation sweep (temporal vs MPS vs partitioned)"
+    }
+    fn bench_file(&self) -> &'static str {
+        "BENCH_fig05_sharing_modes.json"
+    }
+    fn run(&self) -> RunOutput {
+        report()
+    }
 }
 
 #[cfg(test)]

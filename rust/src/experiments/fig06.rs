@@ -3,8 +3,10 @@
 //! Paper headline: 90% of scenarios suffer < 18% overhead, with a long
 //! tail — modest typically, severe occasionally.
 
+use crate::experiments::common::{Runnable, RunOutput};
 use crate::interference::ground_truth::{GroundTruth, TaskDemand};
 use crate::models::{profile, ModelId};
+use crate::util::json::{obj, Json};
 use crate::util::stats;
 
 /// All pairwise consolidation overheads (both sides of each pair), the
@@ -39,7 +41,10 @@ pub fn overheads() -> Vec<f64> {
 }
 
 pub fn run() -> String {
-    let ov = overheads();
+    render(&overheads())
+}
+
+pub fn render(ov: &[f64]) -> String {
     let mut out = format!(
         "# Fig 6: CDF of consolidation latency overhead ({} observations)\n\
          quantile  overhead%\n",
@@ -49,14 +54,55 @@ pub fn run() -> String {
         out.push_str(&format!(
             "{:>8.0} {:>9.1}\n",
             q,
-            stats::percentile(&ov, q) * 100.0
+            stats::percentile(ov, q) * 100.0
         ));
     }
     out.push_str(&format!(
         "share under 18% overhead: {:.1}% (paper: ~90%)\n",
-        stats::cdf_at(&ov, 0.18) * 100.0
+        stats::cdf_at(ov, 0.18) * 100.0
     ));
     out
+}
+
+/// Text + JSON for the CLI / bench harness (one population pass).
+pub fn report() -> RunOutput {
+    let ov = overheads();
+    let quantiles: Vec<Json> = [10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0]
+        .iter()
+        .map(|&q| {
+            obj(vec![
+                ("quantile", Json::Num(q)),
+                ("overhead", Json::Num(stats::percentile(&ov, q))),
+            ])
+        })
+        .collect();
+    RunOutput {
+        text: render(&ov),
+        payload: obj(vec![
+            ("figure", Json::Str("fig06".into())),
+            ("observations", Json::Num(ov.len() as f64)),
+            ("quantiles", Json::Arr(quantiles)),
+            ("share_under_18pct", Json::Num(stats::cdf_at(&ov, 0.18))),
+        ]),
+    }
+}
+
+/// Fig 6 as a CLI/bench-drivable experiment.
+pub struct Experiment;
+
+impl Runnable for Experiment {
+    fn name(&self) -> &'static str {
+        "fig06"
+    }
+    fn title(&self) -> &'static str {
+        "consolidation latency-overhead CDF (500 observations)"
+    }
+    fn bench_file(&self) -> &'static str {
+        "BENCH_fig06_interference_cdf.json"
+    }
+    fn run(&self) -> RunOutput {
+        report()
+    }
 }
 
 #[cfg(test)]

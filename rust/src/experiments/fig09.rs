@@ -2,10 +2,12 @@
 //! error on a held-out validation set. Paper headline: 90% of cases
 //! within 10.26% error, 95% within 13.98%.
 
+use crate::experiments::common::{Runnable, RunOutput};
 use crate::interference::linear_model::{
     profiling_population, train_val_split, InterferenceModel,
 };
 use crate::interference::GroundTruth;
+use crate::util::json::{obj, Json};
 use crate::util::stats;
 
 pub struct Fig09 {
@@ -33,8 +35,55 @@ pub fn compute() -> Fig09 {
     }
 }
 
-pub fn run() -> String {
+/// Text + JSON for the CLI / bench harness (one `compute()` pass).
+pub fn report() -> RunOutput {
     let r = compute();
+    let quantiles: Vec<Json> = [50.0, 75.0, 90.0, 95.0, 99.0]
+        .iter()
+        .map(|&q| {
+            obj(vec![
+                ("quantile", Json::Num(q)),
+                ("error", Json::Num(stats::percentile(&r.errors, q))),
+            ])
+        })
+        .collect();
+    RunOutput {
+        text: render(&r),
+        payload: obj(vec![
+            ("figure", Json::Str("fig09".into())),
+            ("coef", Json::Arr(r.coef.iter().map(|&c| Json::Num(c)).collect())),
+            ("n_train", Json::Num(r.n_train as f64)),
+            ("n_val", Json::Num(r.n_val as f64)),
+            ("p90_err", Json::Num(r.p90_err)),
+            ("p95_err", Json::Num(r.p95_err)),
+            ("quantiles", Json::Arr(quantiles)),
+        ]),
+    }
+}
+
+/// Fig 9 as a CLI/bench-drivable experiment.
+pub struct Experiment;
+
+impl Runnable for Experiment {
+    fn name(&self) -> &'static str {
+        "fig09"
+    }
+    fn title(&self) -> &'static str {
+        "linear interference model fit + held-out error CDF"
+    }
+    fn bench_file(&self) -> &'static str {
+        "BENCH_fig09_interference_model.json"
+    }
+    fn run(&self) -> RunOutput {
+        report()
+    }
+}
+
+pub fn run() -> String {
+    render(&compute())
+}
+
+pub fn render(r: &Fig09) -> String {
     let mut out = format!(
         "# Fig 9: interference model prediction error CDF\n\
          train/val: {}/{}\n\

@@ -6,13 +6,20 @@
 use crate::sched::{
     ElasticPartitioning, GuidedSelfTuning, Scheduler, SquishyBinPacking,
 };
+use crate::util::json::{obj, Json};
 
-use super::common::{eval_workloads, max_achievable, paper_ctx};
+use super::common::{eval_workloads, max_achievable_detail, paper_ctx, Runnable, RunOutput};
 
 pub struct Row {
     pub workload: String,
     /// Total achieved req/s per scheduler: [sbp, selftune, gpulet, gpulet+int].
     pub rps: [f64; 4],
+    /// Uniform scale of the base rate vector at which each scheduler held
+    /// the violation budget.
+    pub scales: [f64; 4],
+    /// Measured SLO violation rate at the reported throughput; `None`
+    /// when no probed scale produced an acceptable deployment.
+    pub viols: [Option<f64>; 4],
 }
 
 pub const SCHED_NAMES: [&str; 4] = ["sbp", "selftune", "gpulet", "gpulet+int"];
@@ -29,6 +36,8 @@ pub fn compute(viol_budget: f64, sim_duration_s: f64) -> Vec<Row> {
         .into_iter()
         .map(|(name, base)| {
             let mut rps = [0.0; 4];
+            let mut scales = [0.0; 4];
+            let mut viols = [None; 4];
             let runs: [(&dyn Scheduler, &crate::sched::SchedCtx); 4] = [
                 (&sbp, &ctx_plain),
                 (&st, &ctx_plain),
@@ -36,10 +45,12 @@ pub fn compute(viol_budget: f64, sim_duration_s: f64) -> Vec<Row> {
                 (&gi, &ctx_int),
             ];
             for (i, (s, ctx)) in runs.iter().enumerate() {
-                let (_, total) = max_achievable(ctx, *s, &base, viol_budget, sim_duration_s);
-                rps[i] = total;
+                let a = max_achievable_detail(ctx, *s, &base, viol_budget, sim_duration_s);
+                rps[i] = a.total_rps;
+                scales[i] = a.scale;
+                viols[i] = a.violation_rate;
             }
-            Row { workload: name, rps }
+            Row { workload: name, rps, scales, viols }
         })
         .collect()
 }
@@ -68,6 +79,82 @@ pub fn render(rows: &[Row]) -> String {
 
 pub fn run() -> String {
     render(&compute(0.01, 12.0))
+}
+
+/// Text + JSON for the CLI / bench harness (one `compute()` pass).
+/// The payload carries, per workload and scheduler, the achieved
+/// throughput, the accepted scale, and the SLO violation rate measured
+/// at that throughput — the headline numbers every future perf PR is
+/// diffed against.
+pub fn report() -> RunOutput {
+    let rows = compute(0.01, 12.0);
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut scheds: std::collections::BTreeMap<String, Json> =
+                std::collections::BTreeMap::new();
+            for (i, name) in SCHED_NAMES.iter().enumerate() {
+                scheds.insert(
+                    name.to_string(),
+                    obj(vec![
+                        ("throughput_rps", Json::Num(r.rps[i])),
+                        ("scale", Json::Num(r.scales[i])),
+                        (
+                            "violation_rate",
+                            match r.viols[i] {
+                                Some(v) => Json::Num(v),
+                                // No acceptable deployment at any scale.
+                                None => Json::Null,
+                            },
+                        ),
+                    ]),
+                );
+            }
+            obj(vec![
+                ("workload", Json::Str(r.workload.clone())),
+                ("schedulers", Json::Obj(scheds)),
+            ])
+        })
+        .collect();
+    let avg_gain = {
+        let gains: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.rps[0] > 0.0)
+            .map(|r| r.rps[3] / r.rps[0])
+            .collect();
+        if gains.is_empty() {
+            0.0
+        } else {
+            gains.iter().sum::<f64>() / gains.len() as f64
+        }
+    };
+    RunOutput {
+        text: render(&rows),
+        payload: obj(vec![
+            ("figure", Json::Str("fig12".into())),
+            ("workloads", Json::Arr(json_rows)),
+            ("avg_gain_gpulet_int_vs_sbp", Json::Num(avg_gain)),
+        ]),
+    }
+}
+
+/// Fig 12 as a CLI/bench-drivable experiment — the paper's headline
+/// throughput table.
+pub struct Experiment;
+
+impl Runnable for Experiment {
+    fn name(&self) -> &'static str {
+        "fig12"
+    }
+    fn title(&self) -> &'static str {
+        "max achievable throughput, 4 schedulers x 5 workloads"
+    }
+    fn bench_file(&self) -> &'static str {
+        "BENCH_fig12_throughput.json"
+    }
+    fn run(&self) -> RunOutput {
+        report()
+    }
 }
 
 #[cfg(test)]

@@ -5,8 +5,11 @@
 //! scheduling around the interference.
 
 use crate::sched::{ElasticPartitioning, Scheduler};
+use crate::util::json::{obj, Json};
 
-use super::common::{eval_workloads, max_schedulable, paper_ctx, scaled, violation_rate_of};
+use super::common::{
+    eval_workloads, max_schedulable, paper_ctx, scaled, violation_rate_of, Runnable, RunOutput,
+};
 
 pub struct Row {
     pub workload: String,
@@ -43,12 +46,12 @@ pub fn compute(sim_duration_s: f64) -> Vec<Row> {
         .collect()
 }
 
-pub fn run() -> String {
+pub fn render(rows: &[Row]) -> String {
     let mut out = String::from(
         "# Fig 13: SLO violation at max gpulet-accepted rates\n\
          workload      scale  gpulet-viol%  gpulet+int\n",
     );
-    for r in compute(12.0) {
+    for r in rows {
         let gi = match r.viol_gpulet_int {
             Some(v) => format!("{:.2}%", v * 100.0),
             None => "NotSchedulable".to_string(),
@@ -63,6 +66,57 @@ pub fn run() -> String {
     }
     out.push_str("(paper: gpulet exceeds 1% on equal/short-skew; gpulet+int filters them)\n");
     out
+}
+
+pub fn run() -> String {
+    render(&compute(12.0))
+}
+
+/// Text + JSON for the CLI / bench harness (one `compute()` pass).
+pub fn report() -> RunOutput {
+    let rows = compute(12.0);
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("workload", Json::Str(r.workload.clone())),
+                ("scale", Json::Num(r.scale)),
+                ("viol_gpulet", Json::Num(r.viol_gpulet)),
+                (
+                    "viol_gpulet_int",
+                    match r.viol_gpulet_int {
+                        Some(v) => Json::Num(v),
+                        None => Json::Null, // classified Not Schedulable
+                    },
+                ),
+            ])
+        })
+        .collect();
+    RunOutput {
+        text: render(&rows),
+        payload: obj(vec![
+            ("figure", Json::Str("fig13".into())),
+            ("rows", Json::Arr(json_rows)),
+        ]),
+    }
+}
+
+/// Fig 13 as a CLI/bench-drivable experiment.
+pub struct Experiment;
+
+impl Runnable for Experiment {
+    fn name(&self) -> &'static str {
+        "fig13"
+    }
+    fn title(&self) -> &'static str {
+        "SLO violation at the oblivious scheduler's stress point"
+    }
+    fn bench_file(&self) -> &'static str {
+        "BENCH_fig13_slo_violation.json"
+    }
+    fn run(&self) -> RunOutput {
+        report()
+    }
 }
 
 #[cfg(test)]

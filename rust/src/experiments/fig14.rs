@@ -6,9 +6,10 @@
 use crate::coordinator::AdaptiveServer;
 use crate::models::ModelId;
 use crate::sched::ElasticPartitioning;
+use crate::util::json::{obj, Json};
 use crate::workload::FluctuationTrace;
 
-use super::common::paper_ctx;
+use super::common::{paper_ctx, Runnable, RunOutput};
 
 pub fn compute(duration_s: f64, seed: u64) -> Vec<crate::coordinator::WindowStats> {
     let ctx = paper_ctx(false);
@@ -52,6 +53,59 @@ pub fn render(stats: &[crate::coordinator::WindowStats]) -> String {
 
 pub fn run() -> String {
     render(&compute(FluctuationTrace::DURATION_S, 2024))
+}
+
+/// Text + JSON for the CLI / bench harness (one full-trace pass).
+pub fn report() -> RunOutput {
+    let stats = compute(FluctuationTrace::DURATION_S, 2024);
+    let windows: Vec<Json> = stats
+        .iter()
+        .map(|w| {
+            obj(vec![
+                ("t_start_s", Json::Num(w.t_start_s)),
+                (
+                    "throughput_rps",
+                    Json::Arr(w.throughput.iter().map(|&t| Json::Num(t)).collect()),
+                ),
+                ("allocated_pct", Json::Num(w.allocated_pct as f64)),
+                ("violation_rate", Json::Num(w.violation_rate)),
+                ("reorganized", Json::Bool(w.reorganized)),
+            ])
+        })
+        .collect();
+    let total_thr: f64 = stats.iter().map(|w| w.throughput.iter().sum::<f64>()).sum();
+    let weighted_viol: f64 = stats
+        .iter()
+        .map(|w| w.violation_rate * w.throughput.iter().sum::<f64>())
+        .sum();
+    let overall = if total_thr > 0.0 { weighted_viol / total_thr } else { 0.0 };
+    RunOutput {
+        text: render(&stats),
+        payload: obj(vec![
+            ("figure", Json::Str("fig14".into())),
+            ("windows", Json::Arr(windows)),
+            ("overall_violation_share", Json::Num(overall)),
+        ]),
+    }
+}
+
+/// Fig 14 as a CLI/bench-drivable experiment — the full 1,800 s
+/// adaptation trace.
+pub struct Experiment;
+
+impl Runnable for Experiment {
+    fn name(&self) -> &'static str {
+        "fig14"
+    }
+    fn title(&self) -> &'static str {
+        "adaptive serving over the 1800 s fluctuation trace"
+    }
+    fn bench_file(&self) -> &'static str {
+        "BENCH_fig14_fluctuation.json"
+    }
+    fn run(&self) -> RunOutput {
+        report()
+    }
 }
 
 #[cfg(test)]

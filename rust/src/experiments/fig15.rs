@@ -3,9 +3,10 @@
 //! 1.8% of ideal.
 
 use crate::sched::{ElasticPartitioning, IdealScheduler, Scheduler};
+use crate::util::json::{obj, Json};
 use crate::workload::enumerate_all_scenarios;
 
-use super::common::paper_ctx;
+use super::common::{paper_ctx, Runnable, RunOutput};
 
 pub struct Fig15 {
     pub ideal: usize,
@@ -34,8 +35,7 @@ pub fn compute() -> Fig15 {
     Fig15 { ideal: n_ideal, gpulet_int: n_gi, total: scenarios.len(), gap }
 }
 
-pub fn run() -> String {
-    let r = compute();
+pub fn render(r: &Fig15) -> String {
     format!(
         "# Fig 15: schedulable scenarios out of {}\n\
          ideal (exhaustive): {}\n\
@@ -47,6 +47,43 @@ pub fn run() -> String {
         r.gap,
         r.gap as f64 / r.total as f64 * 100.0
     )
+}
+
+pub fn run() -> String {
+    render(&compute())
+}
+
+/// Text + JSON for the CLI / bench harness (one `compute()` pass).
+pub fn report() -> RunOutput {
+    let r = compute();
+    RunOutput {
+        text: render(&r),
+        payload: obj(vec![
+            ("figure", Json::Str("fig15".into())),
+            ("total", Json::Num(r.total as f64)),
+            ("ideal", Json::Num(r.ideal as f64)),
+            ("gpulet_int", Json::Num(r.gpulet_int as f64)),
+            ("gap", Json::Num(r.gap as f64)),
+        ]),
+    }
+}
+
+/// Fig 15 as a CLI/bench-drivable experiment.
+pub struct Experiment;
+
+impl Runnable for Experiment {
+    fn name(&self) -> &'static str {
+        "fig15"
+    }
+    fn title(&self) -> &'static str {
+        "schedulability: ideal exhaustive vs gpulet+int (1023 scenarios)"
+    }
+    fn bench_file(&self) -> &'static str {
+        "BENCH_fig15_ideal_schedulability.json"
+    }
+    fn run(&self) -> RunOutput {
+        report()
+    }
 }
 
 #[cfg(test)]

@@ -3,8 +3,9 @@
 //! of ideal on average, worst case traffic at 87.7%.
 
 use crate::sched::{ElasticPartitioning, IdealScheduler};
+use crate::util::json::{obj, Json};
 
-use super::common::{eval_workloads, max_schedulable, paper_ctx};
+use super::common::{eval_workloads, max_schedulable, paper_ctx, Runnable, RunOutput};
 
 pub struct Row {
     pub workload: String,
@@ -37,14 +38,68 @@ pub fn compute() -> Vec<Row> {
         .collect()
 }
 
-pub fn run() -> String {
+/// Text + JSON for the CLI / bench harness (one `compute()` pass).
+/// `normalized` is null when the ideal scheduler accepted no scale
+/// (division by zero would otherwise poison the JSON with NaN).
+pub fn report() -> RunOutput {
     let rows = compute();
+    let num_or_null = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("workload", Json::Str(r.workload.clone())),
+                ("ideal_scale", Json::Num(r.ideal_scale)),
+                ("gpulet_int_scale", Json::Num(r.gpulet_int_scale)),
+                ("normalized", num_or_null(r.normalized())),
+            ])
+        })
+        .collect();
+    let valid: Vec<f64> = rows.iter().map(Row::normalized).filter(|n| n.is_finite()).collect();
+    let avg = if valid.is_empty() {
+        Json::Null
+    } else {
+        Json::Num(valid.iter().sum::<f64>() / valid.len() as f64)
+    };
+    RunOutput {
+        text: render(&rows),
+        payload: obj(vec![
+            ("figure", Json::Str("fig16".into())),
+            ("rows", Json::Arr(json_rows)),
+            ("avg_normalized", avg),
+        ]),
+    }
+}
+
+/// Fig 16 as a CLI/bench-drivable experiment.
+pub struct Experiment;
+
+impl Runnable for Experiment {
+    fn name(&self) -> &'static str {
+        "fig16"
+    }
+    fn title(&self) -> &'static str {
+        "max schedulable rate normalized to the ideal scheduler"
+    }
+    fn bench_file(&self) -> &'static str {
+        "BENCH_fig16_ideal_rate.json"
+    }
+    fn run(&self) -> RunOutput {
+        report()
+    }
+}
+
+pub fn run() -> String {
+    render(&compute())
+}
+
+pub fn render(rows: &[Row]) -> String {
     let mut out = String::from(
         "# Fig 16: max schedulable rate normalized to ideal\n\
          workload      ideal-scale  gpulet+int  normalized\n",
     );
     let mut sum = 0.0;
-    for r in &rows {
+    for r in rows {
         sum += r.normalized();
         out.push_str(&format!(
             "{:<12} {:>11.2} {:>11.2} {:>10.1}%\n",

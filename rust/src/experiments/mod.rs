@@ -1,8 +1,10 @@
 //! Experiment harnesses — one per paper figure/table (DESIGN.md §5).
 //!
 //! Each module exposes `run(...) -> String` producing the same
-//! rows/series the paper reports, so `gpulets experiment figN`, the
-//! bench targets, and the integration tests all share one code path.
+//! rows/series the paper reports, plus `report() -> RunOutput` adding a
+//! machine-readable JSON payload, so `gpulets run-fig N`, the bench
+//! targets, and the integration tests all share one code path. The
+//! [`common::Runnable`] trait + [`registry`] list what can be driven.
 
 pub mod common;
 pub mod fig03;
@@ -16,3 +18,61 @@ pub mod fig14;
 pub mod fig15;
 pub mod fig16;
 pub mod tables;
+
+use common::Runnable;
+
+/// Every drivable experiment, in figure order.
+pub fn registry() -> Vec<Box<dyn Runnable>> {
+    vec![
+        Box::new(fig03::Experiment),
+        Box::new(fig04::Experiment),
+        Box::new(fig05::Experiment),
+        Box::new(fig06::Experiment),
+        Box::new(fig09::Experiment),
+        Box::new(fig12::Experiment),
+        Box::new(fig13::Experiment),
+        Box::new(fig14::Experiment),
+        Box::new(fig15::Experiment),
+        Box::new(fig16::Experiment),
+    ]
+}
+
+/// Look up one experiment by a forgiving name: `fig12`, `12`, or `fig3`
+/// all resolve (figure numbers are zero-padded internally).
+pub fn find(name: &str) -> Option<Box<dyn Runnable>> {
+    let digits = name.trim().trim_start_matches("fig");
+    let canonical = match digits.parse::<u32>() {
+        Ok(n) => format!("fig{n:02}"),
+        Err(_) => return None,
+    };
+    registry().into_iter().find(|e| e.name() == canonical)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_and_files_are_unique() {
+        let reg = registry();
+        assert_eq!(reg.len(), 10);
+        let mut names: Vec<&str> = reg.iter().map(|e| e.name()).collect();
+        let mut files: Vec<&str> = reg.iter().map(|e| e.bench_file()).collect();
+        names.sort_unstable();
+        names.dedup();
+        files.sort_unstable();
+        files.dedup();
+        assert_eq!(names.len(), 10);
+        assert_eq!(files.len(), 10);
+        assert!(files.iter().all(|f| f.starts_with("BENCH_") && f.ends_with(".json")));
+    }
+
+    #[test]
+    fn find_accepts_forgiving_names() {
+        assert_eq!(find("12").unwrap().name(), "fig12");
+        assert_eq!(find("fig3").unwrap().name(), "fig03");
+        assert_eq!(find("fig03").unwrap().name(), "fig03");
+        assert!(find("fig07").is_none());
+        assert!(find("bogus").is_none());
+    }
+}

@@ -12,7 +12,28 @@
 //!   CPU client (`runtime`). Python is never on the request path.
 //!
 //! See `DESIGN.md` for the module inventory and the experiment index
-//! mapping every paper figure/table to a bench target.
+//! mapping every paper figure/table to a bench target, and `README.md`
+//! for the CLI quickstart (`gpulets run-fig 12`).
+//!
+//! # Examples
+//!
+//! Schedule the paper's `equal` scenario (50 req/s per model, Table 5)
+//! on a 4-GPU cluster with Elastic Partitioning, then check the plan:
+//!
+//! ```
+//! use gpulets::sched::{ElasticPartitioning, SchedCtx, Scheduler};
+//!
+//! let ctx = SchedCtx::new(4, None);
+//! let schedule = ElasticPartitioning::gpulet()
+//!     .schedule(&ctx, &[50.0; 5])
+//!     .expect("the equal scenario fits four GPUs");
+//!
+//! // The schedule is structurally valid and covers the offered load.
+//! schedule.validate(&ctx.lm, 4).unwrap();
+//! let assigned: f64 = schedule.assigned_rates().iter().sum();
+//! assert!(assigned >= 250.0 - 1e-6);
+//! assert!(schedule.total_allocated_pct() <= 400);
+//! ```
 pub mod apps;
 pub mod config;
 pub mod coordinator;

@@ -19,7 +19,13 @@ pub struct ModelMetrics {
 impl ModelMetrics {
     fn new(slo_ms: f64) -> Self {
         // 0.5 ms bins up to 1 s; the overflow bin catches stragglers.
-        ModelMetrics { slo_ms, served: 0, violations: 0, dropped: 0, hist: Histogram::new(0.5, 2000) }
+        ModelMetrics {
+            slo_ms,
+            served: 0,
+            violations: 0,
+            dropped: 0,
+            hist: Histogram::new(0.5, 2000),
+        }
     }
 
     /// Record a completed request with end-to-end latency `ms`.

@@ -264,7 +264,8 @@ mod tests {
     #[test]
     fn knee_detection_on_synthetic_curves() {
         // Saturating curve: knee where the slope collapses.
-        let curve = vec![(20, 100.0), (40, 190.0), (50, 200.0), (60, 202.0), (80, 203.0), (100, 204.0)];
+        let curve =
+            vec![(20, 100.0), (40, 190.0), (50, 200.0), (60, 202.0), (80, 203.0), (100, 204.0)];
         assert_eq!(knee(&curve), 40);
         // Superlinear curve: keeps gaining — take the whole GPU.
         let sup = vec![(20, 0.0), (40, 40.0), (50, 60.0), (60, 90.0), (80, 160.0), (100, 300.0)];
@@ -273,7 +274,8 @@ mod tests {
         let zero: Vec<(u32, f64)> = [20, 40, 100].iter().map(|&s| (s, 0.0)).collect();
         assert_eq!(knee(&zero), 100);
         // Hard saturation: flat tail with no interior bend.
-        let flat = vec![(20, 0.0), (40, 500.0), (50, 500.0), (60, 500.0), (80, 500.0), (100, 500.0)];
+        let flat =
+            vec![(20, 0.0), (40, 500.0), (50, 500.0), (60, 500.0), (80, 500.0), (100, 500.0)];
         assert_eq!(knee(&flat), 40);
     }
 

@@ -1,18 +1,35 @@
 //! PJRT engine: compile HLO-text artifacts once, execute many times.
 //!
-//! Wraps the `xla` crate (PJRT C API). Interchange is HLO *text*:
-//! jax >= 0.5 emits protos with 64-bit instruction ids that this XLA
-//! build rejects, while the text parser reassigns ids cleanly.
+//! Two builds of the same API (DESIGN.md §7):
+//!
+//! * `--features pjrt` — wraps the `xla` crate (PJRT C API), which must
+//!   be vendored into the build. Interchange is HLO *text*: jax >= 0.5
+//!   emits protos with 64-bit instruction ids that this XLA build
+//!   rejects, while the text parser reassigns ids cleanly.
+//! * default — a stub whose constructor returns `Error::Xla`, so the
+//!   crate (CLI, benches, sim experiments) builds and runs with zero
+//!   external dependencies; only the real-execution paths
+//!   (`serve-real`, the quickstart example, the artifact integration
+//!   tests) report the missing runtime at startup.
 
 use std::path::Path;
 
 use crate::error::{Error, Result};
 
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
 /// Process-wide PJRT client + compiler.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Create a CPU PJRT engine.
     pub fn cpu() -> Result<Engine> {
@@ -42,10 +59,12 @@ impl Engine {
 }
 
 /// A compiled (model, batch) computation, ready for repeated execution.
+#[cfg(feature = "pjrt")]
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Execute on one f32 input of logical shape `shape`.
     ///
@@ -70,7 +89,52 @@ impl Executable {
     }
 }
 
-#[cfg(test)]
+#[cfg(not(feature = "pjrt"))]
+const NO_PJRT: &str =
+    "built without the `pjrt` feature — the PJRT runtime is unavailable \
+     (rebuild with `cargo build --features pjrt` and a vendored `xla` crate)";
+
+/// Stub engine (pjrt feature disabled): construction fails cleanly.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    _never: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Always fails: the runtime was compiled out.
+    pub fn cpu() -> Result<Engine> {
+        Err(Error::Xla(NO_PJRT.into()))
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn load_hlo_text(&self, _path: impl AsRef<Path>) -> Result<Executable> {
+        Err(Error::Xla(NO_PJRT.into()))
+    }
+}
+
+/// Stub executable (pjrt feature disabled): unreachable in practice
+/// because the stub `Engine` can never be constructed.
+#[cfg(not(feature = "pjrt"))]
+pub struct Executable {
+    _never: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Executable {
+    pub fn run_f32(&self, _input: &[f32], _shape: &[usize]) -> Result<Vec<f32>> {
+        Err(Error::Xla(NO_PJRT.into()))
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 
@@ -88,5 +152,16 @@ mod tests {
     fn load_missing_artifact_errors() {
         let e = Engine::cpu().unwrap();
         assert!(e.load_hlo_text("/nonexistent/x.hlo.txt").is_err());
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_fails_loudly() {
+        let err = Engine::cpu().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "unhelpful stub error: {err}");
     }
 }

@@ -33,10 +33,45 @@ pub struct ElasticPartitioning {
 }
 
 impl ElasticPartitioning {
+    /// The interference-oblivious variant (`gpulet` in the paper's
+    /// evaluation): Algorithm 1 with the interference term disabled.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use gpulets::sched::{ElasticPartitioning, SchedCtx, Scheduler};
+    ///
+    /// let ctx = SchedCtx::new(4, None);
+    /// let schedule = ElasticPartitioning::gpulet()
+    ///     .schedule(&ctx, &[50.0, 0.0, 0.0, 0.0, 0.0])
+    ///     .unwrap();
+    /// schedule.validate(&ctx.lm, 4).unwrap();
+    /// // LeNet barely uses 30% of a GPU: elastic partitioning must
+    /// // carve small gpu-lets instead of burning a whole GPU on it.
+    /// assert!(schedule.lets.iter().all(|l| l.spec.size_pct < 100));
+    /// ```
     pub fn gpulet() -> Self {
         ElasticPartitioning { interference_aware: false }
     }
 
+    /// The interference-aware variant (`gpulet+int`): every SLO
+    /// feasibility check (Algorithm 1 line 28) adds the fitted linear
+    /// interference prediction for the co-resident gpu-let.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use gpulets::experiments::common::fitted_interference;
+    /// use gpulets::sched::{ElasticPartitioning, SchedCtx, Scheduler};
+    ///
+    /// let ctx = SchedCtx::new(4, Some(fitted_interference()));
+    /// let schedule = ElasticPartitioning::gpulet_int()
+    ///     .schedule(&ctx, &[50.0; 5])
+    ///     .unwrap();
+    /// schedule.validate(&ctx.lm, 4).unwrap();
+    /// let assigned: f64 = schedule.assigned_rates().iter().sum();
+    /// assert!(assigned >= 250.0 - 1e-6, "covers the offered 250 req/s");
+    /// ```
     pub fn gpulet_int() -> Self {
         ElasticPartitioning { interference_aware: true }
     }

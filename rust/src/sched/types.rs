@@ -173,6 +173,40 @@ impl Schedule {
     /// 1. every gpu-let size valid; per-GPU count/size caps hold;
     /// 2. every assignment has positive rate and batch within limits;
     /// 3. every let's duty cycle is feasible.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use gpulets::gpu::gpulet::GpuLetSpec;
+    /// use gpulets::models::ModelId;
+    /// use gpulets::perfmodel::LatencyModel;
+    /// use gpulets::sched::{Assignment, LetPlan, Schedule};
+    ///
+    /// let lm = LatencyModel::new();
+    /// let schedule = Schedule {
+    ///     lets: vec![LetPlan {
+    ///         spec: GpuLetSpec { gpu: 0, size_pct: 50 },
+    ///         assignments: vec![Assignment {
+    ///             model: ModelId::Lenet,
+    ///             batch: 8,
+    ///             rate: 100.0,
+    ///         }],
+    ///     }],
+    /// };
+    /// schedule.validate(&lm, 1).unwrap();
+    ///
+    /// // Oversubscribing the GPU (50% + 80% > 100%) is rejected.
+    /// let mut bad = schedule.clone();
+    /// bad.lets.push(LetPlan {
+    ///     spec: GpuLetSpec { gpu: 0, size_pct: 80 },
+    ///     assignments: vec![Assignment {
+    ///         model: ModelId::Vgg,
+    ///         batch: 8,
+    ///         rate: 10.0,
+    ///     }],
+    /// });
+    /// assert!(bad.validate(&lm, 1).is_err());
+    /// ```
     pub fn validate(&self, lm: &LatencyModel, num_gpus: usize) -> Result<()> {
         self.layout(num_gpus)?; // (1) via ClusterLayout::validate
         for lp in &self.lets {

@@ -2,9 +2,13 @@
 //!
 //! `cargo bench` runs the `rust/benches/*.rs` targets (harness = false);
 //! each uses this kit to time its workload with warmup + repeated
-//! measurement and to print a stable, parseable summary line.
+//! measurement, print a stable, parseable summary line, and write a
+//! machine-readable `BENCH_<target>.json` envelope (timing + payload)
+//! that the perf-trajectory tooling diffs across PRs.
 
 use std::time::Instant;
+
+use crate::util::json::{obj, Json};
 
 /// One timing summary.
 #[derive(Clone, Debug)]
@@ -23,12 +27,52 @@ impl BenchResult {
             self.name, self.iters, self.mean_ms, self.min_ms, self.max_ms
         )
     }
+
+    /// Timing as a JSON object (one entry of a BENCH file).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ms", Json::Num(self.mean_ms)),
+            ("min_ms", Json::Num(self.min_ms)),
+            ("max_ms", Json::Num(self.max_ms)),
+        ])
+    }
+}
+
+/// The standard BENCH-file schema: `{"bench": <timing>, "result": <payload>}`.
+pub fn envelope(timing: &BenchResult, payload: Json) -> Json {
+    obj(vec![("bench", timing.to_json()), ("result", payload)])
+}
+
+/// A BENCH file holding only timings (the micro benches): `{"bench": [...]}`.
+pub fn timings_envelope(timings: &[BenchResult]) -> Json {
+    Json::Obj(
+        [(
+            "bench".to_string(),
+            Json::Arr(timings.iter().map(BenchResult::to_json).collect()),
+        )]
+        .into_iter()
+        .collect(),
+    )
+}
+
+/// Write a JSON document (newline-terminated) to `path`.
+pub fn write_json(path: impl AsRef<std::path::Path>, doc: &Json) -> std::io::Result<()> {
+    let mut text = doc.to_string();
+    text.push('\n');
+    std::fs::write(path, text)
 }
 
 /// Time `f` with `warmup` unmeasured runs and `iters` measured runs.
 /// The closure's result is returned from the last run so the compiler
 /// cannot elide the work.
-pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> (BenchResult, T) {
+pub fn bench<T>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut() -> T,
+) -> (BenchResult, T) {
     assert!(iters >= 1);
     for _ in 0..warmup {
         std::hint::black_box(f());
@@ -55,16 +99,42 @@ pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> 
     )
 }
 
-/// Convenience: run, print the summary, return the workload result.
-pub fn run<T>(name: &str, warmup: usize, iters: usize, f: impl FnMut() -> T) -> T {
-    let (res, out) = bench(name, warmup, iters, f);
-    println!("{}", res.summary());
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_envelope_round_trips() {
+        let res = BenchResult {
+            name: "unit".into(),
+            iters: 3,
+            mean_ms: 1.5,
+            min_ms: 1.0,
+            max_ms: 2.0,
+        };
+        let payload = obj(vec![("answer", Json::Num(42.0))]);
+        let doc = envelope(&res, payload);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().get("iters").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(parsed.get("result").unwrap().get("answer").unwrap().as_f64().unwrap(), 42.0);
+
+        let multi = timings_envelope(&[res.clone(), res]);
+        let parsed = Json::parse(&multi.to_string()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn write_json_emits_parseable_file() {
+        let path = std::env::temp_dir().join("gpulets_benchkit_test.json");
+        write_json(&path, &obj(vec![("k", Json::Str("v".into()))])).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with('\n'));
+        assert_eq!(
+            Json::parse(text.trim()).unwrap().get("k").unwrap().as_str().unwrap(),
+            "v"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
 
     #[test]
     fn times_work() {

@@ -1,8 +1,13 @@
-//! Minimal TOML-subset parser (offline stand-in for the `toml` crate).
+//! Minimal TOML-subset parser + writer (offline stand-in for the `toml`
+//! crate).
 //!
 //! Supports what `configs/*.toml` uses: `[section]` / `[section.sub]`
 //! headers, `key = value` with string / integer / float / bool / array
 //! values, `#` comments. Values are exposed through dotted-path lookup.
+//! `TomlDoc::to_toml` renders a document back out; for any text this
+//! module can parse, `parse(to_toml(parse(text)))` reproduces the same
+//! document (strings must not contain `"` or newlines — the grammar
+//! has no escape syntax).
 
 use std::collections::BTreeMap;
 
@@ -52,6 +57,41 @@ impl TomlValue {
         match self {
             TomlValue::Arr(a) => Ok(a),
             other => Err(Error::parse(format!("expected array, got {other:?}"))),
+        }
+    }
+
+    /// Render as TOML-subset text (inverse of `parse_value`). Finite
+    /// integral floats keep a decimal point — whatever their magnitude —
+    /// so they re-parse as floats, not integers. Strings must not
+    /// contain `"` or newlines (the grammar has no escapes); debug
+    /// builds assert, release builds would emit text that re-parses
+    /// differently.
+    pub fn render(&self) -> String {
+        match self {
+            TomlValue::Str(s) => {
+                debug_assert!(
+                    !s.contains('"') && !s.contains('\n'),
+                    "unescapable string {s:?} (tomlmini has no escape syntax)"
+                );
+                format!("\"{s}\"")
+            }
+            TomlValue::Int(i) => i.to_string(),
+            TomlValue::Float(x) => {
+                debug_assert!(
+                    x.is_finite(),
+                    "non-finite float {x} has no TOML-subset representation"
+                );
+                if x.is_finite() && x.fract() == 0.0 {
+                    format!("{x:.1}")
+                } else {
+                    format!("{x}")
+                }
+            }
+            TomlValue::Bool(b) => b.to_string(),
+            TomlValue::Arr(a) => {
+                let items: Vec<String> = a.iter().map(TomlValue::render).collect();
+                format!("[{}]", items.join(", "))
+            }
         }
     }
 }
@@ -134,11 +174,62 @@ impl TomlDoc {
     }
 
     /// All keys under a dotted prefix (e.g. every `rates.<model>` entry).
-    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = (&'a str, &'a TomlValue)> {
+    pub fn keys_under<'a>(
+        &'a self,
+        prefix: &'a str,
+    ) -> impl Iterator<Item = (&'a str, &'a TomlValue)> {
         let pfx = format!("{prefix}.");
         self.entries.iter().filter_map(move |(k, v)| {
             k.strip_prefix(&pfx).map(|rest| (rest, v))
         })
+    }
+
+    /// Insert/overwrite a value at a dotted path (programmatic doc
+    /// building for `to_toml`).
+    pub fn set(&mut self, path: impl Into<String>, v: TomlValue) {
+        self.entries.insert(path.into(), v);
+    }
+
+    /// Number of key/value entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Render back to TOML-subset text: top-level (undotted) keys first,
+    /// then one `[section]` per dotted prefix (the section is everything
+    /// before the *last* dot, matching how `parse` builds dotted keys).
+    pub fn to_toml(&self) -> String {
+        let mut root: Vec<(&str, &TomlValue)> = Vec::new();
+        let mut sections: BTreeMap<&str, Vec<(&str, &TomlValue)>> = BTreeMap::new();
+        for (k, v) in &self.entries {
+            match k.rfind('.') {
+                None => root.push((k, v)),
+                Some(i) => sections.entry(&k[..i]).or_default().push((&k[i + 1..], v)),
+            }
+        }
+        let mut out = String::new();
+        for (k, v) in root {
+            out.push_str(k);
+            out.push_str(" = ");
+            out.push_str(&v.render());
+            out.push('\n');
+        }
+        for (sec, entries) in sections {
+            out.push('[');
+            out.push_str(sec);
+            out.push_str("]\n");
+            for (k, v) in entries {
+                out.push_str(k);
+                out.push_str(" = ");
+                out.push_str(&v.render());
+                out.push('\n');
+            }
+        }
+        out
     }
 }
 
@@ -267,5 +358,47 @@ vgg = 50.0
         assert!(TomlDoc::parse("[unclosed").is_err());
         assert!(TomlDoc::parse("novalue").is_err());
         assert!(TomlDoc::parse("k = [1, 2").is_err());
+    }
+
+    #[test]
+    fn to_toml_round_trips() {
+        let d = TomlDoc::parse(DOC).unwrap();
+        let rendered = d.to_toml();
+        let d2 = TomlDoc::parse(&rendered).unwrap();
+        assert_eq!(d.entries, d2.entries, "round trip changed the doc:\n{rendered}");
+        // Floats stay floats, ints stay ints.
+        assert_eq!(d2.get("sched.period_s").unwrap(), &TomlValue::Float(20.0));
+        assert_eq!(d2.get("gpu.count").unwrap(), &TomlValue::Int(4));
+    }
+
+    #[test]
+    fn set_and_render_programmatic_doc() {
+        let mut d = TomlDoc::default();
+        assert!(d.is_empty());
+        d.set("name", TomlValue::Str("run".into()));
+        d.set("gpu.count", TomlValue::Int(2));
+        d.set("rates.lenet", TomlValue::Float(62.5));
+        d.set("sched.nested.deep", TomlValue::Bool(true));
+        assert_eq!(d.len(), 4);
+        let d2 = TomlDoc::parse(&d.to_toml()).unwrap();
+        assert_eq!(d.entries, d2.entries);
+        assert!(d2.get("sched.nested.deep").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn value_render_matches_parse() {
+        for v in [
+            TomlValue::Int(-3),
+            TomlValue::Float(0.25),
+            TomlValue::Float(100.0),
+            TomlValue::Float(1e15), // integral float beyond i64-friendly range
+            TomlValue::Bool(false),
+            TomlValue::Str("hello world".into()),
+            TomlValue::Arr(vec![TomlValue::Int(1), TomlValue::Float(2.5)]),
+        ] {
+            let text = v.render();
+            let back = parse_value(&text).unwrap();
+            assert_eq!(v, back, "render {text:?}");
+        }
     }
 }

@@ -18,6 +18,16 @@ fn artifacts_dir() -> Option<String> {
     }
 }
 
+/// Artifacts + a real engine: the execution tests need both (the
+/// default build ships a stub `Engine` whose constructor errors).
+fn runtime_dir() -> Option<String> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature — no PJRT runtime");
+        return None;
+    }
+    artifacts_dir()
+}
+
 #[test]
 fn manifest_covers_all_models_and_batches() {
     let Some(dir) = artifacts_dir() else { return };
@@ -35,7 +45,7 @@ fn manifest_covers_all_models_and_batches() {
 
 #[test]
 fn lenet_executes_and_outputs_logits() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = runtime_dir() else { return };
     let engine = Engine::cpu().unwrap();
     let registry = ModelRegistry::load_models(&engine, &dir, &[ModelId::Lenet]).unwrap();
     let entry = registry.manifest.entry(ModelId::Lenet).unwrap();
@@ -58,7 +68,7 @@ fn batch_padding_matches_per_sample_execution() {
     // A batch of 3 (padded up to the b=4 artifact) must produce the
     // same per-sample outputs as three singleton executions — the
     // Python-side batch-consistency test, replayed through Rust+PJRT.
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = runtime_dir() else { return };
     let engine = Engine::cpu().unwrap();
     let registry = ModelRegistry::load_models(&engine, &dir, &[ModelId::Lenet]).unwrap();
     let entry = registry.manifest.entry(ModelId::Lenet).unwrap();
@@ -79,7 +89,7 @@ fn batch_padding_matches_per_sample_execution() {
 
 #[test]
 fn real_server_serves_a_small_mix() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = runtime_dir() else { return };
     let engine = Engine::cpu().unwrap();
     let registry =
         ModelRegistry::load_models(&engine, &dir, &[ModelId::Lenet, ModelId::Googlenet])
@@ -107,7 +117,7 @@ fn golden_outputs_match_python_layer2() {
     // THE cross-language numerics check: Rust+PJRT executing the AOT
     // artifact must reproduce the Python/JAX L2 model output on the
     // manifest's fixed golden input — for every model.
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = runtime_dir() else { return };
     let engine = Engine::cpu().unwrap();
     let registry = ModelRegistry::load(&engine, &dir).unwrap();
     for m in ModelId::ALL {
@@ -158,7 +168,7 @@ fn artifacts_contain_no_elided_constants() {
 
 #[test]
 fn registry_rejects_oversized_batch_and_bad_sample() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = runtime_dir() else { return };
     let engine = Engine::cpu().unwrap();
     let registry = ModelRegistry::load_models(&engine, &dir, &[ModelId::Lenet]).unwrap();
     let entry = registry.manifest.entry(ModelId::Lenet).unwrap();

@@ -1,0 +1,206 @@
+//! Round-trip coverage for the config/report serialization path the
+//! `gpulets` CLI depends on: `util::tomlmini` (config in) and
+//! `util::json` (BENCH reports out), including randomized documents via
+//! `util::proptest_mini`.
+
+use gpulets::config::Config;
+use gpulets::util::benchkit::{self, BenchResult};
+use gpulets::util::json::{obj, Json};
+use gpulets::util::proptest_mini::{run, Config as PropConfig};
+use gpulets::util::rng::Pcg32;
+use gpulets::util::tomlmini::{TomlDoc, TomlValue};
+
+// ---- TOML ----------------------------------------------------------------
+
+#[test]
+fn toml_doc_round_trips_through_render() {
+    let text = r#"
+name = "paper"
+[gpu]
+count = 4
+sizes = [20, 40, 50, 60, 80, 100]
+[sched]
+algo = "gpulet+int"
+period_s = 20.0
+interference = true
+[sched.limits]
+max_rounds = 64
+[rates]
+lenet = 50.0
+vgg = 12.5
+"#;
+    let doc = TomlDoc::parse(text).unwrap();
+    let rendered = doc.to_toml();
+    let doc2 = TomlDoc::parse(&rendered).unwrap();
+    // Same dotted keys, same values, same types.
+    assert_eq!(doc.to_toml(), doc2.to_toml());
+    assert_eq!(doc2.get("gpu.count").unwrap(), &TomlValue::Int(4));
+    assert_eq!(doc2.get("sched.period_s").unwrap(), &TomlValue::Float(20.0));
+    assert_eq!(doc2.get("sched.limits.max_rounds").unwrap(), &TomlValue::Int(64));
+    assert_eq!(doc2.get("rates.vgg").unwrap(), &TomlValue::Float(12.5));
+}
+
+#[test]
+fn config_survives_a_render_round_trip() {
+    let text = r#"
+[gpu]
+count = 2
+share_mode = "temporal"
+[sched]
+algo = "sbp"
+period_s = 10.0
+[workload]
+duration_s = 60.0
+seed = 7
+[rates]
+lenet = 100.0
+vgg = 25.0
+"#;
+    let direct = Config::parse(text).unwrap();
+    let rendered = TomlDoc::parse(text).unwrap().to_toml();
+    let via_render = Config::parse(&rendered).unwrap();
+    assert_eq!(direct.num_gpus, via_render.num_gpus);
+    assert_eq!(direct.algo, via_render.algo);
+    assert_eq!(direct.share_mode, via_render.share_mode);
+    assert_eq!(direct.duration_s, via_render.duration_s);
+    assert_eq!(direct.seed, via_render.seed);
+    assert_eq!(direct.rates, via_render.rates);
+}
+
+#[test]
+fn prop_random_toml_docs_round_trip() {
+    fn random_value(rng: &mut Pcg32, depth: usize) -> TomlValue {
+        match rng.below(if depth == 0 { 5 } else { 4 }) {
+            0 => TomlValue::Int(rng.next_u32() as i64 - (u32::MAX / 2) as i64),
+            1 => {
+                // Finite, exactly representable round numbers.
+                TomlValue::Float((rng.next_u32() % 10_000) as f64 / 4.0)
+            }
+            2 => TomlValue::Bool(rng.f64() < 0.5),
+            3 => {
+                let n = rng.below(8) + 1;
+                TomlValue::Str(
+                    (0..n)
+                        .map(|_| (b'a' + rng.below(26) as u8) as char)
+                        .collect(),
+                )
+            }
+            _ => {
+                let n = rng.below(4);
+                TomlValue::Arr((0..n).map(|_| random_value(rng, depth + 1)).collect())
+            }
+        }
+    }
+
+    run(
+        PropConfig { cases: 100, seed: 0x70117, ..Default::default() },
+        |rng| {
+            let mut doc = TomlDoc::default();
+            let n = rng.below(12) + 1;
+            for i in 0..n {
+                let path = match rng.below(3) {
+                    0 => format!("key{i}"),
+                    1 => format!("sec{}.key{i}", rng.below(3)),
+                    _ => format!("sec{}.sub{}.key{i}", rng.below(2), rng.below(2)),
+                };
+                doc.set(path, random_value(rng, 0));
+            }
+            doc.to_toml()
+        },
+        |_| vec![],
+        |text| {
+            let a = TomlDoc::parse(text).map_err(|e| format!("parse 1: {e}"))?;
+            let b = TomlDoc::parse(&a.to_toml()).map_err(|e| format!("parse 2: {e}"))?;
+            if a.to_toml() != b.to_toml() {
+                return Err(format!("unstable round trip:\n{}\nvs\n{}", a.to_toml(), b.to_toml()));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- JSON ----------------------------------------------------------------
+
+#[test]
+fn json_bench_report_round_trips_through_disk() {
+    let timing = BenchResult {
+        name: "fig12: 4-scheduler max-throughput search".into(),
+        iters: 1,
+        mean_ms: 1234.5,
+        min_ms: 1234.5,
+        max_ms: 1234.5,
+    };
+    let payload = obj(vec![
+        ("figure", Json::Str("fig12".into())),
+        (
+            "workloads",
+            Json::Arr(vec![obj(vec![
+                ("workload", Json::Str("equal".into())),
+                ("throughput_rps", Json::Num(812.0)),
+                ("violation_rate", Json::Num(0.0042)),
+            ])]),
+        ),
+    ]);
+    let doc = benchkit::envelope(&timing, payload);
+
+    let path = std::env::temp_dir().join("gpulets_roundtrip_BENCH_test.json");
+    benchkit::write_json(&path, &doc).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    let parsed = Json::parse(text.trim()).unwrap();
+    assert_eq!(parsed, doc, "disk round trip must be lossless");
+    let wl = &parsed.get("result").unwrap().get("workloads").unwrap().as_arr().unwrap()[0];
+    assert_eq!(wl.get("workload").unwrap().as_str().unwrap(), "equal");
+    assert_eq!(wl.get("violation_rate").unwrap().as_f64().unwrap(), 0.0042);
+}
+
+#[test]
+fn prop_random_json_values_round_trip() {
+    fn random_json(rng: &mut Pcg32, depth: usize) -> Json {
+        match rng.below(if depth >= 2 { 4 } else { 6 }) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.f64() < 0.5),
+            2 => Json::Num((rng.next_u32() as f64 - (u32::MAX / 2) as f64) / 8.0),
+            3 => {
+                let n = rng.below(10);
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            // Mix in characters the escaper must handle.
+                            const POOL: &[char] =
+                                &['a', 'Z', '9', '"', '\\', '\n', '\t', 'é', '∂', ' '];
+                            POOL[rng.below(POOL.len())]
+                        })
+                        .collect(),
+                )
+            }
+            4 => {
+                let n = rng.below(5);
+                Json::Arr((0..n).map(|_| random_json(rng, depth + 1)).collect())
+            }
+            _ => {
+                let n = rng.below(5);
+                Json::Obj(
+                    (0..n)
+                        .map(|i| (format!("k{i}"), random_json(rng, depth + 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+
+    run(
+        PropConfig { cases: 200, seed: 0x15011, ..Default::default() },
+        |rng| random_json(rng, 0),
+        |_| vec![],
+        |v| {
+            let text = v.to_string();
+            let back = Json::parse(&text).map_err(|e| format!("reparse failed: {e}\n{text}"))?;
+            if &back != v {
+                return Err(format!("round trip changed value:\n{text}\nvs\n{}", back.to_string()));
+            }
+            Ok(())
+        },
+    );
+}
