@@ -1,22 +1,32 @@
 //! Micro-benchmarks of the L3 hot paths (DESIGN.md §8 perf targets):
 //!
 //! * one Elastic Partitioning scheduling pass (the 20 s-period planner)
-//! * the full 1,023-scenario schedulability sweep
+//! * the full 1,023-scenario schedulability sweep — serial (the
+//!   cross-PR trend entry) and parallel (`GPULETS_THREADS` workers)
+//! * head-to-head pairs proving the hot-path refactors in one run:
+//!   capacity-table lookups vs `LatencyModel` batch rescans, the flat
+//!   `ProfileTable` vs a `BTreeMap` replica of the old layout, and the
+//!   ideal scheduler's 35-layout deduped search vs the full 4^4
+//!   enumeration
 //! * the discrete-event simulator's event throughput
 //! * batch-builder enqueue/dispatch
 //! * interference-model prediction (called inside scheduler loops)
 //! * PJRT end-to-end execution, when `artifacts/` is built
 //!
-//! Writes BENCH_micro_hotpath.json with one timing entry per bench.
+//! Writes BENCH_micro_hotpath.json with one timing entry per bench;
+//! diff against a committed run with `gpulets bench-compare`.
+
+use std::collections::BTreeMap;
 
 use gpulets::coordinator::batcher::{BatchBuilder, Queued};
 use gpulets::coordinator::simserver::{simulate, SimConfig};
 use gpulets::experiments::common::{fitted_interference, paper_ctx};
 use gpulets::interference::GroundTruth;
 use gpulets::models::ModelId;
-use gpulets::perfmodel::LatencyModel;
-use gpulets::sched::{ElasticPartitioning, Scheduler};
-use gpulets::util::benchkit;
+use gpulets::perfmodel::profile_table::PARTITIONS;
+use gpulets::perfmodel::{LatencyModel, ProfileTable, BATCHES};
+use gpulets::sched::{ElasticPartitioning, IdealScheduler, Scheduler};
+use gpulets::util::{benchkit, par};
 use gpulets::workload::{enumerate_all_scenarios, generate_arrivals};
 
 fn main() {
@@ -42,6 +52,114 @@ fn main() {
     println!("{}", t.summary());
     timings.push(t);
 
+    let workers = par::threads();
+    println!("(parallel sweep uses {workers} worker threads)");
+    let (t, _) = benchkit::bench("sched: 1023-scenario gpulet+int sweep (parallel)", 1, 5, || {
+        par::par_map(&scenarios, |sc| gi.schedule(&ctx, &sc.rates).is_ok())
+            .into_iter()
+            .filter(|&ok| ok)
+            .count()
+    });
+    println!("{}", t.summary());
+    timings.push(t);
+
+    // --- capacity-table lookups vs the old batch rescan ---------------------
+    // Old hot path: every feasibility probe called LatencyModel::max_rate,
+    // scanning all 6 batch sizes. New: one memoized table read.
+    let (t, acc_scan) = benchkit::bench("cap: 60k max_rate batch-rescans (old path)", 2, 50, || {
+        let mut acc = 0.0;
+        for _ in 0..2_000 {
+            for m in ModelId::ALL {
+                for &pct in &PARTITIONS {
+                    if let Some((r, _)) = ctx.lm.max_rate(m, pct as f64 / 100.0) {
+                        acc += r;
+                    }
+                }
+            }
+        }
+        acc
+    });
+    println!("{}", t.summary());
+    timings.push(t);
+    let (t, acc_memo) = benchkit::bench("cap: 60k max_rate table lookups (new path)", 2, 50, || {
+        let mut acc = 0.0;
+        for _ in 0..2_000 {
+            for m in ModelId::ALL {
+                for &pct in &PARTITIONS {
+                    if let Some((r, _)) = ctx.max_rate(m, pct) {
+                        acc += r;
+                    }
+                }
+            }
+        }
+        acc
+    });
+    println!("{}", t.summary());
+    timings.push(t);
+    assert_eq!(acc_scan, acc_memo, "capacity memo must be bit-identical");
+
+    // --- flat profile table vs a BTreeMap replica of the old layout ---------
+    let lm = LatencyModel::new();
+    let flat = ProfileTable::build(&lm);
+    let mut btree: BTreeMap<(ModelId, u32, u32), f64> = BTreeMap::new();
+    for m in ModelId::ALL {
+        for &b in &BATCHES {
+            for &p in &PARTITIONS {
+                btree.insert((m, b, p), lm.latency_ms(m, b, p as f64 / 100.0));
+            }
+        }
+    }
+    let (t, sum_tree) = benchkit::bench("profile: 180k grid gets (btreemap, old)", 2, 50, || {
+        let mut acc = 0.0;
+        for _ in 0..1_000 {
+            for m in ModelId::ALL {
+                for &b in &BATCHES {
+                    for &p in &PARTITIONS {
+                        acc += btree.get(&(m, b, p)).copied().unwrap_or(0.0);
+                    }
+                }
+            }
+        }
+        acc
+    });
+    println!("{}", t.summary());
+    timings.push(t);
+    let (t, sum_flat) = benchkit::bench("profile: 180k grid gets (flat array, new)", 2, 50, || {
+        let mut acc = 0.0;
+        for _ in 0..1_000 {
+            for m in ModelId::ALL {
+                for &b in &BATCHES {
+                    for &p in &PARTITIONS {
+                        acc += flat.get(m, b, p).unwrap_or(0.0);
+                    }
+                }
+            }
+        }
+        acc
+    });
+    println!("{}", t.summary());
+    timings.push(t);
+    assert_eq!(sum_tree, sum_flat, "flat table must match the btreemap grid");
+
+    // --- ideal search: deduped multiset layouts vs full 4^4 enumeration -----
+    let ctx_ideal = paper_ctx(false);
+    let sub: Vec<_> = scenarios.iter().step_by(16).cloned().collect();
+    let (t, n_full) = benchkit::bench("ideal: 64-scenario verdicts, full 4^4 layouts", 1, 3, || {
+        sub.iter()
+            .filter(|sc| IdealScheduler::schedule_with(&ctx_ideal, &sc.rates, false).is_ok())
+            .count()
+    });
+    println!("{}", t.summary());
+    timings.push(t);
+    let (t, n_dedup) = benchkit::bench("ideal: 64-scenario verdicts, 35 deduped layouts", 1, 3, || {
+        sub.iter()
+            .filter(|sc| IdealScheduler::schedule_with(&ctx_ideal, &sc.rates, true).is_ok())
+            .count()
+    });
+    println!("{}", t.summary());
+    timings.push(t);
+    assert_eq!(n_full, n_dedup, "layout dedup must not change verdicts");
+
     // --- interference prediction ------------------------------------------
     let model = fitted_interference();
     let (t, _) = benchkit::bench("intf: 10k pair predictions", 2, 50, || {
@@ -57,7 +175,6 @@ fn main() {
     timings.push(t);
 
     // --- simulator event throughput ----------------------------------------
-    let lm = LatencyModel::new();
     let gt = GroundTruth::default();
     let schedule = gi.schedule(&ctx, &rates).expect("schedulable");
     let arrivals = generate_arrivals(
@@ -125,4 +242,36 @@ fn main() {
     benchkit::write_json("BENCH_micro_hotpath.json", &benchkit::timings_envelope(&timings))
         .expect("write BENCH_micro_hotpath.json");
     eprintln!("[wrote BENCH_micro_hotpath.json]");
+
+    // In-run speedup table: pairs that prove the refactors without
+    // needing a committed baseline file.
+    for (old, new) in [
+        (
+            "sched: 1023-scenario gpulet+int sweep",
+            "sched: 1023-scenario gpulet+int sweep (parallel)",
+        ),
+        (
+            "cap: 60k max_rate batch-rescans (old path)",
+            "cap: 60k max_rate table lookups (new path)",
+        ),
+        (
+            "profile: 180k grid gets (btreemap, old)",
+            "profile: 180k grid gets (flat array, new)",
+        ),
+        (
+            "ideal: 64-scenario verdicts, full 4^4 layouts",
+            "ideal: 64-scenario verdicts, 35 deduped layouts",
+        ),
+    ] {
+        let pick = |name: &str| timings.iter().find(|t| t.name == name).map(|t| t.mean_ms);
+        match (pick(old), pick(new)) {
+            (Some(o), Some(n)) if n > 0.0 => {
+                println!("speedup {:>6.2}x  {} -> {}", o / n, old, new);
+            }
+            _ => println!(
+                "speedup     ??x  {} -> {} (bench entry missing — label drifted?)",
+                old, new
+            ),
+        }
+    }
 }

@@ -49,11 +49,20 @@ fn main() {
 
 fn dispatch(args: &[String]) -> Result<()> {
     match args.first().map(String::as_str) {
-        Some("run-fig") => run_fig(args.get(1).map(String::as_str).unwrap_or("list")),
-        Some("experiment") => experiment(args.get(1).map(String::as_str).unwrap_or("all")),
+        Some("run-fig") => {
+            let (which, flags) = split_positional(args.get(1..).unwrap_or(&[]), "list");
+            parse_threads(flags)?;
+            run_fig(which)
+        }
+        Some("experiment") => {
+            let (which, flags) = split_positional(args.get(1..).unwrap_or(&[]), "all");
+            parse_threads(flags)?;
+            experiment(which)
+        }
         Some("sweep") => sweep(&args[1..]),
         Some("serve") => serve(&args[1..]),
         Some("serve-real") => serve_real(&args[1..]),
+        Some("bench-compare") => bench_compare(&args[1..]),
         Some("profile") => {
             print!("{}", ex::fig03::run());
             Ok(())
@@ -82,21 +91,78 @@ fn print_usage() {
         "gpulets — multi-model inference serving with GPU spatial partitioning\n\
          \n\
          USAGE:\n\
-         \x20 gpulets run-fig <03|04|05|06|09|12|13|14|15|16|all|list>\n\
-         \x20 gpulets sweep [--scheduler NAME|all] [--gpus N]\n\
+         \x20 gpulets run-fig <03|04|05|06|09|12|13|14|15|16|all|list> [--threads N]\n\
+         \x20 gpulets sweep [--scheduler NAME|all] [--gpus N] [--threads N]\n\
          \x20 gpulets serve [--scenario NAME] [--scale K] [--config F] [--algo A]\n\
          \x20               [--gpus N] [--duration S] [--seed X] [--rate model=R]...\n\
          \x20 gpulets serve-real [--artifacts DIR] [--duration S] [--rate model=R]...\n\
-         \x20 gpulets experiment <fig3|...|fig16|tables|all>\n\
+         \x20 gpulets experiment <fig3|...|fig16|tables|all> [--threads N]\n\
+         \x20 gpulets bench-compare <baseline.json> <fresh.json>\n\
          \x20 gpulets profile | models | scenarios | help\n\
          \n\
          schedulers: gpulet gpulet+int sbp sbp+part selftune ideal\n\
          scenarios:  equal long-only short-skew game traffic\n\
          \n\
+         --threads N caps the experiment worker pool (default: all\n\
+         cores, or GPULETS_THREADS); results are byte-identical for\n\
+         any N — only wall time changes.\n\
+         \n\
          run-fig writes BENCH_fig*.json (same envelope as the cargo\n\
          bench targets); sweep writes BENCH_sweep_schedulability.json\n\
-         (plain counts, no timing envelope). Both land in the CWD."
+         (plain counts, no timing envelope). Both land in the CWD.\n\
+         bench-compare diffs two BENCH files by bench name and prints\n\
+         per-bench speedups (baseline mean / fresh mean)."
     );
+}
+
+/// Split an optional leading positional argument from trailing flags:
+/// `(positional_or_default, flags)`. Lets `run-fig --threads 4` work
+/// without a figure name instead of misparsing the flag as one.
+fn split_positional<'a>(args: &'a [String], default: &'a str) -> (&'a str, &'a [String]) {
+    match args.first() {
+        Some(first) if !first.starts_with("--") => (first.as_str(), &args[1..]),
+        _ => (default, args),
+    }
+}
+
+/// Validate and apply a `--threads` flag value (shared by every
+/// subcommand that accepts the flag).
+fn set_threads_flag(val: Option<&String>) -> Result<()> {
+    let n: usize = val
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n >= 1)
+        .ok_or_else(|| gpulets::Error::Other("--threads expects an integer >= 1".into()))?;
+    gpulets::util::par::set_threads(n);
+    Ok(())
+}
+
+/// Parse a trailing `--threads N` (the only flag `run-fig` takes) and
+/// configure the experiment worker pool.
+fn parse_threads(args: &[String]) -> Result<()> {
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--threads" => {
+                set_threads_flag(args.get(i + 1))?;
+                i += 2;
+            }
+            other => {
+                return Err(gpulets::Error::Other(format!("unknown flag {other:?}")));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `bench-compare`: diff a fresh BENCH file against a baseline.
+fn bench_compare(args: &[String]) -> Result<()> {
+    let (Some(baseline), Some(fresh)) = (args.first(), args.get(1)) else {
+        return Err(gpulets::Error::Other(
+            "bench-compare expects <baseline.json> <fresh.json>".into(),
+        ));
+    };
+    print!("{}", benchkit::compare_files(baseline, fresh)?);
+    Ok(())
 }
 
 /// `run-fig`: drive one (or all) figure experiments through the shared
@@ -207,6 +273,7 @@ fn sweep(args: &[String]) -> Result<()> {
                     .and_then(|v| v.parse().ok())
                     .ok_or_else(|| gpulets::Error::Other("--gpus expects an integer".into()))?;
             }
+            "--threads" => set_threads_flag(args.get(i + 1))?,
             other => {
                 return Err(gpulets::Error::Other(format!("unknown flag {other:?}")));
             }
@@ -225,8 +292,10 @@ fn sweep(args: &[String]) -> Result<()> {
 
     let scenarios = enumerate_all_scenarios();
     println!(
-        "# schedulability sweep: {} scenarios on {gpus} GPUs (rates 0/200/400/600)",
-        scenarios.len()
+        "# schedulability sweep: {} scenarios on {gpus} GPUs (rates 0/200/400/600), \
+         {} worker threads",
+        scenarios.len(),
+        gpulets::util::par::threads()
     );
     println!("{:<12} {:>11} {:>10}", "scheduler", "schedulable", "elapsed");
     let mut entries = Vec::new();
@@ -234,10 +303,15 @@ fn sweep(args: &[String]) -> Result<()> {
         let algo = Algo::parse(name)?;
         let (scheduler, ctx) = scheduler_for(algo, gpus);
         let t0 = std::time::Instant::now();
-        let n = scenarios
-            .iter()
-            .filter(|sc| scheduler.schedule(&ctx, &sc.rates).is_ok())
-            .count();
+        // Independent per-scenario verdicts: fan out over the worker
+        // pool; the count (and the JSON below) is thread-count
+        // independent.
+        let n = gpulets::util::par::par_map(&scenarios, |sc| {
+            scheduler.schedule(&ctx, &sc.rates).is_ok()
+        })
+        .into_iter()
+        .filter(|&ok| ok)
+        .count();
         let dt = t0.elapsed().as_secs_f64();
         println!("{:<12} {:>6}/{:<4} {:>9.2}s", name, n, scenarios.len(), dt);
         entries.push(obj(vec![
@@ -295,6 +369,7 @@ fn parse_flags(args: &[String], cfg: &mut Config) -> Result<()> {
                 })?
             }
             "--artifacts" => cfg.artifacts_dir = need("--artifacts")?,
+            "--threads" => set_threads_flag(val.as_ref())?,
             "--rate" => {
                 let spec = need("--rate")?;
                 let (name, rate) = spec.split_once('=').ok_or_else(|| {

@@ -120,6 +120,13 @@ pub fn slo_timeout_ms(slo_ms: f64, exec_ms: f64) -> f64 {
     (slo_ms - 1.25 * exec_ms).max(0.2)
 }
 
+/// Integer-microsecond variant of [`slo_timeout_ms`] for the sim-clock
+/// path (`simclock` keeps time in µs): `slo - 1.25 * exec`, floored at
+/// 200 µs, all in exact integer arithmetic.
+pub fn slo_timeout_us(slo_us: u64, exec_us: u64) -> u64 {
+    slo_us.saturating_sub(exec_us + exec_us / 4).max(200)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,5 +192,20 @@ mod tests {
     fn timeout_formula() {
         assert!((slo_timeout_ms(100.0, 20.0) - 75.0).abs() < 1e-12);
         assert_eq!(slo_timeout_ms(10.0, 20.0), 0.2); // clamped
+    }
+
+    #[test]
+    fn timeout_formula_us_matches_ms_domain() {
+        assert_eq!(slo_timeout_us(100_000, 20_000), 75_000);
+        assert_eq!(slo_timeout_us(10_000, 20_000), 200); // clamped to 0.2 ms
+        assert_eq!(slo_timeout_us(0, 0), 200);
+        // Agrees with the f64 formula at µs resolution.
+        for (slo, exec) in [(5_000u64, 1_234u64), (44_000, 7_000), (136_000, 64_000)] {
+            let want = (slo_timeout_ms(slo as f64 / 1000.0, exec as f64 / 1000.0)
+                * 1000.0)
+                .round() as u64;
+            let got = slo_timeout_us(slo, exec);
+            assert!(got.abs_diff(want) <= 1, "slo={slo} exec={exec}: {got} vs {want}");
+        }
     }
 }

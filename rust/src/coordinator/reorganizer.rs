@@ -103,10 +103,23 @@ impl<'a, S: Scheduler> AdaptiveServer<'a, S> {
             }
 
             // This window's arrivals (times re-based to window start).
+            // Boundaries are compared in the sim clock's integer
+            // microseconds so a window cut is exact: every arrival lands
+            // in exactly one window even when `t * 1000.0` is not
+            // representable, and the re-based times match what the
+            // simulator would quantize to anyway.
+            let (w0_us, w1_us) = (
+                crate::simclock::ms_to_us(t * 1000.0),
+                crate::simclock::ms_to_us(t_end * 1000.0),
+            );
             let window: Vec<Arrival> = arrivals
                 .iter()
-                .filter(|a| a.time_ms >= t * 1000.0 && a.time_ms < t_end * 1000.0)
-                .map(|a| Arrival { time_ms: a.time_ms - t * 1000.0, ..*a })
+                .map(|a| (crate::simclock::ms_to_us(a.time_ms), a))
+                .filter(|&(u, _)| u >= w0_us && u < w1_us)
+                .map(|(u, a)| Arrival {
+                    time_ms: crate::simclock::us_to_ms(u - w0_us),
+                    ..*a
+                })
                 .collect();
 
             // Observe rates.

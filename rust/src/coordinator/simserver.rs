@@ -17,6 +17,11 @@
 //! The frontend logic mirrors `batcher`: per-(let, model) FIFO queues,
 //! dispatch on batch-full or duty timeout, hopeless requests dropped
 //! and counted as violations.
+//!
+//! Time runs on the integer-microsecond `simclock` (exact deadline
+//! compares, no f64 heap ordering); the per-assignment execution
+//! estimates, SLO bounds, and duty timeouts are converted to µs once at
+//! simulation start instead of being re-derived per event.
 
 use std::collections::VecDeque;
 
@@ -26,7 +31,7 @@ use crate::metrics::Report;
 use crate::models::profile;
 use crate::perfmodel::LatencyModel;
 use crate::sched::Schedule;
-use crate::simclock::EventQueue;
+use crate::simclock::{ms_to_us, us_to_ms, EventQueue};
 use crate::util::rng::Pcg32;
 use crate::workload::Arrival;
 
@@ -55,9 +60,22 @@ enum Event {
 }
 
 struct AsgState {
-    queue: VecDeque<(u64, f64)>, // (req id, arrival ms)
+    queue: VecDeque<(u64, u64)>, // (req id, arrival µs)
     /// Monotone token invalidating stale Timeout events.
     timer_token: u64,
+}
+
+/// Precomputed per-assignment constants (µs domain), flat-indexed in
+/// parallel with the schedule's assignments.
+struct AsgConst {
+    /// Planned-batch execution estimate at the effective fraction.
+    exec_est_us: u64,
+    /// SLO bound.
+    slo_us: u64,
+    /// Duty timeout (`batcher::slo_timeout_us` over the let's cycle).
+    timeout_us: u64,
+    /// True SLO in ms for metrics keying.
+    slo_ms: f64,
 }
 
 struct LetState {
@@ -69,7 +87,7 @@ struct LetState {
     /// Model/batch/fraction of the in-flight execution (for interference).
     running: Option<(usize, u32)>, // (asg_idx, actual batch)
     /// In-flight requests: (asg_idx, completions at Done)
-    inflight: Vec<(usize, u64, f64)>, // (asg_idx, id, arrival)
+    inflight: Vec<(usize, u64, u64)>, // (asg_idx, id, arrival µs)
 }
 
 /// Simulate `schedule` over `arrivals`; `window_s` is the measurement
@@ -111,19 +129,34 @@ pub fn simulate(
         })
         .collect();
 
-    // Per-let duty cycle (ms): the sum of all assignments' planned
+    // Per-let duty cycle: the sum of all assignments' planned
     // executions. The batching timeout must leave room for a full duty
     // cycle (the request may queue behind every co-assigned model's
-    // slot), not just the model's own execution.
-    let duties: Vec<f64> = schedule
+    // slot), not just the model's own execution. All per-assignment
+    // constants are derived once here, in µs.
+    let consts: Vec<Vec<AsgConst>> = schedule
         .lets
         .iter()
         .map(|lp| {
             let p_exec = exec_fraction(cfg.mode, lp.spec.fraction());
+            let duty_us: u64 = lp
+                .assignments
+                .iter()
+                .map(|a| ms_to_us(lm.latency_ms(a.model, a.batch, p_exec)))
+                .sum();
             lp.assignments
                 .iter()
-                .map(|a| lm.latency_ms(a.model, a.batch, p_exec))
-                .sum()
+                .map(|a| {
+                    let slo_ms = lm.slo_ms(a.model);
+                    let slo_us = ms_to_us(slo_ms);
+                    AsgConst {
+                        exec_est_us: ms_to_us(lm.latency_ms(a.model, a.batch, p_exec)),
+                        slo_us,
+                        timeout_us: super::batcher::slo_timeout_us(slo_us, duty_us),
+                        slo_ms,
+                    }
+                })
+                .collect()
         })
         .collect();
 
@@ -133,10 +166,11 @@ pub fn simulate(
     let mut gpu_waiters: Vec<VecDeque<usize>> = vec![VecDeque::new(); num_gpus];
 
     let mut q: EventQueue<Event> = EventQueue::new();
-    for (i, a) in arrivals.iter().enumerate() {
-        q.push_at(a.time_ms, Event::Arrive(i));
+    let arr_us: Vec<u64> = arrivals.iter().map(|a| ms_to_us(a.time_ms)).collect();
+    for (i, &t) in arr_us.iter().enumerate() {
+        q.push_at_us(t, Event::Arrive(i));
     }
-    let horizon = arrivals.last().map_or(0.0, |a| a.time_ms) + cfg.drain_ms;
+    let horizon = arr_us.last().copied().unwrap_or(0) + ms_to_us(cfg.drain_ms);
 
     while let Some((now, ev)) = q.pop() {
         if now > horizon {
@@ -159,7 +193,7 @@ pub fn simulate(
                     .min_by(|(i1, r1), (i2, r2)| {
                         let k1 = served[m.index()][*i1] / r1.2.max(1e-9);
                         let k2 = served[m.index()][*i2] / r2.2.max(1e-9);
-                        k1.partial_cmp(&k2).unwrap()
+                        k1.total_cmp(&k2)
                     })
                     .unwrap();
                 let _ = w;
@@ -168,8 +202,8 @@ pub fn simulate(
                 let b_target = schedule.lets[li].assignments[ai].batch as usize;
                 if !lets[li].busy && lets[li].asgs[ai].queue.len() >= b_target {
                     try_start(
-                        li, lm, gt, schedule, &duties, &mut lets, &mut gpu_busy,
-                        &mut gpu_waiters, &mut q, cfg, &mut rng, &mut report, now,
+                        li, lm, gt, schedule, &consts, &mut lets, &mut gpu_busy,
+                        &mut gpu_waiters, &mut q, cfg, &mut rng, &mut report,
                     );
                 } else if lets[li].asgs[ai].queue.len() == 1 {
                     // Arm the duty timeout for the queue head.
@@ -178,11 +212,8 @@ pub fn simulate(
                         st.timer_token += 1;
                         st.timer_token
                     };
-                    let asg = &schedule.lets[li].assignments[ai];
-                    let timeout =
-                        super::batcher::slo_timeout_ms(lm.slo_ms(asg.model), duties[li]);
-                    q.push_after(
-                        timeout,
+                    q.push_after_us(
+                        consts[li][ai].timeout_us,
                         Event::Timeout { let_idx: li, asg_idx: ai, armed_at: token },
                     );
                 }
@@ -196,8 +227,8 @@ pub fn simulate(
                 }
                 if !lets[let_idx].busy {
                     try_start(
-                        let_idx, lm, gt, schedule, &duties, &mut lets, &mut gpu_busy,
-                        &mut gpu_waiters, &mut q, cfg, &mut rng, &mut report, now,
+                        let_idx, lm, gt, schedule, &consts, &mut lets, &mut gpu_busy,
+                        &mut gpu_waiters, &mut q, cfg, &mut rng, &mut report,
                     );
                 } else {
                     // Re-arm: check again shortly after the current run.
@@ -206,7 +237,7 @@ pub fn simulate(
                         st.timer_token += 1;
                         st.timer_token
                     };
-                    q.push_after(0.5, Event::Timeout { let_idx, asg_idx, armed_at: token });
+                    q.push_after_us(500, Event::Timeout { let_idx, asg_idx, armed_at: token });
                 }
             }
             Event::Done { let_idx } => {
@@ -214,8 +245,9 @@ pub fn simulate(
                 // Complete in-flight requests.
                 let inflight = std::mem::take(&mut lets[let_idx].inflight);
                 for (ai, _id, arr) in inflight {
+                    let c = &consts[let_idx][ai];
                     let m = schedule.lets[let_idx].assignments[ai].model;
-                    report.model_mut(m, lm.slo_ms(m)).record(now - arr);
+                    report.model_mut(m, c.slo_ms).record(us_to_ms(now - arr));
                 }
                 lets[let_idx].busy = false;
                 lets[let_idx].running = None;
@@ -223,16 +255,16 @@ pub fn simulate(
                     gpu_busy[gpu] = false;
                     if let Some(waiter) = gpu_waiters[gpu].pop_front() {
                         try_start(
-                            waiter, lm, gt, schedule, &duties, &mut lets, &mut gpu_busy,
-                            &mut gpu_waiters, &mut q, cfg, &mut rng, &mut report, now,
+                            waiter, lm, gt, schedule, &consts, &mut lets, &mut gpu_busy,
+                            &mut gpu_waiters, &mut q, cfg, &mut rng, &mut report,
                         );
                     }
                 }
                 // Keep draining this let's own queues.
                 if !lets[let_idx].busy {
                     try_start(
-                        let_idx, lm, gt, schedule, &duties, &mut lets, &mut gpu_busy,
-                        &mut gpu_waiters, &mut q, cfg, &mut rng, &mut report, now,
+                        let_idx, lm, gt, schedule, &consts, &mut lets, &mut gpu_busy,
+                        &mut gpu_waiters, &mut q, cfg, &mut rng, &mut report,
                     );
                 }
             }
@@ -244,12 +276,12 @@ pub fn simulate(
         for (ai, st) in ls.asgs.iter_mut().enumerate() {
             let m = schedule.lets[li].assignments[ai].model;
             for _ in st.queue.drain(..) {
-                report.model_mut(m, lm.slo_ms(m)).record_drop();
+                report.model_mut(m, consts[li][ai].slo_ms).record_drop();
             }
         }
         for (ai, _, _) in ls.inflight.drain(..) {
             let m = schedule.lets[li].assignments[ai].model;
-            report.model_mut(m, lm.slo_ms(m)).record_drop();
+            report.model_mut(m, consts[li][ai].slo_ms).record_drop();
         }
     }
     report
@@ -264,7 +296,7 @@ fn try_start(
     lm: &LatencyModel,
     gt: &GroundTruth,
     schedule: &Schedule,
-    duties: &[f64],
+    consts: &[Vec<AsgConst>],
     lets: &mut [LetState],
     gpu_busy: &mut [bool],
     gpu_waiters: &mut [VecDeque<usize>],
@@ -272,11 +304,11 @@ fn try_start(
     cfg: &SimConfig,
     rng: &mut Pcg32,
     report: &mut Report,
-    now: f64,
 ) {
     if lets[let_idx].busy {
         return;
     }
+    let now = q.now_us();
     let lp = &schedule.lets[let_idx];
     let n_asgs = lp.assignments.len();
 
@@ -285,22 +317,20 @@ fn try_start(
     for k in 0..n_asgs {
         let ai = (lets[let_idx].next_asg + k) % n_asgs;
         let asg = &lp.assignments[ai];
-        let p_exec = exec_fraction(cfg.mode, lp.spec.fraction());
-        let exec_est = lm.latency_ms(asg.model, asg.batch, p_exec);
-        // Drop hopeless heads first.
-        let slo = lm.slo_ms(asg.model);
+        let c = &consts[let_idx][ai];
+        // Drop hopeless heads first: even starting right now, the
+        // request would finish past its SLO.
         let st = &mut lets[let_idx].asgs[ai];
         let before = st.queue.len();
-        st.queue.retain(|&(_, arr)| now + exec_est - arr <= slo);
+        st.queue.retain(|&(_, arr)| now + c.exec_est_us <= arr + c.slo_us);
         let dropped = before - st.queue.len();
         for _ in 0..dropped {
-            report.model_mut(asg.model, slo).record_drop();
+            report.model_mut(asg.model, c.slo_ms).record_drop();
         }
         if !st.queue.is_empty() {
             let full = st.queue.len() >= asg.batch as usize;
-            let head_wait = now - st.queue.front().unwrap().1;
-            let timeout = super::batcher::slo_timeout_ms(slo, duties[let_idx]);
-            if full || head_wait >= timeout - 1e-9 {
+            let head_arr = st.queue.front().unwrap().1;
+            if full || now - head_arr >= c.timeout_us {
                 chosen = Some(ai);
                 break;
             }
@@ -309,8 +339,8 @@ fn try_start(
                 st.timer_token += 1;
                 st.timer_token
             };
-            q.push_at(
-                st.queue.front().unwrap().1 + timeout,
+            q.push_at_us(
+                head_arr + c.timeout_us,
                 Event::Timeout { let_idx, asg_idx: ai, armed_at: token },
             );
         }
@@ -372,7 +402,7 @@ fn try_start(
     lets[let_idx].running = Some((ai, b_actual));
     lets[let_idx].inflight = inflight;
     lets[let_idx].next_asg = (ai + 1) % n_asgs;
-    q.push_after(exec, Event::Done { let_idx });
+    q.push_after_us(ms_to_us(exec), Event::Done { let_idx });
 }
 
 /// Effective execution fraction under a sharing mode: without static

@@ -4,6 +4,7 @@
 
 use crate::sched::{Scheduler, SquishyBinPacking};
 use crate::util::json::{obj, Json};
+use crate::util::par;
 use crate::workload::enumerate_all_scenarios;
 
 use super::common::{paper_ctx, Runnable, RunOutput};
@@ -17,18 +18,16 @@ pub struct Fig04 {
 pub fn compute() -> Fig04 {
     let ctx = paper_ctx(false);
     let scenarios = enumerate_all_scenarios();
-    let plain = SquishyBinPacking::baseline();
-    let part = SquishyBinPacking::with_even_partitioning();
-    let mut n_plain = 0;
-    let mut n_part = 0;
-    for sc in &scenarios {
-        if plain.schedule(&ctx, &sc.rates).is_ok() {
-            n_plain += 1;
-        }
-        if part.schedule(&ctx, &sc.rates).is_ok() {
-            n_part += 1;
-        }
-    }
+    // Independent per-scenario verdicts: sweep in parallel, merge in
+    // input order (identical counts for any `--threads N`).
+    let verdicts = par::par_map(&scenarios, |sc| {
+        (
+            SquishyBinPacking::baseline().schedule(&ctx, &sc.rates).is_ok(),
+            SquishyBinPacking::with_even_partitioning().schedule(&ctx, &sc.rates).is_ok(),
+        )
+    });
+    let n_plain = verdicts.iter().filter(|&&(p, _)| p).count();
+    let n_part = verdicts.iter().filter(|&&(_, q)| q).count();
     Fig04 { sbp_plain: n_plain, sbp_partitioned: n_part, total: scenarios.len() }
 }
 

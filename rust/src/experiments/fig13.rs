@@ -26,22 +26,32 @@ pub fn compute(sim_duration_s: f64) -> Vec<Row> {
     let gp = ElasticPartitioning::gpulet();
     let gi = ElasticPartitioning::gpulet_int();
 
-    eval_workloads()
+    // Workloads are independent: probe all five stress points on the
+    // worker pool; rows come back in workload order.
+    let workloads = eval_workloads();
+    let probed = crate::util::par::par_map(&workloads, |(_, base)| {
+        // The stress point: the highest rate the oblivious variant
+        // still accepts (the paper probes until both say no).
+        let k = max_schedulable(&ctx_plain, &gp, base);
+        let rates = scaled(base, k);
+        let viol_gp = match gp.schedule(&ctx_plain, &rates) {
+            Ok(s) => violation_rate_of(&ctx_plain, &s, &rates, sim_duration_s, 131),
+            Err(_) => 1.0,
+        };
+        let viol_gi = gi
+            .schedule(&ctx_int, &rates)
+            .ok()
+            .map(|s| violation_rate_of(&ctx_int, &s, &rates, sim_duration_s, 131));
+        (k, viol_gp, viol_gi)
+    });
+    workloads
         .into_iter()
-        .map(|(name, base)| {
-            // The stress point: the highest rate the oblivious variant
-            // still accepts (the paper probes until both say no).
-            let k = max_schedulable(&ctx_plain, &gp, &base);
-            let rates = scaled(&base, k);
-            let viol_gp = match gp.schedule(&ctx_plain, &rates) {
-                Ok(s) => violation_rate_of(&ctx_plain, &s, &rates, sim_duration_s, 131),
-                Err(_) => 1.0,
-            };
-            let viol_gi = gi
-                .schedule(&ctx_int, &rates)
-                .ok()
-                .map(|s| violation_rate_of(&ctx_int, &s, &rates, sim_duration_s, 131));
-            Row { workload: name, scale: k, viol_gpulet: viol_gp, viol_gpulet_int: viol_gi }
+        .zip(probed)
+        .map(|((name, _), (k, viol_gp, viol_gi))| Row {
+            workload: name,
+            scale: k,
+            viol_gpulet: viol_gp,
+            viol_gpulet_int: viol_gi,
         })
         .collect()
 }

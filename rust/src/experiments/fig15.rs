@@ -4,6 +4,7 @@
 
 use crate::sched::{ElasticPartitioning, IdealScheduler, Scheduler};
 use crate::util::json::{obj, Json};
+use crate::util::par;
 use crate::workload::enumerate_all_scenarios;
 
 use super::common::{paper_ctx, Runnable, RunOutput};
@@ -19,15 +20,21 @@ pub struct Fig15 {
 pub fn compute() -> Fig15 {
     let ctx_int = paper_ctx(true);
     let ctx_ideal = paper_ctx(false);
-    let gi = ElasticPartitioning::gpulet_int();
-    let ideal = IdealScheduler;
     let scenarios = enumerate_all_scenarios();
+    // Scenarios are independent: fan the sweep out over the worker pool
+    // (`--threads` / GPULETS_THREADS). Per-scenario verdicts come back
+    // in input order, so the aggregate is identical for any thread
+    // count.
+    let verdicts = par::par_map(&scenarios, |sc| {
+        let ok_ideal = IdealScheduler.schedule(&ctx_ideal, &sc.rates).is_ok();
+        let ok_gi =
+            ElasticPartitioning::gpulet_int().schedule(&ctx_int, &sc.rates).is_ok();
+        (ok_ideal, ok_gi)
+    });
     let mut n_ideal = 0;
     let mut n_gi = 0;
     let mut gap = 0;
-    for sc in &scenarios {
-        let ok_ideal = ideal.schedule(&ctx_ideal, &sc.rates).is_ok();
-        let ok_gi = gi.schedule(&ctx_int, &sc.rates).is_ok();
+    for (ok_ideal, ok_gi) in verdicts {
         n_ideal += ok_ideal as usize;
         n_gi += ok_gi as usize;
         gap += (ok_ideal && !ok_gi) as usize;

@@ -4,6 +4,7 @@
 
 use crate::sched::{ElasticPartitioning, IdealScheduler};
 use crate::util::json::{obj, Json};
+use crate::util::par;
 
 use super::common::{eval_workloads, max_schedulable, paper_ctx, Runnable, RunOutput};
 
@@ -26,14 +27,28 @@ impl Row {
 pub fn compute() -> Vec<Row> {
     let ctx_int = paper_ctx(true);
     let ctx_ideal = paper_ctx(false);
-    let gi = ElasticPartitioning::gpulet_int();
-    let ideal = IdealScheduler;
-    eval_workloads()
+    // The per-workload max-rate bisections are independent: run the
+    // (workload × scheduler) grid on the worker pool and reassemble in
+    // fixed order (byte-identical output for any `--threads N`).
+    let workloads = eval_workloads();
+    let tasks: Vec<(usize, bool)> = (0..workloads.len())
+        .flat_map(|w| [(w, false), (w, true)])
+        .collect();
+    let scales = par::par_map(&tasks, |&(w, int_variant)| {
+        let base = &workloads[w].1;
+        if int_variant {
+            max_schedulable(&ctx_int, &ElasticPartitioning::gpulet_int(), base)
+        } else {
+            max_schedulable(&ctx_ideal, &IdealScheduler, base)
+        }
+    });
+    workloads
         .into_iter()
-        .map(|(name, base)| Row {
+        .enumerate()
+        .map(|(w, (name, _))| Row {
             workload: name,
-            ideal_scale: max_schedulable(&ctx_ideal, &ideal, &base),
-            gpulet_int_scale: max_schedulable(&ctx_int, &gi, &base),
+            ideal_scale: scales[2 * w],
+            gpulet_int_scale: scales[2 * w + 1],
         })
         .collect()
 }

@@ -1,0 +1,118 @@
+//! Memoized scheduling capacities — the `(max_rate, best_batch)` table
+//! every scheduler inner loop reads instead of rescanning `BATCHES`.
+//!
+//! `LatencyModel::max_rate` and `max_batch_within` scan all six batch
+//! sizes per call; the schedulers call them inside feasibility loops
+//! that run per model × per candidate gpu-let × per placement round, so
+//! a single 1,023-scenario sweep re-derives the same ~30 grid values
+//! millions of times. A `CapacityTable` computes each once per
+//! `SchedCtx` over the (model, partition) grid — like `ProfileTable`,
+//! it is the artifact an offline profiling pass would hand the online
+//! planner. Values are produced by the exact same `LatencyModel` calls
+//! the schedulers used to make inline (identical floating-point
+//! results, equivalence-tested in `tests/perf_refactor_equivalence.rs`).
+
+use crate::models::ModelId;
+use crate::perfmodel::latency::knee;
+use crate::perfmodel::profile_table::{part_index, PARTITIONS};
+use crate::perfmodel::LatencyModel;
+
+const NP: usize = PARTITIONS.len();
+
+/// Precomputed per-(model, partition) scheduling capacities.
+#[derive(Clone, Debug)]
+pub struct CapacityTable {
+    /// `LatencyModel::max_rate(m, p)` per grid cell: None = the model
+    /// cannot meet its SLO on that partition even at batch 1.
+    rate: [[Option<(f64, u32)>; NP]; 5],
+    /// `LatencyModel::max_batch_within(m, p, slo/2)` per grid cell —
+    /// the Algorithm-1 line 27 batch pick for a solo duty cycle.
+    half_slo_batch: [[Option<u32>; NP]; 5],
+    /// `MaxEfficientPartition`: knee of the affordable-rate curve.
+    knees: [u32; 5],
+}
+
+impl CapacityTable {
+    /// Build over the full (model, partition) grid.
+    pub fn build(lm: &LatencyModel) -> Self {
+        let mut rate = [[None; NP]; 5];
+        let mut half_slo_batch = [[None; NP]; 5];
+        let mut knees = [0u32; 5];
+        for m in ModelId::ALL {
+            for (pi, &pct) in PARTITIONS.iter().enumerate() {
+                let p = pct as f64 / 100.0;
+                rate[m.index()][pi] = lm.max_rate(m, p);
+                half_slo_batch[m.index()][pi] =
+                    lm.max_batch_within(m, p, lm.slo_ms(m) / 2.0);
+            }
+            let curve: Vec<(u32, f64)> = PARTITIONS
+                .iter()
+                .enumerate()
+                .map(|(pi, &pct)| (pct, rate[m.index()][pi].map_or(0.0, |(r, _)| r)))
+                .collect();
+            knees[m.index()] = knee(&curve);
+        }
+        CapacityTable { rate, half_slo_batch, knees }
+    }
+
+    /// Memoized `max_rate`. Outer `None` = `size_pct` is not a grid
+    /// size (callers fall back to the latency model); inner `None` =
+    /// infeasible even at batch 1.
+    pub fn lookup_rate(&self, m: ModelId, size_pct: u32) -> Option<Option<(f64, u32)>> {
+        part_index(size_pct).map(|pi| self.rate[m.index()][pi])
+    }
+
+    /// Memoized `max_batch_within(m, p, slo/2)`; outer/inner `None` as
+    /// in [`CapacityTable::lookup_rate`].
+    pub fn lookup_half_slo_batch(&self, m: ModelId, size_pct: u32) -> Option<Option<u32>> {
+        part_index(size_pct).map(|pi| self.half_slo_batch[m.index()][pi])
+    }
+
+    /// `MaxEfficientPartition` (Algorithm 1): knee of the model's
+    /// affordable-rate curve over the partition grid.
+    pub fn knee_pct(&self, m: ModelId) -> u32 {
+        self.knees[m.index()]
+    }
+
+    /// The memoized affordable-rate curve (infeasible cells carry 0.0),
+    /// in ascending partition order — same shape as
+    /// `LatencyModel::rate_curve(m, &PARTITIONS)`.
+    pub fn rate_curve(&self, m: ModelId) -> Vec<(u32, f64)> {
+        PARTITIONS
+            .iter()
+            .enumerate()
+            .map(|(pi, &pct)| (pct, self.rate[m.index()][pi].map_or(0.0, |(r, _)| r)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_matches_latency_model() {
+        let lm = LatencyModel::new();
+        let cap = CapacityTable::build(&lm);
+        for m in ModelId::ALL {
+            for &pct in &PARTITIONS {
+                let p = pct as f64 / 100.0;
+                assert_eq!(cap.lookup_rate(m, pct).unwrap(), lm.max_rate(m, p));
+                assert_eq!(
+                    cap.lookup_half_slo_batch(m, pct).unwrap(),
+                    lm.max_batch_within(m, p, lm.slo_ms(m) / 2.0)
+                );
+            }
+            assert_eq!(cap.knee_pct(m), knee(&lm.rate_curve(m, &PARTITIONS)));
+            assert_eq!(cap.rate_curve(m), lm.rate_curve(m, &PARTITIONS));
+        }
+    }
+
+    #[test]
+    fn off_grid_sizes_report_none() {
+        let cap = CapacityTable::build(&LatencyModel::new());
+        assert!(cap.lookup_rate(ModelId::Vgg, 30).is_none());
+        assert!(cap.lookup_half_slo_batch(ModelId::Vgg, 99).is_none());
+        assert!(cap.lookup_rate(ModelId::Vgg, 100).is_some());
+    }
+}

@@ -7,10 +7,12 @@
 //! §3), which the discrete `ProfileTable` snapshots exactly like the
 //! paper's offline profiling pass would.
 
+pub mod capacity;
 pub mod latency;
 pub mod profile_table;
 pub mod rate;
 
+pub use capacity::CapacityTable;
 pub use latency::LatencyModel;
 pub use profile_table::ProfileTable;
 pub use rate::RateMonitor;

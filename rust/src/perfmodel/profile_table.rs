@@ -5,8 +5,13 @@
 //! partition) grid — exactly the artifact the paper's profiler produces
 //! on real gpu-lets. Lookups between grid points are conservative
 //! (round batch up, partition down) so scheduling errs on the safe side.
-
-use std::collections::BTreeMap;
+//!
+//! Storage is a dense flat array indexed arithmetically
+//! (model-major, then batch, then partition — see [`ProfileTable::rows`]
+//! for the documented order), not a tree map: every lookup is a couple
+//! of table scans over 6-element constant arrays plus one array index,
+//! with no pointer chasing and no per-build allocations beyond the one
+//! backing vector.
 
 use crate::models::ModelId;
 use crate::perfmodel::{LatencyModel, BATCHES};
@@ -14,31 +19,57 @@ use crate::perfmodel::{LatencyModel, BATCHES};
 /// Valid gpu-let sizes in percent (paper §3.2 split ratios + whole GPU).
 pub const PARTITIONS: [u32; 6] = [20, 40, 50, 60, 80, 100];
 
-/// Profiled latency grid for all models.
+/// Number of profiled batch sizes per model.
+const NB: usize = BATCHES.len();
+/// Number of profiled partition sizes per model.
+const NP: usize = PARTITIONS.len();
+
+/// Index of `b` in [`BATCHES`], if profiled.
+#[inline]
+fn batch_index(b: u32) -> Option<usize> {
+    BATCHES.iter().position(|&x| x == b)
+}
+
+/// Index of `p_pct` in [`PARTITIONS`], if profiled (shared with the
+/// capacity table, which indexes the same grid).
+#[inline]
+pub(crate) fn part_index(p_pct: u32) -> Option<usize> {
+    PARTITIONS.iter().position(|&x| x == p_pct)
+}
+
+/// Profiled latency grid for all models, stored dense.
 #[derive(Clone, Debug)]
 pub struct ProfileTable {
-    /// latency_ms[(model, batch, partition_pct)]
-    grid: BTreeMap<(ModelId, u32, u32), f64>,
+    /// `latency_ms[(m.index() * NB + batch_idx) * NP + part_idx]`.
+    grid: Vec<f64>,
 }
 
 impl ProfileTable {
     /// Build by "profiling" the latency substrate over the full grid —
     /// the sim-clock analogue of the paper's offline profiling pass.
     pub fn build(model: &LatencyModel) -> Self {
-        let mut grid = BTreeMap::new();
+        let mut grid = Vec::with_capacity(ModelId::ALL.len() * NB * NP);
         for m in ModelId::ALL {
             for &b in &BATCHES {
                 for &p in &PARTITIONS {
-                    grid.insert((m, b, p), model.latency_ms(m, b, p as f64 / 100.0));
+                    grid.push(model.latency_ms(m, b, p as f64 / 100.0));
                 }
             }
         }
         ProfileTable { grid }
     }
 
+    /// Flat index of a (model, batch index, partition index) cell.
+    #[inline]
+    fn idx(m: ModelId, bi: usize, pi: usize) -> usize {
+        (m.index() * NB + bi) * NP + pi
+    }
+
     /// Exact grid lookup.
     pub fn get(&self, m: ModelId, b: u32, p_pct: u32) -> Option<f64> {
-        self.grid.get(&(m, b, p_pct)).copied()
+        let bi = batch_index(b)?;
+        let pi = part_index(p_pct)?;
+        Some(self.grid[Self::idx(m, bi, pi)])
     }
 
     /// Conservative lookup for arbitrary (b, p): round the batch up to
@@ -46,9 +77,9 @@ impl ProfileTable {
     /// profiled size. Returns None if b exceeds the profiled maximum or
     /// p is below the smallest profiled partition.
     pub fn latency_ms(&self, m: ModelId, b: u32, p_pct: u32) -> Option<f64> {
-        let b_up = BATCHES.iter().copied().find(|&x| x >= b)?;
-        let p_down = PARTITIONS.iter().copied().rev().find(|&x| x <= p_pct)?;
-        self.get(m, b_up, p_down)
+        let bi = BATCHES.iter().position(|&x| x >= b)?;
+        let pi = PARTITIONS.iter().rposition(|&x| x <= p_pct)?;
+        Some(self.grid[Self::idx(m, bi, pi)])
     }
 
     /// Number of profiled grid points.
@@ -60,13 +91,22 @@ impl ProfileTable {
         self.grid.is_empty()
     }
 
-    /// Dump rows for one model (Fig 3 regeneration): (batch, partition, ms).
+    /// Dump rows for one model (Fig 3 regeneration): `(batch, partition,
+    /// ms)`, read directly from the model's own contiguous block of the
+    /// grid (no full-table scan).
+    ///
+    /// Row order is documented and stable: batches ascending in
+    /// [`BATCHES`] order (outer), partitions ascending in [`PARTITIONS`]
+    /// order (inner) — i.e. lexicographic in `(batch, partition)`.
     pub fn rows(&self, m: ModelId) -> Vec<(u32, u32, f64)> {
-        self.grid
-            .iter()
-            .filter(|((id, _, _), _)| *id == m)
-            .map(|(&(_, b, p), &l)| (b, p, l))
-            .collect()
+        let block = &self.grid[Self::idx(m, 0, 0)..Self::idx(m, 0, 0) + NB * NP];
+        let mut out = Vec::with_capacity(NB * NP);
+        for (bi, &b) in BATCHES.iter().enumerate() {
+            for (pi, &p) in PARTITIONS.iter().enumerate() {
+                out.push((b, p, block[bi * NP + pi]));
+            }
+        }
+        out
     }
 }
 
@@ -111,13 +151,27 @@ mod tests {
         assert!(t.latency_ms(ModelId::Lenet, 64, 100).is_none()); // b too big
         assert!(t.latency_ms(ModelId::Lenet, 1, 10).is_none()); // p too small
         assert!(t.latency_ms(ModelId::Lenet, 1, 100).is_some());
+        assert!(t.get(ModelId::Lenet, 3, 100).is_none()); // off-grid batch
+        assert!(t.get(ModelId::Lenet, 4, 30).is_none()); // off-grid partition
     }
 
     #[test]
-    fn rows_cover_one_model() {
+    fn rows_cover_one_model_in_documented_order() {
         let t = table();
-        let rows = t.rows(ModelId::Lenet);
-        assert_eq!(rows.len(), BATCHES.len() * PARTITIONS.len());
-        assert!(rows.iter().all(|&(_, _, l)| l > 0.0));
+        for m in ModelId::ALL {
+            let rows = t.rows(m);
+            assert_eq!(rows.len(), BATCHES.len() * PARTITIONS.len());
+            assert!(rows.iter().all(|&(_, _, l)| l > 0.0));
+            // Lexicographic (batch, partition) and grid-exact.
+            let mut i = 0;
+            for &b in &BATCHES {
+                for &p in &PARTITIONS {
+                    assert_eq!(rows[i].0, b);
+                    assert_eq!(rows[i].1, p);
+                    assert_eq!(rows[i].2, t.get(m, b, p).unwrap());
+                    i += 1;
+                }
+            }
+        }
     }
 }

@@ -18,7 +18,6 @@
 use crate::error::{Error, Result};
 use crate::gpu::gpulet::{split_of, GpuLetSpec};
 use crate::models::ModelId;
-use crate::perfmodel::latency::knee;
 use crate::perfmodel::profile_table::PARTITIONS;
 use crate::sched::types::{Assignment, LetPlan, SchedCtx, Schedule, Scheduler};
 
@@ -76,17 +75,12 @@ impl ElasticPartitioning {
         ElasticPartitioning { interference_aware: true }
     }
 
-    /// MAXEFFICIENTPARTITION: knee of the affordable-rate curve.
-    /// (Computed once per model per `schedule()` call — the curve only
-    /// depends on the profiled latency model, not on placements.)
-    fn max_efficient_partition(&self, ctx: &SchedCtx, m: ModelId) -> u32 {
-        knee(&ctx.lm.rate_curve(m, &PARTITIONS))
-    }
-
     /// MINREQUIREDPARTITION: smallest size sustaining `rate` solo.
+    /// (MAXEFFICIENTPARTITION is `ctx.knee_pct`, precomputed at context
+    /// build — the curve only depends on the profiled latency model.)
     fn min_required_partition(&self, ctx: &SchedCtx, m: ModelId, rate: f64) -> u32 {
         for &p in &PARTITIONS {
-            if let Some((r, _)) = ctx.lm.max_rate(m, p as f64 / 100.0) {
+            if let Some((r, _)) = ctx.max_rate(m, p) {
                 if r * crate::sched::types::CAPACITY_FRACTION >= rate {
                     return p;
                 }
@@ -170,10 +164,8 @@ impl ElasticPartitioning {
                 }
                 (plan.spec, worst)
             };
-            let p = spec.fraction();
             // Largest batch that could work on this partition at all.
-            let Some(max_b) = ctx.lm.max_batch_within(m, p, ctx.lm.slo_ms(m) / 2.0)
-            else {
+            let Some(max_b) = ctx.best_batch_half_slo(m, spec.size_pct) else {
                 continue;
             };
             // Find the largest batch whose merged duty cycle still fits.
@@ -224,10 +216,7 @@ impl ElasticPartitioning {
                     s.size_pct
                 };
                 let intf_key = if self.interference_aware {
-                    let b_guess = ctx
-                        .lm
-                        .max_batch_within(m, use_size as f64 / 100.0, ctx.lm.slo_ms(m) / 2.0)
-                        .unwrap_or(1);
+                    let b_guess = ctx.best_batch_half_slo(m, use_size).unwrap_or(1);
                     let probe = LetPlan {
                         spec: GpuLetSpec { gpu: s.gpu, size_pct: use_size },
                         assignments: vec![Assignment { model: m, batch: b_guess, rate: 0.0 }],
@@ -258,8 +247,9 @@ impl ElasticPartitioning {
 
             let p = use_spec.fraction();
             // Line 27: b = argmax_b L(b, size) <= SLO budget. The duty-
-            // cycle rule (2D <= SLO) makes the budget SLO/2 for a solo let.
-            let Some(b) = ctx.lm.max_batch_within(m, p, ctx.lm.slo_ms(m) / 2.0) else {
+            // cycle rule (2D <= SLO) makes the budget SLO/2 for a solo
+            // let; memoized per (model, partition) in the capacity table.
+            let Some(b) = ctx.best_batch_half_slo(m, use_spec.size_pct) else {
                 continue;
             };
             // Build the probe plan to evaluate interference (line 28).
@@ -334,6 +324,7 @@ impl Scheduler for ElasticPartitioning {
     }
 
     fn schedule(&self, ctx: &SchedCtx, rates: &[f64; 5]) -> Result<Schedule> {
+        crate::sched::types::validate_rates(rates)?;
         // Reset remain_gpulets: every GPU whole (lines 2-4).
         let mut remain: Vec<GpuLetSpec> = (0..ctx.num_gpus)
             .map(|gpu| GpuLetSpec { gpu, size_pct: 100 })
@@ -346,15 +337,7 @@ impl Scheduler for ElasticPartitioning {
             .map(|&m| (m, rates[m.index()]))
             .filter(|&(_, r)| r > 0.0)
             .collect();
-        models.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-
-        // Knees are placement-independent: compute once per *offered*
-        // model (most of the 1023-scenario population offers only a
-        // subset) instead of once per placement round.
-        let mut knees = [0u32; 5];
-        for &(m, _) in &models {
-            knees[m.index()] = self.max_efficient_partition(ctx, m);
-        }
+        models.sort_by(|a, b| b.1.total_cmp(&a.1));
 
         for (m, rate) in models {
             let mut remaining = rate;
@@ -366,7 +349,9 @@ impl Scheduler for ElasticPartitioning {
                         "{m}: no progress after {rounds} placement rounds"
                     )));
                 }
-                let p_eff = knees[m.index()];
+                // MAXEFFICIENTPARTITION: precomputed at context build
+                // (placement-independent knee of the rate curve).
+                let p_eff = ctx.knee_pct(m);
                 let p_req = self.min_required_partition(ctx, m, remaining);
                 let p_ideal = p_eff.min(p_req);
                 match self.find_best_fit(ctx, &mut remain, &mut alloc, m, p_ideal, remaining)

@@ -1,12 +1,34 @@
 //! Ideal (exhaustive) scheduler — the Fig 15 / Fig 16 comparator.
 //!
-//! Enumerates every per-GPU partition combination from the four cases
-//! the paper uses ({100}, {50,50}, {40,60}, {20,80}) — `4^N` layouts
-//! for `N` GPUs — and, for each, greedily packs the offered rates onto
-//! the fixed gpu-lets (temporal sharing allowed). The first layout that
-//! serves everything within SLOs proves schedulability; the search is
-//! exhaustive, so a `NotSchedulable` verdict is authoritative for this
-//! partition vocabulary and packer.
+//! Enumerates per-GPU partition combinations from the four cases the
+//! paper uses ({100}, {50,50}, {40,60}, {20,80}) and, for each, greedily
+//! packs the offered rates onto the fixed gpu-lets (temporal sharing
+//! allowed). The first layout that serves everything within SLOs proves
+//! schedulability; the search is exhaustive, so a `NotSchedulable`
+//! verdict is authoritative for this partition vocabulary and packer.
+//!
+//! ## Layout-multiset symmetry
+//!
+//! Physical GPUs are interchangeable: the packer's decisions depend only
+//! on gpu-let *sizes* (capacity, batch picks, merge headroom are all
+//! functions of `size_pct`), never on the GPU index, and feasibility is
+//! checked per let with no cross-GPU coupling. Two layouts whose per-GPU
+//! case assignments are permutations of each other therefore produce
+//! isomorphic packings — identical sizes, batches, and rates, with only
+//! the GPU labels permuted — and in particular the same schedulability
+//! verdict. The default search deduplicates the `4^N` digit vectors by
+//! their case *multiset* (for the paper's `N = 4` testbed: 256 layouts
+//! collapse to `C(4+4-1, 4) = 35` canonical ones, a 7.3× cut), visiting
+//! the first occurrence of each multiset in the original mixed-radix
+//! order so the found schedule matches what the full enumeration's
+//! earliest-success layout would contain up to GPU relabeling.
+//! `schedule_with(ctx, rates, false)` keeps the full enumeration as the
+//! equivalence baseline (tested over the whole 1,023-scenario
+//! population in `tests/perf_refactor_equivalence.rs`).
+//!
+//! Scratch buffers (`free`, the packing allocation, the layout vector,
+//! the sorted model list) are allocated once per `schedule` call and
+//! reused across all `try_assign` attempts.
 
 use crate::error::{Error, Result};
 use crate::gpu::gpulet::GpuLetSpec;
@@ -25,22 +47,23 @@ pub const GPU_CASES: [&[u32]; 4] = [&[100], &[50, 50], &[40, 60], &[20, 80]];
 pub struct IdealScheduler;
 
 impl IdealScheduler {
-    /// Greedy packer over a fixed gpu-let set. Returns a schedule iff
-    /// every model's full rate fits.
-    fn try_assign(ctx: &SchedCtx, lets: &[GpuLetSpec], rates: &[f64; 5]) -> Option<Schedule> {
-        let mut free: Vec<GpuLetSpec> = lets.to_vec();
+    /// Greedy packer over a fixed gpu-let set. On success `alloc` holds
+    /// a schedule covering every model's full rate; `free` and `alloc`
+    /// are caller-owned scratch reused across layouts.
+    fn try_assign(
+        ctx: &SchedCtx,
+        lets: &[GpuLetSpec],
+        models: &[(ModelId, f64)],
+        free: &mut Vec<GpuLetSpec>,
+        alloc: &mut Vec<LetPlan>,
+    ) -> bool {
+        free.clear();
+        free.extend_from_slice(lets);
         // Largest first: heavy models claim big lets.
         free.sort_by(|a, b| b.size_pct.cmp(&a.size_pct).then(a.gpu.cmp(&b.gpu)));
-        let mut alloc: Vec<LetPlan> = Vec::new();
+        alloc.clear();
 
-        let mut models: Vec<(ModelId, f64)> = ModelId::ALL
-            .iter()
-            .map(|&m| (m, rates[m.index()]))
-            .filter(|&(_, r)| r > 0.0)
-            .collect();
-        models.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-
-        for (m, rate) in models {
+        for &(m, rate) in models {
             let mut remaining = rate;
             while remaining > EPS_RATE {
                 // Prefer the smallest free let that covers the remainder
@@ -48,10 +71,8 @@ impl IdealScheduler {
                 let mut chosen: Option<(usize, f64, u32)> = None; // (idx, cap, batch)
                 let mut best_cover: Option<(usize, f64, u32)> = None;
                 for (i, spec) in free.iter().enumerate() {
-                    let p = spec.fraction();
                     let Some((cap, b)) = ctx
-                        .lm
-                        .max_rate(m, p)
+                        .max_rate(m, spec.size_pct)
                         .map(|(r, b)| (r * crate::sched::types::CAPACITY_FRACTION, b))
                     else {
                         continue;
@@ -102,26 +123,47 @@ impl IdealScheduler {
                     }
                 }
                 if !merged {
-                    return None;
+                    return false;
                 }
             }
         }
-        Some(Schedule { lets: alloc })
+        true
     }
 
-    /// Iterate layouts in mixed-radix order; call `f` until it says stop.
-    fn for_each_layout<F: FnMut(&[GpuLetSpec]) -> bool>(num_gpus: usize, mut f: F) {
+    /// Iterate layouts in mixed-radix order; call `f` until it says
+    /// stop. With `dedup` set, only the first occurrence of each per-GPU
+    /// case multiset is visited (see the module docs for the symmetry
+    /// argument).
+    fn for_each_layout<F: FnMut(&[GpuLetSpec]) -> bool>(
+        num_gpus: usize,
+        dedup: bool,
+        mut f: F,
+    ) {
         let mut digits = vec![0usize; num_gpus];
+        // Multiset key: per-case occurrence counts packed into a u64
+        // (8 bits per case — ample for any realistic GPU count).
+        let mut seen: std::collections::BTreeSet<u64> = std::collections::BTreeSet::new();
+        let mut lets: Vec<GpuLetSpec> = Vec::with_capacity(2 * num_gpus);
         loop {
-            let lets: Vec<GpuLetSpec> = digits
-                .iter()
-                .enumerate()
-                .flat_map(|(gpu, &d)| {
-                    GPU_CASES[d].iter().map(move |&size_pct| GpuLetSpec { gpu, size_pct })
-                })
-                .collect();
-            if f(&lets) {
-                return;
+            let fresh = if dedup {
+                let mut key = 0u64;
+                for &d in &digits {
+                    key += 1 << (8 * d);
+                }
+                seen.insert(key)
+            } else {
+                true
+            };
+            if fresh {
+                lets.clear();
+                for (gpu, &d) in digits.iter().enumerate() {
+                    for &size_pct in GPU_CASES[d] {
+                        lets.push(GpuLetSpec { gpu, size_pct });
+                    }
+                }
+                if f(&lets) {
+                    return;
+                }
             }
             // Increment mixed-radix counter.
             let mut i = 0;
@@ -138,18 +180,30 @@ impl IdealScheduler {
             }
         }
     }
-}
 
-impl Scheduler for IdealScheduler {
-    fn name(&self) -> &'static str {
-        "ideal"
-    }
+    /// Run the search with explicit control over layout deduplication.
+    /// `dedup_layouts = true` is the production path (`schedule`);
+    /// `false` forces the full `4^N` enumeration — the reference the
+    /// equivalence tests and the micro benches compare against.
+    pub fn schedule_with(
+        ctx: &SchedCtx,
+        rates: &[f64; 5],
+        dedup_layouts: bool,
+    ) -> Result<Schedule> {
+        crate::sched::types::validate_rates(rates)?;
+        let mut models: Vec<(ModelId, f64)> = ModelId::ALL
+            .iter()
+            .map(|&m| (m, rates[m.index()]))
+            .filter(|&(_, r)| r > 0.0)
+            .collect();
+        models.sort_by(|a, b| b.1.total_cmp(&a.1));
 
-    fn schedule(&self, ctx: &SchedCtx, rates: &[f64; 5]) -> Result<Schedule> {
+        let mut free: Vec<GpuLetSpec> = Vec::new();
+        let mut alloc: Vec<LetPlan> = Vec::new();
         let mut found: Option<Schedule> = None;
-        Self::for_each_layout(ctx.num_gpus, |lets| {
-            if let Some(s) = Self::try_assign(ctx, lets, rates) {
-                found = Some(s);
+        Self::for_each_layout(ctx.num_gpus, dedup_layouts, |lets| {
+            if Self::try_assign(ctx, lets, &models, &mut free, &mut alloc) {
+                found = Some(Schedule { lets: std::mem::take(&mut alloc) });
                 true // stop
             } else {
                 false
@@ -167,6 +221,16 @@ impl Scheduler for IdealScheduler {
     }
 }
 
+impl Scheduler for IdealScheduler {
+    fn name(&self) -> &'static str {
+        "ideal"
+    }
+
+    fn schedule(&self, ctx: &SchedCtx, rates: &[f64; 5]) -> Result<Schedule> {
+        Self::schedule_with(ctx, rates, true)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,12 +242,51 @@ mod tests {
 
     #[test]
     fn layout_enumeration_counts() {
-        let mut n = 0;
-        IdealScheduler::for_each_layout(2, |_| {
-            n += 1;
+        let mut full = 0;
+        IdealScheduler::for_each_layout(2, false, |_| {
+            full += 1;
             false
         });
-        assert_eq!(n, 16); // 4^2
+        assert_eq!(full, 16); // 4^2
+        let mut deduped = 0;
+        IdealScheduler::for_each_layout(2, true, |_| {
+            deduped += 1;
+            false
+        });
+        assert_eq!(deduped, 10); // C(4+2-1, 2) multisets of 2 cases
+        let mut deduped4 = 0;
+        IdealScheduler::for_each_layout(4, true, |_| {
+            deduped4 += 1;
+            false
+        });
+        assert_eq!(deduped4, 35); // C(4+4-1, 4): the paper testbed
+    }
+
+    #[test]
+    fn dedup_visits_first_occurrence_of_each_multiset() {
+        // The canonical instance must appear at the same position the
+        // multiset first shows up in the full mixed-radix order.
+        let mut full_keys: Vec<Vec<u32>> = Vec::new();
+        IdealScheduler::for_each_layout(3, false, |lets| {
+            let mut sizes: Vec<u32> = lets.iter().map(|l| l.size_pct).collect();
+            sizes.sort_unstable();
+            full_keys.push(sizes);
+            false
+        });
+        let mut first_seen: Vec<Vec<u32>> = Vec::new();
+        for k in &full_keys {
+            if !first_seen.contains(k) {
+                first_seen.push(k.clone());
+            }
+        }
+        let mut dedup_keys: Vec<Vec<u32>> = Vec::new();
+        IdealScheduler::for_each_layout(3, true, |lets| {
+            let mut sizes: Vec<u32> = lets.iter().map(|l| l.size_pct).collect();
+            sizes.sort_unstable();
+            dedup_keys.push(sizes);
+            false
+        });
+        assert_eq!(dedup_keys, first_seen);
     }
 
     #[test]
@@ -213,6 +316,21 @@ mod tests {
                     "ideal failed where elastic succeeded: {rates:?}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn dedup_and_full_agree_on_spot_checks() {
+        let c = ctx(2);
+        for rates in [
+            [50.0; 5],
+            [600.0, 0.0, 0.0, 0.0, 0.0],
+            [0.0, 0.0, 400.0, 0.0, 400.0],
+            [1e6, 0.0, 0.0, 0.0, 1e6],
+        ] {
+            let full = IdealScheduler::schedule_with(&c, &rates, false).is_ok();
+            let dedup = IdealScheduler::schedule_with(&c, &rates, true).is_ok();
+            assert_eq!(full, dedup, "{rates:?}");
         }
     }
 

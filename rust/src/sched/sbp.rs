@@ -52,10 +52,9 @@ impl SquishyBinPacking {
     }
 
     /// Throughput-optimal (rate, batch) for a solo model on a bin,
-    /// derated by the shared utilization headroom.
-    fn solo_capacity(&self, ctx: &SchedCtx, m: ModelId, p: f64) -> Option<(f64, u32)> {
-        ctx.lm
-            .max_rate(m, p)
+    /// derated by the shared utilization headroom (memoized lookup).
+    fn solo_capacity(&self, ctx: &SchedCtx, m: ModelId, size_pct: u32) -> Option<(f64, u32)> {
+        ctx.max_rate(m, size_pct)
             .map(|(r, b)| (r * crate::sched::types::CAPACITY_FRACTION, b))
     }
 
@@ -107,6 +106,7 @@ impl Scheduler for SquishyBinPacking {
     }
 
     fn schedule(&self, ctx: &SchedCtx, rates: &[f64; 5]) -> Result<Schedule> {
+        crate::sched::types::validate_rates(rates)?;
         let mut free = self.bins(ctx.num_gpus);
         let mut alloc: Vec<LetPlan> = Vec::new();
 
@@ -115,7 +115,7 @@ impl Scheduler for SquishyBinPacking {
             .map(|&m| (m, rates[m.index()]))
             .filter(|&(_, r)| r > 0.0)
             .collect();
-        models.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        models.sort_by(|a, b| b.1.total_cmp(&a.1));
 
         for (m, rate) in models {
             let mut remaining = rate;
@@ -123,8 +123,7 @@ impl Scheduler for SquishyBinPacking {
             // Phase 1: dedicate full bins while the load saturates them.
             while remaining > EPS_RATE {
                 let Some(&bin) = free.first() else { break };
-                let p = bin.fraction();
-                let Some((cap, b)) = self.solo_capacity(ctx, m, p) else { break };
+                let Some((cap, b)) = self.solo_capacity(ctx, m, bin.size_pct) else { break };
                 if remaining < cap {
                     break; // residual load: phase 2
                 }
@@ -153,8 +152,7 @@ impl Scheduler for SquishyBinPacking {
                             "sbp: {m} has {remaining:.1} req/s and no free GPU"
                         )));
                     };
-                    let p = bin.fraction();
-                    let Some((cap, b)) = self.solo_capacity(ctx, m, p) else {
+                    let Some((cap, b)) = self.solo_capacity(ctx, m, bin.size_pct) else {
                         return Err(Error::NotSchedulable(format!(
                             "sbp: {m} cannot meet SLO even on a dedicated bin"
                         )));

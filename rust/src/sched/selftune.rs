@@ -16,7 +16,6 @@
 use crate::error::{Error, Result};
 use crate::gpu::gpulet::{GpuLetSpec, MAX_LETS_PER_GPU};
 use crate::models::ModelId;
-use crate::perfmodel::latency::knee;
 use crate::perfmodel::profile_table::PARTITIONS;
 use crate::sched::types::{Assignment, LetPlan, SchedCtx, Schedule, Scheduler};
 
@@ -65,6 +64,7 @@ impl Scheduler for GuidedSelfTuning {
     }
 
     fn schedule(&self, ctx: &SchedCtx, rates: &[f64; 5]) -> Result<Schedule> {
+        crate::sched::types::validate_rates(rates)?;
         let mut gpus: Vec<GpuState> = (0..ctx.num_gpus)
             .map(|_| GpuState { used_pct: 0, lets: 0 })
             .collect();
@@ -75,11 +75,12 @@ impl Scheduler for GuidedSelfTuning {
             .map(|&m| (m, rates[m.index()]))
             .filter(|&(_, r)| r > 0.0)
             .collect();
-        models.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        models.sort_by(|a, b| b.1.total_cmp(&a.1));
 
         for (m, rate) in models {
-            // Profiled optimal partition: the knee of the rate curve.
-            let p_opt = knee(&ctx.lm.rate_curve(m, &PARTITIONS));
+            // Profiled optimal partition: the knee of the rate curve
+            // (precomputed in the capacity table).
+            let p_opt = ctx.knee_pct(m);
             let mut remaining = rate;
             // Bump the size up from the knee until the per-let rate and
             // the let count fit the cluster; GSLICE adjusts its partition
@@ -91,10 +92,8 @@ impl Scheduler for GuidedSelfTuning {
             'fill: while remaining > EPS_RATE {
                 let progressed = false;
                 for &size in &sizes_from_knee {
-                    let p = size as f64 / 100.0;
                     let Some((cap, b)) = ctx
-                        .lm
-                        .max_rate(m, p)
+                        .max_rate(m, size)
                         .map(|(r, b)| (r * crate::sched::types::CAPACITY_FRACTION, b))
                     else {
                         continue;
@@ -114,12 +113,9 @@ impl Scheduler for GuidedSelfTuning {
                                 .iter()
                                 .any(|&s2| {
                                     s2 > size
-                                        && ctx
-                                            .lm
-                                            .max_rate(m, s2 as f64 / 100.0)
-                                            .map_or(false, |(c2, _)| {
-                                                c2 * crate::sched::types::CAPACITY_FRACTION > cap
-                                            })
+                                        && ctx.max_rate(m, s2).map_or(false, |(c2, _)| {
+                                            c2 * crate::sched::types::CAPACITY_FRACTION > cap
+                                        })
                                 });
                             if bigger_helps {
                                 // Roll back and try the bigger size.

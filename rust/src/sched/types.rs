@@ -17,7 +17,7 @@ use crate::gpu::cluster::ClusterLayout;
 use crate::gpu::gpulet::{is_valid_size, GpuLetSpec};
 use crate::interference::InterferenceModel;
 use crate::models::ModelId;
-use crate::perfmodel::{LatencyModel, ProfileTable};
+use crate::perfmodel::{CapacityTable, LatencyModel, ProfileTable};
 
 /// Planning SLO tightening: schedulers see `SLO * SLO_PLANNING_SCALE`
 /// so deployed schedules keep latency headroom for Poisson burstiness
@@ -252,6 +252,10 @@ impl Schedule {
 pub struct SchedCtx {
     pub lm: LatencyModel,
     pub table: ProfileTable,
+    /// Memoized `(max_rate, best_batch)` per (model, partition) — the
+    /// O(1) lookups the scheduler hot paths use instead of rescanning
+    /// `BATCHES` (DESIGN.md §6).
+    pub cap: CapacityTable,
     /// Fitted linear interference model; `None` disables interference
     /// awareness (the `gpulet` variant).
     pub intf: Option<InterferenceModel>,
@@ -263,7 +267,8 @@ impl SchedCtx {
         // Planning view: tightened SLOs (see SLO_PLANNING_SCALE).
         let lm = LatencyModel::with_slo_scale(SLO_PLANNING_SCALE);
         let table = ProfileTable::build(&lm);
-        SchedCtx { lm, table, intf, num_gpus }
+        let cap = CapacityTable::build(&lm);
+        SchedCtx { lm, table, cap, intf, num_gpus }
     }
 
     /// Context without planning margins (used by conformance tests that
@@ -271,7 +276,39 @@ impl SchedCtx {
     pub fn unmargined(num_gpus: usize, intf: Option<InterferenceModel>) -> Self {
         let lm = LatencyModel::new();
         let table = ProfileTable::build(&lm);
-        SchedCtx { lm, table, intf, num_gpus }
+        let cap = CapacityTable::build(&lm);
+        SchedCtx { lm, table, cap, intf, num_gpus }
+    }
+
+    /// Memoized `LatencyModel::max_rate` for a grid-size gpu-let;
+    /// off-grid sizes fall back to the latency model (identical math).
+    #[inline]
+    pub fn max_rate(&self, m: ModelId, size_pct: u32) -> Option<(f64, u32)> {
+        match self.cap.lookup_rate(m, size_pct) {
+            Some(memo) => memo,
+            None => self.lm.max_rate(m, size_pct as f64 / 100.0),
+        }
+    }
+
+    /// Memoized `max_batch_within(m, p, slo/2)` — the Algorithm-1
+    /// line 27 batch pick for a solo duty cycle on a grid-size gpu-let.
+    #[inline]
+    pub fn best_batch_half_slo(&self, m: ModelId, size_pct: u32) -> Option<u32> {
+        match self.cap.lookup_half_slo_batch(m, size_pct) {
+            Some(memo) => memo,
+            None => self.lm.max_batch_within(
+                m,
+                size_pct as f64 / 100.0,
+                self.lm.slo_ms(m) / 2.0,
+            ),
+        }
+    }
+
+    /// `MaxEfficientPartition` (knee of the affordable-rate curve),
+    /// precomputed per model at context build.
+    #[inline]
+    pub fn knee_pct(&self, m: ModelId) -> u32 {
+        self.cap.knee_pct(m)
     }
 
     /// Predicted worst-case interference stretch between the models of
@@ -292,10 +329,29 @@ impl SchedCtx {
     }
 }
 
+/// Input guard every scheduler applies at its `schedule` boundary:
+/// request rates must be finite and non-negative. A NaN rate would
+/// otherwise panic deep inside the rate-descending sort
+/// (`partial_cmp().unwrap()`), and an infinite one can never be served;
+/// both are caller bugs reported as a proper `Error` instead.
+pub fn validate_rates(rates: &[f64; 5]) -> Result<()> {
+    for m in ModelId::ALL {
+        let r = rates[m.index()];
+        if !r.is_finite() || r < 0.0 {
+            return Err(Error::Model(format!("{m}: invalid request rate {r}")));
+        }
+    }
+    Ok(())
+}
+
 /// Common scheduler interface. `rates` is the offered per-model load
-/// (req/s, indexed by `ModelId::index`); `Err(NotSchedulable)` when the
-/// cluster cannot serve it within SLOs.
-pub trait Scheduler {
+/// (req/s, indexed by `ModelId::index`; must pass [`validate_rates`]);
+/// `Err(NotSchedulable)` when the cluster cannot serve it within SLOs.
+///
+/// `Sync` is a supertrait so `&dyn Scheduler` can be shared across the
+/// experiment harness's worker threads (`util::par`); every scheduler
+/// is a plain-data struct, so the bound is automatic.
+pub trait Scheduler: Sync {
     fn name(&self) -> &'static str;
     fn schedule(&self, ctx: &SchedCtx, rates: &[f64; 5]) -> Result<Schedule>;
 }
@@ -445,5 +501,41 @@ mod tests {
         let a = solo_plan(ModelId::Vgg, 50, 32, 10.0);
         let b = solo_plan(ModelId::Vgg, 50, 32, 10.0);
         assert_eq!(ctx.predicted_intf(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn validate_rates_rejects_non_finite_and_negative() {
+        assert!(validate_rates(&[0.0; 5]).is_ok());
+        assert!(validate_rates(&[1e9; 5]).is_ok());
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0] {
+            let mut rates = [10.0; 5];
+            rates[2] = bad;
+            let err = validate_rates(&rates).unwrap_err();
+            assert!(err.to_string().contains("invalid request rate"), "{err}");
+        }
+    }
+
+    #[test]
+    fn ctx_memoized_lookups_match_latency_model() {
+        let ctx = SchedCtx::new(1, None);
+        for m in ModelId::ALL {
+            // On-grid sizes hit the memo; off-grid (30%) falls back.
+            for pct in [20u32, 50, 100, 30] {
+                assert_eq!(
+                    ctx.max_rate(m, pct),
+                    ctx.lm.max_rate(m, pct as f64 / 100.0),
+                    "{m} p={pct}"
+                );
+                assert_eq!(
+                    ctx.best_batch_half_slo(m, pct),
+                    ctx.lm.max_batch_within(
+                        m,
+                        pct as f64 / 100.0,
+                        ctx.lm.slo_ms(m) / 2.0
+                    ),
+                    "{m} p={pct}"
+                );
+            }
+        }
     }
 }

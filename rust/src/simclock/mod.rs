@@ -1,22 +1,46 @@
 //! Discrete-event simulation clock: a virtual-time event queue.
 //!
 //! All paper experiments run under this clock (DESIGN.md §1 "sim"
-//! mode): simulated milliseconds, deterministic ordering (time, then
-//! insertion sequence), no wall-clock dependence.
+//! mode). Time is kept as **integer microseconds** (`u64`): heap
+//! ordering is two integer compares instead of an f64 `partial_cmp`
+//! chain, ties are exact (no epsilon tolerances on deadline checks),
+//! and event ordering is bit-for-bit deterministic on every platform.
+//! Millisecond-domain callers convert at the boundary with
+//! [`ms_to_us`] / [`us_to_ms`]; 1 µs resolution is ~4 orders of
+//! magnitude below the smallest SLO in the catalog (5 ms), so the
+//! quantization is far inside the model's noise floor.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+/// Virtual simulation time in integer microseconds.
+pub type SimTimeUs = u64;
+
+/// Convert milliseconds (the latency model's unit) to integer
+/// microseconds, rounding to nearest. Panics on non-finite or negative
+/// input — event times must be real instants.
+#[inline]
+pub fn ms_to_us(ms: f64) -> SimTimeUs {
+    assert!(ms.is_finite() && ms >= 0.0, "invalid time {ms} ms");
+    (ms * 1000.0).round() as SimTimeUs
+}
+
+/// Convert integer microseconds back to milliseconds (for reporting).
+#[inline]
+pub fn us_to_ms(us: SimTimeUs) -> f64 {
+    us as f64 / 1000.0
+}
+
 /// Internal heap entry — min-heap by (time, seq).
 struct Entry<E> {
-    time_ms: f64,
+    time_us: SimTimeUs,
     seq: u64,
     event: E,
 }
 
 impl<E> PartialEq for Entry<E> {
     fn eq(&self, other: &Self) -> bool {
-        self.time_ms == other.time_ms && self.seq == other.seq
+        self.time_us == other.time_us && self.seq == other.seq
     }
 }
 impl<E> Eq for Entry<E> {}
@@ -29,18 +53,17 @@ impl<E> Ord for Entry<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reverse for min-heap semantics on BinaryHeap (a max-heap).
         other
-            .time_ms
-            .partial_cmp(&self.time_ms)
-            .unwrap_or(Ordering::Equal)
+            .time_us
+            .cmp(&self.time_us)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
 
-/// Deterministic discrete-event queue over virtual milliseconds.
+/// Deterministic discrete-event queue over virtual microseconds.
 pub struct EventQueue<E> {
     heap: BinaryHeap<Entry<E>>,
     seq: u64,
-    now_ms: f64,
+    now_us: SimTimeUs,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -51,44 +74,58 @@ impl<E> Default for EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), seq: 0, now_ms: 0.0 }
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now_us: 0 }
     }
 
-    /// Current virtual time (ms). Advances on `pop`.
+    /// Current virtual time (µs). Advances on `pop`.
+    pub fn now_us(&self) -> SimTimeUs {
+        self.now_us
+    }
+
+    /// Current virtual time in milliseconds (reporting convenience).
     pub fn now_ms(&self) -> f64 {
-        self.now_ms
+        us_to_ms(self.now_us)
     }
 
-    /// Schedule `event` at absolute virtual time `time_ms`.
+    /// Schedule `event` at absolute virtual time `time_us`.
     ///
     /// Events in the past are clamped to `now` (they fire next, in
     /// insertion order) — simpler and safer than panicking inside
     /// long experiment sweeps.
-    pub fn push_at(&mut self, time_ms: f64, event: E) {
-        assert!(time_ms.is_finite(), "non-finite event time");
-        let t = time_ms.max(self.now_ms);
-        self.heap.push(Entry { time_ms: t, seq: self.seq, event });
+    pub fn push_at_us(&mut self, time_us: SimTimeUs, event: E) {
+        let t = time_us.max(self.now_us);
+        self.heap.push(Entry { time_us: t, seq: self.seq, event });
         self.seq += 1;
     }
 
-    /// Schedule `event` after a relative delay.
-    pub fn push_after(&mut self, delay_ms: f64, event: E) {
-        assert!(delay_ms >= 0.0, "negative delay");
-        self.push_at(self.now_ms + delay_ms, event);
+    /// Schedule `event` after a relative delay in microseconds.
+    pub fn push_after_us(&mut self, delay_us: SimTimeUs, event: E) {
+        self.push_at_us(self.now_us + delay_us, event);
     }
 
-    /// Pop the earliest event, advancing the clock to its time.
-    pub fn pop(&mut self) -> Option<(f64, E)> {
+    /// Millisecond-domain convenience for [`EventQueue::push_at_us`].
+    pub fn push_at(&mut self, time_ms: f64, event: E) {
+        self.push_at_us(ms_to_us(time_ms), event);
+    }
+
+    /// Millisecond-domain convenience for [`EventQueue::push_after_us`].
+    pub fn push_after(&mut self, delay_ms: f64, event: E) {
+        assert!(delay_ms >= 0.0, "negative delay");
+        self.push_after_us(ms_to_us(delay_ms), event);
+    }
+
+    /// Pop the earliest event, advancing the clock to its time (µs).
+    pub fn pop(&mut self) -> Option<(SimTimeUs, E)> {
         self.heap.pop().map(|e| {
-            debug_assert!(e.time_ms >= self.now_ms);
-            self.now_ms = e.time_ms;
-            (e.time_ms, e.event)
+            debug_assert!(e.time_us >= self.now_us);
+            self.now_us = e.time_us;
+            (e.time_us, e.event)
         })
     }
 
-    /// Time of the next event without popping.
-    pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|e| e.time_ms)
+    /// Time of the next event (µs) without popping.
+    pub fn peek_time_us(&self) -> Option<SimTimeUs> {
+        self.heap.peek().map(|e| e.time_us)
     }
 
     pub fn len(&self) -> usize {
@@ -117,9 +154,9 @@ mod tests {
     #[test]
     fn ties_break_by_insertion_order() {
         let mut q = EventQueue::new();
-        q.push_at(1.0, 1);
-        q.push_at(1.0, 2);
-        q.push_at(1.0, 3);
+        q.push_at_us(1_000, 1);
+        q.push_at_us(1_000, 2);
+        q.push_at_us(1_000, 3);
         assert_eq!(q.pop().unwrap().1, 1);
         assert_eq!(q.pop().unwrap().1, 2);
         assert_eq!(q.pop().unwrap().1, 3);
@@ -128,17 +165,19 @@ mod tests {
     #[test]
     fn clock_advances_monotonically() {
         let mut q = EventQueue::new();
-        q.push_at(10.0, ());
-        q.push_at(20.0, ());
+        q.push_at_us(10_000, ());
+        q.push_at_us(20_000, ());
+        assert_eq!(q.now_us(), 0);
         assert_eq!(q.now_ms(), 0.0);
         q.pop();
+        assert_eq!(q.now_us(), 10_000);
         assert_eq!(q.now_ms(), 10.0);
         // Past events clamp to now.
-        q.push_at(5.0, ());
+        q.push_at_us(5_000, ());
         let (t, _) = q.pop().unwrap();
-        assert_eq!(t, 10.0);
+        assert_eq!(t, 10_000);
         q.pop();
-        assert_eq!(q.now_ms(), 20.0);
+        assert_eq!(q.now_us(), 20_000);
     }
 
     #[test]
@@ -147,9 +186,19 @@ mod tests {
         q.push_at(10.0, "x");
         q.pop();
         q.push_after(2.5, "y");
-        assert_eq!(q.peek_time(), Some(12.5));
+        assert_eq!(q.peek_time_us(), Some(12_500));
         assert_eq!(q.len(), 1);
         assert!(!q.is_empty());
+    }
+
+    #[test]
+    fn ms_roundtrip_at_us_resolution() {
+        assert_eq!(ms_to_us(0.0), 0);
+        assert_eq!(ms_to_us(1.0), 1_000);
+        assert_eq!(ms_to_us(0.0004), 0); // rounds to nearest µs
+        assert_eq!(ms_to_us(0.0006), 1);
+        assert_eq!(us_to_ms(12_500), 12.5);
+        assert_eq!(ms_to_us(us_to_ms(987_654_321)), 987_654_321);
     }
 
     #[test]
@@ -157,5 +206,11 @@ mod tests {
     fn rejects_nan_time() {
         let mut q = EventQueue::new();
         q.push_at(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_negative_time() {
+        ms_to_us(-1.0);
     }
 }

@@ -6,6 +6,7 @@
 //! machine-readable `BENCH_<target>.json` envelope (timing + payload)
 //! that the perf-trajectory tooling diffs across PRs.
 
+use std::fmt::Write as _;
 use std::time::Instant;
 
 use crate::util::json::{obj, Json};
@@ -62,6 +63,79 @@ pub fn write_json(path: impl AsRef<std::path::Path>, doc: &Json) -> std::io::Res
     let mut text = doc.to_string();
     text.push('\n');
     std::fs::write(path, text)
+}
+
+/// Extract `(name, mean_ms)` timing entries from a BENCH document —
+/// either the multi-entry `{"bench": [...]}` micro-bench shape or the
+/// single-entry `{"bench": {...}, "result": ...}` envelope.
+fn timing_entries(doc: &Json) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    let Some(bench) = doc.opt("bench") else { return out };
+    let one = |e: &Json| -> Option<(String, f64)> {
+        Some((
+            e.get("name").ok()?.as_str().ok()?.to_string(),
+            e.get("mean_ms").ok()?.as_f64().ok()?,
+        ))
+    };
+    match bench {
+        Json::Arr(entries) => out.extend(entries.iter().filter_map(one)),
+        single @ Json::Obj(_) => out.extend(one(single)),
+        _ => {}
+    }
+    out
+}
+
+/// Compare two BENCH documents by bench name: for every entry present
+/// in both, report `speedup = baseline_mean / fresh_mean` (>1 means the
+/// fresh run is faster). Entries only on one side are listed so a
+/// renamed or new bench is visible instead of silently dropped.
+pub fn compare(baseline: &Json, fresh: &Json) -> String {
+    let base = timing_entries(baseline);
+    let new = timing_entries(fresh);
+    let mut out = String::from(
+        "# bench compare (speedup = baseline mean / fresh mean; >1.00x is faster)\n",
+    );
+    let _ = writeln!(
+        out,
+        "{:<52} {:>12} {:>12} {:>9}",
+        "bench", "baseline ms", "fresh ms", "speedup"
+    );
+    let mut matched = 0usize;
+    for (name, fresh_ms) in &new {
+        if let Some((_, base_ms)) = base.iter().find(|(n, _)| n == name) {
+            matched += 1;
+            let speedup = if *fresh_ms > 0.0 { base_ms / fresh_ms } else { f64::INFINITY };
+            let _ = writeln!(
+                out,
+                "{:<52} {:>12.3} {:>12.3} {:>8.2}x",
+                name, base_ms, fresh_ms, speedup
+            );
+        }
+    }
+    for (name, _) in &new {
+        if !base.iter().any(|(n, _)| n == name) {
+            let _ = writeln!(out, "{name:<52} {:>12} (new bench, no baseline)", "-");
+        }
+    }
+    for (name, _) in &base {
+        if !new.iter().any(|(n, _)| n == name) {
+            let _ = writeln!(out, "{name:<52} {:>12} (baseline only, gone)", "-");
+        }
+    }
+    if matched == 0 {
+        out.push_str("(no overlapping bench names)\n");
+    }
+    out
+}
+
+/// [`compare`] over two BENCH files on disk.
+pub fn compare_files(
+    baseline_path: impl AsRef<std::path::Path>,
+    fresh_path: impl AsRef<std::path::Path>,
+) -> crate::error::Result<String> {
+    let base = Json::parse(std::fs::read_to_string(baseline_path)?.trim())?;
+    let fresh = Json::parse(std::fs::read_to_string(fresh_path)?.trim())?;
+    Ok(compare(&base, &fresh))
 }
 
 /// Time `f` with `warmup` unmeasured runs and `iters` measured runs.
@@ -134,6 +208,51 @@ mod tests {
             "v"
         );
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compare_reports_speedups_and_orphans() {
+        let mk = |name: &str, mean: f64| BenchResult {
+            name: name.into(),
+            iters: 1,
+            mean_ms: mean,
+            min_ms: mean,
+            max_ms: mean,
+        };
+        let baseline = timings_envelope(&[mk("sweep", 12.0), mk("gone", 1.0)]);
+        let fresh = timings_envelope(&[mk("sweep", 3.0), mk("brand-new", 2.0)]);
+        let table = compare(&baseline, &fresh);
+        assert!(table.contains("sweep"), "{table}");
+        assert!(table.contains("4.00x"), "{table}");
+        assert!(table.contains("brand-new") && table.contains("no baseline"), "{table}");
+        assert!(table.contains("gone") && table.contains("baseline only"), "{table}");
+
+        // The single-entry envelope shape also compares.
+        let b1 = envelope(&mk("fig", 10.0), obj(vec![]));
+        let f1 = envelope(&mk("fig", 5.0), obj(vec![]));
+        assert!(compare(&b1, &f1).contains("2.00x"));
+        // Disjoint names: flagged, not a panic.
+        assert!(compare(&b1, &fresh).contains("no baseline"));
+    }
+
+    #[test]
+    fn compare_files_round_trips_via_disk() {
+        let dir = std::env::temp_dir();
+        let a = dir.join("gpulets_cmp_base.json");
+        let b = dir.join("gpulets_cmp_fresh.json");
+        let mk = |mean: f64| BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ms: mean,
+            min_ms: mean,
+            max_ms: mean,
+        };
+        write_json(&a, &timings_envelope(&[mk(8.0)])).unwrap();
+        write_json(&b, &timings_envelope(&[mk(2.0)])).unwrap();
+        let table = compare_files(&a, &b).unwrap();
+        assert!(table.contains("4.00x"), "{table}");
+        let _ = std::fs::remove_file(&a);
+        let _ = std::fs::remove_file(&b);
     }
 
     #[test]

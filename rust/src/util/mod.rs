@@ -8,6 +8,7 @@
 pub mod benchkit;
 pub mod json;
 pub mod logging;
+pub mod par;
 pub mod proptest_mini;
 pub mod rng;
 pub mod stats;

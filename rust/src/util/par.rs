@@ -1,0 +1,122 @@
+//! Deterministic fork-join parallelism over `std::thread::scope` (the
+//! offline stand-in for `rayon`).
+//!
+//! `par_map` fans a slice out over a worker pool and returns results in
+//! **input order**, independent of thread count or scheduling — callers
+//! that serialize the output (the experiment sweeps writing BENCH
+//! payloads) get byte-identical JSON for any `--threads N`. Work is
+//! dispatched by an atomic index so uneven items (scheduling passes
+//! vary widely in cost) load-balance instead of tail-stalling a static
+//! chunking.
+//!
+//! The worker count resolves, in priority order: the process-wide
+//! override set by the CLI `--threads` flag (`set_threads`), the
+//! `GPULETS_THREADS` environment variable (how the bench targets are
+//! steered), then `std::thread::available_parallelism()`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Process-wide worker-count override; 0 means "auto".
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-wide worker count (`--threads N`). `0` restores the
+/// automatic choice (env var, then `available_parallelism`).
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Resolved worker count for the next `par_map` call.
+pub fn threads() -> usize {
+    let o = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
+    if let Ok(v) = std::env::var("GPULETS_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map_or(1, |n| n.get())
+}
+
+/// Map `f` over `items` on the configured worker count; results are in
+/// input order (deterministic merge).
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    par_map_threads(threads(), items, f)
+}
+
+/// `par_map` with an explicit worker count (1 = fully serial, no
+/// threads spawned — the reference path the equivalence tests compare
+/// against).
+pub fn par_map_threads<T, R, F>(workers: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // Compute outside the lock; the critical section is one
+                // slot store (tasks here are ms-scale scheduling passes,
+                // so the lock is uncontended in practice).
+                let r = f(&items[i]);
+                out.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    out.into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("par_map worker skipped a slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_input_order_for_any_worker_count() {
+        let items: Vec<u64> = (0..97).collect();
+        let want: Vec<u64> = items.iter().map(|x| x * x).collect();
+        for workers in [1, 2, 3, 8, 64] {
+            let got = par_map_threads(workers, &items, |&x| x * x);
+            assert_eq!(got, want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(par_map_threads(4, &empty, |&x| x).is_empty());
+        assert_eq!(par_map_threads(4, &[7u32], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn override_wins_and_clears() {
+        set_threads(3);
+        assert_eq!(threads(), 3);
+        set_threads(0);
+        assert!(threads() >= 1);
+    }
+}

@@ -1,0 +1,133 @@
+//! Equivalence proofs for the flattened scheduling hot paths: the
+//! memoized capacity table, the ideal scheduler's layout-multiset
+//! dedup, and the parallel experiment sweeps must all be *pure*
+//! optimizations — identical results, only faster.
+
+use gpulets::experiments::{common::paper_ctx, fig04};
+use gpulets::models::ModelId;
+use gpulets::perfmodel::latency::knee;
+use gpulets::perfmodel::profile_table::PARTITIONS;
+use gpulets::perfmodel::{CapacityTable, LatencyModel};
+use gpulets::sched::types::SLO_PLANNING_SCALE;
+use gpulets::sched::{
+    ElasticPartitioning, GuidedSelfTuning, IdealScheduler, SchedCtx, Scheduler,
+    SquishyBinPacking,
+};
+use gpulets::util::par;
+use gpulets::workload::enumerate_all_scenarios;
+
+/// The capacity table must agree with `LatencyModel::max_rate` /
+/// `max_batch_within` on every (model, partition) grid point, for both
+/// the planning-margin view and the unmargined one.
+#[test]
+fn capacity_table_matches_latency_model_on_every_grid_point() {
+    for lm in [LatencyModel::new(), LatencyModel::with_slo_scale(SLO_PLANNING_SCALE)] {
+        let cap = CapacityTable::build(&lm);
+        for m in ModelId::ALL {
+            for &pct in &PARTITIONS {
+                let p = pct as f64 / 100.0;
+                assert_eq!(
+                    cap.lookup_rate(m, pct).unwrap(),
+                    lm.max_rate(m, p),
+                    "{m} p={pct}: max_rate memo diverged"
+                );
+                assert_eq!(
+                    cap.lookup_half_slo_batch(m, pct).unwrap(),
+                    lm.max_batch_within(m, p, lm.slo_ms(m) / 2.0),
+                    "{m} p={pct}: best-batch memo diverged"
+                );
+            }
+            assert_eq!(
+                cap.knee_pct(m),
+                knee(&lm.rate_curve(m, &PARTITIONS)),
+                "{m}: knee memo diverged"
+            );
+        }
+    }
+}
+
+/// `SchedCtx::max_rate` must be exact on the grid and fall back to the
+/// latency model off it.
+#[test]
+fn sched_ctx_lookup_falls_back_off_grid() {
+    let ctx = SchedCtx::new(4, None);
+    for m in ModelId::ALL {
+        for pct in [20u32, 40, 50, 60, 80, 100, 30, 70, 99] {
+            assert_eq!(ctx.max_rate(m, pct), ctx.lm.max_rate(m, pct as f64 / 100.0));
+        }
+    }
+}
+
+/// Layout-multiset symmetry: the deduplicated ideal search must return
+/// the same schedulability verdict as the full 4^N enumeration on the
+/// whole 1,023-scenario population (paper testbed, 4 GPUs).
+#[test]
+fn ideal_dedup_matches_full_enumeration_on_population() {
+    let ctx = paper_ctx(false);
+    let scenarios = enumerate_all_scenarios();
+    let mismatches: Vec<String> = par::par_map(&scenarios, |sc| {
+        let dedup = IdealScheduler::schedule_with(&ctx, &sc.rates, true).is_ok();
+        let full = IdealScheduler::schedule_with(&ctx, &sc.rates, false).is_ok();
+        if dedup != full {
+            Some(format!("{}: dedup={dedup} full={full}", sc.name))
+        } else {
+            None
+        }
+    })
+    .into_iter()
+    .flatten()
+    .collect();
+    assert!(mismatches.is_empty(), "verdict mismatches: {mismatches:?}");
+}
+
+/// The parallel sweep must produce byte-identical JSON to `--threads 1`
+/// (deterministic merge order), and `par_map` itself must be
+/// order-stable for a compute-heavy scheduling workload.
+#[test]
+fn parallel_sweep_is_byte_identical_to_serial() {
+    // Whole-figure check: fig04's 1,023-scenario sweep, serialized.
+    par::set_threads(1);
+    let serial = fig04::report().payload.to_string();
+    par::set_threads(4);
+    let parallel = fig04::report().payload.to_string();
+    par::set_threads(0); // restore auto
+    assert_eq!(serial, parallel, "fig04 payload differs across thread counts");
+
+    // Direct check on the primitive with per-scenario verdicts.
+    let ctx = paper_ctx(false);
+    let scenarios = enumerate_all_scenarios();
+    let sample: Vec<_> = scenarios.into_iter().step_by(11).collect();
+    let sched = SquishyBinPacking::baseline();
+    let one = par::par_map_threads(1, &sample, |sc| sched.schedule(&ctx, &sc.rates).is_ok());
+    let many = par::par_map_threads(8, &sample, |sc| sched.schedule(&ctx, &sc.rates).is_ok());
+    assert_eq!(one, many);
+}
+
+/// Satellite: non-finite rates must be rejected with a proper error at
+/// every scheduler's boundary — not panic in the rate-descending sort.
+#[test]
+fn non_finite_rates_rejected_with_error() {
+    let schedulers: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(SquishyBinPacking::baseline()),
+        Box::new(SquishyBinPacking::with_even_partitioning()),
+        Box::new(GuidedSelfTuning),
+        Box::new(ElasticPartitioning::gpulet()),
+        Box::new(ElasticPartitioning::gpulet_int()),
+        Box::new(IdealScheduler),
+    ];
+    for s in &schedulers {
+        let ctx = paper_ctx(s.name() == "gpulet+int");
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -5.0] {
+            let mut rates = [50.0; 5];
+            rates[1] = bad;
+            let err = s
+                .schedule(&ctx, &rates)
+                .expect_err(&format!("{}: accepted rate {bad}", s.name()));
+            assert!(
+                err.to_string().contains("invalid request rate"),
+                "{}: unexpected error {err}",
+                s.name()
+            );
+        }
+    }
+}
