@@ -187,7 +187,8 @@ fn main() {
         ],
         10.0,
         5,
-    );
+    )
+    .expect("finite rates");
     let n_arr = arrivals.len();
     let (t, _) = benchkit::bench(
         &format!("sim: 10 s short-skew trace ({n_arr} arrivals)"),

@@ -22,8 +22,11 @@ fn main() {
 
     println!("== adaptive serving over a fluctuating trace ({duration_s} s) ==");
     println!("t(s)  total-req/s  alloc%  viol%  reorg");
-    let stats = server.run_trace(&trace, duration_s, 2024);
-    for w in &stats {
+    let outcome = server
+        .run_trace(&trace, duration_s, 2024)
+        .expect("trace rates are finite");
+    let stats = &outcome.windows;
+    for w in stats {
         let total: f64 = w.throughput.iter().sum();
         let bar_len = (w.allocated_pct / 10) as usize;
         println!(
@@ -37,14 +40,10 @@ fn main() {
         );
     }
 
-    let total_thr: f64 = stats.iter().map(|w| w.throughput.iter().sum::<f64>()).sum();
-    let weighted: f64 = stats
-        .iter()
-        .map(|w| w.violation_rate * w.throughput.iter().sum::<f64>())
-        .sum();
+    let offered: u64 = outcome.offered.iter().sum();
     println!(
-        "\noverall violation share: {:.2}% (paper Fig 14: 0.14%)",
-        100.0 * weighted / total_thr.max(1e-9)
+        "\noverall violation share: {:.2}% of {offered} requests (paper Fig 14: 0.14%)",
+        100.0 * outcome.overall_violation_share()
     );
     let peak = stats.iter().map(|w| w.allocated_pct).max().unwrap_or(0);
     let trough = stats.iter().map(|w| w.allocated_pct).min().unwrap_or(0);

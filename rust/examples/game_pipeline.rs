@@ -54,7 +54,7 @@ fn main() -> gpulets::Result<()> {
         .map(|&m| (m, rates[m.index()]))
         .filter(|&(_, r)| r > 0.0)
         .collect();
-    let arrivals = generate_arrivals(&pairs, duration_s, 33);
+    let arrivals = generate_arrivals(&pairs, duration_s, 33)?;
     let lm = LatencyModel::new();
     let report = simulate(
         &lm,

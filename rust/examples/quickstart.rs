@@ -44,7 +44,7 @@ fn main() -> gpulets::Result<()> {
         (ModelId::Vgg, 2.0),
     ];
     let duration_s = 4.0;
-    let arrivals = generate_arrivals(&rates, duration_s, 7);
+    let arrivals = generate_arrivals(&rates, duration_s, 7)?;
     println!(
         "\nserving {} requests over {duration_s} s (trace replay)...",
         arrivals.len()

@@ -64,7 +64,7 @@ fn main() -> gpulets::Result<()> {
         .map(|&m| (m, rates[m.index()]))
         .filter(|&(_, r)| r > 0.0)
         .collect();
-    let arrivals = generate_arrivals(&pairs, duration_s, 44);
+    let arrivals = generate_arrivals(&pairs, duration_s, 44)?;
     let report = simulate(
         &LatencyModel::new(),
         &GroundTruth::default(),

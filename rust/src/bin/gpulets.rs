@@ -21,7 +21,7 @@
 use gpulets::apps::App;
 use gpulets::config::{Algo, Config};
 use gpulets::coordinator::server::RealServer;
-use gpulets::coordinator::simserver::{simulate, SimConfig};
+use gpulets::coordinator::{simulate, SimConfig};
 use gpulets::error::Result;
 use gpulets::experiments as ex;
 use gpulets::interference::GroundTruth;
@@ -423,13 +423,14 @@ fn serve(args: &[String]) -> Result<()> {
         .map(|&m| (m, cfg.rates[m.index()]))
         .filter(|&(_, r)| r > 0.0)
         .collect();
-    let arrivals = generate_arrivals(&pairs, cfg.duration_s, cfg.seed);
+    let arrivals = generate_arrivals(&pairs, cfg.duration_s, cfg.seed)?;
     println!(
         "\nsimulating {} requests over {}s ({})...",
         arrivals.len(),
         cfg.duration_s,
         cfg.share_mode.name()
     );
+    let offered = arrivals.len() as u64;
     let report = simulate(
         &ctx.lm,
         &GroundTruth::default(),
@@ -444,6 +445,15 @@ fn serve(args: &[String]) -> Result<()> {
         report.throughput_rps(),
         report.goodput_rps(),
         report.overall_violation_rate() * 100.0
+    );
+    let (served, dropped) = ModelId::ALL.iter().fold((0u64, 0u64), |acc, &m| {
+        report
+            .model(m)
+            .map_or(acc, |mm| (acc.0 + mm.served, acc.1 + mm.dropped))
+    });
+    println!(
+        "requests: {offered} offered = {served} served + {dropped} dropped{}",
+        if served + dropped == offered { " (conserved)" } else { " (LOST!)" }
     );
     Ok(())
 }
@@ -468,7 +478,7 @@ fn serve_real(args: &[String]) -> Result<()> {
         .map(|&m| (m, cfg.rates[m.index()]))
         .filter(|&(_, r)| r > 0.0)
         .collect();
-    let arrivals = generate_arrivals(&pairs, cfg.duration_s, cfg.seed);
+    let arrivals = generate_arrivals(&pairs, cfg.duration_s, cfg.seed)?;
     println!("serving {} requests over {}s...", arrivals.len(), cfg.duration_s);
 
     let server = RealServer::new(&registry);

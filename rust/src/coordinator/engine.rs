@@ -1,0 +1,969 @@
+//! Persistent continuous-time serving engine.
+//!
+//! This is the stateful core the ROADMAP's online/streaming workloads
+//! build on: one `ServingEngine` owns the event queue, the per-(gpu-let,
+//! model) FIFO queues, the in-flight sets, the deficit-weighted routing
+//! counters, and the accumulating `Report`, and keeps all of them alive
+//! across schedule changes. `simserver::simulate` is a thin one-shot
+//! wrapper (inject → run_until horizon → finish); the adaptive
+//! reorganizer drives one engine across the whole Fig 14 trace and
+//! swaps schedules live instead of re-simulating each 20 s window from
+//! a cold start.
+//!
+//! ## Lifecycle
+//!
+//! ```text
+//! let mut eng = ServingEngine::new(&lm, &gt, schedule, window_s, &cfg);
+//! eng.inject(&arrivals);          // any number of times, times absolute
+//! eng.run_until(t_us);            // process every event with time <= t
+//! eng.swap_schedule(next, mode);  // live re-organization (see below)
+//! eng.run_until(horizon);
+//! let report = eng.finish();      // leftovers counted as drops
+//! ```
+//!
+//! ## Swap semantics (§5: background re-partitioning)
+//!
+//! `swap_schedule` models the paper's "the old schedule keeps serving
+//! until the swap completes" hand-over at the instant the new partitions
+//! come online:
+//!
+//! * **In-flight executions finish under the old constants.** Their
+//!   `Done` events stay queued; the batches are moved to a retired set
+//!   keyed by the old epoch and complete (or, at `finish`, drop) with
+//!   the old schedule's model/SLO accounting. They are never lost.
+//! * **Queued requests migrate** (`SwapMode::Migrate`) onto the new
+//!   schedule's routes in FIFO order through the same deficit-weighted
+//!   router as fresh arrivals. A request whose model lost every route
+//!   is dropped *and counted* — nothing leaves the system silently.
+//!   `SwapMode::DropQueued` instead drops (and counts) the whole
+//!   backlog: the restart-the-world approximation, kept for A/B tests.
+//! * Executor busy-state, routing counters, and duty-cycle constants
+//!   are rebuilt for the new schedule; stale `Timeout` events from the
+//!   old epoch are discarded on pop.
+//!
+//! Three deliberate approximations at the swap instant, noted here
+//! because they bound the fidelity of the hand-over: a retired
+//! execution no longer participates in interference (its co-resident is
+//! gone with the old schedule); under `TemporalOnly` the physical GPU
+//! is considered free for the new schedule even while a retired kernel
+//! finishes; and the new schedule's executors all start idle, so a new
+//! batch can overlap a retired one on the same resources. Each window
+//! lasts at most one batch execution — the paper's 10–15 s
+//! re-partitioning (MPS restart + reload + warmup) dwarfs it.
+
+use std::collections::{BTreeMap, HashSet, VecDeque};
+
+use crate::gpu::ShareMode;
+use crate::interference::ground_truth::{GroundTruth, TaskDemand};
+use crate::metrics::Report;
+use crate::models::{profile, ModelId};
+use crate::perfmodel::LatencyModel;
+use crate::sched::Schedule;
+use crate::simclock::{ms_to_us, us_to_ms, EventQueue, SimTimeUs};
+use crate::util::rng::Pcg32;
+use crate::workload::Arrival;
+
+/// Simulation parameters (shared with the one-shot `simulate` wrapper).
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub mode: ShareMode,
+    pub seed: u64,
+    /// Extra wall time after the last arrival to drain queues (ms).
+    pub drain_ms: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { mode: ShareMode::Partitioned, seed: 0xD15C0, drain_ms: 2_000.0 }
+    }
+}
+
+/// What happens to queued (not yet executing) requests at a schedule
+/// swap. In-flight executions always finish under the old constants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwapMode {
+    /// Re-route the backlog onto the new schedule's assignments (the
+    /// paper's background re-partitioning semantics). Requests whose
+    /// model lost all routes are dropped and counted.
+    Migrate,
+    /// Drop (and count) the whole backlog — the restart-the-world
+    /// approximation the per-window re-simulation used to make.
+    DropQueued,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Event {
+    /// A request arriving; `token` is the engine-assigned unique id.
+    Arrive { model: ModelId, token: u64 },
+    /// Duty timeout for (let, assignment): flush a partial batch.
+    Timeout { epoch: u32, let_idx: usize, asg_idx: usize, armed_at: u64 },
+    /// Execution finished on a gpu-let (of the tagged epoch).
+    Done { epoch: u32, let_idx: usize },
+}
+
+struct AsgState {
+    queue: VecDeque<(u64, SimTimeUs)>, // (engine token, arrival µs)
+    /// Monotone token invalidating stale Timeout events.
+    timer_token: u64,
+}
+
+/// Precomputed per-assignment constants (µs domain), flat-indexed in
+/// parallel with the schedule's assignments.
+#[derive(Clone, Copy)]
+struct AsgConst {
+    /// Planned-batch execution estimate at the effective fraction.
+    exec_est_us: SimTimeUs,
+    /// SLO bound.
+    slo_us: SimTimeUs,
+    /// Duty timeout (`batcher::slo_timeout_us` over the let's cycle).
+    timeout_us: SimTimeUs,
+    /// True SLO in ms for metrics keying.
+    slo_ms: f64,
+}
+
+struct LetState {
+    /// Parallel to the schedule's assignments.
+    asgs: Vec<AsgState>,
+    busy: bool,
+    /// Round-robin pointer over assignments.
+    next_asg: usize,
+    /// Assignment/batch of the in-flight execution (for interference).
+    running: Option<(usize, u32)>, // (asg_idx, actual batch)
+    /// In-flight requests: (asg_idx, id, arrival µs).
+    inflight: Vec<(usize, u64, SimTimeUs)>,
+}
+
+/// A retired (pre-swap) in-flight request: everything its `Done` event
+/// needs to account it under the old schedule's constants.
+type Retired = (ModelId, f64, u64, SimTimeUs); // (model, slo_ms, token, arrival µs)
+
+/// The persistent discrete-event serving core. See the module docs for
+/// the lifecycle and swap semantics.
+pub struct ServingEngine<'a> {
+    lm: &'a LatencyModel,
+    gt: &'a GroundTruth,
+    cfg: SimConfig,
+    schedule: Schedule,
+    /// Bumped at every swap; events carry the epoch they were armed in.
+    epoch: u32,
+    /// Routing table: model index -> [(let_idx, asg_idx, weight)].
+    routes: Vec<Vec<(usize, usize, f64)>>,
+    /// Reverse map: `[let][asg]` -> position in `routes[model]`.
+    route_pos: Vec<Vec<usize>>,
+    /// Per-route in-system counters for deficit-weighted routing:
+    /// incremented at enqueue, decremented when a queued request is
+    /// dropped — so only work a route actually absorbed counts against
+    /// it (dropped requests no longer skew the split under overload).
+    served: Vec<Vec<f64>>,
+    lets: Vec<LetState>,
+    consts: Vec<Vec<AsgConst>>,
+    /// Per-GPU serialization for TemporalOnly.
+    gpu_busy: Vec<bool>,
+    gpu_waiters: Vec<VecDeque<usize>>,
+    q: EventQueue<Event>,
+    rng: Pcg32,
+    report: Report,
+    /// Next engine-assigned request token (unique across all injects,
+    /// regardless of caller-side id schemes).
+    next_token: u64,
+    /// Pre-swap in-flight batches waiting for their old-epoch `Done`,
+    /// keyed (epoch, let_idx). BTreeMap for deterministic drain order.
+    retired: BTreeMap<(u32, usize), Vec<Retired>>,
+    /// Injected request count per model (conservation accounting).
+    injected: [u64; 5],
+    /// Double-serve guard over engine tokens, populated only under
+    /// debug_assertions.
+    served_ids: HashSet<u64>,
+    closed: bool,
+}
+
+impl<'a> ServingEngine<'a> {
+    /// A fresh engine serving `schedule`. `window_s` is the measurement
+    /// window for throughput reporting; `Schedule::default()` (no lets)
+    /// is valid and drops every arrival until a real schedule is
+    /// swapped in.
+    pub fn new(
+        lm: &'a LatencyModel,
+        gt: &'a GroundTruth,
+        schedule: Schedule,
+        window_s: f64,
+        cfg: &SimConfig,
+    ) -> Self {
+        let mut eng = ServingEngine {
+            lm,
+            gt,
+            cfg: cfg.clone(),
+            schedule: Schedule::default(),
+            epoch: 0,
+            routes: vec![Vec::new(); 5],
+            route_pos: Vec::new(),
+            served: vec![Vec::new(); 5],
+            lets: Vec::new(),
+            consts: Vec::new(),
+            gpu_busy: Vec::new(),
+            gpu_waiters: Vec::new(),
+            q: EventQueue::new(),
+            rng: Pcg32::seeded(cfg.seed),
+            report: Report::new(window_s),
+            next_token: 0,
+            retired: BTreeMap::new(),
+            injected: [0; 5],
+            served_ids: HashSet::new(),
+            closed: false,
+        };
+        eng.install_schedule(schedule);
+        eng
+    }
+
+    /// Feed arrivals into the event queue (times are absolute ms on the
+    /// engine's virtual clock; past times clamp to `now`). May be called
+    /// repeatedly — the adaptive server injects the whole trace once, a
+    /// streaming frontend would inject batches as they appear; nothing
+    /// is retained per request beyond its pending event, and the engine
+    /// assigns its own request tokens (caller-side `Arrival::id`
+    /// schemes need not be unique across injects).
+    pub fn inject(&mut self, arrivals: &[Arrival]) {
+        debug_assert!(!self.closed, "inject after finish/close");
+        for a in arrivals {
+            let token = self.next_token;
+            self.next_token += 1;
+            self.injected[a.model.index()] += 1;
+            self.q.push_at_us(
+                ms_to_us(a.time_ms),
+                Event::Arrive { model: a.model, token },
+            );
+        }
+    }
+
+    /// Process every event with `time <= t_us`, then advance the clock
+    /// to `t_us` so follow-up actions (swaps, further injections) see a
+    /// consistent `now` even when the queue went quiet earlier.
+    pub fn run_until(&mut self, t_us: SimTimeUs) {
+        while let Some(te) = self.q.peek_time_us() {
+            if te > t_us {
+                break;
+            }
+            let (now, ev) = self.q.pop().expect("peeked event vanished");
+            self.handle(now, ev);
+        }
+        self.q.advance_to(t_us);
+    }
+
+    /// Live schedule hand-over. See the module docs for the exact
+    /// semantics; `mode` picks what happens to the queued backlog.
+    pub fn swap_schedule(&mut self, next: Schedule, mode: SwapMode) {
+        // Retire in-flight batches: their Done events complete them
+        // under the old schedule's model/SLO constants.
+        for li in 0..self.lets.len() {
+            let inflight = std::mem::take(&mut self.lets[li].inflight);
+            if inflight.is_empty() {
+                continue;
+            }
+            let mut completions = Vec::with_capacity(inflight.len());
+            for (ai, id, arr) in inflight {
+                let m = self.schedule.lets[li].assignments[ai].model;
+                completions.push((m, self.consts[li][ai].slo_ms, id, arr));
+            }
+            self.retired.insert((self.epoch, li), completions);
+        }
+        // Collect (or drop) the queued backlog in FIFO order per queue.
+        let mut backlog: Vec<(ModelId, u64, SimTimeUs)> = Vec::new();
+        for li in 0..self.lets.len() {
+            for ai in 0..self.lets[li].asgs.len() {
+                let m = self.schedule.lets[li].assignments[ai].model;
+                let slo_ms = self.consts[li][ai].slo_ms;
+                while let Some((id, arr)) = self.lets[li].asgs[ai].queue.pop_front() {
+                    match mode {
+                        SwapMode::Migrate => backlog.push((m, id, arr)),
+                        SwapMode::DropQueued => {
+                            self.report.model_mut(m, slo_ms).record_drop()
+                        }
+                    }
+                }
+            }
+        }
+        self.epoch += 1;
+        self.install_schedule(next);
+        // Re-route oldest-first across ALL old queues (stable on the
+        // deterministic collection order), so a target queue's head is
+        // its oldest request and the duty timer — armed from the head's
+        // arrival — covers everything behind it.
+        backlog.sort_by_key(|&(_, _, arr)| arr);
+        for (m, id, arr) in backlog {
+            self.route_request(id, m, arr);
+        }
+    }
+
+    /// Currently installed schedule.
+    pub fn schedule(&self) -> &Schedule {
+        &self.schedule
+    }
+
+    /// Accumulated metrics so far (windowed views via
+    /// `Report::snapshot_window`).
+    pub fn report(&self) -> &Report {
+        &self.report
+    }
+
+    /// Requests injected so far, per model (conservation: after `close`,
+    /// equals served + dropped per model in the report).
+    pub fn injected_per_model(&self) -> [u64; 5] {
+        self.injected
+    }
+
+    /// Current virtual time (µs).
+    pub fn now_us(&self) -> SimTimeUs {
+        self.q.now_us()
+    }
+
+    /// End-of-trace accounting: everything still queued, in flight, or
+    /// retired is dropped (and counted). Idempotent; the engine accepts
+    /// no further work afterwards.
+    pub fn close(&mut self) {
+        if self.closed {
+            return;
+        }
+        self.closed = true;
+        for li in 0..self.lets.len() {
+            for ai in 0..self.lets[li].asgs.len() {
+                let m = self.schedule.lets[li].assignments[ai].model;
+                let slo_ms = self.consts[li][ai].slo_ms;
+                let pos = self.route_pos[li][ai];
+                while self.lets[li].asgs[ai].queue.pop_front().is_some() {
+                    self.served[m.index()][pos] -= 1.0;
+                    self.report.model_mut(m, slo_ms).record_drop();
+                }
+            }
+            let inflight = std::mem::take(&mut self.lets[li].inflight);
+            for (ai, _id, _arr) in inflight {
+                let m = self.schedule.lets[li].assignments[ai].model;
+                let pos = self.route_pos[li][ai];
+                self.served[m.index()][pos] -= 1.0;
+                self.report.model_mut(m, self.consts[li][ai].slo_ms).record_drop();
+            }
+        }
+        let retired = std::mem::take(&mut self.retired);
+        for completions in retired.into_values() {
+            for (m, slo_ms, _id, _arr) in completions {
+                self.report.model_mut(m, slo_ms).record_drop();
+            }
+        }
+        // Injected arrivals whose Arrive event never ran (a caller that
+        // closes before running past the trace end) are drops too —
+        // conservation must hold for every close point.
+        while let Some((_, ev)) = self.q.pop() {
+            if let Event::Arrive { model, .. } = ev {
+                self.report.model_mut(model, self.lm.slo_ms(model)).record_drop();
+            }
+        }
+    }
+
+    /// Close out and return the final report.
+    pub fn finish(mut self) -> Report {
+        self.close();
+        self.report
+    }
+
+    // ---- internals -------------------------------------------------------
+
+    /// Install `next` as the serving schedule: rebuild routes, queues,
+    /// duty constants, and executor state. Queues start empty — callers
+    /// migrate any backlog afterwards (`swap_schedule`).
+    fn install_schedule(&mut self, next: Schedule) {
+        self.schedule = next;
+        let mut routes: Vec<Vec<(usize, usize, f64)>> = vec![Vec::new(); 5];
+        let mut route_pos: Vec<Vec<usize>> = self
+            .schedule
+            .lets
+            .iter()
+            .map(|lp| vec![0usize; lp.assignments.len()])
+            .collect();
+        for (li, lp) in self.schedule.lets.iter().enumerate() {
+            for (ai, a) in lp.assignments.iter().enumerate() {
+                routes[a.model.index()].push((li, ai, a.rate));
+                route_pos[li][ai] = routes[a.model.index()].len() - 1;
+            }
+        }
+        let lets: Vec<LetState> = self
+            .schedule
+            .lets
+            .iter()
+            .map(|lp| LetState {
+                asgs: lp
+                    .assignments
+                    .iter()
+                    .map(|_| AsgState { queue: VecDeque::new(), timer_token: 0 })
+                    .collect(),
+                busy: false,
+                next_asg: 0,
+                running: None,
+                inflight: Vec::new(),
+            })
+            .collect();
+        // Per-let duty cycle: the sum of all assignments' planned
+        // executions. The batching timeout must leave room for a full
+        // duty cycle (the request may queue behind every co-assigned
+        // model's slot), not just the model's own execution.
+        let lm = self.lm;
+        let mode = self.cfg.mode;
+        let consts: Vec<Vec<AsgConst>> = self
+            .schedule
+            .lets
+            .iter()
+            .map(|lp| {
+                let p_exec = exec_fraction(mode, lp.spec.fraction());
+                let duty_us: SimTimeUs = lp
+                    .assignments
+                    .iter()
+                    .map(|a| ms_to_us(lm.latency_ms(a.model, a.batch, p_exec)))
+                    .sum();
+                lp.assignments
+                    .iter()
+                    .map(|a| {
+                        let slo_ms = lm.slo_ms(a.model);
+                        let slo_us = ms_to_us(slo_ms);
+                        AsgConst {
+                            exec_est_us: ms_to_us(lm.latency_ms(a.model, a.batch, p_exec)),
+                            slo_us,
+                            timeout_us: super::batcher::slo_timeout_us(slo_us, duty_us),
+                            slo_ms,
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let num_gpus = self.schedule.lets.iter().map(|l| l.spec.gpu + 1).max().unwrap_or(0);
+        self.served = routes.iter().map(|r| vec![0.0; r.len()]).collect();
+        self.routes = routes;
+        self.route_pos = route_pos;
+        self.lets = lets;
+        self.consts = consts;
+        self.gpu_busy = vec![false; num_gpus];
+        self.gpu_waiters = vec![VecDeque::new(); num_gpus];
+    }
+
+    fn handle(&mut self, now: SimTimeUs, ev: Event) {
+        match ev {
+            Event::Arrive { model, token } => {
+                self.route_request(token, model, now);
+            }
+            Event::Timeout { epoch, let_idx, asg_idx, armed_at } => {
+                if epoch != self.epoch {
+                    return; // armed under a schedule that is gone
+                }
+                if self.lets[let_idx].asgs[asg_idx].timer_token != armed_at {
+                    return; // stale timer
+                }
+                if self.lets[let_idx].asgs[asg_idx].queue.is_empty() {
+                    return;
+                }
+                if !self.lets[let_idx].busy {
+                    self.try_start(let_idx);
+                } else {
+                    // Re-arm: check again shortly after the current run.
+                    let token = {
+                        let st = &mut self.lets[let_idx].asgs[asg_idx];
+                        st.timer_token += 1;
+                        st.timer_token
+                    };
+                    self.q.push_after_us(
+                        500,
+                        Event::Timeout {
+                            epoch: self.epoch,
+                            let_idx,
+                            asg_idx,
+                            armed_at: token,
+                        },
+                    );
+                }
+            }
+            Event::Done { epoch, let_idx } => {
+                if epoch != self.epoch {
+                    // A pre-swap execution finishing under the old
+                    // schedule's constants.
+                    if let Some(completions) = self.retired.remove(&(epoch, let_idx)) {
+                        for (m, slo_ms, id, arr) in completions {
+                            self.record_completion(id, m, slo_ms, arr, now);
+                        }
+                    }
+                    return;
+                }
+                let gpu = self.schedule.lets[let_idx].spec.gpu;
+                let inflight = std::mem::take(&mut self.lets[let_idx].inflight);
+                for (ai, id, arr) in inflight {
+                    let m = self.schedule.lets[let_idx].assignments[ai].model;
+                    let slo_ms = self.consts[let_idx][ai].slo_ms;
+                    self.record_completion(id, m, slo_ms, arr, now);
+                }
+                self.lets[let_idx].busy = false;
+                self.lets[let_idx].running = None;
+                if self.cfg.mode == ShareMode::TemporalOnly {
+                    self.gpu_busy[gpu] = false;
+                    if let Some(waiter) = self.gpu_waiters[gpu].pop_front() {
+                        self.try_start(waiter);
+                    }
+                }
+                // Keep draining this let's own queues.
+                if !self.lets[let_idx].busy {
+                    self.try_start(let_idx);
+                }
+            }
+        }
+    }
+
+    fn record_completion(
+        &mut self,
+        id: u64,
+        m: ModelId,
+        slo_ms: f64,
+        arrival_us: SimTimeUs,
+        now: SimTimeUs,
+    ) {
+        if cfg!(debug_assertions) {
+            assert!(self.served_ids.insert(id), "request {id} served twice");
+        }
+        self.report.model_mut(m, slo_ms).record(us_to_ms(now - arrival_us));
+    }
+
+    /// Deficit-weighted routing of one request (fresh arrival or
+    /// migrated backlog entry): pick the route with the least in-system
+    /// work relative to its planned share, enqueue, and kick off a batch
+    /// or arm the duty timer. Requests for models with no route are
+    /// dropped (and counted).
+    fn route_request(&mut self, id: u64, model: ModelId, arrival_us: SimTimeUs) {
+        let m_idx = model.index();
+        if self.routes[m_idx].is_empty() {
+            self.report.model_mut(model, self.lm.slo_ms(model)).record_drop();
+            return;
+        }
+        let (pos, li, ai) = {
+            let options = &self.routes[m_idx];
+            let served = &self.served[m_idx];
+            let (pos, &(li, ai, _w)) = options
+                .iter()
+                .enumerate()
+                .min_by(|(i1, r1), (i2, r2)| {
+                    let k1 = served[*i1] / r1.2.max(1e-9);
+                    let k2 = served[*i2] / r2.2.max(1e-9);
+                    k1.total_cmp(&k2)
+                })
+                .expect("non-empty routes");
+            (pos, li, ai)
+        };
+        self.served[m_idx][pos] += 1.0;
+        self.lets[li].asgs[ai].queue.push_back((id, arrival_us));
+        let b_target = self.schedule.lets[li].assignments[ai].batch as usize;
+        if !self.lets[li].busy && self.lets[li].asgs[ai].queue.len() >= b_target {
+            self.try_start(li);
+        } else if self.lets[li].asgs[ai].queue.len() == 1 {
+            // Arm the duty timeout for the queue head (absolute, so a
+            // migrated head keeps only its remaining allowance).
+            let token = {
+                let st = &mut self.lets[li].asgs[ai];
+                st.timer_token += 1;
+                st.timer_token
+            };
+            self.q.push_at_us(
+                arrival_us + self.consts[li][ai].timeout_us,
+                Event::Timeout {
+                    epoch: self.epoch,
+                    let_idx: li,
+                    asg_idx: ai,
+                    armed_at: token,
+                },
+            );
+        }
+    }
+
+    /// Try to start the next batch on `let_idx` (must be idle). Picks
+    /// the next nonempty assignment round-robin, forms the batch,
+    /// accounts drops, computes the (interfered) execution time, and
+    /// schedules Done.
+    fn try_start(&mut self, let_idx: usize) {
+        if self.lets[let_idx].busy {
+            return;
+        }
+        let now = self.q.now_us();
+        let n_asgs = self.schedule.lets[let_idx].assignments.len();
+
+        // Pick next assignment with work, starting from the round-robin
+        // pointer.
+        let mut chosen: Option<usize> = None;
+        for k in 0..n_asgs {
+            let ai = (self.lets[let_idx].next_asg + k) % n_asgs;
+            let model = self.schedule.lets[let_idx].assignments[ai].model;
+            let batch = self.schedule.lets[let_idx].assignments[ai].batch;
+            let AsgConst { exec_est_us, slo_us, timeout_us, slo_ms } =
+                self.consts[let_idx][ai];
+            // Drop hopeless heads first: even starting right now, the
+            // request would finish past its SLO.
+            let st = &mut self.lets[let_idx].asgs[ai];
+            let before = st.queue.len();
+            st.queue.retain(|&(_, arr)| now + exec_est_us <= arr + slo_us);
+            let dropped = before - st.queue.len();
+            if dropped > 0 {
+                // Dropped work no longer counts against the route.
+                let pos = self.route_pos[let_idx][ai];
+                self.served[model.index()][pos] -= dropped as f64;
+                for _ in 0..dropped {
+                    self.report.model_mut(model, slo_ms).record_drop();
+                }
+            }
+            let st = &self.lets[let_idx].asgs[ai];
+            if !st.queue.is_empty() {
+                let full = st.queue.len() >= batch as usize;
+                let head_arr = st.queue.front().expect("nonempty queue").1;
+                if full || now - head_arr >= timeout_us {
+                    chosen = Some(ai);
+                    break;
+                }
+                // Not ready: make sure a timer exists.
+                let token = {
+                    let st = &mut self.lets[let_idx].asgs[ai];
+                    st.timer_token += 1;
+                    st.timer_token
+                };
+                self.q.push_at_us(
+                    head_arr + timeout_us,
+                    Event::Timeout {
+                        epoch: self.epoch,
+                        let_idx,
+                        asg_idx: ai,
+                        armed_at: token,
+                    },
+                );
+            }
+        }
+        let Some(ai) = chosen else { return };
+
+        let gpu = self.schedule.lets[let_idx].spec.gpu;
+        if self.cfg.mode == ShareMode::TemporalOnly {
+            if self.gpu_busy[gpu] {
+                if !self.gpu_waiters[gpu].contains(&let_idx) {
+                    self.gpu_waiters[gpu].push_back(let_idx);
+                }
+                return;
+            }
+            self.gpu_busy[gpu] = true;
+        }
+
+        let model = self.schedule.lets[let_idx].assignments[ai].model;
+        let b_planned = self.schedule.lets[let_idx].assignments[ai].batch;
+        let b_actual =
+            (self.lets[let_idx].asgs[ai].queue.len() as u32).min(b_planned).max(1);
+        let mut inflight = Vec::with_capacity(b_actual as usize);
+        for _ in 0..b_actual {
+            let (id, arr) =
+                self.lets[let_idx].asgs[ai].queue.pop_front().expect("batch underflow");
+            inflight.push((ai, id, arr));
+        }
+
+        let p_me = self.schedule.lets[let_idx].spec.fraction();
+        let p_exec = exec_fraction(self.cfg.mode, p_me);
+        let mut exec = self.lm.latency_ms(model, b_actual, p_exec);
+
+        // Interference with the co-resident let (concurrent modes only).
+        if self.cfg.mode != ShareMode::TemporalOnly {
+            if let Some((co_idx, (co_ai, co_b))) = self.co_resident_running(let_idx) {
+                let co_model = self.schedule.lets[co_idx].assignments[co_ai].model;
+                let p_co = self.schedule.lets[co_idx].spec.fraction();
+                let my_prof = profile(model);
+                let co_prof = profile(co_model);
+                let me = TaskDemand {
+                    model,
+                    batch: b_actual,
+                    l2: my_prof.l2_util(p_me, b_actual),
+                    bw: my_prof.bw_util(p_me, b_actual),
+                };
+                let other = TaskDemand {
+                    model: co_model,
+                    batch: co_b,
+                    l2: co_prof.l2_util(p_co, co_b),
+                    bw: co_prof.bw_util(p_co, co_b),
+                };
+                let base =
+                    self.gt.factor(&me, &other) * self.cfg.mode.contention_amplification();
+                let vol = self.cfg.mode.contention_volatility();
+                let factor = (base * (1.0 + self.rng.normal(0.0, vol))).max(0.0);
+                exec *= 1.0 + factor;
+            }
+        }
+
+        self.lets[let_idx].busy = true;
+        self.lets[let_idx].running = Some((ai, b_actual));
+        self.lets[let_idx].inflight = inflight;
+        self.lets[let_idx].next_asg = (ai + 1) % n_asgs;
+        self.q.push_after_us(
+            ms_to_us(exec),
+            Event::Done { epoch: self.epoch, let_idx },
+        );
+    }
+
+    /// The co-resident gpu-let currently executing, if any.
+    fn co_resident_running(&self, let_idx: usize) -> Option<(usize, (usize, u32))> {
+        let gpu = self.schedule.lets[let_idx].spec.gpu;
+        self.schedule
+            .lets
+            .iter()
+            .enumerate()
+            .filter(|(i, lp)| *i != let_idx && lp.spec.gpu == gpu)
+            .find_map(|(i, _)| self.lets[i].running.map(|r| (i, r)))
+    }
+}
+
+/// Effective execution fraction under a sharing mode: without static
+/// provisioning (MPS default / temporal) a kernel sees the whole GPU.
+fn exec_fraction(mode: ShareMode, nominal: f64) -> f64 {
+    match mode {
+        ShareMode::Partitioned => nominal,
+        ShareMode::MpsDefault | ShareMode::TemporalOnly => 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::gpulet::GpuLetSpec;
+    use crate::sched::types::{Assignment, LetPlan};
+    use crate::sched::{ElasticPartitioning, SchedCtx, Scheduler};
+    use crate::workload::generate_arrivals;
+
+    fn world() -> (LatencyModel, GroundTruth) {
+        (LatencyModel::new(), GroundTruth::default())
+    }
+
+    fn sched_for(rates: &[f64; 5], gpus: usize) -> Schedule {
+        let ctx = SchedCtx::new(gpus, None);
+        ElasticPartitioning::gpulet().schedule(&ctx, rates).unwrap()
+    }
+
+    fn horizon_us(arrivals: &[Arrival], cfg: &SimConfig) -> SimTimeUs {
+        arrivals.last().map(|a| ms_to_us(a.time_ms)).unwrap_or(0)
+            + ms_to_us(cfg.drain_ms)
+    }
+
+    fn conserved(eng: &ServingEngine<'_>) {
+        let injected = eng.injected_per_model();
+        for m in ModelId::ALL {
+            let total = eng.report().model(m).map_or(0, |mm| mm.total());
+            assert_eq!(
+                total,
+                injected[m.index()],
+                "{m}: {total} accounted vs {} injected",
+                injected[m.index()]
+            );
+        }
+    }
+
+    #[test]
+    fn empty_schedule_drops_everything() {
+        let (lm, gt) = world();
+        let cfg = SimConfig::default();
+        let arrivals =
+            generate_arrivals(&[(ModelId::Lenet, 50.0)], 2.0, 3).unwrap();
+        let mut eng =
+            ServingEngine::new(&lm, &gt, Schedule::default(), 2.0, &cfg);
+        eng.inject(&arrivals);
+        eng.run_until(horizon_us(&arrivals, &cfg));
+        eng.close();
+        conserved(&eng);
+        let mm = eng.report().model(ModelId::Lenet).unwrap();
+        assert_eq!(mm.served, 0);
+        assert_eq!(mm.dropped as usize, arrivals.len());
+    }
+
+    #[test]
+    fn early_close_counts_unprocessed_arrivals_as_drops() {
+        // A caller may close before running past the trace end: the
+        // Arrive events still pending in the queue must be counted.
+        let (lm, gt) = world();
+        let cfg = SimConfig::default();
+        let schedule = sched_for(&[50.0, 0.0, 0.0, 0.0, 0.0], 1);
+        let arrivals =
+            generate_arrivals(&[(ModelId::Lenet, 50.0)], 10.0, 4).unwrap();
+        let mut eng = ServingEngine::new(&lm, &gt, schedule, 10.0, &cfg);
+        eng.inject(&arrivals);
+        eng.run_until(ms_to_us(2_000.0)); // well before the last arrival
+        eng.close();
+        conserved(&eng);
+        let mm = eng.report().model(ModelId::Lenet).unwrap();
+        assert!(mm.dropped > 0, "tail arrivals must be counted as drops");
+    }
+
+    #[test]
+    fn swap_to_same_layout_conserves_and_keeps_serving() {
+        let (lm, gt) = world();
+        let cfg = SimConfig::default();
+        let rates = [80.0, 0.0, 0.0, 0.0, 40.0];
+        let schedule = sched_for(&rates, 2);
+        let arrivals = generate_arrivals(
+            &[(ModelId::Lenet, 80.0), (ModelId::Vgg, 40.0)],
+            10.0,
+            9,
+        )
+        .unwrap();
+        let mut eng = ServingEngine::new(&lm, &gt, schedule.clone(), 10.0, &cfg);
+        eng.inject(&arrivals);
+        // Three mid-trace hot swaps onto a clone of the same schedule.
+        for k in 1..=3u64 {
+            eng.run_until(ms_to_us(2_500.0 * k as f64));
+            eng.swap_schedule(schedule.clone(), SwapMode::Migrate);
+        }
+        eng.run_until(horizon_us(&arrivals, &cfg));
+        eng.close();
+        conserved(&eng);
+        let served: u64 = [ModelId::Lenet, ModelId::Vgg]
+            .iter()
+            .map(|&m| eng.report().model(m).map_or(0, |mm| mm.served))
+            .sum();
+        assert!(
+            served as f64 > 0.95 * arrivals.len() as f64,
+            "served {served}/{}",
+            arrivals.len()
+        );
+    }
+
+    #[test]
+    fn model_losing_all_routes_drops_backlog_counted() {
+        let (lm, gt) = world();
+        let cfg = SimConfig::default();
+        // VGG-only schedule, then swap to a LeNet-only schedule while
+        // VGG work is queued and in flight.
+        let vgg = sched_for(&[0.0, 0.0, 0.0, 0.0, 50.0], 1);
+        let lenet = sched_for(&[50.0, 0.0, 0.0, 0.0, 0.0], 1);
+        let arrivals =
+            generate_arrivals(&[(ModelId::Vgg, 80.0)], 4.0, 5).unwrap();
+        let mut eng = ServingEngine::new(&lm, &gt, vgg, 4.0, &cfg);
+        eng.inject(&arrivals);
+        eng.run_until(ms_to_us(2_000.0));
+        eng.swap_schedule(lenet, SwapMode::Migrate);
+        eng.run_until(horizon_us(&arrivals, &cfg));
+        eng.close();
+        conserved(&eng);
+        let mm = eng.report().model(ModelId::Vgg).unwrap();
+        // Arrivals after the swap and the migrated backlog all drop;
+        // anything served completed before or across the boundary.
+        assert!(mm.dropped > 0, "backlog must be dropped, not lost");
+        assert!(mm.served > 0, "pre-swap work should have been served");
+    }
+
+    #[test]
+    fn inflight_finishes_under_old_constants_after_swap() {
+        let (lm, gt) = world();
+        let cfg = SimConfig::default();
+        let vgg = sched_for(&[0.0, 0.0, 0.0, 0.0, 50.0], 1);
+        let lenet = sched_for(&[50.0, 0.0, 0.0, 0.0, 0.0], 1);
+        // A single burst that is in flight when the swap hits: VGG@100%
+        // takes tens of ms per batch, so swap at 5 ms mid-execution.
+        let burst: Vec<Arrival> = (0..4)
+            .map(|i| Arrival { time_ms: 0.1 * i as f64, model: ModelId::Vgg, id: i })
+            .collect();
+        let mut eng = ServingEngine::new(&lm, &gt, vgg, 1.0, &cfg);
+        eng.inject(&burst);
+        eng.run_until(ms_to_us(5.0));
+        let busy = eng.lets.iter().any(|l| l.busy);
+        assert!(busy, "a VGG batch must be executing at t=5ms");
+        eng.swap_schedule(lenet, SwapMode::Migrate);
+        assert!(!eng.retired.is_empty(), "in-flight batch must be retired");
+        eng.run_until(ms_to_us(2_000.0));
+        eng.close();
+        conserved(&eng);
+        let mm = eng.report().model(ModelId::Vgg).unwrap();
+        assert!(mm.served > 0, "retired execution must complete and count");
+    }
+
+    #[test]
+    fn drop_queued_mode_drops_backlog() {
+        let (lm, gt) = world();
+        let cfg = SimConfig::default();
+        let schedule = sched_for(&[0.0, 0.0, 0.0, 0.0, 50.0], 1);
+        let arrivals =
+            generate_arrivals(&[(ModelId::Vgg, 200.0)], 3.0, 6).unwrap();
+        let mut eng = ServingEngine::new(&lm, &gt, schedule.clone(), 3.0, &cfg);
+        eng.inject(&arrivals);
+        eng.run_until(ms_to_us(1_500.0));
+        eng.swap_schedule(schedule.clone(), SwapMode::DropQueued);
+        eng.run_until(horizon_us(&arrivals, &cfg));
+        eng.close();
+        conserved(&eng);
+    }
+
+    #[test]
+    fn route_counters_track_in_system_work_not_drops() {
+        // Satellite regression: deficit counters are decremented when a
+        // queued request is dropped, so after close() they equal exactly
+        // the served count — under the old enqueue-only accounting they
+        // equaled served + dropped and overload drops skewed routing.
+        let (lm, gt) = world();
+        let cfg = SimConfig::default();
+        // Two routes for LeNet with equal weights via a hand-built
+        // schedule, overloaded 4x so hopeless-head drops occur.
+        let schedule = Schedule {
+            lets: vec![
+                LetPlan {
+                    spec: GpuLetSpec { gpu: 0, size_pct: 20 },
+                    assignments: vec![Assignment {
+                        model: ModelId::Lenet,
+                        batch: 8,
+                        rate: 300.0,
+                    }],
+                },
+                LetPlan {
+                    spec: GpuLetSpec { gpu: 1, size_pct: 20 },
+                    assignments: vec![Assignment {
+                        model: ModelId::Lenet,
+                        batch: 8,
+                        rate: 300.0,
+                    }],
+                },
+            ],
+        };
+        let arrivals =
+            generate_arrivals(&[(ModelId::Lenet, 2400.0)], 3.0, 8).unwrap();
+        let mut eng = ServingEngine::new(&lm, &gt, schedule, 3.0, &cfg);
+        eng.inject(&arrivals);
+        eng.run_until(horizon_us(&arrivals, &cfg));
+        eng.close();
+        conserved(&eng);
+        let mm = eng.report().model(ModelId::Lenet).unwrap();
+        assert!(mm.dropped > 0, "overload must drop");
+        let counter_total: f64 = eng.served.iter().flatten().sum();
+        assert_eq!(
+            counter_total as u64, mm.served,
+            "route counters must equal served work exactly (drops decremented)"
+        );
+    }
+
+    #[test]
+    fn stepped_run_until_matches_one_shot() {
+        let (lm, gt) = world();
+        let cfg = SimConfig::default();
+        let rates = [60.0, 0.0, 0.0, 0.0, 30.0];
+        let schedule = sched_for(&rates, 2);
+        let arrivals = generate_arrivals(
+            &[(ModelId::Lenet, 60.0), (ModelId::Vgg, 30.0)],
+            6.0,
+            13,
+        )
+        .unwrap();
+        let horizon = horizon_us(&arrivals, &cfg);
+
+        let mut one = ServingEngine::new(&lm, &gt, schedule.clone(), 6.0, &cfg);
+        one.inject(&arrivals);
+        one.run_until(horizon);
+        let r_one = one.finish();
+
+        // Split injection + 250 ms stepping must be byte-identical.
+        let mut stepped = ServingEngine::new(&lm, &gt, schedule, 6.0, &cfg);
+        let (a, b) = arrivals.split_at(arrivals.len() / 2);
+        stepped.inject(a);
+        stepped.inject(b);
+        let mut t = 0;
+        while t < horizon {
+            t = (t + 250_000).min(horizon);
+            stepped.run_until(t);
+        }
+        let r_stepped = stepped.finish();
+        assert_eq!(r_one.to_json().to_string(), r_stepped.to_json().to_string());
+    }
+}

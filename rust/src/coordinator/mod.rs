@@ -1,20 +1,27 @@
 //! The serving coordinator (frontend scheduler + backend executors).
 //!
-//! Two execution paths share the same scheduling/batching logic:
+//! Three layers share the same scheduling/batching logic:
 //!
-//! * `simserver` — discrete-event simulation under the virtual clock;
+//! * `engine` — the persistent continuous-time serving core
+//!   (`ServingEngine`): owns queues, in-flight work, routing counters,
+//!   and metrics across the whole trace, and swaps schedules live.
+//! * `simserver` — the one-shot `simulate` wrapper over the engine;
 //!   runs every paper experiment (partition sizes and MPS semantics
 //!   behave like the paper's 4-GPU testbed).
 //! * `server` — the real path: duty-cycle batching over the PJRT CPU
 //!   runtime executing the AOT artifacts (examples/quickstart).
 //!
 //! `reorganizer` implements the periodic re-scheduling loop with the
-//! 10-15 s background partition re-organization cost (§5, Fig 14).
+//! 10-15 s background partition re-organization cost (§5, Fig 14),
+//! driving one engine across the trace and swapping schedules at
+//! re-organization boundaries — requests survive the hand-over.
 
 pub mod batcher;
+pub mod engine;
 pub mod reorganizer;
 pub mod server;
 pub mod simserver;
 
-pub use reorganizer::{AdaptiveServer, WindowStats};
-pub use simserver::{simulate, SimConfig};
+pub use engine::{ServingEngine, SimConfig, SwapMode};
+pub use reorganizer::{AdaptiveOutcome, AdaptiveServer, WindowStats};
+pub use simserver::simulate;

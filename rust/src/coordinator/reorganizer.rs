@@ -7,18 +7,31 @@
 //! MPS daemon restart + kernel/model reload + warmup); the *old*
 //! schedule keeps serving until the swap completes, so the cost shows
 //! up as adaptation lag, not downtime.
+//!
+//! One persistent [`ServingEngine`] serves the whole trace: queued and
+//! in-flight requests survive window boundaries and re-organizations
+//! (`SwapMode::Migrate` re-routes the backlog; in-flight batches finish
+//! under the old constants). Per-window telemetry is carved out of the
+//! engine's accumulating report with `Report::snapshot_window` — no
+//! state is ever reset. The previous implementation re-simulated each
+//! 20 s window from a cold start, which silently destroyed queued and
+//! in-flight work at every boundary and gave each window a free drain
+//! with no competing next-window arrivals; the conservation test in
+//! `tests/engine_conservation.rs` pins the fix.
 
+use crate::error::Result;
 use crate::interference::GroundTruth;
-use crate::metrics::Report;
+use crate::metrics::{CounterSnapshot, Report};
 use crate::models::ModelId;
 use crate::perfmodel::RateMonitor;
-use crate::sched::{Schedule, Scheduler, SchedCtx};
+use crate::sched::{SchedCtx, Schedule, Scheduler};
+use crate::simclock::ms_to_us;
 use crate::workload::{generator::generate_varying, Arrival, FluctuationTrace};
 
-use super::simserver::{simulate, SimConfig};
+use super::engine::{ServingEngine, SimConfig, SwapMode};
 
 /// Per-window telemetry (one row of Fig 14's three stacked series).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct WindowStats {
     pub t_start_s: f64,
     /// Served req/s per model in this window.
@@ -29,6 +42,43 @@ pub struct WindowStats {
     pub violation_rate: f64,
     /// True if a re-organization started in this window.
     pub reorganized: bool,
+}
+
+/// Outcome of an adaptive serving run: the per-window Fig 14 series
+/// plus the exact whole-trace accounting from the persistent engine.
+#[derive(Clone, Debug)]
+pub struct AdaptiveOutcome {
+    pub windows: Vec<WindowStats>,
+    /// Whole-trace report (drops from every source included).
+    pub report: Report,
+    /// Requests offered per model; conservation holds exactly:
+    /// `offered[m] == report served + dropped` for every model.
+    pub offered: [u64; 5],
+}
+
+impl AdaptiveOutcome {
+    /// Whole-trace SLO violation share (drops included) — the paper's
+    /// Fig 14 headline number (0.14%).
+    pub fn overall_violation_share(&self) -> f64 {
+        self.report.overall_violation_rate()
+    }
+}
+
+/// Re-scheduling trigger: a model's smoothed rate moved by more than
+/// `threshold` *relative to the last scheduled rate*, with a small
+/// absolute floor so idle-noise (a stray request on a quiet model)
+/// does not thrash the partitions. The floor replaces the old
+/// `/ base.max(1.0)` denominator clamp, which silently turned the
+/// relative test into an absolute `delta > threshold` for every model
+/// under 1 req/s — masking e.g. a 0.05 -> 0.12 req/s (2.4x) change.
+pub(crate) const MIN_TRIGGER_DELTA: f64 = 0.05;
+
+fn rates_changed(observed: &[f64; 5], baseline: &[f64; 5], threshold: f64) -> bool {
+    ModelId::ALL.iter().any(|&m| {
+        let now = observed[m.index()];
+        let base = baseline[m.index()];
+        (now - base).abs() > (base * threshold).max(MIN_TRIGGER_DELTA)
+    })
 }
 
 /// Periodic re-scheduling server over a rate-fluctuation trace.
@@ -65,36 +115,48 @@ impl<'a, S: Scheduler> AdaptiveServer<'a, S> {
         trace: &FluctuationTrace,
         duration_s: f64,
         seed: u64,
-    ) -> Vec<WindowStats> {
+    ) -> Result<AdaptiveOutcome> {
         let arrivals = generate_varying(
             &ModelId::ALL,
             |m, t| trace.rate_at(m, t),
             duration_s,
             1.0,
             seed,
-        );
-        self.run_arrivals(&arrivals, duration_s)
+        )?;
+        Ok(self.run_arrivals(&arrivals, duration_s))
     }
 
-    /// Serve a pre-generated arrival trace window by window.
-    pub fn run_arrivals(&self, arrivals: &[Arrival], duration_s: f64) -> Vec<WindowStats> {
+    /// Serve a pre-generated arrival trace (sorted by time) on one
+    /// persistent engine, with windowed metric snapshots.
+    pub fn run_arrivals(&self, arrivals: &[Arrival], duration_s: f64) -> AdaptiveOutcome {
         // Simulation/metrics view: true SLOs (ctx.lm is the tightened
         // planning view the scheduler uses).
         let lm_true = crate::perfmodel::LatencyModel::new();
-        let lm = &lm_true;
+        let cfg = SimConfig::default();
         let mut monitor = RateMonitor::new(self.ewma_alpha);
-        let mut stats = Vec::new();
+        let mut windows = Vec::new();
+        // The engine starts with an empty schedule (drops everything)
+        // until the bootstrap window installs the first real one.
+        let mut engine =
+            ServingEngine::new(&lm_true, &self.gt, Schedule::default(), duration_s, &cfg);
+        engine.inject(arrivals);
+
         let mut current: Option<Schedule> = None;
         let mut pending: Option<(Schedule, f64)> = None; // (next schedule, ready at s)
         let mut last_sched_rates: [f64; 5] = [0.0; 5];
+        let mut prev_counts = CounterSnapshot::default();
+        // Cursor over the (time-sorted) arrivals for rate observation.
+        let mut cursor = 0usize;
 
         let mut t = 0.0;
         while t < duration_s {
             let t_end = (t + self.period_s).min(duration_s);
-            // Swap in a pending schedule whose re-org completed.
+            // Swap in a pending schedule whose re-org completed: the
+            // engine migrates the backlog and retires in-flight work.
             let mut reorganized = false;
             if let Some((s, ready)) = pending.take() {
                 if ready <= t {
+                    engine.swap_schedule(s.clone(), SwapMode::Migrate);
                     current = Some(s);
                     reorganized = true;
                 } else {
@@ -102,33 +164,20 @@ impl<'a, S: Scheduler> AdaptiveServer<'a, S> {
                 }
             }
 
-            // This window's arrivals (times re-based to window start).
-            // Boundaries are compared in the sim clock's integer
-            // microseconds so a window cut is exact: every arrival lands
-            // in exactly one window even when `t * 1000.0` is not
-            // representable, and the re-based times match what the
-            // simulator would quantize to anyway.
-            let (w0_us, w1_us) = (
-                crate::simclock::ms_to_us(t * 1000.0),
-                crate::simclock::ms_to_us(t_end * 1000.0),
-            );
-            let window: Vec<Arrival> = arrivals
-                .iter()
-                .map(|a| (crate::simclock::ms_to_us(a.time_ms), a))
-                .filter(|&(u, _)| u >= w0_us && u < w1_us)
-                .map(|(u, a)| Arrival {
-                    time_ms: crate::simclock::us_to_ms(u - w0_us),
-                    ..*a
-                })
-                .collect();
-
-            // Observe rates.
-            for a in &window {
-                monitor.observe(a.model, 1);
+            // Observe this window's arrivals. Boundaries are compared in
+            // the sim clock's integer microseconds so a window cut is
+            // exact: every arrival lands in exactly one window even when
+            // `t * 1000.0` is not representable. `<=` matches the
+            // serving side — `run_until(w1_us)` processes events AT the
+            // boundary too, so observation and serving agree on which
+            // window a boundary arrival belongs to.
+            let w1_us = ms_to_us(t_end * 1000.0);
+            while cursor < arrivals.len() && ms_to_us(arrivals[cursor].time_ms) <= w1_us {
+                monitor.observe(arrivals[cursor].model, 1);
+                cursor += 1;
             }
             monitor.tick(t_end - t);
 
-            // Bootstrap: first window schedules immediately from observed.
             let observed: [f64; 5] = {
                 let mut r = [0.0; 5];
                 for m in ModelId::ALL {
@@ -136,53 +185,45 @@ impl<'a, S: Scheduler> AdaptiveServer<'a, S> {
                 }
                 r
             };
+            // Bootstrap: first window schedules immediately from
+            // observed rates (no reorg latency at boot).
             if current.is_none() {
-                // Initial schedule: no reorg latency at boot.
-                current = self.scheduler.schedule(self.ctx, &headroomed(&observed)).ok();
+                if let Ok(s) = self.scheduler.schedule(self.ctx, &headroomed(&observed)) {
+                    engine.swap_schedule(s.clone(), SwapMode::Migrate);
+                    current = Some(s);
+                }
                 last_sched_rates = observed;
             }
 
-            // Serve the window with the current schedule.
-            let report = match &current {
-                Some(s) => simulate(
-                    lm,
-                    &self.gt,
-                    s,
-                    &window,
-                    t_end - t,
-                    &SimConfig::default(),
-                ),
-                None => {
-                    // Nothing schedulable: everything drops.
-                    let mut r = Report::new(t_end - t);
-                    for a in &window {
-                        r.model_mut(a.model, lm.slo_ms(a.model)).record_drop();
-                    }
-                    r
-                }
-            };
+            // Serve up to the window end; at the trace end also run the
+            // drain and close leftovers into the final window.
+            if t_end >= duration_s {
+                engine.run_until(w1_us + ms_to_us(cfg.drain_ms));
+                engine.close();
+            } else {
+                engine.run_until(w1_us);
+            }
+            let win = engine.report().snapshot_window(&prev_counts, t_end - t);
+            prev_counts = engine.report().counters();
 
             let mut throughput = [0.0; 5];
             for m in ModelId::ALL {
-                if let Some(mm) = report.model(m) {
-                    throughput[m.index()] = mm.served as f64 / (t_end - t);
-                }
+                throughput[m.index()] = win.throughput(m);
             }
-            stats.push(WindowStats {
+            windows.push(WindowStats {
                 t_start_s: t,
                 throughput,
                 allocated_pct: current.as_ref().map_or(0, |s| s.total_allocated_pct()),
-                violation_rate: report.overall_violation_rate(),
+                violation_rate: win.violation_rate(),
                 reorganized,
             });
 
-            // Decide whether to re-schedule for the future.
-            let changed = ModelId::ALL.iter().any(|&m| {
-                let now = observed[m.index()];
-                let base = last_sched_rates[m.index()];
-                (now - base).abs() / base.max(1.0) > self.change_threshold
-            });
-            if changed && pending.is_none() {
+            // Decide whether to re-schedule for the future (pointless
+            // once the final window has drained and closed the engine).
+            if t_end < duration_s
+                && rates_changed(&observed, &last_sched_rates, self.change_threshold)
+                && pending.is_none()
+            {
                 if let Ok(next) = self.scheduler.schedule(self.ctx, &headroomed(&observed)) {
                     let differs = match &current {
                         Some(cur) => {
@@ -199,14 +240,17 @@ impl<'a, S: Scheduler> AdaptiveServer<'a, S> {
                     if differs {
                         pending = Some((next, t_end + self.reorg_s));
                     } else {
-                        current = Some(next); // same layout: hot re-route
+                        // Same layout: hot re-route on the live engine.
+                        engine.swap_schedule(next.clone(), SwapMode::Migrate);
+                        current = Some(next);
                     }
                 }
             }
 
             t = t_end;
         }
-        stats
+        let offered = engine.injected_per_model();
+        AdaptiveOutcome { windows, report: engine.finish(), offered }
     }
 }
 
@@ -231,7 +275,8 @@ mod tests {
         let srv = AdaptiveServer::new(&ctx, &sched);
         let trace = FluctuationTrace::default();
         // Horizon covering wave-1 rise, peak and the start of the fall.
-        let stats = srv.run_trace(&trace, 400.0, 11);
+        let out = srv.run_trace(&trace, 400.0, 11).unwrap();
+        let stats = &out.windows;
         assert!(stats.len() >= 19);
         // Allocation must grow as the wave rises (early windows see base
         // rates; the peak windows see 3-4x that).
@@ -256,12 +301,39 @@ mod tests {
         let srv = AdaptiveServer::new(&ctx, &sched);
         let trace = FluctuationTrace::default();
         // 800 s covers wave-1 rise, peak, and fall back to baseline.
-        let stats = srv.run_trace(&trace, 800.0, 13);
-        let peak = stats.iter().map(|w| w.allocated_pct).max().unwrap();
-        let last = stats.last().unwrap().allocated_pct;
+        let out = srv.run_trace(&trace, 800.0, 13).unwrap();
+        let peak = out.windows.iter().map(|w| w.allocated_pct).max().unwrap();
+        let last = out.windows.last().unwrap().allocated_pct;
         assert!(
             last < peak,
             "allocation must shrink after the wave: last {last} >= peak {peak}"
         );
+    }
+
+    #[test]
+    fn change_trigger_is_relative_with_absolute_floor() {
+        let thr = 0.10;
+        // Low-rate model: a 2.4x change the old `/ base.max(1.0)` clamp
+        // masked (delta 0.07 < 0.10 absolute) must now trigger.
+        let mut base = [10.0; 5];
+        let mut now = [10.0; 5];
+        base[2] = 0.05;
+        now[2] = 0.12;
+        assert!(rates_changed(&now, &base, thr));
+        // Sub-floor noise on an idle model must NOT trigger.
+        let mut quiet = [10.0; 5];
+        quiet[2] = 0.0;
+        let mut blip = quiet;
+        blip[2] = 0.04;
+        assert!(!rates_changed(&blip, &quiet, thr));
+        // Stable high rates within the relative band must NOT trigger.
+        let hi = [100.0; 5];
+        let mut close = hi;
+        close[0] = 105.0; // 5% < 10%
+        assert!(!rates_changed(&close, &hi, thr));
+        // And a 15% move at high rate must trigger.
+        let mut far = hi;
+        far[0] = 115.0;
+        assert!(rates_changed(&far, &hi, thr));
     }
 }

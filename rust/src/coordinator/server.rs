@@ -13,7 +13,7 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::coordinator::batcher::{slo_timeout_ms, BatchBuilder, Queued};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::metrics::Report;
 use crate::models::ModelId;
 use crate::runtime::ModelRegistry;
@@ -109,7 +109,15 @@ impl<'a> RealServer<'a> {
                     std::thread::sleep(target - elapsed);
                 }
             }
-            let entry = self.registry.manifest.entry(a.model)?;
+            let Ok(entry) = self.registry.manifest.entry(a.model) else {
+                // Arrival for a model this registry does not serve:
+                // count it as a drop instead of aborting the whole run
+                // (the sim path's "unscheduled model" semantics), keyed
+                // by the catalog SLO at this substrate's scale.
+                let slo = crate::models::profile(a.model).slo_ms * self.slo_scale;
+                report.model_mut(a.model, slo).record_drop();
+                continue;
+            };
             let b = self
                 .batch
                 .get(&a.model)
@@ -140,11 +148,10 @@ impl<'a> RealServer<'a> {
                     retune(&mut builders, &self.registry.manifest, m, exec_ms, self.slo_scale);
                 }
             }
-            if let Some(batch) = builders
-                .get_mut(&a.model)
-                .unwrap()
-                .push(Queued { id: a.id, arrival_ms: a.time_ms })
-            {
+            let builder = builders.get_mut(&a.model).ok_or_else(|| {
+                Error::Model(format!("{}: no batch builder for arrival", a.model))
+            })?;
+            if let Some(batch) = builder.push(Queued { id: a.id, arrival_ms: a.time_ms }) {
                 let exec_ms = flush(
                     a.model, batch.requests, &mut clock_ms, &mut report,
                     &mut exec_wall_s, &mut batches, &mut inputs_cache, &mut rng,
@@ -155,7 +162,7 @@ impl<'a> RealServer<'a> {
         // Drain all remaining queues.
         let leftover: Vec<ModelId> = builders.keys().copied().collect();
         for m in leftover {
-            while let Some(batch) = builders.get_mut(&m).unwrap().flush() {
+            while let Some(batch) = builders.get_mut(&m).and_then(|bl| bl.flush()) {
                 flush(
                     m, batch.requests, &mut clock_ms, &mut report,
                     &mut exec_wall_s, &mut batches, &mut inputs_cache, &mut rng,

@@ -1,6 +1,6 @@
-//! Discrete-event serving simulator: executes a `Schedule` against an
-//! arrival trace under one of the three GPU sharing modes (Fig 2/5) and
-//! reports per-model SLO metrics.
+//! One-shot discrete-event serving simulation: executes a `Schedule`
+//! against an arrival trace under one of the three GPU sharing modes
+//! (Fig 2/5) and reports per-model SLO metrics.
 //!
 //! Semantics per `ShareMode`:
 //! * `Partitioned` — each gpu-let executes concurrently at its own
@@ -14,84 +14,28 @@
 //!   GPU kernels, coarse-grained switches): a busy GPU queues the next
 //!   batch, at full-GPU latency.
 //!
-//! The frontend logic mirrors `batcher`: per-(let, model) FIFO queues,
-//! dispatch on batch-full or duty timeout, hopeless requests dropped
-//! and counted as violations.
-//!
-//! Time runs on the integer-microsecond `simclock` (exact deadline
-//! compares, no f64 heap ordering); the per-assignment execution
-//! estimates, SLO bounds, and duty timeouts are converted to µs once at
-//! simulation start instead of being re-derived per event.
+//! The event loop itself lives in [`super::engine::ServingEngine`] —
+//! the persistent core that can also swap schedules mid-trace.
+//! `simulate` is the one-shot convenience every figure harness uses:
+//! inject the whole trace, run to the drain horizon, count leftovers as
+//! drops. `tests/engine_equivalence.rs` pins this wrapper byte-for-byte
+//! against a frozen copy of the pre-extraction monolithic loop.
 
-use std::collections::VecDeque;
-
-use crate::gpu::ShareMode;
-use crate::interference::ground_truth::{GroundTruth, TaskDemand};
+use crate::interference::ground_truth::GroundTruth;
 use crate::metrics::Report;
-use crate::models::profile;
 use crate::perfmodel::LatencyModel;
 use crate::sched::Schedule;
-use crate::simclock::{ms_to_us, us_to_ms, EventQueue};
-use crate::util::rng::Pcg32;
+use crate::simclock::ms_to_us;
 use crate::workload::Arrival;
 
-/// Simulation parameters.
-#[derive(Clone, Debug)]
-pub struct SimConfig {
-    pub mode: ShareMode,
-    pub seed: u64,
-    /// Extra wall time after the last arrival to drain queues (ms).
-    pub drain_ms: f64,
-}
+use super::engine::ServingEngine;
 
-impl Default for SimConfig {
-    fn default() -> Self {
-        SimConfig { mode: ShareMode::Partitioned, seed: 0xD15C0, drain_ms: 2_000.0 }
-    }
-}
-
-#[derive(Clone, Copy, Debug)]
-enum Event {
-    Arrive(usize),
-    /// Duty timeout for (let, assignment): flush a partial batch.
-    Timeout { let_idx: usize, asg_idx: usize, armed_at: u64 },
-    /// Execution finished on a gpu-let.
-    Done { let_idx: usize },
-}
-
-struct AsgState {
-    queue: VecDeque<(u64, u64)>, // (req id, arrival µs)
-    /// Monotone token invalidating stale Timeout events.
-    timer_token: u64,
-}
-
-/// Precomputed per-assignment constants (µs domain), flat-indexed in
-/// parallel with the schedule's assignments.
-struct AsgConst {
-    /// Planned-batch execution estimate at the effective fraction.
-    exec_est_us: u64,
-    /// SLO bound.
-    slo_us: u64,
-    /// Duty timeout (`batcher::slo_timeout_us` over the let's cycle).
-    timeout_us: u64,
-    /// True SLO in ms for metrics keying.
-    slo_ms: f64,
-}
-
-struct LetState {
-    /// Parallel to the schedule's assignments.
-    asgs: Vec<AsgState>,
-    busy: bool,
-    /// Round-robin pointer over assignments.
-    next_asg: usize,
-    /// Model/batch/fraction of the in-flight execution (for interference).
-    running: Option<(usize, u32)>, // (asg_idx, actual batch)
-    /// In-flight requests: (asg_idx, completions at Done)
-    inflight: Vec<(usize, u64, u64)>, // (asg_idx, id, arrival µs)
-}
+pub use super::engine::SimConfig;
 
 /// Simulate `schedule` over `arrivals`; `window_s` is the measurement
-/// window for throughput (usually the trace duration).
+/// window for throughput (usually the trace duration). One-shot: the
+/// engine serves the whole trace plus `cfg.drain_ms` of drain time,
+/// then everything still queued or in flight is counted as dropped.
 pub fn simulate(
     lm: &LatencyModel,
     gt: &GroundTruth,
@@ -100,338 +44,18 @@ pub fn simulate(
     window_s: f64,
     cfg: &SimConfig,
 ) -> Report {
-    let mut report = Report::new(window_s);
-    let mut rng = Pcg32::seeded(cfg.seed);
-
-    // Routing table: model index -> [(let_idx, asg_idx, weight)].
-    let mut routes: Vec<Vec<(usize, usize, f64)>> = vec![Vec::new(); 5];
-    for (li, lp) in schedule.lets.iter().enumerate() {
-        for (ai, a) in lp.assignments.iter().enumerate() {
-            routes[a.model.index()].push((li, ai, a.rate));
-        }
-    }
-    // Per-route served counters for deficit-weighted routing.
-    let mut served: Vec<Vec<f64>> = routes.iter().map(|r| vec![0.0; r.len()]).collect();
-
-    let mut lets: Vec<LetState> = schedule
-        .lets
-        .iter()
-        .map(|lp| LetState {
-            asgs: lp
-                .assignments
-                .iter()
-                .map(|_| AsgState { queue: VecDeque::new(), timer_token: 0 })
-                .collect(),
-            busy: false,
-            next_asg: 0,
-            running: None,
-            inflight: Vec::new(),
-        })
-        .collect();
-
-    // Per-let duty cycle: the sum of all assignments' planned
-    // executions. The batching timeout must leave room for a full duty
-    // cycle (the request may queue behind every co-assigned model's
-    // slot), not just the model's own execution. All per-assignment
-    // constants are derived once here, in µs.
-    let consts: Vec<Vec<AsgConst>> = schedule
-        .lets
-        .iter()
-        .map(|lp| {
-            let p_exec = exec_fraction(cfg.mode, lp.spec.fraction());
-            let duty_us: u64 = lp
-                .assignments
-                .iter()
-                .map(|a| ms_to_us(lm.latency_ms(a.model, a.batch, p_exec)))
-                .sum();
-            lp.assignments
-                .iter()
-                .map(|a| {
-                    let slo_ms = lm.slo_ms(a.model);
-                    let slo_us = ms_to_us(slo_ms);
-                    AsgConst {
-                        exec_est_us: ms_to_us(lm.latency_ms(a.model, a.batch, p_exec)),
-                        slo_us,
-                        timeout_us: super::batcher::slo_timeout_us(slo_us, duty_us),
-                        slo_ms,
-                    }
-                })
-                .collect()
-        })
-        .collect();
-
-    // Per-GPU serialization for TemporalOnly: FIFO of lets waiting to run.
-    let num_gpus = schedule.lets.iter().map(|l| l.spec.gpu + 1).max().unwrap_or(0);
-    let mut gpu_busy: Vec<bool> = vec![false; num_gpus];
-    let mut gpu_waiters: Vec<VecDeque<usize>> = vec![VecDeque::new(); num_gpus];
-
-    let mut q: EventQueue<Event> = EventQueue::new();
-    let arr_us: Vec<u64> = arrivals.iter().map(|a| ms_to_us(a.time_ms)).collect();
-    for (i, &t) in arr_us.iter().enumerate() {
-        q.push_at_us(t, Event::Arrive(i));
-    }
-    let horizon = arr_us.last().copied().unwrap_or(0) + ms_to_us(cfg.drain_ms);
-
-    while let Some((now, ev)) = q.pop() {
-        if now > horizon {
-            break;
-        }
-        match ev {
-            Event::Arrive(i) => {
-                let a = &arrivals[i];
-                let m = a.model;
-                let options = &routes[m.index()];
-                if options.is_empty() {
-                    // Model not scheduled at all: immediate drop.
-                    report.model_mut(m, lm.slo_ms(m)).record_drop();
-                    continue;
-                }
-                // Deficit-weighted route: least served relative to weight.
-                let (pos, &(li, ai, w)) = options
-                    .iter()
-                    .enumerate()
-                    .min_by(|(i1, r1), (i2, r2)| {
-                        let k1 = served[m.index()][*i1] / r1.2.max(1e-9);
-                        let k2 = served[m.index()][*i2] / r2.2.max(1e-9);
-                        k1.total_cmp(&k2)
-                    })
-                    .unwrap();
-                let _ = w;
-                served[m.index()][pos] += 1.0;
-                lets[li].asgs[ai].queue.push_back((a.id, now));
-                let b_target = schedule.lets[li].assignments[ai].batch as usize;
-                if !lets[li].busy && lets[li].asgs[ai].queue.len() >= b_target {
-                    try_start(
-                        li, lm, gt, schedule, &consts, &mut lets, &mut gpu_busy,
-                        &mut gpu_waiters, &mut q, cfg, &mut rng, &mut report,
-                    );
-                } else if lets[li].asgs[ai].queue.len() == 1 {
-                    // Arm the duty timeout for the queue head.
-                    let token = {
-                        let st = &mut lets[li].asgs[ai];
-                        st.timer_token += 1;
-                        st.timer_token
-                    };
-                    q.push_after_us(
-                        consts[li][ai].timeout_us,
-                        Event::Timeout { let_idx: li, asg_idx: ai, armed_at: token },
-                    );
-                }
-            }
-            Event::Timeout { let_idx, asg_idx, armed_at } => {
-                if lets[let_idx].asgs[asg_idx].timer_token != armed_at {
-                    continue; // stale timer
-                }
-                if lets[let_idx].asgs[asg_idx].queue.is_empty() {
-                    continue;
-                }
-                if !lets[let_idx].busy {
-                    try_start(
-                        let_idx, lm, gt, schedule, &consts, &mut lets, &mut gpu_busy,
-                        &mut gpu_waiters, &mut q, cfg, &mut rng, &mut report,
-                    );
-                } else {
-                    // Re-arm: check again shortly after the current run.
-                    let token = {
-                        let st = &mut lets[let_idx].asgs[asg_idx];
-                        st.timer_token += 1;
-                        st.timer_token
-                    };
-                    q.push_after_us(500, Event::Timeout { let_idx, asg_idx, armed_at: token });
-                }
-            }
-            Event::Done { let_idx } => {
-                let gpu = schedule.lets[let_idx].spec.gpu;
-                // Complete in-flight requests.
-                let inflight = std::mem::take(&mut lets[let_idx].inflight);
-                for (ai, _id, arr) in inflight {
-                    let c = &consts[let_idx][ai];
-                    let m = schedule.lets[let_idx].assignments[ai].model;
-                    report.model_mut(m, c.slo_ms).record(us_to_ms(now - arr));
-                }
-                lets[let_idx].busy = false;
-                lets[let_idx].running = None;
-                if cfg.mode == ShareMode::TemporalOnly {
-                    gpu_busy[gpu] = false;
-                    if let Some(waiter) = gpu_waiters[gpu].pop_front() {
-                        try_start(
-                            waiter, lm, gt, schedule, &consts, &mut lets, &mut gpu_busy,
-                            &mut gpu_waiters, &mut q, cfg, &mut rng, &mut report,
-                        );
-                    }
-                }
-                // Keep draining this let's own queues.
-                if !lets[let_idx].busy {
-                    try_start(
-                        let_idx, lm, gt, schedule, &consts, &mut lets, &mut gpu_busy,
-                        &mut gpu_waiters, &mut q, cfg, &mut rng, &mut report,
-                    );
-                }
-            }
-        }
-    }
-
-    // Anything still queued at the end of the drain window: dropped.
-    for (li, ls) in lets.iter_mut().enumerate() {
-        for (ai, st) in ls.asgs.iter_mut().enumerate() {
-            let m = schedule.lets[li].assignments[ai].model;
-            for _ in st.queue.drain(..) {
-                report.model_mut(m, consts[li][ai].slo_ms).record_drop();
-            }
-        }
-        for (ai, _, _) in ls.inflight.drain(..) {
-            let m = schedule.lets[li].assignments[ai].model;
-            report.model_mut(m, consts[li][ai].slo_ms).record_drop();
-        }
-    }
-    report
-}
-
-/// Try to start the next batch on `let_idx` (must be idle). Picks the
-/// next nonempty assignment round-robin, forms the batch, accounts
-/// drops, computes the (interfered) execution time, and schedules Done.
-#[allow(clippy::too_many_arguments)]
-fn try_start(
-    let_idx: usize,
-    lm: &LatencyModel,
-    gt: &GroundTruth,
-    schedule: &Schedule,
-    consts: &[Vec<AsgConst>],
-    lets: &mut [LetState],
-    gpu_busy: &mut [bool],
-    gpu_waiters: &mut [VecDeque<usize>],
-    q: &mut EventQueue<Event>,
-    cfg: &SimConfig,
-    rng: &mut Pcg32,
-    report: &mut Report,
-) {
-    if lets[let_idx].busy {
-        return;
-    }
-    let now = q.now_us();
-    let lp = &schedule.lets[let_idx];
-    let n_asgs = lp.assignments.len();
-
-    // Pick next assignment with work, starting from the round-robin ptr.
-    let mut chosen: Option<usize> = None;
-    for k in 0..n_asgs {
-        let ai = (lets[let_idx].next_asg + k) % n_asgs;
-        let asg = &lp.assignments[ai];
-        let c = &consts[let_idx][ai];
-        // Drop hopeless heads first: even starting right now, the
-        // request would finish past its SLO.
-        let st = &mut lets[let_idx].asgs[ai];
-        let before = st.queue.len();
-        st.queue.retain(|&(_, arr)| now + c.exec_est_us <= arr + c.slo_us);
-        let dropped = before - st.queue.len();
-        for _ in 0..dropped {
-            report.model_mut(asg.model, c.slo_ms).record_drop();
-        }
-        if !st.queue.is_empty() {
-            let full = st.queue.len() >= asg.batch as usize;
-            let head_arr = st.queue.front().unwrap().1;
-            if full || now - head_arr >= c.timeout_us {
-                chosen = Some(ai);
-                break;
-            }
-            // Not ready: make sure a timer exists.
-            let token = {
-                st.timer_token += 1;
-                st.timer_token
-            };
-            q.push_at_us(
-                head_arr + c.timeout_us,
-                Event::Timeout { let_idx, asg_idx: ai, armed_at: token },
-            );
-        }
-    }
-    let Some(ai) = chosen else { return };
-
-    let gpu = lp.spec.gpu;
-    if cfg.mode == ShareMode::TemporalOnly {
-        if gpu_busy[gpu] {
-            if !gpu_waiters[gpu].contains(&let_idx) {
-                gpu_waiters[gpu].push_back(let_idx);
-            }
-            return;
-        }
-        gpu_busy[gpu] = true;
-    }
-
-    let asg = &lp.assignments[ai];
-    let b_actual = (lets[let_idx].asgs[ai].queue.len() as u32).min(asg.batch).max(1);
-    let mut inflight = Vec::with_capacity(b_actual as usize);
-    for _ in 0..b_actual {
-        let (id, arr) = lets[let_idx].asgs[ai].queue.pop_front().unwrap();
-        inflight.push((ai, id, arr));
-    }
-
-    let p_exec = exec_fraction(cfg.mode, lp.spec.fraction());
-    let mut exec = lm.latency_ms(asg.model, b_actual, p_exec);
-
-    // Interference with the co-resident let (concurrent modes only).
-    if cfg.mode != ShareMode::TemporalOnly {
-        if let Some((co_idx, co)) = co_resident_running(schedule, lets, let_idx) {
-            let co_lp = &schedule.lets[co_idx];
-            let (co_ai, co_b) = co;
-            let co_asg = &co_lp.assignments[co_ai];
-            let my_prof = profile(asg.model);
-            let co_prof = profile(co_asg.model);
-            let p_me = lp.spec.fraction();
-            let p_co = co_lp.spec.fraction();
-            let me = TaskDemand {
-                model: asg.model,
-                batch: b_actual,
-                l2: my_prof.l2_util(p_me, b_actual),
-                bw: my_prof.bw_util(p_me, b_actual),
-            };
-            let other = TaskDemand {
-                model: co_asg.model,
-                batch: co_b,
-                l2: co_prof.l2_util(p_co, co_b),
-                bw: co_prof.bw_util(p_co, co_b),
-            };
-            let base = gt.factor(&me, &other) * cfg.mode.contention_amplification();
-            let vol = cfg.mode.contention_volatility();
-            let factor = (base * (1.0 + rng.normal(0.0, vol))).max(0.0);
-            exec *= 1.0 + factor;
-        }
-    }
-
-    lets[let_idx].busy = true;
-    lets[let_idx].running = Some((ai, b_actual));
-    lets[let_idx].inflight = inflight;
-    lets[let_idx].next_asg = (ai + 1) % n_asgs;
-    q.push_after_us(ms_to_us(exec), Event::Done { let_idx });
-}
-
-/// Effective execution fraction under a sharing mode: without static
-/// provisioning (MPS default / temporal) a kernel sees the whole GPU.
-fn exec_fraction(mode: ShareMode, nominal: f64) -> f64 {
-    match mode {
-        ShareMode::Partitioned => nominal,
-        ShareMode::MpsDefault | ShareMode::TemporalOnly => 1.0,
-    }
-}
-
-/// The co-resident gpu-let currently executing, if any.
-fn co_resident_running(
-    schedule: &Schedule,
-    lets: &[LetState],
-    let_idx: usize,
-) -> Option<(usize, (usize, u32))> {
-    let gpu = schedule.lets[let_idx].spec.gpu;
-    schedule
-        .lets
-        .iter()
-        .enumerate()
-        .filter(|(i, lp)| *i != let_idx && lp.spec.gpu == gpu)
-        .find_map(|(i, _)| lets[i].running.map(|r| (i, r)))
+    let mut engine = ServingEngine::new(lm, gt, schedule.clone(), window_s, cfg);
+    engine.inject(arrivals);
+    let horizon =
+        arrivals.last().map(|a| ms_to_us(a.time_ms)).unwrap_or(0) + ms_to_us(cfg.drain_ms);
+    engine.run_until(horizon);
+    engine.finish()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gpu::ShareMode;
     use crate::models::ModelId;
     use crate::sched::{ElasticPartitioning, SchedCtx, Scheduler};
     use crate::workload::generate_arrivals;
@@ -454,7 +78,8 @@ mod tests {
             &[(ModelId::Lenet, 50.0), (ModelId::Googlenet, 50.0)],
             20.0,
             3,
-        );
+        )
+        .unwrap();
         let n = arrivals.len();
         let report = simulate(&lm, &gt, &schedule, &arrivals, 20.0, &SimConfig::default());
         let v = report.overall_violation_rate();
@@ -470,7 +95,7 @@ mod tests {
     fn unscheduled_model_drops_everything() {
         let (lm, gt) = world();
         let schedule = sched_for(&[50.0, 0.0, 0.0, 0.0, 0.0], 1);
-        let arrivals = generate_arrivals(&[(ModelId::Vgg, 10.0)], 5.0, 1);
+        let arrivals = generate_arrivals(&[(ModelId::Vgg, 10.0)], 5.0, 1).unwrap();
         let report = simulate(&lm, &gt, &schedule, &arrivals, 5.0, &SimConfig::default());
         let mm = report.model(ModelId::Vgg).unwrap();
         assert_eq!(mm.served, 0);
@@ -482,7 +107,7 @@ mod tests {
         let (lm, gt) = world();
         // Schedule sized for 50 req/s but offered 10x that.
         let schedule = sched_for(&[0.0, 0.0, 0.0, 0.0, 50.0], 1);
-        let arrivals = generate_arrivals(&[(ModelId::Vgg, 500.0)], 10.0, 2);
+        let arrivals = generate_arrivals(&[(ModelId::Vgg, 500.0)], 10.0, 2).unwrap();
         let report = simulate(&lm, &gt, &schedule, &arrivals, 10.0, &SimConfig::default());
         assert!(
             report.overall_violation_rate() > 0.3,
@@ -528,7 +153,8 @@ mod tests {
             &[(ModelId::Lenet, 400.0), (ModelId::Vgg, 150.0)],
             10.0,
             5,
-        );
+        )
+        .unwrap();
         let part = simulate(
             &lm, &gt, &schedule, &arrivals, 10.0,
             &SimConfig { mode: ShareMode::Partitioned, ..Default::default() },
@@ -550,10 +176,12 @@ mod tests {
             &[(ModelId::Lenet, 50.0), (ModelId::Vgg, 50.0)],
             5.0,
             7,
-        );
+        )
+        .unwrap();
         let r1 = simulate(&lm, &gt, &schedule, &arrivals, 5.0, &SimConfig::default());
         let r2 = simulate(&lm, &gt, &schedule, &arrivals, 5.0, &SimConfig::default());
         assert_eq!(r1.throughput_rps(), r2.throughput_rps());
         assert_eq!(r1.overall_violation_rate(), r2.overall_violation_rate());
+        assert_eq!(r1.to_json().to_string(), r2.to_json().to_string());
     }
 }

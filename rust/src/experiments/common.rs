@@ -108,7 +108,8 @@ pub fn violation_rate_of(
         .map(|&m| (m, rates[m.index()]))
         .filter(|&(_, r)| r > 0.0)
         .collect();
-    let arrivals = generate_arrivals(&pairs, duration_s, seed);
+    let arrivals =
+        generate_arrivals(&pairs, duration_s, seed).expect("experiment rates are finite");
     // Measure against the TRUE SLOs (the ctx's planning view is
     // tightened by SLO_PLANNING_SCALE).
     let lm_true = crate::perfmodel::LatencyModel::new();

@@ -59,7 +59,8 @@ pub fn compute(rates: &[f64]) -> Vec<Row> {
                 &[(ModelId::Lenet, r), (ModelId::Vgg, r)],
                 duration,
                 21,
-            );
+            )
+            .expect("fig05 sweep rates are finite");
             let mut viol = [0.0; 3];
             for (i, mode) in [
                 ShareMode::TemporalOnly,

@@ -4,6 +4,7 @@
 use std::collections::BTreeMap;
 
 use crate::models::ModelId;
+use crate::util::json::{obj, Json};
 use crate::util::stats::Histogram;
 
 /// Accumulates per-model serving outcomes over a measurement window.
@@ -146,6 +147,62 @@ impl Report {
         good as f64 / self.window_s
     }
 
+    /// Counters-only snapshot for later [`Report::snapshot_window`]
+    /// deltas — how the continuously-accumulating engine report is
+    /// carved into per-window views without resetting any state.
+    pub fn counters(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            rows: self
+                .models
+                .iter()
+                .map(|(m, mm)| (*m, (mm.served, mm.violations, mm.dropped)))
+                .collect(),
+        }
+    }
+
+    /// The per-window delta view since `prev` (a snapshot taken at the
+    /// window start): served/violations/dropped per model over the last
+    /// `window_s` seconds.
+    pub fn snapshot_window(&self, prev: &CounterSnapshot, window_s: f64) -> WindowReport {
+        let mut w = WindowReport { window_s, ..WindowReport::default() };
+        for (m, mm) in &self.models {
+            let (ps, pv, pd) = prev.rows.get(m).copied().unwrap_or((0, 0, 0));
+            let i = m.index();
+            w.served[i] = mm.served - ps;
+            w.violations[i] = mm.violations - pv;
+            w.dropped[i] = mm.dropped - pd;
+        }
+        w
+    }
+
+    /// Machine-readable form (deterministic key order via `util::json`).
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .models
+            .iter()
+            .map(|(m, mm)| {
+                obj(vec![
+                    ("model", Json::Str(m.name().into())),
+                    ("slo_ms", Json::Num(mm.slo_ms)),
+                    ("served", Json::Num(mm.served as f64)),
+                    ("violations", Json::Num(mm.violations as f64)),
+                    ("dropped", Json::Num(mm.dropped as f64)),
+                    ("p50_ms", Json::Num(mm.p50_ms())),
+                    ("p99_ms", Json::Num(mm.p99_ms())),
+                    ("mean_ms", Json::Num(mm.mean_ms())),
+                    ("max_ms", Json::Num(mm.max_ms())),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("window_s", Json::Num(self.window_s)),
+            ("throughput_rps", Json::Num(self.throughput_rps())),
+            ("goodput_rps", Json::Num(self.goodput_rps())),
+            ("violation_rate", Json::Num(self.overall_violation_rate())),
+            ("models", Json::Arr(rows)),
+        ])
+    }
+
     /// Pretty per-model table (used by the CLI and examples).
     pub fn table(&self) -> String {
         let mut s = String::from(
@@ -164,6 +221,51 @@ impl Report {
             ));
         }
         s
+    }
+}
+
+/// Counters-only snapshot of a [`Report`] at a point in time; pair with
+/// [`Report::snapshot_window`] to read windowed deltas off a
+/// continuously-running engine.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    /// Per-model (served, violations, dropped) at snapshot time.
+    rows: BTreeMap<ModelId, (u64, u64, u64)>,
+}
+
+/// One window's worth of serving outcomes (deltas between two
+/// [`CounterSnapshot`]s), indexed by `ModelId::index`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WindowReport {
+    pub window_s: f64,
+    pub served: [u64; 5],
+    pub violations: [u64; 5],
+    pub dropped: [u64; 5],
+}
+
+impl WindowReport {
+    /// Requests that entered accounting in this window.
+    pub fn total(&self) -> u64 {
+        self.served.iter().sum::<u64>() + self.dropped.iter().sum::<u64>()
+    }
+
+    /// SLO violation rate (drops included) in this window, in [0, 1].
+    pub fn violation_rate(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let bad: u64 =
+            self.violations.iter().sum::<u64>() + self.dropped.iter().sum::<u64>();
+        bad as f64 / total as f64
+    }
+
+    /// Served req/s for one model over the window.
+    pub fn throughput(&self, m: ModelId) -> f64 {
+        if self.window_s <= 0.0 {
+            return 0.0;
+        }
+        self.served[m.index()] as f64 / self.window_s
     }
 }
 
@@ -214,6 +316,41 @@ mod tests {
         assert_eq!(r.overall_violation_rate(), 0.0);
         assert_eq!(r.throughput_rps(), 0.0);
         assert!(r.model(ModelId::Lenet).is_none());
+    }
+
+    #[test]
+    fn window_snapshots_delta_correctly() {
+        let mut r = Report::new(40.0);
+        r.model_mut(ModelId::Lenet, 5.0).record(1.0);
+        r.model_mut(ModelId::Lenet, 5.0).record(9.0); // violation
+        let snap = r.counters();
+        // Second window: one more served, one drop, plus a new model.
+        r.model_mut(ModelId::Lenet, 5.0).record(2.0);
+        r.model_mut(ModelId::Lenet, 5.0).record_drop();
+        r.model_mut(ModelId::Vgg, 130.0).record(50.0);
+        let w = r.snapshot_window(&snap, 20.0);
+        assert_eq!(w.served[ModelId::Lenet.index()], 1);
+        assert_eq!(w.violations[ModelId::Lenet.index()], 0);
+        assert_eq!(w.dropped[ModelId::Lenet.index()], 1);
+        assert_eq!(w.served[ModelId::Vgg.index()], 1);
+        assert_eq!(w.total(), 3);
+        assert!((w.violation_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((w.throughput(ModelId::Lenet) - 0.05).abs() < 1e-12);
+        // Empty delta: snapshot against itself.
+        let w0 = r.snapshot_window(&r.counters(), 20.0);
+        assert_eq!(w0.total(), 0);
+        assert_eq!(w0.violation_rate(), 0.0);
+    }
+
+    #[test]
+    fn report_json_is_deterministic_and_complete() {
+        let mut r = Report::new(2.0);
+        r.model_mut(ModelId::Lenet, 5.0).record(1.0);
+        r.model_mut(ModelId::Lenet, 5.0).record_drop();
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"violation_rate\""));
+        assert!(j.contains("\"lenet\""));
+        assert_eq!(j, r.to_json().to_string());
     }
 
     #[test]

@@ -89,7 +89,7 @@ impl LatencyModel {
             // constraints hold; the throughput-optimal choice is
             // collect = L (duty cycle = exec time), r = b / L.
             let r = b as f64 / l * 1000.0; // L in ms -> req/s
-            if best.map_or(true, |(br, _)| r > br) {
+            if best.is_none_or(|(br, _)| r > br) {
                 best = Some((r, b));
             }
         }
@@ -149,7 +149,7 @@ pub fn knee(curve: &[(u32, f64)]) -> u32 {
     let mut best: Option<(u32, f64)> = None; // (size, curvature)
     for i in 1..pts.len() - 1 {
         let curv = slope(pts[i], pts[i + 1]) - slope(pts[i - 1], pts[i]);
-        if curv < -1e-9 && best.map_or(true, |(_, c)| curv < c) {
+        if curv < -1e-9 && best.is_none_or(|(_, c)| curv < c) {
             best = Some((pts[i].0 as u32, curv));
         }
     }

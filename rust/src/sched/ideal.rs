@@ -80,12 +80,12 @@ impl IdealScheduler {
                     if cap >= remaining {
                         // Covers: keep the smallest such let.
                         if best_cover
-                            .map_or(true, |(j, _, _)| spec.size_pct < free[j].size_pct)
+                            .is_none_or(|(j, _, _)| spec.size_pct < free[j].size_pct)
                         {
                             best_cover = Some((i, cap, b));
                         }
                     }
-                    if chosen.map_or(true, |(_, c, _)| cap > c) {
+                    if chosen.is_none_or(|(_, c, _)| cap > c) {
                         chosen = Some((i, cap, b));
                     }
                 }
@@ -110,7 +110,7 @@ impl IdealScheduler {
                         let head = plan.headroom_rate(&ctx.lm, m, b, 0.0);
                         if head > EPS_RATE {
                             let take = remaining.min(head);
-                            if best.map_or(true, |(_, t)| take > t) {
+                            if best.is_none_or(|(_, t)| take > t) {
                                 best = Some((b, take));
                             }
                         }

@@ -78,7 +78,7 @@ impl SquishyBinPacking {
             let b_new = squished.assignments.last().unwrap().batch;
             let cap = b_new as f64 * 1000.0 / d * crate::sched::types::CAPACITY_FRACTION;
             let take = want.min(cap);
-            if take > EPS_RATE && best.as_ref().map_or(true, |(_, t)| take > *t) {
+            if take > EPS_RATE && best.as_ref().is_none_or(|(_, t)| take > *t) {
                 let mut committed = squished;
                 committed.assignments.last_mut().unwrap().rate = take;
                 // Re-verify with the real rate in place.

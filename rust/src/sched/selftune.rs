@@ -47,7 +47,7 @@ impl GuidedSelfTuning {
                 continue;
             }
             let leftover = 100 - st.used_pct - size;
-            if best.map_or(true, |(_, l)| leftover < l) {
+            if best.is_none_or(|(_, l)| leftover < l) {
                 best = Some((g, leftover));
             }
         }
@@ -113,7 +113,7 @@ impl Scheduler for GuidedSelfTuning {
                                 .iter()
                                 .any(|&s2| {
                                     s2 > size
-                                        && ctx.max_rate(m, s2).map_or(false, |(c2, _)| {
+                                        && ctx.max_rate(m, s2).is_some_and(|(c2, _)| {
                                             c2 * crate::sched::types::CAPACITY_FRACTION > cap
                                         })
                                 });

@@ -112,7 +112,7 @@ pub fn squish_plan(
                 continue;
             };
             let exec = lm.latency_ms(a.model, a.batch, p);
-            if pick.map_or(true, |(_, e, _)| exec > e) {
+            if pick.is_none_or(|(_, e, _)| exec > e) {
                 pick = Some((i, exec, next));
             }
         }

@@ -128,6 +128,20 @@ impl<E> EventQueue<E> {
         self.heap.peek().map(|e| e.time_us)
     }
 
+    /// Advance the clock to `t_us` without popping (no-op if the clock
+    /// is already past). Lets a run-until loop leave the clock at the
+    /// window boundary even when the queue went quiet earlier, so
+    /// follow-up actions (schedule swaps, injections) see a consistent
+    /// `now`. Must not skip pending events: callers drain everything at
+    /// or before `t_us` first.
+    pub fn advance_to(&mut self, t_us: SimTimeUs) {
+        debug_assert!(
+            self.heap.peek().is_none_or(|e| e.time_us >= t_us),
+            "advance_to({t_us}) would skip a pending event"
+        );
+        self.now_us = self.now_us.max(t_us);
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -178,6 +192,19 @@ mod tests {
         assert_eq!(t, 10_000);
         q.pop();
         assert_eq!(q.now_us(), 20_000);
+    }
+
+    #[test]
+    fn advance_to_moves_clock_without_events() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        q.advance_to(5_000);
+        assert_eq!(q.now_us(), 5_000);
+        // Never moves backwards.
+        q.advance_to(1_000);
+        assert_eq!(q.now_us(), 5_000);
+        // Future pushes are relative to the advanced clock.
+        q.push_after_us(500, ());
+        assert_eq!(q.peek_time_us(), Some(5_500));
     }
 
     #[test]

@@ -1,7 +1,13 @@
 //! Poisson arrival generation (§6.1: "we sample inter-arrival time for
 //! each model from a Poisson random distribution", following Treadmill's
 //! observation that real-world arrivals are Poisson).
+//!
+//! Rates are validated at this boundary: non-finite or negative rates
+//! are caller bugs reported as a proper `Error` (the same NaN class
+//! `sched::types::validate_rates` rejects at `Scheduler::schedule`)
+//! instead of panicking inside a sort or looping forever.
 
+use crate::error::{Error, Result};
 use crate::models::ModelId;
 use crate::util::rng::Pcg32;
 
@@ -16,18 +22,46 @@ pub struct Arrival {
     pub id: u64,
 }
 
+fn validate_rate(model: ModelId, rate: f64) -> Result<()> {
+    if !rate.is_finite() || rate < 0.0 {
+        return Err(Error::Model(format!("{model}: invalid arrival rate {rate}")));
+    }
+    Ok(())
+}
+
+fn validate_duration(duration_s: f64) -> Result<()> {
+    // A NaN/∞ horizon would make the sampling loops run away (the
+    // comparison against it is never true) rather than fail.
+    if !duration_s.is_finite() || duration_s < 0.0 {
+        return Err(Error::Model(format!("invalid trace duration {duration_s} s")));
+    }
+    Ok(())
+}
+
+/// Sort by time (total order; times are validated finite upstream) and
+/// re-number ids in arrival order for readable logs.
+fn sort_and_number(mut out: Vec<Arrival>) -> Vec<Arrival> {
+    out.sort_by(|a, b| a.time_ms.total_cmp(&b.time_ms));
+    for (i, a) in out.iter_mut().enumerate() {
+        a.id = i as u64;
+    }
+    out
+}
+
 /// Generate a merged, time-sorted arrival trace for `duration_s` seconds
 /// where each model's arrivals form an independent Poisson process at
-/// its configured rate (req/s). Zero-rate models produce no arrivals.
+/// its configured rate (req/s). Zero-rate models produce no arrivals;
+/// non-finite or negative rates are rejected with an error.
 pub fn generate_arrivals(
     rates: &[(ModelId, f64)],
     duration_s: f64,
     seed: u64,
-) -> Vec<Arrival> {
+) -> Result<Vec<Arrival>> {
+    validate_duration(duration_s)?;
     let mut out = Vec::new();
     let horizon_ms = duration_s * 1000.0;
-    let mut id = 0u64;
     for (i, &(model, rate)) in rates.iter().enumerate() {
+        validate_rate(model, rate)?;
         if rate <= 0.0 {
             continue;
         }
@@ -40,58 +74,76 @@ pub fn generate_arrivals(
             if t >= horizon_ms {
                 break;
             }
-            out.push(Arrival { time_ms: t, model, id });
-            id += 1;
+            out.push(Arrival { time_ms: t, model, id: 0 });
         }
     }
-    out.sort_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap());
-    // Re-number in arrival order for readable logs.
-    for (i, a) in out.iter_mut().enumerate() {
-        a.id = i as u64;
-    }
-    out
+    Ok(sort_and_number(out))
 }
 
-/// Generate arrivals for a time-varying rate function by thinning a
-/// piecewise-constant approximation over `step_s` windows (used by the
-/// Fig 14 fluctuation experiment).
+/// Generate arrivals for a time-varying rate function, treated as
+/// piecewise-constant over `step_s` windows (used by the Fig 14
+/// fluctuation experiment).
+///
+/// Samples the exact inhomogeneous process by integrating unit-rate
+/// exposure: one `Exp(1)` draw is consumed against `rate * dt` across
+/// step boundaries, so the residual inter-arrival time carries over
+/// instead of being re-drawn at every step (the old per-step restart
+/// leaned on exponential memorylessness; carrying the residual is the
+/// canonical sampler, stays exact under the rate change itself, and
+/// draws one exponential per arrival instead of one extra per step).
 pub fn generate_varying<F>(
     models: &[ModelId],
     rate_at: F,
     duration_s: f64,
     step_s: f64,
     seed: u64,
-) -> Vec<Arrival>
+) -> Result<Vec<Arrival>>
 where
     F: Fn(ModelId, f64) -> f64,
 {
+    validate_duration(duration_s)?;
+    if !(step_s.is_finite() && step_s > 0.0) {
+        return Err(Error::Model(format!("invalid rate step {step_s} s")));
+    }
     let mut out = Vec::new();
-    let mut id = 0u64;
     for (i, &model) in models.iter().enumerate() {
         let mut rng = Pcg32::new(seed, i as u64 + 101);
-        let mut window_start = 0.0;
-        while window_start < duration_s {
-            let rate = rate_at(model, window_start);
-            let window_end = (window_start + step_s).min(duration_s);
-            if rate > 0.0 {
-                let mut t = window_start;
-                loop {
-                    t += rng.exp(rate);
-                    if t >= window_end {
-                        break;
-                    }
-                    out.push(Arrival { time_ms: t * 1000.0, model, id });
-                    id += 1;
-                }
+        // The window is tracked by integer index (not re-derived from
+        // `t` with floor division) so float rounding at a boundary can
+        // never stall or step the sweep backwards.
+        let mut win = 0u64;
+        let mut t = 0.0f64; // current time (s)
+        let mut need = rng.exp(1.0); // unit-rate exposure to the next arrival
+        loop {
+            let w0 = win as f64 * step_s;
+            if w0 >= duration_s {
+                break;
             }
-            window_start = window_end;
+            let window_end = ((win + 1) as f64 * step_s).min(duration_s);
+            let rate = rate_at(model, w0);
+            validate_rate(model, rate)?;
+            if rate <= 0.0 {
+                win += 1;
+                t = window_end;
+                continue;
+            }
+            let t_lo = t.max(w0);
+            let exposure = rate * (window_end - t_lo).max(0.0);
+            if need < exposure {
+                let t_arr = t_lo + need / rate;
+                if t_arr < duration_s {
+                    out.push(Arrival { time_ms: t_arr * 1000.0, model, id: 0 });
+                }
+                t = t_arr;
+                need = rng.exp(1.0);
+            } else {
+                need -= exposure;
+                win += 1;
+                t = window_end;
+            }
         }
     }
-    out.sort_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap());
-    for (i, a) in out.iter_mut().enumerate() {
-        a.id = i as u64;
-    }
-    out
+    Ok(sort_and_number(out))
 }
 
 #[cfg(test)]
@@ -100,7 +152,7 @@ mod tests {
 
     #[test]
     fn empirical_rate_matches_request() {
-        let arrivals = generate_arrivals(&[(ModelId::Lenet, 200.0)], 30.0, 1);
+        let arrivals = generate_arrivals(&[(ModelId::Lenet, 200.0)], 30.0, 1).unwrap();
         let rate = arrivals.len() as f64 / 30.0;
         assert!((rate - 200.0).abs() < 15.0, "rate={rate}");
     }
@@ -111,7 +163,8 @@ mod tests {
             &[(ModelId::Lenet, 100.0), (ModelId::Vgg, 50.0)],
             10.0,
             2,
-        );
+        )
+        .unwrap();
         assert!(arrivals.windows(2).all(|w| w[0].time_ms <= w[1].time_ms));
         for (i, a) in arrivals.iter().enumerate() {
             assert_eq!(a.id, i as u64);
@@ -120,28 +173,48 @@ mod tests {
 
     #[test]
     fn zero_rate_no_arrivals() {
-        let arrivals = generate_arrivals(&[(ModelId::Lenet, 0.0)], 10.0, 3);
+        let arrivals = generate_arrivals(&[(ModelId::Lenet, 0.0)], 10.0, 3).unwrap();
         assert!(arrivals.is_empty());
     }
 
     #[test]
+    fn invalid_rates_rejected_not_panicking() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -5.0] {
+            let err = generate_arrivals(&[(ModelId::Lenet, bad)], 1.0, 1).unwrap_err();
+            assert!(err.to_string().contains("invalid arrival rate"), "{err}");
+            let err = generate_varying(&[ModelId::Lenet], |_, _| bad, 1.0, 1.0, 1)
+                .unwrap_err();
+            assert!(err.to_string().contains("invalid arrival rate"), "{err}");
+        }
+        assert!(generate_varying(&[ModelId::Lenet], |_, _| 1.0, 1.0, f64::NAN, 1)
+            .is_err());
+        // Non-finite durations would otherwise loop forever / OOM.
+        for bad in [f64::NAN, f64::INFINITY] {
+            assert!(generate_arrivals(&[(ModelId::Lenet, 1.0)], bad, 1).is_err());
+            assert!(generate_varying(&[ModelId::Lenet], |_, _| 1.0, bad, 1.0, 1)
+                .is_err());
+        }
+    }
+
+    #[test]
     fn deterministic_per_seed() {
-        let a = generate_arrivals(&[(ModelId::Resnet, 100.0)], 5.0, 7);
-        let b = generate_arrivals(&[(ModelId::Resnet, 100.0)], 5.0, 7);
+        let a = generate_arrivals(&[(ModelId::Resnet, 100.0)], 5.0, 7).unwrap();
+        let b = generate_arrivals(&[(ModelId::Resnet, 100.0)], 5.0, 7).unwrap();
         assert_eq!(a, b);
-        let c = generate_arrivals(&[(ModelId::Resnet, 100.0)], 5.0, 8);
+        let c = generate_arrivals(&[(ModelId::Resnet, 100.0)], 5.0, 8).unwrap();
         assert_ne!(a, c);
     }
 
     #[test]
     fn per_model_streams_independent() {
         // Adding a second model must not perturb the first's arrivals.
-        let solo = generate_arrivals(&[(ModelId::Lenet, 100.0)], 5.0, 9);
+        let solo = generate_arrivals(&[(ModelId::Lenet, 100.0)], 5.0, 9).unwrap();
         let duo = generate_arrivals(
             &[(ModelId::Lenet, 100.0), (ModelId::Vgg, 100.0)],
             5.0,
             9,
-        );
+        )
+        .unwrap();
         let lenet_times: Vec<f64> = duo
             .iter()
             .filter(|a| a.model == ModelId::Lenet)
@@ -159,9 +232,41 @@ mod tests {
             10.0,
             1.0,
             4,
-        );
+        )
+        .unwrap();
         let early = arr.iter().filter(|a| a.time_ms < 5_000.0).count();
         let late = arr.len() - early;
         assert!(early > late * 4, "early={early} late={late}");
+    }
+
+    #[test]
+    fn varying_residual_carries_across_steps() {
+        // A constant-rate varying trace must hit the same empirical
+        // rate as the homogeneous generator regardless of how finely
+        // the steps slice it — the residual inter-arrival time survives
+        // every boundary (no draw is discarded at a step cut).
+        for step in [0.125, 1.0, 7.0] {
+            let arr =
+                generate_varying(&[ModelId::Googlenet], |_, _| 40.0, 60.0, step, 6)
+                    .unwrap();
+            let rate = arr.len() as f64 / 60.0;
+            assert!((rate - 40.0).abs() < 5.0, "step={step}: rate={rate}");
+        }
+        // Zero-rate gaps pause, not reset, the pending gap: arrivals
+        // resume after the gap with the same total count statistics.
+        let gappy = generate_varying(
+            &[ModelId::Googlenet],
+            |_, t| if (10.0..20.0).contains(&t) { 0.0 } else { 40.0 },
+            30.0,
+            1.0,
+            6,
+        )
+        .unwrap();
+        assert!(gappy.iter().all(|a| {
+            let s = a.time_ms / 1000.0;
+            !(10.0..20.0).contains(&s)
+        }));
+        let rate = gappy.len() as f64 / 20.0; // 20 s of live time
+        assert!((rate - 40.0).abs() < 6.0, "gappy rate={rate}");
     }
 }

@@ -1,0 +1,519 @@
+//! Equivalence: the `ServingEngine` extraction did not change one-shot
+//! simulation semantics.
+//!
+//! `reference_simulate` below is a frozen copy of the pre-extraction
+//! monolithic event loop from `coordinator/simserver.rs` (PR 2 state),
+//! with exactly one intentional divergence folded in: the deficit
+//! routing counters are decremented when a queued request is dropped
+//! (the satellite fix that also landed in the engine), so this test
+//! isolates the *extraction* — state factoring, epoch tagging, the
+//! run_until/finish split — from that accounting change. Every scenario
+//! asserts byte-identical JSON reports, including overload runs where
+//! drops and multi-route deficit decisions are exercised, and every
+//! sharing mode (the MPS modes consume RNG draws, so event order and
+//! RNG order are both pinned).
+
+use std::collections::VecDeque;
+
+use gpulets::coordinator::batcher::slo_timeout_us;
+use gpulets::coordinator::{simulate, SimConfig};
+use gpulets::gpu::gpulet::GpuLetSpec;
+use gpulets::gpu::ShareMode;
+use gpulets::interference::ground_truth::{GroundTruth, TaskDemand};
+use gpulets::metrics::Report;
+use gpulets::models::{profile, ModelId};
+use gpulets::perfmodel::LatencyModel;
+use gpulets::sched::types::{Assignment, LetPlan};
+use gpulets::sched::{ElasticPartitioning, SchedCtx, Schedule, Scheduler};
+use gpulets::simclock::{ms_to_us, us_to_ms, EventQueue};
+use gpulets::util::rng::Pcg32;
+use gpulets::workload::{generate_arrivals, Arrival};
+
+#[derive(Clone, Copy, Debug)]
+enum Event {
+    Arrive(usize),
+    Timeout { let_idx: usize, asg_idx: usize, armed_at: u64 },
+    Done { let_idx: usize },
+}
+
+struct AsgState {
+    queue: VecDeque<(u64, u64)>,
+    timer_token: u64,
+}
+
+struct AsgConst {
+    exec_est_us: u64,
+    slo_us: u64,
+    timeout_us: u64,
+    slo_ms: f64,
+}
+
+struct LetState {
+    asgs: Vec<AsgState>,
+    busy: bool,
+    next_asg: usize,
+    running: Option<(usize, u32)>,
+    inflight: Vec<(usize, u64, u64)>,
+}
+
+/// Frozen pre-extraction `simulate` (see module docs).
+fn reference_simulate(
+    lm: &LatencyModel,
+    gt: &GroundTruth,
+    schedule: &Schedule,
+    arrivals: &[Arrival],
+    window_s: f64,
+    cfg: &SimConfig,
+) -> Report {
+    let mut report = Report::new(window_s);
+    let mut rng = Pcg32::seeded(cfg.seed);
+
+    let mut routes: Vec<Vec<(usize, usize, f64)>> = vec![Vec::new(); 5];
+    let mut route_pos: Vec<Vec<usize>> = schedule
+        .lets
+        .iter()
+        .map(|lp| vec![0usize; lp.assignments.len()])
+        .collect();
+    for (li, lp) in schedule.lets.iter().enumerate() {
+        for (ai, a) in lp.assignments.iter().enumerate() {
+            routes[a.model.index()].push((li, ai, a.rate));
+            route_pos[li][ai] = routes[a.model.index()].len() - 1;
+        }
+    }
+    let mut served: Vec<Vec<f64>> = routes.iter().map(|r| vec![0.0; r.len()]).collect();
+
+    let mut lets: Vec<LetState> = schedule
+        .lets
+        .iter()
+        .map(|lp| LetState {
+            asgs: lp
+                .assignments
+                .iter()
+                .map(|_| AsgState { queue: VecDeque::new(), timer_token: 0 })
+                .collect(),
+            busy: false,
+            next_asg: 0,
+            running: None,
+            inflight: Vec::new(),
+        })
+        .collect();
+
+    let consts: Vec<Vec<AsgConst>> = schedule
+        .lets
+        .iter()
+        .map(|lp| {
+            let p_exec = exec_fraction(cfg.mode, lp.spec.fraction());
+            let duty_us: u64 = lp
+                .assignments
+                .iter()
+                .map(|a| ms_to_us(lm.latency_ms(a.model, a.batch, p_exec)))
+                .sum();
+            lp.assignments
+                .iter()
+                .map(|a| {
+                    let slo_ms = lm.slo_ms(a.model);
+                    let slo_us = ms_to_us(slo_ms);
+                    AsgConst {
+                        exec_est_us: ms_to_us(lm.latency_ms(a.model, a.batch, p_exec)),
+                        slo_us,
+                        timeout_us: slo_timeout_us(slo_us, duty_us),
+                        slo_ms,
+                    }
+                })
+                .collect()
+        })
+        .collect();
+
+    let num_gpus = schedule.lets.iter().map(|l| l.spec.gpu + 1).max().unwrap_or(0);
+    let mut gpu_busy: Vec<bool> = vec![false; num_gpus];
+    let mut gpu_waiters: Vec<VecDeque<usize>> = vec![VecDeque::new(); num_gpus];
+
+    let mut q: EventQueue<Event> = EventQueue::new();
+    let arr_us: Vec<u64> = arrivals.iter().map(|a| ms_to_us(a.time_ms)).collect();
+    for (i, &t) in arr_us.iter().enumerate() {
+        q.push_at_us(t, Event::Arrive(i));
+    }
+    let horizon = arr_us.last().copied().unwrap_or(0) + ms_to_us(cfg.drain_ms);
+
+    while let Some((now, ev)) = q.pop() {
+        if now > horizon {
+            break;
+        }
+        match ev {
+            Event::Arrive(i) => {
+                let a = &arrivals[i];
+                let m = a.model;
+                let options = &routes[m.index()];
+                if options.is_empty() {
+                    report.model_mut(m, lm.slo_ms(m)).record_drop();
+                    continue;
+                }
+                let (pos, &(li, ai, w)) = options
+                    .iter()
+                    .enumerate()
+                    .min_by(|(i1, r1), (i2, r2)| {
+                        let k1 = served[m.index()][*i1] / r1.2.max(1e-9);
+                        let k2 = served[m.index()][*i2] / r2.2.max(1e-9);
+                        k1.total_cmp(&k2)
+                    })
+                    .unwrap();
+                let _ = w;
+                served[m.index()][pos] += 1.0;
+                lets[li].asgs[ai].queue.push_back((a.id, now));
+                let b_target = schedule.lets[li].assignments[ai].batch as usize;
+                if !lets[li].busy && lets[li].asgs[ai].queue.len() >= b_target {
+                    try_start(
+                        li, lm, gt, schedule, &consts, &route_pos, &mut served,
+                        &mut lets, &mut gpu_busy, &mut gpu_waiters, &mut q, cfg,
+                        &mut rng, &mut report,
+                    );
+                } else if lets[li].asgs[ai].queue.len() == 1 {
+                    let token = {
+                        let st = &mut lets[li].asgs[ai];
+                        st.timer_token += 1;
+                        st.timer_token
+                    };
+                    q.push_after_us(
+                        consts[li][ai].timeout_us,
+                        Event::Timeout { let_idx: li, asg_idx: ai, armed_at: token },
+                    );
+                }
+            }
+            Event::Timeout { let_idx, asg_idx, armed_at } => {
+                if lets[let_idx].asgs[asg_idx].timer_token != armed_at {
+                    continue;
+                }
+                if lets[let_idx].asgs[asg_idx].queue.is_empty() {
+                    continue;
+                }
+                if !lets[let_idx].busy {
+                    try_start(
+                        let_idx, lm, gt, schedule, &consts, &route_pos, &mut served,
+                        &mut lets, &mut gpu_busy, &mut gpu_waiters, &mut q, cfg,
+                        &mut rng, &mut report,
+                    );
+                } else {
+                    let token = {
+                        let st = &mut lets[let_idx].asgs[asg_idx];
+                        st.timer_token += 1;
+                        st.timer_token
+                    };
+                    q.push_after_us(500, Event::Timeout { let_idx, asg_idx, armed_at: token });
+                }
+            }
+            Event::Done { let_idx } => {
+                let gpu = schedule.lets[let_idx].spec.gpu;
+                let inflight = std::mem::take(&mut lets[let_idx].inflight);
+                for (ai, _id, arr) in inflight {
+                    let c = &consts[let_idx][ai];
+                    let m = schedule.lets[let_idx].assignments[ai].model;
+                    report.model_mut(m, c.slo_ms).record(us_to_ms(now - arr));
+                }
+                lets[let_idx].busy = false;
+                lets[let_idx].running = None;
+                if cfg.mode == ShareMode::TemporalOnly {
+                    gpu_busy[gpu] = false;
+                    if let Some(waiter) = gpu_waiters[gpu].pop_front() {
+                        try_start(
+                            waiter, lm, gt, schedule, &consts, &route_pos, &mut served,
+                            &mut lets, &mut gpu_busy, &mut gpu_waiters, &mut q, cfg,
+                            &mut rng, &mut report,
+                        );
+                    }
+                }
+                if !lets[let_idx].busy {
+                    try_start(
+                        let_idx, lm, gt, schedule, &consts, &route_pos, &mut served,
+                        &mut lets, &mut gpu_busy, &mut gpu_waiters, &mut q, cfg,
+                        &mut rng, &mut report,
+                    );
+                }
+            }
+        }
+    }
+
+    for (li, ls) in lets.iter_mut().enumerate() {
+        for (ai, st) in ls.asgs.iter_mut().enumerate() {
+            let m = schedule.lets[li].assignments[ai].model;
+            for _ in st.queue.drain(..) {
+                report.model_mut(m, consts[li][ai].slo_ms).record_drop();
+            }
+        }
+        for (ai, _, _) in ls.inflight.drain(..) {
+            let m = schedule.lets[li].assignments[ai].model;
+            report.model_mut(m, consts[li][ai].slo_ms).record_drop();
+        }
+    }
+    report
+}
+
+#[allow(clippy::too_many_arguments)]
+fn try_start(
+    let_idx: usize,
+    lm: &LatencyModel,
+    gt: &GroundTruth,
+    schedule: &Schedule,
+    consts: &[Vec<AsgConst>],
+    route_pos: &[Vec<usize>],
+    served: &mut [Vec<f64>],
+    lets: &mut [LetState],
+    gpu_busy: &mut [bool],
+    gpu_waiters: &mut [VecDeque<usize>],
+    q: &mut EventQueue<Event>,
+    cfg: &SimConfig,
+    rng: &mut Pcg32,
+    report: &mut Report,
+) {
+    if lets[let_idx].busy {
+        return;
+    }
+    let now = q.now_us();
+    let lp = &schedule.lets[let_idx];
+    let n_asgs = lp.assignments.len();
+
+    let mut chosen: Option<usize> = None;
+    for k in 0..n_asgs {
+        let ai = (lets[let_idx].next_asg + k) % n_asgs;
+        let asg = &lp.assignments[ai];
+        let c = &consts[let_idx][ai];
+        let st = &mut lets[let_idx].asgs[ai];
+        let before = st.queue.len();
+        st.queue.retain(|&(_, arr)| now + c.exec_est_us <= arr + c.slo_us);
+        let dropped = before - st.queue.len();
+        if dropped > 0 {
+            // The satellite routing fix, mirrored here (see module docs):
+            // dropped work no longer counts against the route.
+            served[asg.model.index()][route_pos[let_idx][ai]] -= dropped as f64;
+            for _ in 0..dropped {
+                report.model_mut(asg.model, c.slo_ms).record_drop();
+            }
+        }
+        let st = &lets[let_idx].asgs[ai];
+        if !st.queue.is_empty() {
+            let full = st.queue.len() >= asg.batch as usize;
+            let head_arr = st.queue.front().unwrap().1;
+            if full || now - head_arr >= c.timeout_us {
+                chosen = Some(ai);
+                break;
+            }
+            let token = {
+                let st = &mut lets[let_idx].asgs[ai];
+                st.timer_token += 1;
+                st.timer_token
+            };
+            q.push_at_us(
+                head_arr + c.timeout_us,
+                Event::Timeout { let_idx, asg_idx: ai, armed_at: token },
+            );
+        }
+    }
+    let Some(ai) = chosen else { return };
+
+    let gpu = lp.spec.gpu;
+    if cfg.mode == ShareMode::TemporalOnly {
+        if gpu_busy[gpu] {
+            if !gpu_waiters[gpu].contains(&let_idx) {
+                gpu_waiters[gpu].push_back(let_idx);
+            }
+            return;
+        }
+        gpu_busy[gpu] = true;
+    }
+
+    let asg = &lp.assignments[ai];
+    let b_actual = (lets[let_idx].asgs[ai].queue.len() as u32).min(asg.batch).max(1);
+    let mut inflight = Vec::with_capacity(b_actual as usize);
+    for _ in 0..b_actual {
+        let (id, arr) = lets[let_idx].asgs[ai].queue.pop_front().unwrap();
+        inflight.push((ai, id, arr));
+    }
+
+    let p_exec = exec_fraction(cfg.mode, lp.spec.fraction());
+    let mut exec = lm.latency_ms(asg.model, b_actual, p_exec);
+
+    if cfg.mode != ShareMode::TemporalOnly {
+        if let Some((co_idx, co)) = co_resident_running(schedule, lets, let_idx) {
+            let co_lp = &schedule.lets[co_idx];
+            let (co_ai, co_b) = co;
+            let co_asg = &co_lp.assignments[co_ai];
+            let my_prof = profile(asg.model);
+            let co_prof = profile(co_asg.model);
+            let p_me = lp.spec.fraction();
+            let p_co = co_lp.spec.fraction();
+            let me = TaskDemand {
+                model: asg.model,
+                batch: b_actual,
+                l2: my_prof.l2_util(p_me, b_actual),
+                bw: my_prof.bw_util(p_me, b_actual),
+            };
+            let other = TaskDemand {
+                model: co_asg.model,
+                batch: co_b,
+                l2: co_prof.l2_util(p_co, co_b),
+                bw: co_prof.bw_util(p_co, co_b),
+            };
+            let base = gt.factor(&me, &other) * cfg.mode.contention_amplification();
+            let vol = cfg.mode.contention_volatility();
+            let factor = (base * (1.0 + rng.normal(0.0, vol))).max(0.0);
+            exec *= 1.0 + factor;
+        }
+    }
+
+    lets[let_idx].busy = true;
+    lets[let_idx].running = Some((ai, b_actual));
+    lets[let_idx].inflight = inflight;
+    lets[let_idx].next_asg = (ai + 1) % n_asgs;
+    q.push_after_us(ms_to_us(exec), Event::Done { let_idx });
+}
+
+fn exec_fraction(mode: ShareMode, nominal: f64) -> f64 {
+    match mode {
+        ShareMode::Partitioned => nominal,
+        ShareMode::MpsDefault | ShareMode::TemporalOnly => 1.0,
+    }
+}
+
+fn co_resident_running(
+    schedule: &Schedule,
+    lets: &[LetState],
+    let_idx: usize,
+) -> Option<(usize, (usize, u32))> {
+    let gpu = schedule.lets[let_idx].spec.gpu;
+    schedule
+        .lets
+        .iter()
+        .enumerate()
+        .filter(|(i, lp)| *i != let_idx && lp.spec.gpu == gpu)
+        .find_map(|(i, _)| lets[i].running.map(|r| (i, r)))
+}
+
+// ---- the actual equivalence assertions ---------------------------------
+
+fn assert_equivalent(
+    label: &str,
+    schedule: &Schedule,
+    arrivals: &[Arrival],
+    window_s: f64,
+    cfg: &SimConfig,
+) {
+    let lm = LatencyModel::new();
+    let gt = GroundTruth::default();
+    let new = simulate(&lm, &gt, schedule, arrivals, window_s, cfg);
+    let old = reference_simulate(&lm, &gt, schedule, arrivals, window_s, cfg);
+    assert_eq!(
+        new.to_json().to_string(),
+        old.to_json().to_string(),
+        "{label}: engine-backed simulate diverged from the frozen reference"
+    );
+}
+
+fn sched_for(rates: &[f64; 5], gpus: usize) -> Schedule {
+    let ctx = SchedCtx::new(gpus, None);
+    ElasticPartitioning::gpulet().schedule(&ctx, rates).unwrap()
+}
+
+fn trace(rates: &[(ModelId, f64)], duration_s: f64, seed: u64) -> Vec<Arrival> {
+    generate_arrivals(rates, duration_s, seed).unwrap()
+}
+
+#[test]
+fn feasible_multi_gpu_partitioned() {
+    let rates = [80.0, 60.0, 40.0, 20.0, 30.0];
+    let schedule = sched_for(&rates, 4);
+    let arrivals = trace(
+        &[
+            (ModelId::Lenet, 80.0),
+            (ModelId::Googlenet, 60.0),
+            (ModelId::Resnet, 40.0),
+            (ModelId::SsdMobilenet, 20.0),
+            (ModelId::Vgg, 30.0),
+        ],
+        12.0,
+        41,
+    );
+    assert_equivalent("fig12-like mix", &schedule, &arrivals, 12.0, &SimConfig::default());
+}
+
+#[test]
+fn overload_with_drops_and_multi_route_deficits() {
+    // High LeNet rate forces multiple gpu-lets (multi-route deficit
+    // decisions), and 2x offered load exercises hopeless-head drops +
+    // the decrement accounting on both sides.
+    let rates = [1500.0, 0.0, 0.0, 0.0, 120.0];
+    let schedule = sched_for(&rates, 4);
+    let arrivals = trace(
+        &[(ModelId::Lenet, 3000.0), (ModelId::Vgg, 240.0)],
+        8.0,
+        42,
+    );
+    assert_equivalent("overloaded split", &schedule, &arrivals, 8.0, &SimConfig::default());
+}
+
+#[test]
+fn unscheduled_model_and_empty_trace() {
+    let schedule = sched_for(&[50.0, 0.0, 0.0, 0.0, 0.0], 1);
+    let arrivals = trace(&[(ModelId::Lenet, 50.0), (ModelId::Vgg, 10.0)], 5.0, 43);
+    assert_equivalent("unscheduled vgg", &schedule, &arrivals, 5.0, &SimConfig::default());
+    assert_equivalent("empty trace", &schedule, &[], 5.0, &SimConfig::default());
+}
+
+#[test]
+fn all_sharing_modes_match() {
+    // Consolidated hand-built schedule so the MPS modes draw
+    // interference noise (RNG order must match) and TemporalOnly
+    // exercises the gpu_busy/waiter path.
+    let schedule = Schedule {
+        lets: vec![
+            LetPlan {
+                spec: GpuLetSpec { gpu: 0, size_pct: 20 },
+                assignments: vec![Assignment {
+                    model: ModelId::Lenet,
+                    batch: 8,
+                    rate: 400.0,
+                }],
+            },
+            LetPlan {
+                spec: GpuLetSpec { gpu: 0, size_pct: 80 },
+                assignments: vec![Assignment {
+                    model: ModelId::Vgg,
+                    batch: 16,
+                    rate: 150.0,
+                }],
+            },
+        ],
+    };
+    let arrivals = trace(
+        &[(ModelId::Lenet, 400.0), (ModelId::Vgg, 150.0)],
+        10.0,
+        44,
+    );
+    for mode in [ShareMode::Partitioned, ShareMode::MpsDefault, ShareMode::TemporalOnly] {
+        assert_equivalent(
+            mode.name(),
+            &schedule,
+            &arrivals,
+            10.0,
+            &SimConfig { mode, ..Default::default() },
+        );
+    }
+}
+
+#[test]
+fn seeds_and_drain_variations_match() {
+    let rates = [0.0, 0.0, 120.0, 60.0, 0.0];
+    let schedule = sched_for(&rates, 4);
+    for (seed, drain_ms) in [(7u64, 2_000.0), (1234, 0.0), (99, 500.0)] {
+        let arrivals = trace(
+            &[(ModelId::Resnet, 140.0), (ModelId::SsdMobilenet, 70.0)],
+            6.0,
+            seed,
+        );
+        assert_equivalent(
+            &format!("seed {seed} drain {drain_ms}"),
+            &schedule,
+            &arrivals,
+            6.0,
+            &SimConfig { seed, drain_ms, ..Default::default() },
+        );
+    }
+}

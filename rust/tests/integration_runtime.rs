@@ -98,7 +98,8 @@ fn real_server_serves_a_small_mix() {
         &[(ModelId::Lenet, 20.0), (ModelId::Googlenet, 4.0)],
         2.0,
         5,
-    );
+    )
+    .unwrap();
     let mut server = RealServer::new(&registry);
     server.batch = [(ModelId::Lenet, 8u32), (ModelId::Googlenet, 2)].into_iter().collect();
     let outcome = server.serve(&arrivals, 2.0).unwrap();

@@ -20,7 +20,7 @@ fn arrivals_for(rates: &[f64; 5], duration_s: f64, seed: u64) -> Vec<gpulets::wo
         .map(|&m| (m, rates[m.index()]))
         .filter(|&(_, r)| r > 0.0)
         .collect();
-    generate_arrivals(&pairs, duration_s, seed)
+    generate_arrivals(&pairs, duration_s, seed).expect("finite rates")
 }
 
 #[test]
@@ -126,15 +126,24 @@ fn adaptive_server_survives_paper_trace_wave() {
     let ctx = paper_ctx(false);
     let scheduler = ElasticPartitioning::gpulet();
     let server = AdaptiveServer::new(&ctx, &scheduler);
-    let stats = server.run_trace(&FluctuationTrace::default(), 700.0, 2024);
-    assert_eq!(stats.len(), 35);
-    let reorgs = stats.iter().filter(|w| w.reorganized).count();
+    let out = server
+        .run_trace(&FluctuationTrace::default(), 700.0, 2024)
+        .expect("finite trace rates");
+    assert_eq!(out.windows.len(), 35);
+    let reorgs = out.windows.iter().filter(|w| w.reorganized).count();
     assert!(reorgs >= 2, "expected several reorganizations, got {reorgs}");
-    let worst = stats
+    let worst = out
+        .windows
         .iter()
         .map(|w| w.violation_rate)
         .fold(0.0f64, f64::max);
     assert!(worst < 0.30, "worst window violation {worst}");
+    // The persistent engine conserves requests across every window and
+    // re-organization boundary.
+    for m in ModelId::ALL {
+        let total = out.report.model(m).map_or(0, |mm| mm.total());
+        assert_eq!(total, out.offered[m.index()], "{m} lost requests");
+    }
 }
 
 #[test]

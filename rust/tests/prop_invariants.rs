@@ -192,7 +192,9 @@ fn prop_simulation_conserves_requests() {
             if pairs.is_empty() {
                 return Ok(());
             }
-            let arrivals = generate_arrivals(&pairs, 4.0, *seed);
+            let Ok(arrivals) = generate_arrivals(&pairs, 4.0, *seed) else {
+                return Err("finite rates must generate".into());
+            };
             let report =
                 simulate(&lm, &gt, &schedule, &arrivals, 4.0, &SimConfig::default());
             let total: u64 = ModelId::ALL
