@@ -1,0 +1,190 @@
+//! Engine scaling bench: events/s and peak live-event count under
+//! 1x / 10x / 100x Fig-14 load, streamed.
+//!
+//! The streaming core's contract is that memory and heap depth depend
+//! on *in-flight work*, not trace length: arrivals are pulled lazily
+//! from per-model inhomogeneous Poisson streams (one pending event per
+//! stream), duty timers live in one slot per assignment, and the heap
+//! holds only in-flight `Done`s. Each ladder rung scales the Fig-14
+//! fluctuation rates by k while shrinking the horizon to 1800/k s, so
+//! every rung offers a comparable number of requests and the measured
+//! events/s isolates per-event cost under growing instantaneous load —
+//! the 10x and 100x rungs complete *without ever materializing an
+//! arrival vector* (at 100x that vector alone would be tens of millions
+//! of entries).
+//!
+//! A second pair runs the same 120 s 1x trace through the legacy
+//! bulk-inject path (whole future in the heap) and the streamed path,
+//! asserts their reports byte-identical, and reports both peak
+//! live-event counts: O(trace) vs O(streams + assignments + gpu-lets).
+//!
+//! Writes BENCH_engine_scale.json; diff across PRs with
+//! `gpulets bench-compare`.
+
+use gpulets::coordinator::{ServingEngine, SimConfig};
+use gpulets::interference::GroundTruth;
+use gpulets::models::ModelId;
+use gpulets::perfmodel::LatencyModel;
+use gpulets::sched::{ElasticPartitioning, SchedCtx, Scheduler};
+use gpulets::util::benchkit;
+use gpulets::util::json::{obj, Json};
+use gpulets::workload::{
+    dyn_sources, generate_varying, varying_streams, DynSourceMux, FluctuationTrace,
+    SourceMux,
+};
+
+fn fig14_mux(scale: f64, duration_s: f64, seed: u64) -> (DynSourceMux, usize) {
+    let trace = FluctuationTrace::default();
+    let streams = varying_streams(
+        &ModelId::ALL,
+        move |m, t| trace.rate_at(m, t) * scale,
+        duration_s,
+        1.0,
+        seed,
+    )
+    .expect("fig14 rates are finite");
+    let n = streams.len();
+    (SourceMux::new(dyn_sources(streams)), n)
+}
+
+fn main() {
+    let lm = LatencyModel::new();
+    let gt = GroundTruth::default();
+    let cfg = SimConfig::default();
+    let ctx = SchedCtx::new(4, None);
+    let schedule = ElasticPartitioning::gpulet()
+        .schedule(&ctx, &[50.0; 5])
+        .expect("the equal scenario fits four GPUs");
+    let total_asgs: usize = schedule.lets.iter().map(|l| l.assignments.len()).sum();
+    let n_lets = schedule.lets.len();
+
+    let mut timings = Vec::new();
+    let mut rungs = Vec::new();
+
+    // --- scale ladder -----------------------------------------------------
+    for &k in &[1u32, 10, 100] {
+        let duration = 1800.0 / k as f64;
+        let label = format!("engine: {k}x fig14 load, {duration:.0}s streamed");
+        let (t, (events, peak, offered, bound)) = benchkit::bench(&label, 0, 1, || {
+            let (mux, n_streams) = fig14_mux(k as f64, duration, 2024);
+            let mut eng = ServingEngine::new(&lm, &gt, schedule.clone(), duration, &cfg);
+            eng.attach_source(mux);
+            eng.run_stream();
+            eng.close();
+            let bound = n_streams + total_asgs + n_lets;
+            let offered: u64 = eng.injected_per_model().iter().sum();
+            (eng.events_processed(), eng.peak_live_events(), offered, bound)
+        });
+        assert!(
+            peak <= bound,
+            "{k}x: peak live events {peak} exceeded the structural bound {bound}"
+        );
+        let events_per_s = if t.mean_ms > 0.0 { events as f64 / (t.mean_ms / 1000.0) } else { 0.0 };
+        println!("{}", t.summary());
+        println!(
+            "  {k:>3}x: {offered} offered, {events} events, {events_per_s:.0} events/s, \
+             peak {peak} live events (bound {bound})"
+        );
+        rungs.push(obj(vec![
+            ("scale", Json::Num(k as f64)),
+            ("duration_s", Json::Num(duration)),
+            ("offered_requests", Json::Num(offered as f64)),
+            ("events", Json::Num(events as f64)),
+            ("events_per_s", Json::Num(events_per_s)),
+            ("peak_live_events", Json::Num(peak as f64)),
+            ("live_event_bound", Json::Num(bound as f64)),
+        ]));
+        timings.push(t);
+    }
+
+    // --- old-vs-new pair: bulk inject vs streaming, identical trace -------
+    let pair_duration = 120.0;
+    let trace = FluctuationTrace::default();
+    let arrivals = generate_varying(
+        &ModelId::ALL,
+        |m, t| trace.rate_at(m, t),
+        pair_duration,
+        1.0,
+        2024,
+    )
+    .expect("fig14 rates are finite");
+    let n_arr = arrivals.len();
+
+    // Trace generation runs INSIDE both timed closures — the old path
+    // pays generate + sort + bulk heap fill, the new path pays the
+    // same draws lazily; `arrivals`/`n_arr` above exist only for the
+    // label and the byte-identity horizon sanity.
+    let (t_bulk, (r_bulk, peak_bulk)) = benchkit::bench(
+        &format!("engine: 120s fig14 trace, bulk inject ({n_arr} arrivals in heap)"),
+        1,
+        3,
+        || {
+            let tr = FluctuationTrace::default();
+            let trace_vec = generate_varying(
+                &ModelId::ALL,
+                |m, t| tr.rate_at(m, t),
+                pair_duration,
+                1.0,
+                2024,
+            )
+            .expect("fig14 rates are finite");
+            let mut eng =
+                ServingEngine::new(&lm, &gt, schedule.clone(), pair_duration, &cfg);
+            eng.inject(&trace_vec);
+            let horizon = gpulets::simclock::ms_to_us(
+                trace_vec.last().map(|a| a.time_ms).unwrap_or(0.0),
+            ) + gpulets::simclock::ms_to_us(cfg.drain_ms);
+            eng.run_until(horizon);
+            let peak = eng.peak_live_events();
+            (eng.finish().to_json().to_string(), peak)
+        },
+    );
+    println!("{}", t_bulk.summary());
+    timings.push(t_bulk.clone());
+
+    let (t_stream, (r_stream, peak_stream)) = benchkit::bench(
+        "engine: 120s fig14 trace, streamed sources (O(active) events)",
+        1,
+        3,
+        || {
+            let (mux, _) = fig14_mux(1.0, pair_duration, 2024);
+            let mut eng =
+                ServingEngine::new(&lm, &gt, schedule.clone(), pair_duration, &cfg);
+            eng.attach_source(mux);
+            eng.run_stream();
+            let peak = eng.peak_live_events();
+            (eng.finish().to_json().to_string(), peak)
+        },
+    );
+    println!("{}", t_stream.summary());
+    timings.push(t_stream.clone());
+
+    assert_eq!(
+        r_bulk, r_stream,
+        "bulk-inject and streamed reports must be byte-identical"
+    );
+    println!(
+        "peak live events: bulk {peak_bulk} (O(trace)) vs streamed {peak_stream} \
+         (O(active)); speedup {:.2}x",
+        if t_stream.mean_ms > 0.0 { t_bulk.mean_ms / t_stream.mean_ms } else { f64::NAN }
+    );
+
+    let doc = obj(vec![
+        (
+            "bench",
+            Json::Arr(timings.iter().map(benchkit::BenchResult::to_json).collect()),
+        ),
+        (
+            "result",
+            obj(vec![
+                ("ladder", Json::Arr(rungs)),
+                ("bulk_peak_live_events", Json::Num(peak_bulk as f64)),
+                ("streamed_peak_live_events", Json::Num(peak_stream as f64)),
+                ("pair_arrivals", Json::Num(n_arr as f64)),
+            ]),
+        ),
+    ]);
+    benchkit::write_json("BENCH_engine_scale.json", &doc)
+        .expect("write BENCH_engine_scale.json");
+    eprintln!("[wrote BENCH_engine_scale.json]");
+}

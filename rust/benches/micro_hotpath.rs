@@ -20,6 +20,8 @@ use std::collections::BTreeMap;
 
 use gpulets::coordinator::batcher::{BatchBuilder, Queued};
 use gpulets::coordinator::simserver::{simulate, SimConfig};
+use gpulets::coordinator::ServingEngine;
+use gpulets::simclock::ms_to_us;
 use gpulets::experiments::common::{fitted_interference, paper_ctx};
 use gpulets::interference::GroundTruth;
 use gpulets::models::ModelId;
@@ -27,7 +29,9 @@ use gpulets::perfmodel::profile_table::PARTITIONS;
 use gpulets::perfmodel::{LatencyModel, ProfileTable, BATCHES};
 use gpulets::sched::{ElasticPartitioning, IdealScheduler, Scheduler};
 use gpulets::util::{benchkit, par};
-use gpulets::workload::{enumerate_all_scenarios, generate_arrivals};
+use gpulets::workload::{
+    dyn_sources, enumerate_all_scenarios, generate_arrivals, poisson_streams, SourceMux,
+};
 
 fn main() {
     let mut timings = Vec::new();
@@ -177,18 +181,14 @@ fn main() {
     // --- simulator event throughput ----------------------------------------
     let gt = GroundTruth::default();
     let schedule = gi.schedule(&ctx, &rates).expect("schedulable");
-    let arrivals = generate_arrivals(
-        &[
-            (ModelId::Lenet, 100.0),
-            (ModelId::Googlenet, 100.0),
-            (ModelId::Resnet, 100.0),
-            (ModelId::SsdMobilenet, 50.0),
-            (ModelId::Vgg, 50.0),
-        ],
-        10.0,
-        5,
-    )
-    .expect("finite rates");
+    let trace_pairs = [
+        (ModelId::Lenet, 100.0),
+        (ModelId::Googlenet, 100.0),
+        (ModelId::Resnet, 100.0),
+        (ModelId::SsdMobilenet, 50.0),
+        (ModelId::Vgg, 50.0),
+    ];
+    let arrivals = generate_arrivals(&trace_pairs, 10.0, 5).expect("finite rates");
     let n_arr = arrivals.len();
     let (t, _) = benchkit::bench(
         &format!("sim: 10 s short-skew trace ({n_arr} arrivals)"),
@@ -201,6 +201,52 @@ fn main() {
     );
     println!("{}", t.summary());
     timings.push(t);
+
+    // --- bulk-inject vs streaming arrivals (old vs new event core) ----------
+    // Old: generate + sort the whole trace, then hold the entire
+    // future in the heap (O(trace) entries, every pop O(log N)). New:
+    // arrivals pull lazily from per-model Poisson streams, live events
+    // stay O(streams + assignments + gpu-lets). Workload generation is
+    // INSIDE both timed closures (it is part of each path's real
+    // cost), and reports must be byte-identical.
+    let sim_cfg = SimConfig::default();
+    let (t, (rep_bulk, peak_bulk)) = benchkit::bench(
+        "engine: 10 s trace, bulk-inject heap (old path)",
+        2,
+        20,
+        || {
+            let trace = generate_arrivals(&trace_pairs, 10.0, 5).expect("finite rates");
+            let mut eng = ServingEngine::new(&lm, &gt, schedule.clone(), 10.0, &sim_cfg);
+            eng.inject(&trace);
+            let horizon = ms_to_us(trace.last().map(|a| a.time_ms).unwrap_or(0.0))
+                + ms_to_us(sim_cfg.drain_ms);
+            eng.run_until(horizon);
+            let peak = eng.peak_live_events();
+            (eng.finish().to_json().to_string(), peak)
+        },
+    );
+    println!("{}", t.summary());
+    timings.push(t);
+    let (t, (rep_stream, peak_stream)) = benchkit::bench(
+        "engine: 10 s trace, streaming sources (new path)",
+        2,
+        20,
+        || {
+            let streams =
+                poisson_streams(&trace_pairs, 10.0, 5).expect("finite rates");
+            let mut eng = ServingEngine::new(&lm, &gt, schedule.clone(), 10.0, &sim_cfg);
+            eng.attach_source(SourceMux::new(dyn_sources(streams)));
+            eng.run_stream();
+            let peak = eng.peak_live_events();
+            (eng.finish().to_json().to_string(), peak)
+        },
+    );
+    println!("{}", t.summary());
+    timings.push(t);
+    assert_eq!(rep_bulk, rep_stream, "streaming must be byte-identical to bulk inject");
+    println!(
+        "peak live events: bulk {peak_bulk} (O(trace)) vs streamed {peak_stream} (O(active))"
+    );
 
     // --- batcher hot path ---------------------------------------------------
     let (t, _) = benchkit::bench("batcher: 100k enqueue/dispatch", 2, 20, || {
@@ -262,6 +308,10 @@ fn main() {
         (
             "ideal: 64-scenario verdicts, full 4^4 layouts",
             "ideal: 64-scenario verdicts, 35 deduped layouts",
+        ),
+        (
+            "engine: 10 s trace, bulk-inject heap (old path)",
+            "engine: 10 s trace, streaming sources (new path)",
         ),
     ] {
         let pick = |name: &str| timings.iter().find(|t| t.name == name).map(|t| t.mean_ms);

@@ -21,7 +21,7 @@
 use gpulets::apps::App;
 use gpulets::config::{Algo, Config};
 use gpulets::coordinator::server::RealServer;
-use gpulets::coordinator::{simulate, SimConfig};
+use gpulets::coordinator::{ServingEngine, SimConfig};
 use gpulets::error::Result;
 use gpulets::experiments as ex;
 use gpulets::interference::GroundTruth;
@@ -33,7 +33,10 @@ use gpulets::sched::{
 };
 use gpulets::util::benchkit;
 use gpulets::util::json::{obj, Json};
-use gpulets::workload::{enumerate_all_scenarios, generate_arrivals, named_scenarios};
+use gpulets::workload::{
+    dyn_sources, enumerate_all_scenarios, generate_arrivals, named_scenarios,
+    poisson_streams, SourceMux,
+};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -423,22 +426,28 @@ fn serve(args: &[String]) -> Result<()> {
         .map(|&m| (m, cfg.rates[m.index()]))
         .filter(|&(_, r)| r > 0.0)
         .collect();
-    let arrivals = generate_arrivals(&pairs, cfg.duration_s, cfg.seed)?;
+    // The workload streams into the engine (one pending arrival per
+    // model), so `--scale N` can push the offered load arbitrarily high
+    // without ever materializing an arrival vector.
+    let streams = poisson_streams(&pairs, cfg.duration_s, cfg.seed)?;
+    let n_streams = streams.len();
     println!(
-        "\nsimulating {} requests over {}s ({})...",
-        arrivals.len(),
+        "\nserving a streamed Poisson workload for {}s ({}; {n_streams} arrival streams)...",
         cfg.duration_s,
         cfg.share_mode.name()
     );
-    let offered = arrivals.len() as u64;
-    let report = simulate(
+    let gt = GroundTruth::default();
+    let mut engine = ServingEngine::new(
         &ctx.lm,
-        &GroundTruth::default(),
-        &schedule,
-        &arrivals,
+        &gt,
+        schedule.clone(),
         cfg.duration_s,
         &SimConfig { mode: cfg.share_mode, seed: cfg.seed, ..Default::default() },
     );
+    engine.attach_source(SourceMux::new(dyn_sources(streams)));
+    engine.run_stream();
+    engine.close();
+    let report = engine.report();
     println!("\n{}", report.table());
     println!(
         "throughput {:.0} req/s, goodput {:.0} req/s, violations {:.2}%",
@@ -446,6 +455,7 @@ fn serve(args: &[String]) -> Result<()> {
         report.goodput_rps(),
         report.overall_violation_rate() * 100.0
     );
+    let offered: u64 = engine.injected_per_model().iter().sum();
     let (served, dropped) = ModelId::ALL.iter().fold((0u64, 0u64), |acc, &m| {
         report
             .model(m)
@@ -454,6 +464,14 @@ fn serve(args: &[String]) -> Result<()> {
     println!(
         "requests: {offered} offered = {served} served + {dropped} dropped{}",
         if served + dropped == offered { " (conserved)" } else { " (LOST!)" }
+    );
+    let total_asgs: usize = schedule.lets.iter().map(|l| l.assignments.len()).sum();
+    println!(
+        "engine: {} events processed, peak {} live events \
+         (O(active) bound: {n_streams} streams + {total_asgs} assignments + {} gpu-lets)",
+        engine.events_processed(),
+        engine.peak_live_events(),
+        schedule.lets.len(),
     );
     Ok(())
 }

@@ -24,4 +24,4 @@ pub mod simserver;
 
 pub use engine::{ServingEngine, SimConfig, SwapMode};
 pub use reorganizer::{AdaptiveOutcome, AdaptiveServer, WindowStats};
-pub use simserver::simulate;
+pub use simserver::{simulate, simulate_source};

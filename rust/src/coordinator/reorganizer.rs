@@ -18,6 +18,13 @@
 //! in-flight work at every boundary and gave each window a free drain
 //! with no competing next-window arrivals; the conservation test in
 //! `tests/engine_conservation.rs` pins the fix.
+//!
+//! Since PR 4 the trace *streams*: `run_source` drives the engine from
+//! a pull-based [`DynSourceMux`] (the Fig 14 fluctuation trace is
+//! per-model inhomogeneous Poisson streams, never a `Vec<Arrival>`),
+//! and a clone of the mux serves as the rate-observation tap — the
+//! run's memory footprint depends on in-flight work, not on how long
+//! the trace is.
 
 use crate::error::Result;
 use crate::interference::GroundTruth;
@@ -26,7 +33,9 @@ use crate::models::ModelId;
 use crate::perfmodel::RateMonitor;
 use crate::sched::{SchedCtx, Schedule, Scheduler};
 use crate::simclock::ms_to_us;
-use crate::workload::{generator::generate_varying, Arrival, FluctuationTrace};
+use crate::workload::{
+    dyn_sources, varying_streams, Arrival, DynSourceMux, FluctuationTrace, SourceMux,
+};
 
 use super::engine::{ServingEngine, SimConfig, SwapMode};
 
@@ -109,26 +118,42 @@ impl<'a, S: Scheduler> AdaptiveServer<'a, S> {
     }
 
     /// Run the Fig 14 experiment: serve `trace` for `duration_s`,
-    /// rescheduling each period from observed (EWMA) rates.
+    /// rescheduling each period from observed (EWMA) rates. The trace
+    /// streams straight into the engine — per-model inhomogeneous
+    /// Poisson streams, never materialized as a `Vec<Arrival>`.
     pub fn run_trace(
         &self,
         trace: &FluctuationTrace,
         duration_s: f64,
         seed: u64,
     ) -> Result<AdaptiveOutcome> {
-        let arrivals = generate_varying(
+        let tr = trace.clone();
+        let streams = varying_streams(
             &ModelId::ALL,
-            |m, t| trace.rate_at(m, t),
+            move |m, t| tr.rate_at(m, t),
             duration_s,
             1.0,
             seed,
         )?;
-        Ok(self.run_arrivals(&arrivals, duration_s))
+        Ok(self.run_source(SourceMux::new(dyn_sources(streams)), duration_s))
     }
 
     /// Serve a pre-generated arrival trace (sorted by time) on one
-    /// persistent engine, with windowed metric snapshots.
+    /// persistent engine, with windowed metric snapshots. Adapter over
+    /// [`AdaptiveServer::run_source`] for callers that already hold a
+    /// materialized trace — copies it once into an `Arc` the
+    /// observation tap then shares; streaming callers use `run_source`
+    /// directly and never materialize.
     pub fn run_arrivals(&self, arrivals: &[Arrival], duration_s: f64) -> AdaptiveOutcome {
+        self.run_source(DynSourceMux::of_trace(arrivals.to_vec()), duration_s)
+    }
+
+    /// Serve a pull-based arrival source on one persistent engine, with
+    /// windowed metric snapshots. A clone of the mux acts as the rate-
+    /// observation tap (it deterministically replays the same stream
+    /// the engine serves), so observed rates per window match what the
+    /// old materialized cursor counted, byte for byte.
+    pub fn run_source(&self, source: DynSourceMux, duration_s: f64) -> AdaptiveOutcome {
         // Simulation/metrics view: true SLOs (ctx.lm is the tightened
         // planning view the scheduler uses).
         let lm_true = crate::perfmodel::LatencyModel::new();
@@ -139,14 +164,15 @@ impl<'a, S: Scheduler> AdaptiveServer<'a, S> {
         // until the bootstrap window installs the first real one.
         let mut engine =
             ServingEngine::new(&lm_true, &self.gt, Schedule::default(), duration_s, &cfg);
-        engine.inject(arrivals);
+        // Observation tap: a clone of the source replays the identical
+        // arrival stream one window ahead of the serving copy.
+        let mut obs = source.clone();
+        engine.attach_source(source);
 
         let mut current: Option<Schedule> = None;
         let mut pending: Option<(Schedule, f64)> = None; // (next schedule, ready at s)
         let mut last_sched_rates: [f64; 5] = [0.0; 5];
         let mut prev_counts = CounterSnapshot::default();
-        // Cursor over the (time-sorted) arrivals for rate observation.
-        let mut cursor = 0usize;
 
         let mut t = 0.0;
         while t < duration_s {
@@ -164,17 +190,17 @@ impl<'a, S: Scheduler> AdaptiveServer<'a, S> {
                 }
             }
 
-            // Observe this window's arrivals. Boundaries are compared in
-            // the sim clock's integer microseconds so a window cut is
-            // exact: every arrival lands in exactly one window even when
-            // `t * 1000.0` is not representable. `<=` matches the
-            // serving side — `run_until(w1_us)` processes events AT the
-            // boundary too, so observation and serving agree on which
-            // window a boundary arrival belongs to.
+            // Observe this window's arrivals off the tap. Boundaries are
+            // compared in the sim clock's integer microseconds so a
+            // window cut is exact: every arrival lands in exactly one
+            // window even when `t * 1000.0` is not representable. `<=`
+            // matches the serving side — `run_until(w1_us)` processes
+            // events AT the boundary too, so observation and serving
+            // agree on which window a boundary arrival belongs to.
             let w1_us = ms_to_us(t_end * 1000.0);
-            while cursor < arrivals.len() && ms_to_us(arrivals[cursor].time_ms) <= w1_us {
-                monitor.observe(arrivals[cursor].model, 1);
-                cursor += 1;
+            while obs.peek_time_ms().is_some_and(|t_ms| ms_to_us(t_ms) <= w1_us) {
+                let a = obs.pull().expect("peeked arrival");
+                monitor.observe(a.model, 1);
             }
             monitor.tick(t_end - t);
 

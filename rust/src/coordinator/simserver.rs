@@ -16,17 +16,21 @@
 //!
 //! The event loop itself lives in [`super::engine::ServingEngine`] —
 //! the persistent core that can also swap schedules mid-trace.
-//! `simulate` is the one-shot convenience every figure harness uses:
-//! inject the whole trace, run to the drain horizon, count leftovers as
-//! drops. `tests/engine_equivalence.rs` pins this wrapper byte-for-byte
-//! against a frozen copy of the pre-extraction monolithic loop.
+//! `simulate` is the one-shot convenience every figure harness uses; it
+//! now streams the trace through the engine's source mux (one pending
+//! arrival at a time, drain horizon derived from the source) instead of
+//! bulk-injecting the whole future into the heap, and
+//! `simulate_source` runs the same one-shot directly over pull-based
+//! streams with no `Vec<Arrival>` anywhere. Both are byte-identical to
+//! the bulk-inject path (`tests/streaming_equivalence.rs`), and
+//! `tests/engine_equivalence.rs` still pins `simulate` against a frozen
+//! copy of the pre-extraction monolithic loop.
 
 use crate::interference::ground_truth::GroundTruth;
 use crate::metrics::Report;
 use crate::perfmodel::LatencyModel;
 use crate::sched::Schedule;
-use crate::simclock::ms_to_us;
-use crate::workload::Arrival;
+use crate::workload::{Arrival, DynSourceMux};
 
 use super::engine::ServingEngine;
 
@@ -36,6 +40,11 @@ pub use super::engine::SimConfig;
 /// window for throughput (usually the trace duration). One-shot: the
 /// engine serves the whole trace plus `cfg.drain_ms` of drain time,
 /// then everything still queued or in flight is counted as dropped.
+///
+/// Legacy adapter: copies the trace once into a `MaterializedSource`
+/// (the `&[Arrival]` call sites keep working). Hot paths that care
+/// about footprint use [`simulate_source`] with pull-based streams and
+/// never hold a trace vector at all.
 pub fn simulate(
     lm: &LatencyModel,
     gt: &GroundTruth,
@@ -44,11 +53,32 @@ pub fn simulate(
     window_s: f64,
     cfg: &SimConfig,
 ) -> Report {
+    simulate_source(
+        lm,
+        gt,
+        schedule,
+        DynSourceMux::of_trace(arrivals.to_vec()),
+        window_s,
+        cfg,
+    )
+}
+
+/// One-shot simulation over pull-based arrival streams: attach the
+/// mux, drive it dry, run `cfg.drain_ms` past the last arrival the
+/// source actually produced, and count leftovers as drops. The engine's
+/// live event set stays O(#streams + #assignments + #gpu-lets) — no
+/// arrival vector is ever materialized.
+pub fn simulate_source(
+    lm: &LatencyModel,
+    gt: &GroundTruth,
+    schedule: &Schedule,
+    source: DynSourceMux,
+    window_s: f64,
+    cfg: &SimConfig,
+) -> Report {
     let mut engine = ServingEngine::new(lm, gt, schedule.clone(), window_s, cfg);
-    engine.inject(arrivals);
-    let horizon =
-        arrivals.last().map(|a| ms_to_us(a.time_ms)).unwrap_or(0) + ms_to_us(cfg.drain_ms);
-    engine.run_until(horizon);
+    engine.attach_source(source);
+    engine.run_stream();
     engine.finish()
 }
 

@@ -6,16 +6,19 @@
 //! path per figure.
 
 use crate::apps::App;
+use crate::coordinator::engine::ServingEngine;
+use crate::coordinator::simserver::SimConfig;
 use crate::interference::linear_model::{
     profiling_population, train_val_split, InterferenceModel,
 };
 use crate::interference::GroundTruth;
 use crate::models::ModelId;
-use crate::coordinator::simserver::{simulate, SimConfig};
 use crate::sched::{SchedCtx, Schedule, Scheduler};
 use crate::util::benchkit;
 use crate::util::json::Json;
-use crate::workload::{generate_arrivals, named_scenarios, Scenario};
+use crate::workload::{
+    dyn_sources, named_scenarios, poisson_streams, DynSourceMux, Scenario, SourceMux,
+};
 
 /// Result of one experiment run: the human-readable report plus the
 /// structured payload written to the experiment's BENCH file.
@@ -93,8 +96,44 @@ pub fn scaled(rates: &[f64; 5], k: f64) -> [f64; 5] {
     out
 }
 
+/// Per-model Poisson streams for an experiment rate vector — the
+/// probe workload, pulled by the engine one arrival at a time (no
+/// trace vector, no global sort).
+fn probe_source(rates: &[f64; 5], duration_s: f64, seed: u64) -> DynSourceMux {
+    let pairs: Vec<(ModelId, f64)> = ModelId::ALL
+        .iter()
+        .map(|&m| (m, rates[m.index()]))
+        .filter(|&(_, r)| r > 0.0)
+        .collect();
+    let streams =
+        poisson_streams(&pairs, duration_s, seed).expect("experiment rates are finite");
+    SourceMux::new(dyn_sources(streams))
+}
+
+/// THE probe convention, shared by `violation_rate_of` (Fig 13) and
+/// `max_achievable_detail` (Figs 12/16) so the two paths can never
+/// measure violations differently: reset the engine (true-SLO latency
+/// model, default `SimConfig` — the caller constructed it that way),
+/// stream the Poisson workload through it, and read the overall
+/// violation rate (drops included).
+fn probe_violation_on(
+    engine: &mut ServingEngine<'_>,
+    schedule: Schedule,
+    rates: &[f64; 5],
+    duration_s: f64,
+    seed: u64,
+) -> f64 {
+    engine.reset(schedule, duration_s);
+    engine.attach_source(probe_source(rates, duration_s, seed));
+    engine.run_stream();
+    engine.close();
+    engine.report().overall_violation_rate()
+}
+
 /// Run one schedule against a Poisson trace of `rates` and return the
-/// SLO violation rate (drops included).
+/// SLO violation rate (drops included). The trace streams through the
+/// engine — same per-stream draws and report as the old materialized
+/// path, byte for byte.
 pub fn violation_rate_of(
     _ctx: &SchedCtx,
     schedule: &Schedule,
@@ -103,18 +142,13 @@ pub fn violation_rate_of(
     seed: u64,
 ) -> f64 {
     let gt = GroundTruth::default();
-    let pairs: Vec<(ModelId, f64)> = ModelId::ALL
-        .iter()
-        .map(|&m| (m, rates[m.index()]))
-        .filter(|&(_, r)| r > 0.0)
-        .collect();
-    let arrivals =
-        generate_arrivals(&pairs, duration_s, seed).expect("experiment rates are finite");
     // Measure against the TRUE SLOs (the ctx's planning view is
     // tightened by SLO_PLANNING_SCALE).
     let lm_true = crate::perfmodel::LatencyModel::new();
-    let report = simulate(&lm_true, &gt, schedule, &arrivals, duration_s, &SimConfig::default());
-    report.overall_violation_rate()
+    let cfg = SimConfig::default();
+    let mut engine =
+        ServingEngine::new(&lm_true, &gt, Schedule::default(), duration_s, &cfg);
+    probe_violation_on(&mut engine, schedule.clone(), rates, duration_s, seed)
 }
 
 /// Detailed outcome of the maximum-achievable-throughput search.
@@ -165,14 +199,25 @@ pub fn max_achievable_detail(
     // whose deployment actually holds the violation budget — exactly
     // the paper's "gradually increasing the request rate" sweep, run
     // from the top.
+    //
+    // One engine serves every probe: `reset` rewinds it to the fresh
+    // state while keeping the event heap, route tables, and dedup-set
+    // allocations, and each probe's trace streams from per-model
+    // Poisson sources — the old path re-generated and re-sorted a full
+    // arrival vector and rebuilt the engine for every grid point.
     let k_max = max_schedulable(ctx, scheduler, base);
     if k_max > 0.0 {
+        let gt = GroundTruth::default();
+        let lm_true = crate::perfmodel::LatencyModel::new();
+        let cfg = SimConfig::default();
+        let mut engine =
+            ServingEngine::new(&lm_true, &gt, Schedule::default(), sim_duration_s, &cfg);
         const GRID: usize = 24;
         for i in (1..=GRID).rev() {
             let k = k_max * i as f64 / GRID as f64;
             let rates = scaled(base, k);
             if let Ok(s) = scheduler.schedule(ctx, &rates) {
-                let v = violation_rate_of(ctx, &s, &rates, sim_duration_s, 99);
+                let v = probe_violation_on(&mut engine, s, &rates, sim_duration_s, 99);
                 if v <= viol_budget {
                     return Achieved {
                         scale: k,

@@ -2,6 +2,12 @@
 //! the five evaluation workloads. Paper headlines: gpulet ~ +106% and
 //! gpulet+int ~ +102.6% over SBP; gpulet+int ~ +74.8% over guided
 //! self-tuning.
+//!
+//! Every `max_achievable_detail` search reuses ONE serving engine
+//! across its whole descending probe grid (reset, not rebuilt) and
+//! streams each probe's Poisson workload straight into it — the old
+//! path re-generated, re-sorted, and bulk-injected a fresh trace per
+//! grid point.
 
 use crate::sched::{
     ElasticPartitioning, GuidedSelfTuning, Scheduler, SquishyBinPacking,

@@ -3,6 +3,11 @@
 //! variant admits rates it then violates (>1% for equal/short-skew);
 //! gpulet+int filters those by classifying them unschedulable or
 //! scheduling around the interference.
+//!
+//! Each probe's trace streams through the serving engine via
+//! `common::violation_rate_of` (per-model Poisson sources; no arrival
+//! vector is materialized) — byte-identical reports to the old
+//! generate-sort-simulate path.
 
 use crate::sched::{ElasticPartitioning, Scheduler};
 use crate::util::json::{obj, Json};

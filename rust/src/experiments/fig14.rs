@@ -6,7 +6,11 @@
 //! Served by one persistent `ServingEngine` across the entire trace
 //! (requests survive re-organizations), so the overall violation share
 //! is exact request-weighted accounting from the whole-trace report —
-//! and `arrivals == served + dropped` holds across every swap.
+//! and `arrivals == served + dropped` holds across every swap. The
+//! trace itself streams: per-model inhomogeneous Poisson sources feed
+//! the engine one arrival at a time (`AdaptiveServer::run_source`), so
+//! the run's footprint is O(in-flight work), not O(trace length) —
+//! `benches/engine_scale.rs` measures the same load at 1x/10x/100x.
 
 use crate::coordinator::{AdaptiveOutcome, AdaptiveServer};
 use crate::models::ModelId;

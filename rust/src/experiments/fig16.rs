@@ -1,6 +1,10 @@
 //! Fig 16: maximum schedulable rate of gpulet+int normalized to the
 //! ideal exhaustive scheduler, per evaluation workload. Paper: 92.3%
 //! of ideal on average, worst case traffic at 87.7%.
+//!
+//! Pure scheduler-level searches (`common::max_schedulable`), so no
+//! simulation runs here — but the shared `common` probe machinery this
+//! module sits on now streams all simulated searches (see fig12).
 
 use crate::sched::{ElasticPartitioning, IdealScheduler};
 use crate::util::json::{obj, Json};

@@ -69,10 +69,15 @@ impl ModelMetrics {
         }
     }
 
+    /// Median end-to-end latency, interpolated within the histogram
+    /// bin (previously the bin's upper edge, which biased the estimate
+    /// high by up to one 0.5 ms bin).
     pub fn p50_ms(&self) -> f64 {
         self.hist.percentile(50.0)
     }
 
+    /// 99th-percentile end-to-end latency (bin-interpolated, like
+    /// [`ModelMetrics::p50_ms`]).
     pub fn p99_ms(&self) -> f64 {
         self.hist.percentile(99.0)
     }

@@ -64,6 +64,13 @@ pub struct EventQueue<E> {
     heap: BinaryHeap<Entry<E>>,
     seq: u64,
     now_us: SimTimeUs,
+    /// High-water mark of `heap.len()` since creation/`clear`.
+    peak_len: usize,
+    /// Pushes whose time was in the past and got clamped to `now`.
+    /// The clamp is deliberate (see [`EventQueue::push_at_us`]), but a
+    /// *systematic* clamp stream is an ordering bug in the caller —
+    /// this counter keeps it observable instead of silently absorbed.
+    clamped: u64,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -74,7 +81,35 @@ impl<E> Default for EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), seq: 0, now_us: 0 }
+        Self::with_capacity(0)
+    }
+
+    /// A queue with `cap` pre-allocated event slots — bulk injectors
+    /// reserve once instead of growing the heap push by push.
+    pub fn with_capacity(cap: usize) -> Self {
+        EventQueue {
+            heap: BinaryHeap::with_capacity(cap),
+            seq: 0,
+            now_us: 0,
+            peak_len: 0,
+            clamped: 0,
+        }
+    }
+
+    /// Reserve room for at least `additional` more events.
+    pub fn reserve(&mut self, additional: usize) {
+        self.heap.reserve(additional);
+    }
+
+    /// Drop every pending event and reset the clock, sequence counter,
+    /// and diagnostics to a fresh state, keeping the heap's allocation
+    /// (probe harnesses reset one queue across many runs).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
+        self.now_us = 0;
+        self.peak_len = 0;
+        self.clamped = 0;
     }
 
     /// Current virtual time (µs). Advances on `pop`.
@@ -93,9 +128,26 @@ impl<E> EventQueue<E> {
     /// insertion order) — simpler and safer than panicking inside
     /// long experiment sweeps.
     pub fn push_at_us(&mut self, time_us: SimTimeUs, event: E) {
+        if time_us < self.now_us {
+            self.clamped += 1;
+        }
         let t = time_us.max(self.now_us);
-        self.heap.push(Entry { time_us: t, seq: self.seq, event });
+        let seq = self.alloc_seq();
+        self.heap.push(Entry { time_us: t, seq, event });
+        self.peak_len = self.peak_len.max(self.heap.len());
+    }
+
+    /// Hand out the next tie-break sequence number without pushing.
+    ///
+    /// Events kept *outside* the heap (the serving engine's per-
+    /// assignment duty-timer slots, its per-stream pending arrivals)
+    /// take their ordering ticket from the same counter, so a merged
+    /// pop over heap + slots reproduces exactly the order an all-in-
+    /// the-heap implementation would have produced at equal timestamps.
+    pub fn alloc_seq(&mut self) -> u64 {
+        let s = self.seq;
         self.seq += 1;
+        s
     }
 
     /// Schedule `event` after a relative delay in microseconds.
@@ -128,6 +180,13 @@ impl<E> EventQueue<E> {
         self.heap.peek().map(|e| e.time_us)
     }
 
+    /// `(time, seq)` of the next event — the full ordering key, for
+    /// callers merging the heap with externally-held events whose seq
+    /// came from [`EventQueue::alloc_seq`].
+    pub fn peek_time_seq_us(&self) -> Option<(SimTimeUs, u64)> {
+        self.heap.peek().map(|e| (e.time_us, e.seq))
+    }
+
     /// Advance the clock to `t_us` without popping (no-op if the clock
     /// is already past). Lets a run-until loop leave the clock at the
     /// window boundary even when the queue went quiet earlier, so
@@ -148,6 +207,18 @@ impl<E> EventQueue<E> {
 
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
+    }
+
+    /// High-water mark of the heap length since creation/`clear` —
+    /// the "how much future did this simulation hold at once" metric
+    /// the streaming engine drives to O(active).
+    pub fn peak_len(&self) -> usize {
+        self.peak_len
+    }
+
+    /// How many pushes were silently clamped from the past to `now`.
+    pub fn clamped_pushes(&self) -> u64 {
+        self.clamped
     }
 }
 
@@ -226,6 +297,58 @@ mod tests {
         assert_eq!(ms_to_us(0.0006), 1);
         assert_eq!(us_to_ms(12_500), 12.5);
         assert_eq!(ms_to_us(us_to_ms(987_654_321)), 987_654_321);
+    }
+
+    #[test]
+    fn clamped_pushes_are_counted() {
+        let mut q = EventQueue::new();
+        q.push_at_us(10_000, ());
+        q.pop();
+        assert_eq!(q.clamped_pushes(), 0);
+        // A push into the past clamps to now — and is counted, so the
+        // clamp can't silently mask an ordering bug upstream.
+        q.push_at_us(5_000, ());
+        assert_eq!(q.clamped_pushes(), 1);
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 10_000);
+        // An exactly-at-now push is not a clamp.
+        q.push_at_us(10_000, ());
+        assert_eq!(q.clamped_pushes(), 1);
+    }
+
+    #[test]
+    fn capacity_clear_and_peak_tracking() {
+        let mut q: EventQueue<u32> = EventQueue::with_capacity(16);
+        q.reserve(8);
+        for i in 0..5 {
+            q.push_at_us(i * 100, i as u32);
+        }
+        assert_eq!(q.peak_len(), 5);
+        q.pop();
+        q.pop();
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.peak_len(), 5, "peak is a high-water mark");
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.now_us(), 0);
+        assert_eq!(q.peak_len(), 0);
+        assert_eq!(q.clamped_pushes(), 0);
+        // Fresh seq counter after clear: ties break by new insertion order.
+        q.push_at_us(50, 7);
+        q.push_at_us(50, 8);
+        assert_eq!(q.peek_time_seq_us(), Some((50, 0)));
+        assert_eq!(q.pop().unwrap().1, 7);
+    }
+
+    #[test]
+    fn alloc_seq_interleaves_with_pushes() {
+        let mut q: EventQueue<&str> = EventQueue::new();
+        let s0 = q.alloc_seq();
+        q.push_at_us(1_000, "pushed");
+        let s2 = q.alloc_seq();
+        assert_eq!(s0, 0);
+        assert_eq!(s2, 2, "push consumed seq 1 from the same counter");
+        assert_eq!(q.peek_time_seq_us(), Some((1_000, 1)));
     }
 
     #[test]

@@ -95,6 +95,13 @@ pub fn compare(baseline: &Json, fresh: &Json) -> String {
     let mut out = String::from(
         "# bench compare (speedup = baseline mean / fresh mean; >1.00x is faster)\n",
     );
+    // Surface provenance notes (e.g. a committed seed-stub baseline)
+    // so nobody reads placeholder ratios as real measurements.
+    for (side, doc) in [("baseline", baseline), ("fresh", fresh)] {
+        if let Some(note) = doc.opt("note").and_then(|n| n.as_str().ok()) {
+            let _ = writeln!(out, "NOTE ({side}): {note}");
+        }
+    }
     let _ = writeln!(
         out,
         "{:<52} {:>12} {:>12} {:>9}",
@@ -233,6 +240,29 @@ mod tests {
         assert!(compare(&b1, &f1).contains("2.00x"));
         // Disjoint names: flagged, not a panic.
         assert!(compare(&b1, &fresh).contains("no baseline"));
+    }
+
+    #[test]
+    fn compare_surfaces_provenance_notes() {
+        let base = Json::parse(
+            r#"{"note":"SEED STUB: placeholder timings","bench":[{"name":"a","iters":1,"mean_ms":2.0,"min_ms":2.0,"max_ms":2.0}]}"#,
+        )
+        .unwrap();
+        let fresh = timings_envelope(&[BenchResult {
+            name: "a".into(),
+            iters: 1,
+            mean_ms: 1.0,
+            min_ms: 1.0,
+            max_ms: 1.0,
+        }]);
+        let table = compare(&base, &fresh);
+        assert!(
+            table.contains("NOTE (baseline): SEED STUB: placeholder timings"),
+            "{table}"
+        );
+        assert!(table.contains("2.00x"), "{table}");
+        // No note key: no NOTE line.
+        assert!(!compare(&fresh, &fresh).contains("NOTE"), "notes must be opt-in");
     }
 
     #[test]

@@ -151,17 +151,39 @@ impl Histogram {
         self.max
     }
 
-    /// Approximate percentile (bin upper edge).
+    /// Approximate percentile, interpolated within the containing bin.
+    ///
+    /// The old implementation returned the bin's *upper edge*
+    /// (`(i+1) * bin_width`), overstating every quantile by up to one
+    /// bin width — with the report histograms' 0.5 ms bins that biased
+    /// p50/p99 latencies high by up to 0.5 ms. The fractional rank is
+    /// now placed uniformly inside the bin (the standard histogram-
+    /// quantile estimate), a rank landing past the counted bins is
+    /// resolved from the overflow bin explicitly (it has no upper edge
+    /// to interpolate against, so the tracked true maximum is
+    /// reported), and no estimate ever exceeds the observed maximum.
     pub fn percentile(&self, q: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
         }
-        let target = (q.clamp(0.0, 100.0) / 100.0 * self.count as f64).ceil() as u64;
-        let mut seen = 0;
+        // Fractional rank in (0, count]; q=0 maps to the lower edge of
+        // the first occupied bin, q=100 to the maximum.
+        let target = q.clamp(0.0, 100.0) / 100.0 * self.count as f64;
+        let in_bins = self.count - self.overflow;
+        if target > in_bins as f64 {
+            // The rank lands in the overflow bin.
+            return self.max;
+        }
+        let mut seen = 0u64;
         for (i, &c) in self.bins.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let before = seen as f64;
             seen += c;
-            if seen >= target {
-                return (i + 1) as f64 * self.bin_width;
+            if seen as f64 >= target {
+                let frac = ((target - before) / c as f64).clamp(0.0, 1.0);
+                return ((i as f64 + frac) * self.bin_width).min(self.max);
             }
         }
         self.max
@@ -245,5 +267,76 @@ mod tests {
         assert_eq!(h.percentile(100.0), 100.0);
         h.reset();
         assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn empty_inputs_return_zero_not_nan() {
+        // Empty-slice guards across the free functions (the engine's
+        // report math must never emit NaN into a JSON payload).
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile_sorted(&[], 99.0), 0.0);
+        assert_eq!(cdf_at(&[], 1.0), 0.0);
+        let pts = cdf_points(&[], &[50.0]);
+        assert_eq!(pts, vec![(50.0, 0.0)]);
+    }
+
+    #[test]
+    fn histogram_percentile_empty_is_zero() {
+        let h = Histogram::new(0.5, 10);
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.percentile(99.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_percentile_single_sample_not_upper_edge() {
+        // One 0.25 ms sample in a 0.5 ms bin: the old upper-edge rule
+        // reported every quantile as 0.5 ms (a +100% bias); the
+        // interpolated estimate stays within the bin and never exceeds
+        // the observed maximum.
+        let mut h = Histogram::new(0.5, 100);
+        h.record(0.25);
+        let p50 = h.percentile(50.0);
+        assert!(p50 <= 0.25 + 1e-12, "p50={p50} exceeds the observed max");
+        assert!(p50 > 0.0);
+        assert_eq!(h.percentile(100.0), 0.25);
+        assert_eq!(h.percentile(0.0), 0.0); // lower edge of the bin
+    }
+
+    #[test]
+    fn histogram_percentile_interpolates_within_bin() {
+        // 100 samples spread over bins [0,1) and [1,2): p25 must land
+        // inside the first bin, p75 inside the second, both strictly
+        // below the old upper-edge answers (1.0 / 2.0).
+        let mut h = Histogram::new(1.0, 10);
+        for _ in 0..50 {
+            h.record(0.5);
+        }
+        for _ in 0..50 {
+            h.record(1.5);
+        }
+        let p25 = h.percentile(25.0);
+        assert!((0.0..1.0).contains(&p25), "p25={p25}");
+        let p75 = h.percentile(75.0);
+        assert!((1.0..2.0).contains(&p75), "p75={p75}");
+        assert_eq!(h.percentile(100.0), 1.5); // capped at the true max
+    }
+
+    #[test]
+    fn histogram_percentile_overflow_heavy() {
+        // Most of the mass past the counted bins: any rank landing in
+        // the overflow bin reports the tracked true maximum explicitly
+        // (there is no upper edge to interpolate against).
+        let mut h = Histogram::new(1.0, 4);
+        h.record(0.5);
+        for k in 0..9 {
+            h.record(50.0 + k as f64);
+        }
+        assert_eq!(h.percentile(99.0), 58.0);
+        assert_eq!(h.percentile(100.0), 58.0);
+        // The sub-10% ranks still resolve inside the counted bins.
+        let p5 = h.percentile(5.0);
+        assert!((0.0..1.0).contains(&p5), "p5={p5}");
     }
 }

@@ -2,6 +2,15 @@
 //! each model from a Poisson random distribution", following Treadmill's
 //! observation that real-world arrivals are Poisson).
 //!
+//! Since PR 4 the materializing generators are thin wrappers over the
+//! pull-based streams in [`super::source`]: each model's stream draws
+//! the same `Pcg32` sequence as before, the [`super::SourceMux`] k-way
+//! merge reproduces the old stable sort order exactly (a frozen copy of
+//! the sort-based implementation pins this in the tests below), and the
+//! global sort + full trace materialization are gone from the serving
+//! hot path — `generate_arrivals` only materializes when a caller
+//! actually asks for a `Vec<Arrival>`.
+//!
 //! Rates are validated at this boundary: non-finite or negative rates
 //! are caller bugs reported as a proper `Error` (the same NaN class
 //! `sched::types::validate_rates` rejects at `Scheduler::schedule`)
@@ -9,7 +18,8 @@
 
 use crate::error::{Error, Result};
 use crate::models::ModelId;
-use crate::util::rng::Pcg32;
+
+use super::source::{poisson_streams, varying_streams, SourceMux};
 
 /// One inference request arrival.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -22,14 +32,14 @@ pub struct Arrival {
     pub id: u64,
 }
 
-fn validate_rate(model: ModelId, rate: f64) -> Result<()> {
+pub(crate) fn validate_rate(model: ModelId, rate: f64) -> Result<()> {
     if !rate.is_finite() || rate < 0.0 {
         return Err(Error::Model(format!("{model}: invalid arrival rate {rate}")));
     }
     Ok(())
 }
 
-fn validate_duration(duration_s: f64) -> Result<()> {
+pub(crate) fn validate_duration(duration_s: f64) -> Result<()> {
     // A NaN/∞ horizon would make the sampling loops run away (the
     // comparison against it is never true) rather than fail.
     if !duration_s.is_finite() || duration_s < 0.0 {
@@ -38,46 +48,26 @@ fn validate_duration(duration_s: f64) -> Result<()> {
     Ok(())
 }
 
-/// Sort by time (total order; times are validated finite upstream) and
-/// re-number ids in arrival order for readable logs.
-fn sort_and_number(mut out: Vec<Arrival>) -> Vec<Arrival> {
-    out.sort_by(|a, b| a.time_ms.total_cmp(&b.time_ms));
-    for (i, a) in out.iter_mut().enumerate() {
-        a.id = i as u64;
+pub(crate) fn validate_step(step_s: f64) -> Result<()> {
+    if !(step_s.is_finite() && step_s > 0.0) {
+        return Err(Error::Model(format!("invalid rate step {step_s} s")));
     }
-    out
+    Ok(())
 }
 
 /// Generate a merged, time-sorted arrival trace for `duration_s` seconds
 /// where each model's arrivals form an independent Poisson process at
 /// its configured rate (req/s). Zero-rate models produce no arrivals;
 /// non-finite or negative rates are rejected with an error.
+///
+/// Materializing adapter over [`super::source::poisson_streams`] — the
+/// serving engine consumes the streams directly without this `Vec`.
 pub fn generate_arrivals(
     rates: &[(ModelId, f64)],
     duration_s: f64,
     seed: u64,
 ) -> Result<Vec<Arrival>> {
-    validate_duration(duration_s)?;
-    let mut out = Vec::new();
-    let horizon_ms = duration_s * 1000.0;
-    for (i, &(model, rate)) in rates.iter().enumerate() {
-        validate_rate(model, rate)?;
-        if rate <= 0.0 {
-            continue;
-        }
-        // Independent stream per model so traces are stable under
-        // changes to the other models' rates.
-        let mut rng = Pcg32::new(seed, i as u64 + 1);
-        let mut t = 0.0;
-        loop {
-            t += rng.exp(rate) * 1000.0; // gap in ms
-            if t >= horizon_ms {
-                break;
-            }
-            out.push(Arrival { time_ms: t, model, id: 0 });
-        }
-    }
-    Ok(sort_and_number(out))
+    Ok(SourceMux::new(poisson_streams(rates, duration_s, seed)?).materialize())
 }
 
 /// Generate arrivals for a time-varying rate function, treated as
@@ -91,6 +81,8 @@ pub fn generate_arrivals(
 /// leaned on exponential memorylessness; carrying the residual is the
 /// canonical sampler, stays exact under the rate change itself, and
 /// draws one exponential per arrival instead of one extra per step).
+///
+/// Materializing adapter over [`super::source::varying_streams`].
 pub fn generate_varying<F>(
     models: &[ModelId],
     rate_at: F,
@@ -99,56 +91,127 @@ pub fn generate_varying<F>(
     seed: u64,
 ) -> Result<Vec<Arrival>>
 where
-    F: Fn(ModelId, f64) -> f64,
+    F: Fn(ModelId, f64) -> f64 + Clone,
 {
-    validate_duration(duration_s)?;
-    if !(step_s.is_finite() && step_s > 0.0) {
-        return Err(Error::Model(format!("invalid rate step {step_s} s")));
-    }
-    let mut out = Vec::new();
-    for (i, &model) in models.iter().enumerate() {
-        let mut rng = Pcg32::new(seed, i as u64 + 101);
-        // The window is tracked by integer index (not re-derived from
-        // `t` with floor division) so float rounding at a boundary can
-        // never stall or step the sweep backwards.
-        let mut win = 0u64;
-        let mut t = 0.0f64; // current time (s)
-        let mut need = rng.exp(1.0); // unit-rate exposure to the next arrival
-        loop {
-            let w0 = win as f64 * step_s;
-            if w0 >= duration_s {
-                break;
-            }
-            let window_end = ((win + 1) as f64 * step_s).min(duration_s);
-            let rate = rate_at(model, w0);
-            validate_rate(model, rate)?;
-            if rate <= 0.0 {
-                win += 1;
-                t = window_end;
-                continue;
-            }
-            let t_lo = t.max(w0);
-            let exposure = rate * (window_end - t_lo).max(0.0);
-            if need < exposure {
-                let t_arr = t_lo + need / rate;
-                if t_arr < duration_s {
-                    out.push(Arrival { time_ms: t_arr * 1000.0, model, id: 0 });
-                }
-                t = t_arr;
-                need = rng.exp(1.0);
-            } else {
-                need -= exposure;
-                win += 1;
-                t = window_end;
-            }
-        }
-    }
-    Ok(sort_and_number(out))
+    Ok(SourceMux::new(varying_streams(models, rate_at, duration_s, step_s, seed)?)
+        .materialize())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Frozen copy of the pre-streaming `generate_arrivals` (global
+    /// sort over fully materialized per-model streams, PR 3 state):
+    /// the mux must reproduce it element-for-element.
+    fn frozen_generate_arrivals(
+        rates: &[(ModelId, f64)],
+        duration_s: f64,
+        seed: u64,
+    ) -> Vec<Arrival> {
+        let mut out = Vec::new();
+        let horizon_ms = duration_s * 1000.0;
+        for (i, &(model, rate)) in rates.iter().enumerate() {
+            if rate <= 0.0 {
+                continue;
+            }
+            let mut rng = Pcg32::new(seed, i as u64 + 1);
+            let mut t = 0.0;
+            loop {
+                t += rng.exp(rate) * 1000.0;
+                if t >= horizon_ms {
+                    break;
+                }
+                out.push(Arrival { time_ms: t, model, id: 0 });
+            }
+        }
+        out.sort_by(|a, b| a.time_ms.total_cmp(&b.time_ms));
+        for (i, a) in out.iter_mut().enumerate() {
+            a.id = i as u64;
+        }
+        out
+    }
+
+    /// Frozen copy of the pre-streaming `generate_varying` sampler.
+    fn frozen_generate_varying<F>(
+        models: &[ModelId],
+        rate_at: F,
+        duration_s: f64,
+        step_s: f64,
+        seed: u64,
+    ) -> Vec<Arrival>
+    where
+        F: Fn(ModelId, f64) -> f64,
+    {
+        let mut out = Vec::new();
+        for (i, &model) in models.iter().enumerate() {
+            let mut rng = Pcg32::new(seed, i as u64 + 101);
+            let mut win = 0u64;
+            let mut t = 0.0f64;
+            let mut need = rng.exp(1.0);
+            loop {
+                let w0 = win as f64 * step_s;
+                if w0 >= duration_s {
+                    break;
+                }
+                let window_end = ((win + 1) as f64 * step_s).min(duration_s);
+                let rate = rate_at(model, w0);
+                if rate <= 0.0 {
+                    win += 1;
+                    t = window_end;
+                    continue;
+                }
+                let t_lo = t.max(w0);
+                let exposure = rate * (window_end - t_lo).max(0.0);
+                if need < exposure {
+                    let t_arr = t_lo + need / rate;
+                    if t_arr < duration_s {
+                        out.push(Arrival { time_ms: t_arr * 1000.0, model, id: 0 });
+                    }
+                    t = t_arr;
+                    need = rng.exp(1.0);
+                } else {
+                    need -= exposure;
+                    win += 1;
+                    t = window_end;
+                }
+            }
+        }
+        out.sort_by(|a, b| a.time_ms.total_cmp(&b.time_ms));
+        for (i, a) in out.iter_mut().enumerate() {
+            a.id = i as u64;
+        }
+        out
+    }
+
+    #[test]
+    fn streaming_matches_frozen_sort_based_generator() {
+        let rates = [
+            (ModelId::Lenet, 150.0),
+            (ModelId::Googlenet, 80.0),
+            (ModelId::Resnet, 0.0),
+            (ModelId::SsdMobilenet, 33.0),
+            (ModelId::Vgg, 60.0),
+        ];
+        for seed in [1u64, 42, 2024] {
+            let new = generate_arrivals(&rates, 20.0, seed).unwrap();
+            let old = frozen_generate_arrivals(&rates, 20.0, seed);
+            assert_eq!(new, old, "seed {seed}: mux order diverged from sort order");
+        }
+    }
+
+    #[test]
+    fn streaming_matches_frozen_varying_generator() {
+        let wave = |m: ModelId, t: f64| {
+            40.0 + 30.0 * ((t / 60.0 + m.index() as f64).sin().abs())
+        };
+        for seed in [5u64, 99] {
+            let new = generate_varying(&ModelId::ALL, wave, 90.0, 1.0, seed).unwrap();
+            let old = frozen_generate_varying(&ModelId::ALL, wave, 90.0, 1.0, seed);
+            assert_eq!(new, old, "seed {seed}: varying mux diverged");
+        }
+    }
 
     #[test]
     fn empirical_rate_matches_request() {
@@ -182,7 +245,7 @@ mod tests {
         for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -5.0] {
             let err = generate_arrivals(&[(ModelId::Lenet, bad)], 1.0, 1).unwrap_err();
             assert!(err.to_string().contains("invalid arrival rate"), "{err}");
-            let err = generate_varying(&[ModelId::Lenet], |_, _| bad, 1.0, 1.0, 1)
+            let err = generate_varying(&[ModelId::Lenet], move |_, _| bad, 1.0, 1.0, 1)
                 .unwrap_err();
             assert!(err.to_string().contains("invalid arrival rate"), "{err}");
         }

@@ -1,11 +1,17 @@
-//! Workload generation: Poisson request arrivals, the paper's request
-//! scenarios (Table 5 + the 1,023-scenario population), and the Fig 14
-//! rate-fluctuation traces.
+//! Workload generation: Poisson request arrivals (materialized traces
+//! and pull-based streams), the paper's request scenarios (Table 5 +
+//! the 1,023-scenario population), and the Fig 14 rate-fluctuation
+//! traces.
 
 pub mod generator;
 pub mod scenarios;
+pub mod source;
 pub mod trace;
 
-pub use generator::{generate_arrivals, Arrival};
+pub use generator::{generate_arrivals, generate_varying, Arrival};
 pub use scenarios::{enumerate_all_scenarios, named_scenarios, Scenario};
+pub use source::{
+    dyn_sources, poisson_streams, varying_streams, ArrivalSource, DynSource,
+    DynSourceMux, MaterializedSource, PoissonSource, SourceMux, VaryingSource,
+};
 pub use trace::FluctuationTrace;

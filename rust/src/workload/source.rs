@@ -1,0 +1,546 @@
+//! Pull-based arrival streams: the O(active) alternative to
+//! materializing a whole trace as a `Vec<Arrival>`.
+//!
+//! The paper's serving loop (§5) and the max-rate searches behind
+//! Figs 12/13/16 are continuous processes over unbounded request
+//! streams; pre-generating every arrival makes the simulator's memory
+//! and heap depth scale with *trace length* instead of *in-flight
+//! work*. An [`ArrivalSource`] yields one arrival at a time in
+//! nondecreasing time order; a [`SourceMux`] k-way-merges per-model
+//! streams by next-arrival time, holding exactly **one pending arrival
+//! per stream**. The serving engine pulls from the mux lazily, so its
+//! live event set is bounded by `#streams + #assignments + #gpu-lets`
+//! regardless of how long the trace runs.
+//!
+//! Determinism contract: a mux over the per-model Poisson (or
+//! inhomogeneous) streams yields *exactly* the sequence the old
+//! sort-based generators produced — same `Pcg32` per-stream draws, same
+//! stable tie-break (equal times resolve to the lower stream index),
+//! same sequential ids. `generate_arrivals`/`generate_varying` are now
+//! thin `materialize()` wrappers over these sources, and
+//! `tests/streaming_equivalence.rs` pins the streamed and materialized
+//! serving paths to byte-identical reports.
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::models::ModelId;
+use crate::util::rng::Pcg32;
+
+use super::generator::{validate_duration, validate_rate, validate_step, Arrival};
+
+/// A pull-based arrival stream: yields `(time_ms, model)` pairs in
+/// nondecreasing time order, `None` once exhausted (exhaustion is
+/// permanent).
+pub trait ArrivalSource {
+    /// Next arrival of this stream, or `None` when the stream is dry.
+    fn next(&mut self) -> Option<(f64, ModelId)>;
+}
+
+/// Object-safe, clonable, thread-movable arrival stream — the form the
+/// serving engine owns. Implemented automatically for every
+/// `ArrivalSource + Clone + Send + 'static`; cloning is how the
+/// adaptive server taps a stream for rate observation without
+/// disturbing the serving copy (the clone replays the same draws).
+pub trait DynSource: ArrivalSource + Send {
+    fn clone_dyn(&self) -> Box<dyn DynSource>;
+}
+
+impl<T> DynSource for T
+where
+    T: ArrivalSource + Clone + Send + 'static,
+{
+    fn clone_dyn(&self) -> Box<dyn DynSource> {
+        Box::new(self.clone())
+    }
+}
+
+impl ArrivalSource for Box<dyn DynSource> {
+    fn next(&mut self) -> Option<(f64, ModelId)> {
+        (**self).next()
+    }
+}
+
+impl Clone for Box<dyn DynSource> {
+    fn clone(&self) -> Self {
+        // Dispatch on the inner trait object (NOT on the box, which
+        // would re-enter this impl through the blanket `DynSource`).
+        (**self).clone_dyn()
+    }
+}
+
+/// Box a homogeneous set of streams into the engine-owned form.
+pub fn dyn_sources<S: DynSource + 'static>(streams: Vec<S>) -> Vec<Box<dyn DynSource>> {
+    streams.into_iter().map(|s| Box::new(s) as Box<dyn DynSource>).collect()
+}
+
+/// The boxed mux the serving engine and the adaptive server consume.
+pub type DynSourceMux = SourceMux<Box<dyn DynSource>>;
+
+/// K-way merge of arrival streams by next-arrival time: one pending
+/// arrival per stream, ids assigned sequentially in merged order.
+///
+/// Tie-break matches the old materializing generators exactly: equal
+/// `f64` times resolve to the lower stream index (the stable sort over
+/// stream-major concatenation did the same), so a mux over the same
+/// per-stream draws reproduces the sorted trace element-for-element.
+#[derive(Clone)]
+pub struct SourceMux<S: ArrivalSource> {
+    streams: Vec<S>,
+    /// One pending `(time_ms, model)` per stream (`None` = dry).
+    pending: Vec<Option<(f64, ModelId)>>,
+    /// Cached index of the earliest pending arrival — recomputed once
+    /// per pull, so peeks on the engine's per-event hot path are O(1).
+    best: Option<usize>,
+    /// Streams whose slot is `Some` (kept incrementally for the same
+    /// reason).
+    pending_count: usize,
+    next_id: u64,
+    /// Time of the last pulled arrival (0.0 before the first pull) —
+    /// the drain horizon is derived from this, not from a materialized
+    /// `arrivals.last()`.
+    last_ms: f64,
+}
+
+impl<S: ArrivalSource> SourceMux<S> {
+    pub fn new(streams: Vec<S>) -> Self {
+        let mut streams = streams;
+        let pending: Vec<Option<(f64, ModelId)>> =
+            streams.iter_mut().map(|s| s.next()).collect();
+        let best = Self::compute_best(&pending);
+        let pending_count = pending.iter().filter(|p| p.is_some()).count();
+        SourceMux { streams, pending, best, pending_count, next_id: 0, last_ms: 0.0 }
+    }
+
+    /// Index of the stream holding the earliest pending arrival
+    /// (strict `<` keeps the lowest index on exact time ties).
+    fn compute_best(pending: &[Option<(f64, ModelId)>]) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for (i, p) in pending.iter().enumerate() {
+            if let Some((t, _)) = p {
+                if best.is_none_or(|(bt, _)| *t < bt) {
+                    best = Some((*t, i));
+                }
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Time (ms) of the next merged arrival without consuming it. O(1).
+    pub fn peek_time_ms(&self) -> Option<f64> {
+        self.best.and_then(|i| self.pending[i]).map(|(t, _)| t)
+    }
+
+    /// Consume the next merged arrival, refilling that stream's slot.
+    pub fn pull(&mut self) -> Option<Arrival> {
+        let i = self.best?;
+        let (time_ms, model) = self.pending[i].take().expect("best slot is pending");
+        self.pending[i] = self.streams[i].next();
+        if self.pending[i].is_none() {
+            self.pending_count -= 1;
+        }
+        self.best = Self::compute_best(&self.pending);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.last_ms = time_ms;
+        Some(Arrival { time_ms, model, id })
+    }
+
+    /// Number of merged streams (each holds at most one pending event).
+    pub fn n_streams(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// How many streams still hold a pending arrival. O(1).
+    pub fn pending_len(&self) -> usize {
+        self.pending_count
+    }
+
+    /// Arrivals pulled so far.
+    pub fn pulled(&self) -> u64 {
+        self.next_id
+    }
+
+    /// Time (ms) of the last pulled arrival; 0.0 before any pull. Once
+    /// the mux is exhausted this is the trace's last arrival — the
+    /// drain horizon the one-shot simulation runs to.
+    pub fn last_arrival_ms(&self) -> f64 {
+        self.last_ms
+    }
+
+    /// True when every stream is dry.
+    pub fn is_exhausted(&self) -> bool {
+        self.pending_count == 0
+    }
+
+    /// Drain the whole mux into a sorted, sequentially-numbered trace
+    /// (the legacy `Vec<Arrival>` shape).
+    pub fn materialize(mut self) -> Vec<Arrival> {
+        let mut out = Vec::new();
+        while let Some(a) = self.pull() {
+            out.push(a);
+        }
+        out
+    }
+}
+
+impl SourceMux<Box<dyn DynSource>> {
+    /// A mux over a single pre-materialized trace — the adapter that
+    /// keeps the legacy `&[Arrival]` entry points on the streaming
+    /// path.
+    pub fn of_trace(arrivals: Vec<Arrival>) -> Self {
+        SourceMux::new(dyn_sources(vec![MaterializedSource::new(arrivals)]))
+    }
+}
+
+/// Adapter: an already-materialized (time-sorted) trace as a stream.
+/// The trace is held behind an `Arc`, so clones (the adaptive server's
+/// observation tap) share one copy and only carry their own cursor.
+#[derive(Clone)]
+pub struct MaterializedSource {
+    arrivals: Arc<[Arrival]>,
+    idx: usize,
+}
+
+impl MaterializedSource {
+    /// Every generator output is already time-sorted; an unsorted
+    /// trace is sorted here (stably, by time) — the same effective
+    /// order the old bulk heap imposed on unsorted input via its
+    /// `(time, insertion-seq)` keys, so the legacy "any order goes in,
+    /// time order comes out" contract survives in release builds too.
+    pub fn new(mut arrivals: Vec<Arrival>) -> Self {
+        if !arrivals.windows(2).all(|w| w[0].time_ms <= w[1].time_ms) {
+            arrivals.sort_by(|a, b| a.time_ms.total_cmp(&b.time_ms));
+        }
+        MaterializedSource { arrivals: arrivals.into(), idx: 0 }
+    }
+}
+
+impl ArrivalSource for MaterializedSource {
+    fn next(&mut self) -> Option<(f64, ModelId)> {
+        let a = self.arrivals.get(self.idx)?;
+        self.idx += 1;
+        Some((a.time_ms, a.model))
+    }
+}
+
+/// Homogeneous Poisson stream for one model at a fixed rate (req/s),
+/// truncated at the horizon. Exactly the per-model stream
+/// `generate_arrivals` drew: same `Pcg32::new(seed, stream)` state,
+/// same `t += exp(rate) * 1000` accumulation, same `t >= horizon`
+/// cutoff.
+#[derive(Clone)]
+pub struct PoissonSource {
+    model: ModelId,
+    rate: f64,
+    horizon_ms: f64,
+    t_ms: f64,
+    rng: Pcg32,
+    done: bool,
+}
+
+impl PoissonSource {
+    /// `stream` is the per-model stream id (`generate_arrivals` used
+    /// `index_in_rates + 1`); `rate` must be finite and positive.
+    /// Crate-private so every externally-reachable construction goes
+    /// through [`poisson_streams`], whose validation turns a NaN/∞
+    /// rate into a proper `Error` instead of a mid-simulation panic.
+    pub(crate) fn new(
+        model: ModelId,
+        rate: f64,
+        duration_s: f64,
+        seed: u64,
+        stream: u64,
+    ) -> Self {
+        debug_assert!(rate.is_finite() && rate > 0.0, "validated by poisson_streams");
+        PoissonSource {
+            model,
+            rate,
+            horizon_ms: duration_s * 1000.0,
+            t_ms: 0.0,
+            rng: Pcg32::new(seed, stream),
+            done: false,
+        }
+    }
+}
+
+impl ArrivalSource for PoissonSource {
+    fn next(&mut self) -> Option<(f64, ModelId)> {
+        if self.done {
+            return None;
+        }
+        self.t_ms += self.rng.exp(self.rate) * 1000.0;
+        if self.t_ms >= self.horizon_ms {
+            self.done = true;
+            return None;
+        }
+        Some((self.t_ms, self.model))
+    }
+}
+
+/// Per-model Poisson streams for a rate table — the streaming form of
+/// [`super::generate_arrivals`]. Stream ids follow the table index
+/// (zero-rate entries are skipped but still consume their index, so a
+/// model's draws are independent of the other models' rates). Rates and
+/// the duration are validated here, exactly like the generator did.
+pub fn poisson_streams(
+    rates: &[(ModelId, f64)],
+    duration_s: f64,
+    seed: u64,
+) -> Result<Vec<PoissonSource>> {
+    validate_duration(duration_s)?;
+    let mut out = Vec::new();
+    for (i, &(model, rate)) in rates.iter().enumerate() {
+        validate_rate(model, rate)?;
+        if rate <= 0.0 {
+            continue;
+        }
+        out.push(PoissonSource::new(model, rate, duration_s, seed, i as u64 + 1));
+    }
+    Ok(out)
+}
+
+/// Inhomogeneous (piecewise-constant rate) stream for one model — the
+/// streaming form of one `generate_varying` per-model pass: the same
+/// unit-rate-exposure sampler, resumable one arrival at a time. The
+/// `Exp(1)` residual carries across window boundaries and the window is
+/// tracked by integer index, exactly as in the generator.
+#[derive(Clone)]
+pub struct VaryingSource<F: Fn(ModelId, f64) -> f64 + Clone> {
+    model: ModelId,
+    rate_at: F,
+    duration_s: f64,
+    step_s: f64,
+    win: u64,
+    t: f64,
+    need: f64,
+    rng: Pcg32,
+    done: bool,
+}
+
+impl<F: Fn(ModelId, f64) -> f64 + Clone> VaryingSource<F> {
+    /// `stream` is the per-model stream id (`generate_varying` used
+    /// `index_in_models + 101`). Crate-private so rates are always
+    /// pre-validated over every window by [`varying_streams`] (a NaN
+    /// rate discovered mid-stream could only panic, not `Err`).
+    pub(crate) fn new(
+        model: ModelId,
+        rate_at: F,
+        duration_s: f64,
+        step_s: f64,
+        seed: u64,
+        stream: u64,
+    ) -> Self {
+        let mut rng = Pcg32::new(seed, stream);
+        let need = rng.exp(1.0);
+        VaryingSource {
+            model,
+            rate_at,
+            duration_s,
+            step_s,
+            win: 0,
+            t: 0.0,
+            need,
+            rng,
+            done: false,
+        }
+    }
+}
+
+impl<F: Fn(ModelId, f64) -> f64 + Clone> ArrivalSource for VaryingSource<F> {
+    fn next(&mut self) -> Option<(f64, ModelId)> {
+        if self.done {
+            return None;
+        }
+        loop {
+            let w0 = self.win as f64 * self.step_s;
+            if w0 >= self.duration_s {
+                self.done = true;
+                return None;
+            }
+            let window_end = ((self.win + 1) as f64 * self.step_s).min(self.duration_s);
+            let rate = (self.rate_at)(self.model, w0);
+            debug_assert!(
+                rate.is_finite() && rate >= 0.0,
+                "rates are validated at stream construction"
+            );
+            if rate <= 0.0 {
+                self.win += 1;
+                self.t = window_end;
+                continue;
+            }
+            let t_lo = self.t.max(w0);
+            let exposure = rate * (window_end - t_lo).max(0.0);
+            if self.need < exposure {
+                let t_arr = t_lo + self.need / rate;
+                self.t = t_arr;
+                self.need = self.rng.exp(1.0);
+                if t_arr < self.duration_s {
+                    return Some((t_arr * 1000.0, self.model));
+                }
+            } else {
+                self.need -= exposure;
+                self.win += 1;
+                self.t = window_end;
+            }
+        }
+    }
+}
+
+/// Per-model inhomogeneous streams for a time-varying rate function —
+/// the streaming form of [`super::generator::generate_varying`]. Every
+/// window's rate is validated up front for every model (the generator
+/// validated lazily as it swept the same windows; first error matches).
+pub fn varying_streams<F>(
+    models: &[ModelId],
+    rate_at: F,
+    duration_s: f64,
+    step_s: f64,
+    seed: u64,
+) -> Result<Vec<VaryingSource<F>>>
+where
+    F: Fn(ModelId, f64) -> f64 + Clone,
+{
+    validate_duration(duration_s)?;
+    validate_step(step_s)?;
+    for &model in models {
+        let mut win = 0u64;
+        loop {
+            let w0 = win as f64 * step_s;
+            if w0 >= duration_s {
+                break;
+            }
+            validate_rate(model, rate_at(model, w0))?;
+            win += 1;
+        }
+    }
+    Ok(models
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| {
+            VaryingSource::new(m, rate_at.clone(), duration_s, step_s, seed, i as u64 + 101)
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::generate_arrivals;
+
+    /// A hand-scripted source for merge-order tests.
+    #[derive(Clone)]
+    struct Scripted {
+        times: Vec<f64>,
+        model: ModelId,
+        idx: usize,
+    }
+
+    impl ArrivalSource for Scripted {
+        fn next(&mut self) -> Option<(f64, ModelId)> {
+            let t = *self.times.get(self.idx)?;
+            self.idx += 1;
+            Some((t, self.model))
+        }
+    }
+
+    #[test]
+    fn mux_merges_by_time_with_stable_ties() {
+        let a = Scripted { times: vec![1.0, 5.0, 5.0], model: ModelId::Lenet, idx: 0 };
+        let b = Scripted { times: vec![2.0, 5.0, 9.0], model: ModelId::Vgg, idx: 0 };
+        let mux = SourceMux::new(vec![a, b]);
+        let out = mux.materialize();
+        let times: Vec<f64> = out.iter().map(|x| x.time_ms).collect();
+        assert_eq!(times, vec![1.0, 2.0, 5.0, 5.0, 5.0, 9.0]);
+        // Exact time tie at 5.0: stream 0's arrivals come first (the
+        // stable-sort order the materializing generator produced).
+        let models_at_5: Vec<ModelId> =
+            out.iter().filter(|x| x.time_ms == 5.0).map(|x| x.model).collect();
+        assert_eq!(models_at_5, vec![ModelId::Lenet, ModelId::Lenet, ModelId::Vgg]);
+        // Ids are sequential in merged order.
+        for (i, x) in out.iter().enumerate() {
+            assert_eq!(x.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn mux_tracks_last_arrival_and_exhaustion() {
+        let a = Scripted { times: vec![3.0, 7.0], model: ModelId::Lenet, idx: 0 };
+        let mut mux = SourceMux::new(vec![a]);
+        assert_eq!(mux.n_streams(), 1);
+        assert_eq!(mux.pending_len(), 1);
+        assert!(!mux.is_exhausted());
+        assert_eq!(mux.last_arrival_ms(), 0.0);
+        assert_eq!(mux.peek_time_ms(), Some(3.0));
+        mux.pull().unwrap();
+        mux.pull().unwrap();
+        assert!(mux.is_exhausted());
+        assert_eq!(mux.peek_time_ms(), None);
+        assert!(mux.pull().is_none());
+        assert_eq!(mux.last_arrival_ms(), 7.0);
+        assert_eq!(mux.pulled(), 2);
+    }
+
+    #[test]
+    fn cloned_tap_replays_without_disturbing_original() {
+        let streams =
+            poisson_streams(&[(ModelId::Lenet, 80.0), (ModelId::Vgg, 40.0)], 5.0, 17)
+                .unwrap();
+        let mux = SourceMux::new(dyn_sources(streams));
+        let tap = mux.clone();
+        let a = mux.materialize();
+        let b = tap.materialize();
+        assert_eq!(a, b, "a cloned source must replay the identical stream");
+    }
+
+    #[test]
+    fn poisson_streams_match_generator_exactly() {
+        let rates = [
+            (ModelId::Lenet, 120.0),
+            (ModelId::Googlenet, 0.0), // zero-rate holds its stream index
+            (ModelId::Vgg, 45.0),
+        ];
+        for seed in [1u64, 7, 0xD15C0] {
+            let streamed =
+                SourceMux::new(poisson_streams(&rates, 8.0, seed).unwrap()).materialize();
+            let materialized = generate_arrivals(&rates, 8.0, seed).unwrap();
+            assert_eq!(streamed, materialized);
+        }
+    }
+
+    #[test]
+    fn materialized_source_sorts_unsorted_input() {
+        // Legacy contract: the bulk heap ordered unsorted traces by
+        // (time, insertion order); the adapter must keep doing so.
+        let shuffled = vec![
+            Arrival { time_ms: 5.0, model: ModelId::Vgg, id: 0 },
+            Arrival { time_ms: 1.0, model: ModelId::Lenet, id: 1 },
+            Arrival { time_ms: 3.0, model: ModelId::Vgg, id: 2 },
+        ];
+        let out = SourceMux::new(vec![MaterializedSource::new(shuffled)]).materialize();
+        let times: Vec<f64> = out.iter().map(|a| a.time_ms).collect();
+        assert_eq!(times, vec![1.0, 3.0, 5.0]);
+        assert_eq!(out[0].model, ModelId::Lenet);
+        for (i, a) in out.iter().enumerate() {
+            assert_eq!(a.id, i as u64, "ids renumbered in merged order");
+        }
+    }
+
+    #[test]
+    fn stream_validation_mirrors_generators() {
+        assert!(poisson_streams(&[(ModelId::Lenet, f64::NAN)], 1.0, 1).is_err());
+        assert!(poisson_streams(&[(ModelId::Lenet, 1.0)], f64::INFINITY, 1).is_err());
+        assert!(varying_streams(&[ModelId::Lenet], |_, _| -1.0, 2.0, 1.0, 1).is_err());
+        assert!(varying_streams(&[ModelId::Lenet], |_, _| 1.0, 2.0, 0.0, 1).is_err());
+        // A rate that only turns invalid mid-trace is still caught up
+        // front (the generator found it when its sweep got there).
+        assert!(varying_streams(
+            &[ModelId::Lenet],
+            |_, t| if t < 5.0 { 1.0 } else { f64::NAN },
+            10.0,
+            1.0,
+            1
+        )
+        .is_err());
+    }
+}

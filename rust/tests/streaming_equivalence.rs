@@ -1,0 +1,303 @@
+//! Streaming vs materialized serving equivalence.
+//!
+//! PR 4 moved arrivals out of the event heap: the engine pulls from a
+//! k-way [`SourceMux`] (one pending arrival per stream) and keeps one
+//! duty-timer slot per assignment, so its live event set is O(#streams
+//! + #assignments + #gpu-lets) instead of O(trace). These tests pin the
+//! refactor's contract: for every sharing mode, under overload, across
+//! live schedule swaps (both backlog policies), and under split-inject
+//! / `run_until` stepping, the streamed path produces **byte-identical
+//! JSON reports** to the legacy bulk-inject path — and the streamed
+//! Fig-14 trace's peak live-event count stays within the structural
+//! bound regardless of trace length.
+
+use gpulets::coordinator::{simulate, simulate_source, ServingEngine, SimConfig, SwapMode};
+use gpulets::gpu::ShareMode;
+use gpulets::interference::GroundTruth;
+use gpulets::models::ModelId;
+use gpulets::perfmodel::LatencyModel;
+use gpulets::sched::{ElasticPartitioning, SchedCtx, Schedule, Scheduler};
+use gpulets::simclock::{ms_to_us, SimTimeUs};
+use gpulets::workload::{
+    dyn_sources, generate_arrivals, poisson_streams, varying_streams, Arrival,
+    DynSourceMux, FluctuationTrace, SourceMux,
+};
+
+fn world() -> (LatencyModel, GroundTruth) {
+    (LatencyModel::new(), GroundTruth::default())
+}
+
+fn sched_for(rates: &[f64; 5], gpus: usize) -> Schedule {
+    let ctx = SchedCtx::new(gpus, None);
+    ElasticPartitioning::gpulet().schedule(&ctx, rates).unwrap()
+}
+
+fn horizon_us(arrivals: &[Arrival], cfg: &SimConfig) -> SimTimeUs {
+    arrivals.last().map(|a| ms_to_us(a.time_ms)).unwrap_or(0) + ms_to_us(cfg.drain_ms)
+}
+
+fn poisson_mux(pairs: &[(ModelId, f64)], duration_s: f64, seed: u64) -> DynSourceMux {
+    SourceMux::new(dyn_sources(poisson_streams(pairs, duration_s, seed).unwrap()))
+}
+
+/// Legacy path: bulk-inject the whole trace into the heap, run to the
+/// drain horizon, finish.
+fn bulk_report(
+    schedule: &Schedule,
+    arrivals: &[Arrival],
+    window_s: f64,
+    cfg: &SimConfig,
+) -> String {
+    let (lm, gt) = world();
+    let mut eng = ServingEngine::new(&lm, &gt, schedule.clone(), window_s, cfg);
+    eng.inject(arrivals);
+    eng.run_until(horizon_us(arrivals, cfg));
+    eng.finish().to_json().to_string()
+}
+
+/// Assert the three serving paths agree byte-for-byte on one scenario:
+/// bulk inject, the streamed materialized-trace adapter (`simulate`),
+/// and pure per-model Poisson streams (`simulate_source`).
+fn assert_three_way(
+    label: &str,
+    schedule: &Schedule,
+    pairs: &[(ModelId, f64)],
+    duration_s: f64,
+    seed: u64,
+    cfg: &SimConfig,
+) {
+    let (lm, gt) = world();
+    let arrivals = generate_arrivals(pairs, duration_s, seed).unwrap();
+    let bulk = bulk_report(schedule, &arrivals, duration_s, cfg);
+    let via_trace =
+        simulate(&lm, &gt, schedule, &arrivals, duration_s, cfg).to_json().to_string();
+    let via_streams = simulate_source(
+        &lm,
+        &gt,
+        schedule,
+        poisson_mux(pairs, duration_s, seed),
+        duration_s,
+        cfg,
+    )
+    .to_json()
+    .to_string();
+    assert_eq!(bulk, via_trace, "{label}: simulate() diverged from bulk inject");
+    assert_eq!(bulk, via_streams, "{label}: streamed sources diverged from bulk inject");
+}
+
+#[test]
+fn all_sharing_modes_byte_identical() {
+    let rates = [120.0, 0.0, 60.0, 0.0, 40.0];
+    let schedule = sched_for(&rates, 2);
+    let pairs = [
+        (ModelId::Lenet, 120.0),
+        (ModelId::Resnet, 60.0),
+        (ModelId::Vgg, 40.0),
+    ];
+    for mode in [ShareMode::Partitioned, ShareMode::MpsDefault, ShareMode::TemporalOnly] {
+        let cfg = SimConfig { mode, ..Default::default() };
+        // MPS modes consume RNG draws on interference, so this also
+        // pins that event order (and therefore RNG order) is identical.
+        assert_three_way(mode.name(), &schedule, &pairs, 8.0, 41, &cfg);
+    }
+}
+
+#[test]
+fn overload_with_drops_byte_identical() {
+    // Scheduled for 50 req/s VGG, offered 10x: hopeless-head drops and
+    // deficit-counter decrements all fire on both paths.
+    let schedule = sched_for(&[0.0, 0.0, 0.0, 0.0, 50.0], 1);
+    let pairs = [(ModelId::Vgg, 500.0)];
+    assert_three_way("overload", &schedule, &pairs, 6.0, 7, &SimConfig::default());
+}
+
+#[test]
+fn multi_seed_sweep_byte_identical() {
+    let rates = [80.0, 40.0, 0.0, 0.0, 30.0];
+    let schedule = sched_for(&rates, 2);
+    let pairs = [
+        (ModelId::Lenet, 80.0),
+        (ModelId::Googlenet, 40.0),
+        (ModelId::Vgg, 30.0),
+    ];
+    for seed in [1u64, 99, 2024] {
+        assert_three_way(
+            &format!("seed {seed}"),
+            &schedule,
+            &pairs,
+            5.0,
+            seed,
+            &SimConfig::default(),
+        );
+    }
+}
+
+/// Swap-mid-trace: a live schedule hand-over at 2 s (and again at 4 s)
+/// while work is queued and in flight must be byte-identical between
+/// the bulk and streamed paths, for both backlog policies.
+#[test]
+fn swap_mid_trace_byte_identical() {
+    let (lm, gt) = world();
+    let cfg = SimConfig::default();
+    let vgg = sched_for(&[0.0, 0.0, 0.0, 0.0, 60.0], 1);
+    let lenet_vgg = sched_for(&[80.0, 0.0, 0.0, 0.0, 40.0], 2);
+    let pairs = [(ModelId::Lenet, 80.0), (ModelId::Vgg, 90.0)];
+    let duration = 6.0;
+    let seed = 17;
+    let arrivals = generate_arrivals(&pairs, duration, seed).unwrap();
+    let horizon = horizon_us(&arrivals, &cfg);
+
+    for mode in [SwapMode::Migrate, SwapMode::DropQueued] {
+        let mut bulk = ServingEngine::new(&lm, &gt, vgg.clone(), duration, &cfg);
+        bulk.inject(&arrivals);
+        bulk.run_until(ms_to_us(2_000.0));
+        bulk.swap_schedule(lenet_vgg.clone(), mode);
+        bulk.run_until(ms_to_us(4_000.0));
+        bulk.swap_schedule(vgg.clone(), mode);
+        bulk.run_until(horizon);
+        let r_bulk = bulk.finish().to_json().to_string();
+
+        let mut streamed = ServingEngine::new(&lm, &gt, vgg.clone(), duration, &cfg);
+        streamed.attach_source(poisson_mux(&pairs, duration, seed));
+        streamed.run_until(ms_to_us(2_000.0));
+        streamed.swap_schedule(lenet_vgg.clone(), mode);
+        streamed.run_until(ms_to_us(4_000.0));
+        streamed.swap_schedule(vgg.clone(), mode);
+        streamed.run_until(horizon);
+        let r_streamed = streamed.finish().to_json().to_string();
+
+        assert_eq!(r_bulk, r_streamed, "{mode:?}: swap-mid-trace diverged");
+    }
+}
+
+/// Split-inject + 250 ms `run_until` stepping on the bulk side vs a
+/// single streamed pass: identical reports (the window-stepped adaptive
+/// server leans on exactly this).
+#[test]
+fn stepped_run_until_byte_identical() {
+    let (lm, gt) = world();
+    let cfg = SimConfig::default();
+    let rates = [60.0, 0.0, 0.0, 0.0, 30.0];
+    let schedule = sched_for(&rates, 2);
+    let pairs = [(ModelId::Lenet, 60.0), (ModelId::Vgg, 30.0)];
+    let duration = 6.0;
+    let seed = 13;
+    let arrivals = generate_arrivals(&pairs, duration, seed).unwrap();
+    let horizon = horizon_us(&arrivals, &cfg);
+
+    let mut stepped = ServingEngine::new(&lm, &gt, schedule.clone(), duration, &cfg);
+    let (a, b) = arrivals.split_at(arrivals.len() / 2);
+    stepped.inject(a);
+    stepped.inject(b);
+    let mut t = 0;
+    while t < horizon {
+        t = (t + 250_000).min(horizon);
+        stepped.run_until(t);
+    }
+    let r_stepped = stepped.finish().to_json().to_string();
+
+    // Streamed engine, stepped with the same boundaries.
+    let mut streamed = ServingEngine::new(&lm, &gt, schedule.clone(), duration, &cfg);
+    streamed.attach_source(poisson_mux(&pairs, duration, seed));
+    let mut t = 0;
+    while t < horizon {
+        t = (t + 250_000).min(horizon);
+        streamed.run_until(t);
+    }
+    let r_streamed = streamed.finish().to_json().to_string();
+    assert_eq!(r_stepped, r_streamed, "stepped streaming diverged from split-inject");
+}
+
+/// The adaptive (Fig 14) path: the materialized-trace adapter and the
+/// streamed inhomogeneous sources must produce identical windows,
+/// offered counts, and whole-trace reports.
+#[test]
+fn adaptive_run_source_matches_run_arrivals() {
+    use gpulets::coordinator::AdaptiveServer;
+    use gpulets::workload::generate_varying;
+
+    let ctx = SchedCtx::new(4, None);
+    let sched = ElasticPartitioning::gpulet();
+    let srv = AdaptiveServer::new(&ctx, &sched);
+    let trace = FluctuationTrace::default();
+    let duration = 250.0;
+    let seed = 11;
+
+    // Streamed end-to-end (what run_trace does now).
+    let streamed = srv.run_trace(&trace, duration, seed).unwrap();
+
+    // Materialized adapter over the identical trace.
+    let arrivals = generate_varying(
+        &ModelId::ALL,
+        |m, t| trace.rate_at(m, t),
+        duration,
+        1.0,
+        seed,
+    )
+    .unwrap();
+    let materialized = srv.run_arrivals(&arrivals, duration);
+
+    assert_eq!(streamed.windows, materialized.windows);
+    assert_eq!(streamed.offered, materialized.offered);
+    assert_eq!(
+        streamed.report.to_json().to_string(),
+        materialized.report.to_json().to_string()
+    );
+}
+
+/// The streamed Fig-14 trace keeps the live event set within the
+/// structural O(active) bound — heap `Done`s (one per busy gpu-let,
+/// and gpu-lets are at most two per GPU) + one duty-timer slot per
+/// assignment + one pending arrival per stream — no matter how long
+/// the trace runs.
+#[test]
+fn streamed_fig14_peak_events_bounded_and_trace_length_free() {
+    let (lm, gt) = world();
+    let cfg = SimConfig::default();
+    let trace = FluctuationTrace::default();
+    // A fixed mid-size schedule; the wave's peaks overload it, which
+    // only stresses the bound harder (request queues absorb the
+    // backlog — the live *event* set must stay structural).
+    let schedule = sched_for(&[50.0; 5], 4);
+    let n_lets = schedule.lets.len();
+    let total_asgs: usize = schedule.lets.iter().map(|l| l.assignments.len()).sum();
+    let num_gpus = 4;
+
+    let mut peaks = Vec::new();
+    for duration in [100.0, 1_000.0] {
+        let tr = trace.clone();
+        let streams = varying_streams(
+            &ModelId::ALL,
+            move |m, t| tr.rate_at(m, t),
+            duration,
+            1.0,
+            2024,
+        )
+        .unwrap();
+        let n_streams = streams.len();
+        let mut eng = ServingEngine::new(&lm, &gt, schedule.clone(), duration, &cfg);
+        eng.attach_source(SourceMux::new(dyn_sources(streams)));
+        eng.run_stream();
+        eng.close();
+        let offered: u64 = eng.injected_per_model().iter().sum();
+        assert!(offered > 5_000, "duration {duration}: load too small ({offered})");
+
+        let peak = eng.peak_live_events();
+        let bound = n_streams + total_asgs + n_lets;
+        assert!(
+            peak <= bound,
+            "duration {duration}: peak {peak} > structural bound {bound} \
+             (streams {n_streams} + assignments {total_asgs} + lets {n_lets})"
+        );
+        // gpu-lets are at most two per physical GPU, so the bound is
+        // also <= streams + assignments + 2 * #GPUs.
+        assert!(peak <= n_streams + total_asgs + 2 * num_gpus);
+        peaks.push(peak);
+    }
+    // 10x the trace: the peak must NOT scale with trace length (the
+    // bulk path's peak would be ~the arrival count).
+    assert!(
+        peaks[1] <= peaks[0].max(1) * 2,
+        "peak grew with trace length: {peaks:?}"
+    );
+}
