@@ -1,0 +1,9 @@
+//! Bench target for the fleet tier: 1 / 4 / 16 nodes under scaled
+//! Fig-14 traffic behind the deterministic front-end router; writes
+//! BENCH_fleet_scale.json (timing + per-rung events/s and SLO-violation
+//! share). Diff across PRs with `gpulets bench-compare`.
+use gpulets::experiments::{common, fleet_scale};
+
+fn main() {
+    common::run_and_write(&fleet_scale::Experiment, 0, 1).expect("fleet_scale bench");
+}

@@ -1,11 +1,13 @@
 //! `gpulets` — CLI launcher for the gpu-let inference serving stack.
 //!
 //! ```text
-//! gpulets run-fig <03|04|05|06|09|12|13|14|15|16|all|list>
+//! gpulets run-fig <03|04|05|06|09|12|13|14|15|16|fleet_scale|all|list>
 //! gpulets sweep [--scheduler <gpulet|gpulet+int|sbp|sbp+part|selftune|ideal|all>] [--gpus N]
 //! gpulets serve [--scenario <equal|long-only|short-skew|game|traffic>] [--scale K]
 //!               [--config <toml>] [--algo A] [--gpus N] [--duration S] [--seed X]
 //!               [--rate model=R ...]
+//! gpulets fleet [--nodes N] [--rebalance S] [--scenario NAME] [--scale K]
+//!               [--seed X] [--algo A] [--gpus N] [--duration S] [--config <toml>]
 //! gpulets serve-real [--artifacts DIR] [--duration S] [--rate M=R ...]
 //! gpulets experiment <fig3|...|fig16|tables|all>   # legacy alias of run-fig
 //! gpulets profile            # dump the offline L(b,p) profile grid
@@ -24,6 +26,7 @@ use gpulets::coordinator::server::RealServer;
 use gpulets::coordinator::{ServingEngine, SimConfig};
 use gpulets::error::Result;
 use gpulets::experiments as ex;
+use gpulets::fleet::{FleetConfig, FleetEngine, FleetPlanner};
 use gpulets::interference::GroundTruth;
 use gpulets::models::ModelId;
 use gpulets::runtime::{Engine, ModelRegistry};
@@ -35,7 +38,7 @@ use gpulets::util::benchkit;
 use gpulets::util::json::{obj, Json};
 use gpulets::workload::{
     dyn_sources, enumerate_all_scenarios, generate_arrivals, named_scenarios,
-    poisson_streams, SourceMux,
+    poisson_streams, DynSourceMux, SourceMux,
 };
 
 fn main() {
@@ -64,6 +67,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         }
         Some("sweep") => sweep(&args[1..]),
         Some("serve") => serve(&args[1..]),
+        Some("fleet") => fleet(&args[1..]),
         Some("serve-real") => serve_real(&args[1..]),
         Some("bench-compare") => bench_compare(&args[1..]),
         Some("profile") => {
@@ -94,10 +98,12 @@ fn print_usage() {
         "gpulets — multi-model inference serving with GPU spatial partitioning\n\
          \n\
          USAGE:\n\
-         \x20 gpulets run-fig <03|04|05|06|09|12|13|14|15|16|all|list> [--threads N]\n\
+         \x20 gpulets run-fig <03|...|16|fleet_scale|all|list> [--threads N]\n\
          \x20 gpulets sweep [--scheduler NAME|all] [--gpus N] [--threads N]\n\
          \x20 gpulets serve [--scenario NAME] [--scale K] [--config F] [--algo A]\n\
          \x20               [--gpus N] [--duration S] [--seed X] [--rate model=R]...\n\
+         \x20 gpulets fleet [--nodes N] [--rebalance S] [--scenario NAME] [--scale K]\n\
+         \x20               [--seed X] [--algo A] [--gpus N] [--duration S] [--config F]\n\
          \x20 gpulets serve-real [--artifacts DIR] [--duration S] [--rate model=R]...\n\
          \x20 gpulets experiment <fig3|...|fig16|tables|all> [--threads N]\n\
          \x20 gpulets bench-compare <baseline.json> <fresh.json>\n\
@@ -128,33 +134,59 @@ fn split_positional<'a>(args: &'a [String], default: &'a str) -> (&'a str, &'a [
     }
 }
 
-/// Validate and apply a `--threads` flag value (shared by every
-/// subcommand that accepts the flag).
-fn set_threads_flag(val: Option<&String>) -> Result<()> {
+/// THE flag-table walker every subcommand shares: args are uniform
+/// `--flag value` pairs; `apply` returns `Ok(true)` when it recognized
+/// the flag, `Ok(false)` to report it unknown. Value extraction,
+/// missing-value errors, and unknown-flag errors live here once instead
+/// of being re-rolled per subcommand.
+fn parse_kv_flags(
+    args: &[String],
+    mut apply: impl FnMut(&str, &str) -> Result<bool>,
+) -> Result<()> {
+    let mut i = 0;
+    while i < args.len() {
+        let flag = args[i].as_str();
+        if !flag.starts_with("--") {
+            return Err(gpulets::Error::Other(format!("unknown flag {flag:?}")));
+        }
+        let val = args.get(i + 1).ok_or_else(|| {
+            gpulets::Error::Other(format!("flag {flag} needs a value"))
+        })?;
+        if !apply(flag, val)? {
+            return Err(gpulets::Error::Other(format!("unknown flag {flag:?}")));
+        }
+        i += 2;
+    }
+    Ok(())
+}
+
+/// Validate and apply a `--threads` value (shared by every subcommand
+/// that accepts the flag).
+fn set_threads_flag(val: &str) -> Result<()> {
     let n: usize = val
-        .and_then(|v| v.parse().ok())
+        .parse()
+        .ok()
         .filter(|&n| n >= 1)
         .ok_or_else(|| gpulets::Error::Other("--threads expects an integer >= 1".into()))?;
     gpulets::util::par::set_threads(n);
     Ok(())
 }
 
+fn parse_num<T: std::str::FromStr>(flag: &str, val: &str, what: &str) -> Result<T> {
+    val.parse()
+        .map_err(|_| gpulets::Error::Other(format!("{flag} expects {what}")))
+}
+
 /// Parse a trailing `--threads N` (the only flag `run-fig` takes) and
 /// configure the experiment worker pool.
 fn parse_threads(args: &[String]) -> Result<()> {
-    let mut i = 0;
-    while i < args.len() {
-        match args[i].as_str() {
-            "--threads" => {
-                set_threads_flag(args.get(i + 1))?;
-                i += 2;
-            }
-            other => {
-                return Err(gpulets::Error::Other(format!("unknown flag {other:?}")));
-            }
+    parse_kv_flags(args, |flag, val| match flag {
+        "--threads" => {
+            set_threads_flag(val)?;
+            Ok(true)
         }
-    }
-    Ok(())
+        _ => Ok(false),
+    })
 }
 
 /// `bench-compare`: diff a fresh BENCH file against a baseline.
@@ -261,28 +293,21 @@ fn scenario_rates(name: &str) -> Result<[f64; 5]> {
 fn sweep(args: &[String]) -> Result<()> {
     let mut which = "gpulet+int".to_string();
     let mut gpus = 4usize;
-    let mut i = 0;
-    while i < args.len() {
-        match args[i].as_str() {
-            "--scheduler" => {
-                which = args
-                    .get(i + 1)
-                    .cloned()
-                    .ok_or_else(|| gpulets::Error::Other("--scheduler needs a value".into()))?;
-            }
-            "--gpus" => {
-                gpus = args
-                    .get(i + 1)
-                    .and_then(|v| v.parse().ok())
-                    .ok_or_else(|| gpulets::Error::Other("--gpus expects an integer".into()))?;
-            }
-            "--threads" => set_threads_flag(args.get(i + 1))?,
-            other => {
-                return Err(gpulets::Error::Other(format!("unknown flag {other:?}")));
-            }
+    parse_kv_flags(args, |flag, val| match flag {
+        "--scheduler" => {
+            which = val.to_string();
+            Ok(true)
         }
-        i += 2;
-    }
+        "--gpus" => {
+            gpus = parse_num(flag, val, "an integer")?;
+            Ok(true)
+        }
+        "--threads" => {
+            set_threads_flag(val)?;
+            Ok(true)
+        }
+        _ => Ok(false),
+    })?;
 
     let names: Vec<String> = if which == "all" {
         ["sbp", "sbp+part", "selftune", "gpulet", "gpulet+int", "ideal"]
@@ -333,63 +358,81 @@ fn sweep(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Parse `--key value` style flags plus repeated `--rate model=R`.
+/// The shared `--key value` vocabulary over a `Config` (serve,
+/// serve-real, fleet): returns `Ok(true)` when the flag was recognized.
 /// `--scenario` loads a named rate vector; a later `--scale K`
-/// multiplies whatever rates are in effect.
-fn parse_flags(args: &[String], cfg: &mut Config) -> Result<()> {
-    let mut i = 0;
-    while i < args.len() {
-        let flag = args[i].as_str();
-        let val = args.get(i + 1).cloned();
-        let need = |name: &str| -> Result<String> {
-            val.clone().ok_or_else(|| {
-                gpulets::Error::Other(format!("flag {name} needs a value"))
-            })
-        };
-        match flag {
-            "--config" => *cfg = Config::load(need("--config")?)?,
-            "--scenario" => cfg.rates = scenario_rates(&need("--scenario")?)?,
-            "--scale" => {
-                let k: f64 = need("--scale")?.parse().map_err(|_| {
-                    gpulets::Error::Other("--scale expects a number".into())
-                })?;
-                cfg.rates.iter_mut().for_each(|r| *r *= k);
-            }
-            "--algo" => cfg.algo = Algo::parse(&need("--algo")?)?,
-            "--gpus" => {
-                cfg.num_gpus = need("--gpus")?.parse().map_err(|_| {
-                    gpulets::Error::Other("--gpus expects an integer".into())
-                })?
-            }
-            "--duration" => {
-                cfg.duration_s = need("--duration")?.parse().map_err(|_| {
-                    gpulets::Error::Other("--duration expects seconds".into())
-                })?
-            }
-            "--seed" => {
-                cfg.seed = need("--seed")?.parse().map_err(|_| {
-                    gpulets::Error::Other("--seed expects an integer".into())
-                })?
-            }
-            "--artifacts" => cfg.artifacts_dir = need("--artifacts")?,
-            "--threads" => set_threads_flag(val.as_ref())?,
-            "--rate" => {
-                let spec = need("--rate")?;
-                let (name, rate) = spec.split_once('=').ok_or_else(|| {
-                    gpulets::Error::Other("--rate expects model=req_per_s".into())
-                })?;
-                let m = ModelId::parse(name)?;
-                cfg.rates[m.index()] = rate.parse().map_err(|_| {
-                    gpulets::Error::Other(format!("bad rate {rate:?}"))
-                })?;
-            }
-            other => {
-                return Err(gpulets::Error::Other(format!("unknown flag {other:?}")))
-            }
+/// multiplies whatever rates are in effect; `--algo`/`--gpus` also
+/// shape the fleet's per-node topology so `gpulets fleet --algo …`
+/// behaves like `serve`.
+fn apply_config_flag(cfg: &mut Config, flag: &str, val: &str) -> Result<bool> {
+    match flag {
+        "--config" => *cfg = Config::load(val)?,
+        "--scenario" => cfg.rates = scenario_rates(val)?,
+        "--scale" => {
+            let k: f64 = parse_num(flag, val, "a number")?;
+            cfg.rates.iter_mut().for_each(|r| *r *= k);
         }
-        i += 2;
+        "--algo" => {
+            cfg.algo = Algo::parse(val)?;
+            cfg.fleet.algo = cfg.algo;
+        }
+        "--gpus" => {
+            cfg.num_gpus = parse_num(flag, val, "an integer")?;
+            cfg.fleet.gpus_per_node = cfg.num_gpus;
+        }
+        "--duration" => cfg.duration_s = parse_num(flag, val, "seconds")?,
+        "--seed" => cfg.seed = parse_num(flag, val, "an integer")?,
+        "--artifacts" => cfg.artifacts_dir = val.to_string(),
+        "--threads" => set_threads_flag(val)?,
+        "--rate" => {
+            let (name, rate) = val.split_once('=').ok_or_else(|| {
+                gpulets::Error::Other("--rate expects model=req_per_s".into())
+            })?;
+            let m = ModelId::parse(name)?;
+            cfg.rates[m.index()] = rate
+                .parse()
+                .map_err(|_| gpulets::Error::Other(format!("bad rate {rate:?}")))?;
+        }
+        _ => return Ok(false),
     }
-    Ok(())
+    Ok(true)
+}
+
+/// Parse the shared config flags (serve / serve-real accept nothing
+/// else).
+fn parse_flags(args: &[String], cfg: &mut Config) -> Result<()> {
+    parse_kv_flags(args, |flag, val| apply_config_flag(cfg, flag, val))
+}
+
+/// Streamed Poisson workload for a rate vector (shared by serve and
+/// fleet): one source per model with a positive rate, k-way merged.
+/// Returns the mux and the stream count (for the O(active) log lines).
+fn poisson_mux(rates: &[f64; 5], duration_s: f64, seed: u64) -> Result<(DynSourceMux, usize)> {
+    let pairs: Vec<(ModelId, f64)> = ModelId::ALL
+        .iter()
+        .map(|&m| (m, rates[m.index()]))
+        .filter(|&(_, r)| r > 0.0)
+        .collect();
+    let streams = poisson_streams(&pairs, duration_s, seed)?;
+    let n = streams.len();
+    Ok((SourceMux::new(dyn_sources(streams)), n))
+}
+
+/// Print one schedule's gpu-let layout (shared by serve and fleet).
+fn print_schedule(schedule: &gpulets::sched::Schedule, indent: &str) {
+    for lp in &schedule.lets {
+        let asg: Vec<String> = lp
+            .assignments
+            .iter()
+            .map(|a| format!("{}@b{} {:.0}req/s", a.model.abbrev(), a.batch, a.rate))
+            .collect();
+        println!(
+            "{indent}gpu{} {:>3}%: {}",
+            lp.spec.gpu,
+            lp.spec.size_pct,
+            asg.join(" + ")
+        );
+    }
 }
 
 /// Simulated serving: schedule the configured rates, run the trace,
@@ -412,25 +455,12 @@ fn serve(args: &[String]) -> Result<()> {
         schedule.total_allocated_pct(),
         schedule.lets.len()
     );
-    for lp in &schedule.lets {
-        let asg: Vec<String> = lp
-            .assignments
-            .iter()
-            .map(|a| format!("{}@b{} {:.0}req/s", a.model.abbrev(), a.batch, a.rate))
-            .collect();
-        println!("  gpu{} {:>3}%: {}", lp.spec.gpu, lp.spec.size_pct, asg.join(" + "));
-    }
+    print_schedule(&schedule, "  ");
 
-    let pairs: Vec<(ModelId, f64)> = ModelId::ALL
-        .iter()
-        .map(|&m| (m, cfg.rates[m.index()]))
-        .filter(|&(_, r)| r > 0.0)
-        .collect();
     // The workload streams into the engine (one pending arrival per
     // model), so `--scale N` can push the offered load arbitrarily high
     // without ever materializing an arrival vector.
-    let streams = poisson_streams(&pairs, cfg.duration_s, cfg.seed)?;
-    let n_streams = streams.len();
+    let (mux, n_streams) = poisson_mux(&cfg.rates, cfg.duration_s, cfg.seed)?;
     println!(
         "\nserving a streamed Poisson workload for {}s ({}; {n_streams} arrival streams)...",
         cfg.duration_s,
@@ -444,7 +474,7 @@ fn serve(args: &[String]) -> Result<()> {
         cfg.duration_s,
         &SimConfig { mode: cfg.share_mode, seed: cfg.seed, ..Default::default() },
     );
-    engine.attach_source(SourceMux::new(dyn_sources(streams)));
+    engine.attach_source(mux);
     engine.run_stream();
     engine.close();
     let report = engine.report();
@@ -472,6 +502,118 @@ fn serve(args: &[String]) -> Result<()> {
         engine.events_processed(),
         engine.peak_live_events(),
         schedule.lets.len(),
+    );
+    Ok(())
+}
+
+/// Fleet-tier serving: plan the configured rates across N nodes, route
+/// a streamed Poisson workload through the deterministic front end, and
+/// report the merged fleet metrics plus per-node breakdown.
+fn fleet(args: &[String]) -> Result<()> {
+    let mut cfg = Config::default();
+    parse_kv_flags(args, |flag, val| match flag {
+        "--nodes" => {
+            cfg.fleet.nodes = parse_num::<usize>(flag, val, "an integer >= 1")?.max(1);
+            Ok(true)
+        }
+        "--rebalance" => {
+            cfg.fleet.rebalance_s = parse_num(flag, val, "seconds (0 disables)")?;
+            Ok(true)
+        }
+        _ => apply_config_flag(&mut cfg, flag, val),
+    })?;
+
+    let spec = cfg.fleet;
+    let (scheduler, ctx) = scheduler_for(spec.algo, spec.gpus_per_node);
+    let planner = FleetPlanner::new(&ctx, scheduler.as_ref(), spec.nodes);
+    println!(
+        "planning {} nodes x {} GPUs ({}): {}",
+        spec.nodes,
+        spec.gpus_per_node,
+        scheduler.name(),
+        ex::common::fmt_rates(&cfg.rates)
+    );
+    let plan = planner.plan(&cfg.rates)?;
+    for (ni, s) in plan.schedules.iter().enumerate() {
+        if s.lets.is_empty() {
+            println!("node {ni}: idle");
+            continue;
+        }
+        println!(
+            "node {ni}: {}% allocated over {} gpu-lets ({})",
+            s.total_allocated_pct(),
+            s.lets.len(),
+            ex::common::fmt_rates(&plan.node_rates[ni]),
+        );
+        print_schedule(s, "  ");
+    }
+
+    let (mux, _) = poisson_mux(&cfg.rates, cfg.duration_s, cfg.seed)?;
+    let cadence = if spec.rebalance_s > 0.0 {
+        format!("rebalance every {}s", spec.rebalance_s)
+    } else {
+        "rebalancing off".to_string()
+    };
+    println!(
+        "\nrouting a streamed Poisson workload for {}s across {} nodes ({cadence})...",
+        cfg.duration_s, spec.nodes,
+    );
+    // Serve/measure against the TRUE SLOs (the experiments' convention;
+    // `ctx.lm` is the planner's SLO-tightened view).
+    let lm = gpulets::perfmodel::LatencyModel::new();
+    let gt = GroundTruth::default();
+    let fleet_cfg = FleetConfig {
+        sim: SimConfig { mode: cfg.share_mode, seed: cfg.seed, ..Default::default() },
+        window_s: if spec.rebalance_s > 0.0 { spec.rebalance_s } else { cfg.period_s },
+        rebalance: spec.rebalance_s > 0.0,
+        ..Default::default()
+    };
+    let mut engine = FleetEngine::new(
+        &lm,
+        &gt,
+        planner,
+        plan,
+        mux,
+        cfg.duration_s,
+        &fleet_cfg,
+    );
+    engine.run(cfg.duration_s);
+    let out = engine.finish();
+
+    println!("\n{}", out.report.table());
+    println!(
+        "fleet throughput {:.0} req/s, goodput {:.0} req/s, violations {:.2}%, \
+         {} rebalances",
+        out.report.throughput_rps(),
+        out.report.goodput_rps(),
+        out.report.overall_violation_rate() * 100.0,
+        out.rebalances,
+    );
+    for (ni, r) in out.per_node.iter().enumerate() {
+        let (served, dropped) = ModelId::ALL.iter().fold((0u64, 0u64), |acc, &m| {
+            r.model(m).map_or(acc, |mm| (acc.0 + mm.served, acc.1 + mm.dropped))
+        });
+        println!(
+            "  node {ni}: {served} served, {dropped} dropped, {:.2}% violations",
+            r.overall_violation_rate() * 100.0
+        );
+    }
+    let offered: u64 = out.offered.iter().sum();
+    let (served, dropped) = out.served_dropped();
+    let (served, dropped) =
+        (served.iter().sum::<u64>(), dropped.iter().sum::<u64>());
+    println!(
+        "requests: {offered} offered = {served} served + {dropped} dropped{}",
+        if out.conserved() { " (conserved)" } else { " (LOST!)" }
+    );
+    let unplaced: u64 = out.unplaced.iter().sum();
+    if unplaced > 0 {
+        println!("  ({unplaced} arrivals had no fleet placement and were dropped counted)");
+    }
+    println!(
+        "fleet: {} events processed, peak {} live events across nodes, \
+         peak {} routed-ahead arrivals",
+        out.events_processed, out.peak_live_events, out.peak_routed,
     );
     Ok(())
 }

@@ -4,6 +4,7 @@
 use std::path::Path;
 
 use crate::error::Result;
+use crate::fleet::FleetSpec;
 use crate::gpu::ShareMode;
 use crate::models::ModelId;
 use crate::util::tomlmini::TomlDoc;
@@ -66,6 +67,10 @@ pub struct Config {
     pub reorg_s: f64,
     /// Artifact directory for the real runtime.
     pub artifacts_dir: String,
+    /// Fleet topology (`[fleet]` section; defaults follow the
+    /// single-server settings: `gpus_per_node` = `gpu.count`, `algo` =
+    /// `sched.algo`, `rebalance_s` = `sched.period_s`).
+    pub fleet: FleetSpec,
 }
 
 impl Default for Config {
@@ -80,6 +85,7 @@ impl Default for Config {
             period_s: 20.0,
             reorg_s: 12.0,
             artifacts_dir: "artifacts".into(),
+            fleet: FleetSpec::default(),
         }
     }
 }
@@ -106,6 +112,14 @@ impl Config {
         cfg.period_s = doc.f64_or("sched.period_s", cfg.period_s)?;
         cfg.reorg_s = doc.f64_or("sched.reorg_s", cfg.reorg_s)?;
         cfg.artifacts_dir = doc.str_or("runtime.artifacts_dir", &cfg.artifacts_dir)?;
+        cfg.fleet = FleetSpec {
+            nodes: doc.i64_or("fleet.nodes", 1)?.max(1) as usize,
+            gpus_per_node: doc
+                .i64_or("fleet.gpus_per_node", cfg.num_gpus as i64)?
+                .max(1) as usize,
+            algo: Algo::parse(&doc.str_or("fleet.algo", cfg.algo.name())?)?,
+            rebalance_s: doc.f64_or("fleet.rebalance_s", cfg.period_s)?,
+        };
         for (name, v) in doc.keys_under("rates") {
             let m = ModelId::parse(name)?;
             cfg.rates[m.index()] = v.as_f64()?;
@@ -152,6 +166,36 @@ vgg = 25.0
         assert_eq!(c.rates[ModelId::Lenet.index()], 100.0);
         assert_eq!(c.rates[ModelId::Vgg.index()], 25.0);
         assert_eq!(c.rates[ModelId::Resnet.index()], 50.0); // default
+    }
+
+    #[test]
+    fn fleet_section_parses_with_single_server_defaults() {
+        // No [fleet] section: one node shaped like the configured server.
+        let c = Config::parse("[gpu]\ncount = 2\n[sched]\nalgo = \"sbp\"\n").unwrap();
+        assert_eq!(c.fleet.nodes, 1);
+        assert_eq!(c.fleet.gpus_per_node, 2);
+        assert_eq!(c.fleet.algo, Algo::Sbp);
+        assert_eq!(c.fleet.rebalance_s, c.period_s);
+        // Explicit [fleet] section overrides each field.
+        let c = Config::parse(
+            r#"
+[gpu]
+count = 4
+[fleet]
+nodes = 16
+gpus_per_node = 8
+algo = "gpulet"
+rebalance_s = 5.0
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            c.fleet,
+            FleetSpec { nodes: 16, gpus_per_node: 8, algo: Algo::Gpulet, rebalance_s: 5.0 }
+        );
+        // Degenerate node counts clamp to 1 instead of panicking later.
+        let c = Config::parse("[fleet]\nnodes = 0\n").unwrap();
+        assert_eq!(c.fleet.nodes, 1);
     }
 
     #[test]

@@ -82,7 +82,10 @@ impl AdaptiveOutcome {
 /// under 1 req/s — masking e.g. a 0.05 -> 0.12 req/s (2.4x) change.
 pub(crate) const MIN_TRIGGER_DELTA: f64 = 0.05;
 
-fn rates_changed(observed: &[f64; 5], baseline: &[f64; 5], threshold: f64) -> bool {
+/// Shared with the fleet tier's rebalance trigger (`fleet::engine`), so
+/// one node's reorganization and the fleet's re-planning react to the
+/// same notion of "the load moved".
+pub(crate) fn rates_changed(observed: &[f64; 5], baseline: &[f64; 5], threshold: f64) -> bool {
     ModelId::ALL.iter().any(|&m| {
         let now = observed[m.index()];
         let base = baseline[m.index()];
@@ -283,7 +286,7 @@ impl<'a, S: Scheduler> AdaptiveServer<'a, S> {
 /// Rate-prediction headroom: schedule for slightly more than observed so
 /// Poisson bursts and rising ramps don't immediately violate (the paper
 /// notes "occasional SLO violations due to errors when predicting rates").
-fn headroomed(rates: &[f64; 5]) -> [f64; 5] {
+pub(crate) fn headroomed(rates: &[f64; 5]) -> [f64; 5] {
     let mut out = *rates;
     out.iter_mut().for_each(|r| *r *= 1.15);
     out

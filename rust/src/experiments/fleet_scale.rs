@@ -1,0 +1,203 @@
+//! Fleet scaling: the Fig-14 fluctuation workload scaled to 1 / 4 / 16
+//! nodes, served by the fleet tier with periodic rebalancing.
+//!
+//! Each rung multiplies the Fig-14 per-model rates by the node count,
+//! so every node sees roughly the single-server paper load and the
+//! series isolates what the *fleet layer* adds: deterministic routing,
+//! lockstep advancement of N engines, merged reporting, and re-planning
+//! at window boundaries. Reported per rung: offered requests, engine
+//! events/s (wall-clock), the fleet-wide SLO-violation share (drops
+//! included), rebalances applied, and the conservation check — the
+//! BENCH payload is the fleet row of the cross-PR perf trajectory
+//! (`gpulets bench-compare`).
+//!
+//! Routing is deterministic for a fixed seed regardless of `--threads`:
+//! the rungs run serially and the router/engines never touch the
+//! worker pool.
+
+use crate::fleet::{FleetConfig, FleetEngine, FleetOutcome, FleetPlanner};
+use crate::interference::GroundTruth;
+use crate::models::ModelId;
+use crate::perfmodel::LatencyModel;
+use crate::sched::{ElasticPartitioning, SchedCtx};
+use crate::util::json::{obj, Json};
+use crate::workload::{dyn_sources, varying_streams, FluctuationTrace, SourceMux};
+
+use super::common::{Runnable, RunOutput};
+
+/// Node counts of the scaling ladder.
+pub const NODES: [usize; 3] = [1, 4, 16];
+
+/// Trace length per rung (s) — covers the first Fig-14 wave's rise,
+/// peak, and fall.
+pub const DURATION_S: f64 = 600.0;
+
+/// One rung's outcome plus its wall-clock cost.
+pub struct Rung {
+    pub nodes: usize,
+    pub outcome: FleetOutcome,
+    pub wall_s: f64,
+}
+
+/// Run one rung: `nodes` nodes under `nodes`-times Fig-14 traffic.
+pub fn compute(nodes: usize, duration_s: f64, seed: u64) -> crate::error::Result<Rung> {
+    let scale = nodes as f64;
+    let ctx = SchedCtx::new(4, None);
+    let scheduler = ElasticPartitioning::gpulet();
+    let planner = FleetPlanner::new(&ctx, &scheduler, nodes);
+    let trace = FluctuationTrace::default();
+    // Initial plan from the trace's t=0 rates; the wave's 3-4x swell is
+    // the rebalancer's job, exactly like one node's Fig-14 reorganizer.
+    let mut base = [0.0; 5];
+    for m in ModelId::ALL {
+        base[m.index()] = trace.rate_at(m, 0.0) * scale;
+    }
+    let plan = planner.plan(&base)?;
+    let tr = trace.clone();
+    let streams = varying_streams(
+        &ModelId::ALL,
+        move |m, t| tr.rate_at(m, t) * scale,
+        duration_s,
+        1.0,
+        seed,
+    )?;
+    let lm = LatencyModel::new();
+    let gt = GroundTruth::default();
+    let cfg = FleetConfig::default(); // 20 s windows, rebalancing on
+    let mut engine = FleetEngine::new(
+        &lm,
+        &gt,
+        planner,
+        plan,
+        SourceMux::new(dyn_sources(streams)),
+        duration_s,
+        &cfg,
+    );
+    let t0 = std::time::Instant::now();
+    engine.run(duration_s);
+    let outcome = engine.finish();
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(Rung { nodes, outcome, wall_s })
+}
+
+fn events_per_s(r: &Rung) -> f64 {
+    if r.wall_s > 0.0 {
+        r.outcome.events_processed as f64 / r.wall_s
+    } else {
+        0.0
+    }
+}
+
+pub fn render(rungs: &[Rung]) -> String {
+    let mut s = String::from(
+        "# fleet_scale: N nodes under N-times Fig-14 traffic (600 s, 20 s windows)\n\
+         nodes   offered   events/s   viol%   rebalances   conserved\n",
+    );
+    for r in rungs {
+        let offered: u64 = r.outcome.offered.iter().sum();
+        s.push_str(&format!(
+            "{:>5} {:>9} {:>10.0} {:>7.2} {:>12} {:>11}\n",
+            r.nodes,
+            offered,
+            events_per_s(r),
+            r.outcome.report.overall_violation_rate() * 100.0,
+            r.outcome.rebalances,
+            if r.outcome.conserved() { "yes" } else { "NO" },
+        ));
+    }
+    s
+}
+
+pub fn run() -> String {
+    let rungs: Vec<Rung> = NODES
+        .iter()
+        .map(|&n| compute(n, DURATION_S, 2024).expect("fig14 rates are plannable"))
+        .collect();
+    render(&rungs)
+}
+
+/// Text + JSON for the CLI / bench harness.
+pub fn report() -> RunOutput {
+    let rungs: Vec<Rung> = NODES
+        .iter()
+        .map(|&n| compute(n, DURATION_S, 2024).expect("fig14 rates are plannable"))
+        .collect();
+    let rows: Vec<Json> = rungs
+        .iter()
+        .map(|r| {
+            let (served, dropped) = r.outcome.served_dropped();
+            obj(vec![
+                ("nodes", Json::Num(r.nodes as f64)),
+                ("duration_s", Json::Num(DURATION_S)),
+                (
+                    "offered_requests",
+                    Json::Num(r.outcome.offered.iter().sum::<u64>() as f64),
+                ),
+                ("served", Json::Num(served.iter().sum::<u64>() as f64)),
+                ("dropped", Json::Num(dropped.iter().sum::<u64>() as f64)),
+                ("events", Json::Num(r.outcome.events_processed as f64)),
+                ("wall_s", Json::Num(r.wall_s)),
+                ("events_per_s", Json::Num(events_per_s(r))),
+                (
+                    "violation_share",
+                    Json::Num(r.outcome.report.overall_violation_rate()),
+                ),
+                ("rebalances", Json::Num(r.outcome.rebalances as f64)),
+                ("conserved", Json::Bool(r.outcome.conserved())),
+                (
+                    "peak_live_events",
+                    Json::Num(r.outcome.peak_live_events as f64),
+                ),
+                ("peak_routed", Json::Num(r.outcome.peak_routed as f64)),
+            ])
+        })
+        .collect();
+    RunOutput {
+        text: render(&rungs),
+        payload: obj(vec![
+            ("figure", Json::Str("fleet_scale".into())),
+            ("rungs", Json::Arr(rows)),
+        ]),
+    }
+}
+
+/// Fleet scaling as a CLI/bench-drivable experiment.
+pub struct Experiment;
+
+impl Runnable for Experiment {
+    fn name(&self) -> &'static str {
+        "fleet_scale"
+    }
+    fn title(&self) -> &'static str {
+        "fleet tier at 1/4/16 nodes under scaled Fig-14 traffic"
+    }
+    fn bench_file(&self) -> &'static str {
+        "BENCH_fleet_scale.json"
+    }
+    fn run(&self) -> RunOutput {
+        report()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_rung_conserves_and_is_seed_stable() {
+        // A 60 s 2-node slice keeps the test quick; the full ladder is
+        // the fleet_scale bench / CLI target.
+        let a = compute(2, 60.0, 7).unwrap();
+        assert!(a.outcome.conserved(), "offered != served + dropped");
+        let offered: u64 = a.outcome.offered.iter().sum();
+        assert!(offered > 5_000, "load too small: {offered}");
+        // Determinism: identical reports and routing for the same seed.
+        let b = compute(2, 60.0, 7).unwrap();
+        assert_eq!(
+            a.outcome.report.to_json().to_string(),
+            b.outcome.report.to_json().to_string()
+        );
+        assert_eq!(a.outcome.offered, b.outcome.offered);
+        assert_eq!(a.outcome.rebalances, b.outcome.rebalances);
+    }
+}

@@ -17,11 +17,13 @@ pub mod fig13;
 pub mod fig14;
 pub mod fig15;
 pub mod fig16;
+pub mod fleet_scale;
 pub mod tables;
 
 use common::Runnable;
 
-/// Every drivable experiment, in figure order.
+/// Every drivable experiment: the paper figures in order, then the
+/// scaling studies layered on top of the reproduction.
 pub fn registry() -> Vec<Box<dyn Runnable>> {
     vec![
         Box::new(fig03::Experiment),
@@ -34,13 +36,19 @@ pub fn registry() -> Vec<Box<dyn Runnable>> {
         Box::new(fig14::Experiment),
         Box::new(fig15::Experiment),
         Box::new(fig16::Experiment),
+        Box::new(fleet_scale::Experiment),
     ]
 }
 
-/// Look up one experiment by a forgiving name: `fig12`, `12`, or `fig3`
-/// all resolve (figure numbers are zero-padded internally).
+/// Look up one experiment by a forgiving name: exact names
+/// (`fleet_scale`, `fig12`) resolve directly; figure shorthands (`12`,
+/// `fig3`) are zero-padded to the canonical `figNN`.
 pub fn find(name: &str) -> Option<Box<dyn Runnable>> {
-    let digits = name.trim().trim_start_matches("fig");
+    let trimmed = name.trim();
+    if let Some(e) = registry().into_iter().find(|e| e.name() == trimmed) {
+        return Some(e);
+    }
+    let digits = trimmed.trim_start_matches("fig");
     let canonical = match digits.parse::<u32>() {
         Ok(n) => format!("fig{n:02}"),
         Err(_) => return None,
@@ -55,15 +63,15 @@ mod tests {
     #[test]
     fn registry_names_and_files_are_unique() {
         let reg = registry();
-        assert_eq!(reg.len(), 10);
+        assert_eq!(reg.len(), 11);
         let mut names: Vec<&str> = reg.iter().map(|e| e.name()).collect();
         let mut files: Vec<&str> = reg.iter().map(|e| e.bench_file()).collect();
         names.sort_unstable();
         names.dedup();
         files.sort_unstable();
         files.dedup();
-        assert_eq!(names.len(), 10);
-        assert_eq!(files.len(), 10);
+        assert_eq!(names.len(), 11);
+        assert_eq!(files.len(), 11);
         assert!(files.iter().all(|f| f.starts_with("BENCH_") && f.ends_with(".json")));
     }
 
@@ -72,6 +80,7 @@ mod tests {
         assert_eq!(find("12").unwrap().name(), "fig12");
         assert_eq!(find("fig3").unwrap().name(), "fig03");
         assert_eq!(find("fig03").unwrap().name(), "fig03");
+        assert_eq!(find("fleet_scale").unwrap().name(), "fleet_scale");
         assert!(find("fig07").is_none());
         assert!(find("bogus").is_none());
     }

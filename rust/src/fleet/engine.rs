@@ -1,0 +1,508 @@
+//! The fleet serving core: N persistent [`ServingEngine`]s advanced in
+//! lockstep on the shared µs clock behind one deterministic [`Router`].
+//!
+//! ## Lockstep advance
+//!
+//! `run_until(t)` first lets the router deal every arrival with time
+//! `<= t` into per-node staging buffers, then attaches each node's
+//! chunk as a fresh materialized source and runs that node's engine to
+//! `t`. Each node therefore pulls its arrivals lazily at the exact
+//! virtual times a dedicated single-server engine would — the stepped
+//! `run_until` path is byte-identical to the one-shot streamed path
+//! (`tests/streaming_equivalence.rs`), which is what makes a 1-node
+//! fleet byte-identical to `simulate_source` on the same mux/seed
+//! (`tests/fleet_equivalence.rs`). Nodes are independent: no event on
+//! one node can affect another within an advance, so serving order
+//! inside the lockstep window is exact, not approximate.
+//!
+//! ## Rebalancing
+//!
+//! `run(duration_s)` carves the run into windows. At each boundary the
+//! router's per-window dealt counts feed an EWMA rate monitor; when the
+//! smoothed rates drift past the reorganizer's trigger
+//! (`coordinator::reorganizer::rates_changed` — same notion of "the
+//! load moved" as one node's §5 reorganization), the fleet re-plans via
+//! its [`FleetPlanner`] and applies the new plan with per-node
+//! `swap_schedule(…, SwapMode::Migrate)`: in-flight batches retire
+//! under their old epoch's constants, queued backlog re-routes FIFO,
+//! and a model that lost every route on a node drops *counted* — the
+//! PR 3 hand-over semantics, now fleet-wide. The router re-targets its
+//! quota counters to the new shares in the same instant. An infeasible
+//! re-plan (the observed load outgrew the fleet) keeps the current
+//! plan serving — rebalancing degrades, never destroys.
+//!
+//! ## Conservation
+//!
+//! Every arrival the router deals is offered to exactly one node, and
+//! each node's engine accounts every offered request as served or
+//! dropped (including across swaps and at close). So fleet-wide,
+//! `offered[m] == served[m] + dropped[m]` exactly, for any node count
+//! and any rebalance history — `tests/fleet_equivalence.rs` pins it.
+
+use crate::coordinator::reorganizer::{headroomed, rates_changed};
+use crate::coordinator::{ServingEngine, SimConfig, SwapMode};
+use crate::error::Result;
+use crate::interference::GroundTruth;
+use crate::metrics::{CounterSnapshot, Report, WindowReport};
+use crate::models::ModelId;
+use crate::perfmodel::{LatencyModel, RateMonitor};
+use crate::simclock::{ms_to_us, SimTimeUs};
+use crate::workload::DynSourceMux;
+
+use super::planner::{FleetPlan, FleetPlanner};
+use super::router::Router;
+
+/// Fleet run configuration (the per-node engines share `sim`).
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Per-node simulation parameters (mode, seed, drain).
+    pub sim: SimConfig,
+    /// Window length (s) for per-window telemetry and the rebalance
+    /// cadence of [`FleetEngine::run`].
+    pub window_s: f64,
+    /// Re-plan from observed per-window rates at window boundaries.
+    pub rebalance: bool,
+    /// EWMA smoothing for observed rates.
+    pub ewma_alpha: f64,
+    /// Rate-change threshold that triggers a re-plan.
+    pub change_threshold: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            sim: SimConfig::default(),
+            window_s: 20.0,
+            rebalance: true,
+            ewma_alpha: 0.6,
+            change_threshold: 0.10,
+        }
+    }
+}
+
+/// One window of fleet telemetry.
+#[derive(Clone, Debug)]
+pub struct FleetWindowStats {
+    pub t_start_s: f64,
+    pub window_s: f64,
+    /// Requests the router dealt this window, per model.
+    pub offered: [u64; 5],
+    /// Windowed delta report per node.
+    pub per_node: Vec<WindowReport>,
+    /// Fleet-wide SLO violation rate (drops included) this window.
+    pub violation_rate: f64,
+    /// True if a rebalance was applied at this window's end.
+    pub rebalanced: bool,
+}
+
+/// Final fleet accounting: the merged report plus everything needed to
+/// audit the run (per-node reports, windows, conservation inputs).
+#[derive(Clone, Debug)]
+pub struct FleetOutcome {
+    /// Fleet-wide report: per-node reports merged bin-exactly
+    /// (`Report::merge`).
+    pub report: Report,
+    /// Each node's own whole-run report.
+    pub per_node: Vec<Report>,
+    /// Per-window telemetry from [`FleetEngine::run`].
+    pub windows: Vec<FleetWindowStats>,
+    /// Requests the router offered per model (== served + dropped).
+    pub offered: [u64; 5],
+    /// Offered requests for models that had no placement when dealt.
+    pub unplaced: [u64; 5],
+    /// Rebalances applied.
+    pub rebalances: u64,
+    /// Events processed across all node engines.
+    pub events_processed: u64,
+    /// Sum of per-node peak live-event counts (each node is O(active)).
+    pub peak_live_events: usize,
+    /// High-water mark of router-staged arrivals awaiting a lockstep
+    /// advance.
+    pub peak_routed: usize,
+}
+
+impl FleetOutcome {
+    /// Fleet-wide served/dropped totals per model.
+    pub fn served_dropped(&self) -> ([u64; 5], [u64; 5]) {
+        let mut served = [0u64; 5];
+        let mut dropped = [0u64; 5];
+        for m in ModelId::ALL {
+            if let Some(mm) = self.report.model(m) {
+                served[m.index()] = mm.served;
+                dropped[m.index()] = mm.dropped;
+            }
+        }
+        (served, dropped)
+    }
+
+    /// Exact conservation check: offered == served + dropped, per model.
+    pub fn conserved(&self) -> bool {
+        let (served, dropped) = self.served_dropped();
+        ModelId::ALL
+            .iter()
+            .all(|&m| self.offered[m.index()] == served[m.index()] + dropped[m.index()])
+    }
+}
+
+/// N single-server engines behind one deterministic router. See the
+/// module docs for the lockstep and rebalance semantics.
+pub struct FleetEngine<'a> {
+    planner: FleetPlanner<'a>,
+    plan: FleetPlan,
+    nodes: Vec<ServingEngine<'a>>,
+    router: Router,
+    cfg: FleetConfig,
+    monitor: RateMonitor,
+    /// Rates the current plan was made for (rebalance baseline).
+    last_planned: [f64; 5],
+    prev_counts: Vec<CounterSnapshot>,
+    windows: Vec<FleetWindowStats>,
+    rebalances: u64,
+}
+
+impl<'a> FleetEngine<'a> {
+    /// A fleet serving `plan` (from `planner.plan(...)`) fed by
+    /// `source`. `window_s` is the whole-run measurement window for the
+    /// per-node reports (usually the trace duration, like
+    /// `simulate_source`).
+    pub fn new(
+        lm: &'a LatencyModel,
+        gt: &'a GroundTruth,
+        planner: FleetPlanner<'a>,
+        plan: FleetPlan,
+        source: DynSourceMux,
+        window_s: f64,
+        cfg: &FleetConfig,
+    ) -> Self {
+        assert!(!plan.schedules.is_empty(), "fleet plan must cover >= 1 node");
+        assert_eq!(
+            plan.nodes(),
+            planner.nodes,
+            "plan/planner node counts must match (rebalance re-plans at the \
+             planner's node count)"
+        );
+        let nodes: Vec<ServingEngine<'a>> = plan
+            .schedules
+            .iter()
+            .map(|s| ServingEngine::new(lm, gt, s.clone(), window_s, &cfg.sim))
+            .collect();
+        let router = Router::new(source, &plan.node_rates);
+        let n = nodes.len();
+        let mut last_planned = [0.0; 5];
+        for m in ModelId::ALL {
+            last_planned[m.index()] = plan.total_share(m);
+        }
+        FleetEngine {
+            planner,
+            plan,
+            nodes,
+            router,
+            cfg: cfg.clone(),
+            monitor: RateMonitor::new(cfg.ewma_alpha),
+            last_planned,
+            prev_counts: vec![CounterSnapshot::default(); n],
+            windows: Vec::new(),
+            rebalances: 0,
+        }
+    }
+
+    /// Deal every arrival with time `<= t_us` and advance every node to
+    /// `t_us` in lockstep.
+    pub fn run_until(&mut self, t_us: SimTimeUs) {
+        self.router.deal_until(t_us);
+        for (ni, eng) in self.nodes.iter_mut().enumerate() {
+            let chunk = self.router.take_buffer(ni);
+            if !chunk.is_empty() {
+                eng.attach_source(DynSourceMux::of_trace(chunk));
+            }
+            eng.run_until(t_us);
+        }
+    }
+
+    /// Re-plan for `rates` and hand the fleet over live: every node
+    /// swaps to its new schedule with `SwapMode::Migrate` (in-flight
+    /// work retires under old constants, backlog re-routes, nothing is
+    /// lost) and the router re-targets its quota counters to the new
+    /// shares. An infeasible re-plan leaves the fleet untouched.
+    pub fn rebalance(&mut self, rates: &[f64; 5]) -> Result<()> {
+        let next = self.planner.plan(rates)?;
+        for (eng, s) in self.nodes.iter_mut().zip(next.schedules.iter()) {
+            eng.swap_schedule(s.clone(), SwapMode::Migrate);
+        }
+        self.router.retarget(&next.node_rates);
+        self.plan = next;
+        self.last_planned = *rates;
+        self.rebalances += 1;
+        Ok(())
+    }
+
+    /// Serve `duration_s` of the source in telemetry windows, auto-
+    /// rebalancing at boundaries when configured, then drain past the
+    /// last arrival exactly like the one-shot `simulate_source` path
+    /// (`run_until(last_arrival + drain)`).
+    pub fn run(&mut self, duration_s: f64) {
+        let end_ms = duration_s * 1000.0;
+        let window_ms = (self.cfg.window_s * 1000.0).max(1.0);
+        let mut t_ms = 0.0;
+        while t_ms < end_ms {
+            let t_end_ms = (t_ms + window_ms).min(end_ms);
+            self.run_until(ms_to_us(t_end_ms));
+            let final_window = t_end_ms >= end_ms;
+            self.note_window(t_ms / 1000.0, (t_end_ms - t_ms) / 1000.0, !final_window);
+            t_ms = t_end_ms;
+        }
+        // Arrivals past the nominal duration (a source longer than the
+        // run) still stream through, one lockstep hop per arrival, and
+        // get a catch-up telemetry window so Σ windows.offered always
+        // equals the outcome's offered totals.
+        let mut tail_end_ms = t_ms;
+        while let Some(t) = self.router.peek_time_ms() {
+            self.run_until(ms_to_us(t));
+            tail_end_ms = tail_end_ms.max(t);
+        }
+        if tail_end_ms > t_ms {
+            self.note_window(t_ms / 1000.0, (tail_end_ms - t_ms) / 1000.0, false);
+        }
+        let horizon =
+            ms_to_us(self.router.last_arrival_ms()) + ms_to_us(self.cfg.sim.drain_ms);
+        self.run_until(horizon.max(ms_to_us(end_ms)));
+    }
+
+    /// Close every node and fold the fleet's accounting together.
+    pub fn finish(mut self) -> FleetOutcome {
+        let mut per_node = Vec::with_capacity(self.nodes.len());
+        let mut events = 0u64;
+        let mut peak = 0usize;
+        for eng in &mut self.nodes {
+            eng.close();
+            events += eng.events_processed();
+            peak += eng.peak_live_events();
+            per_node.push(eng.report().clone());
+        }
+        let mut report = Report::new(per_node.first().map_or(0.0, |r| r.window_s));
+        for r in &per_node {
+            report.merge(r);
+        }
+        FleetOutcome {
+            report,
+            per_node,
+            windows: self.windows,
+            offered: self.router.offered_per_model(),
+            unplaced: self.router.unplaced_per_model(),
+            rebalances: self.rebalances,
+            events_processed: events,
+            peak_live_events: peak,
+            peak_routed: self.router.peak_buffered(),
+        }
+    }
+
+    /// Currently installed fleet plan.
+    pub fn plan(&self) -> &FleetPlan {
+        &self.plan
+    }
+
+    /// Rebalances applied so far.
+    pub fn rebalances(&self) -> u64 {
+        self.rebalances
+    }
+
+    /// Router-side offered counts so far, per model.
+    pub fn offered_per_model(&self) -> [u64; 5] {
+        self.router.offered_per_model()
+    }
+
+    /// Time of the last routed arrival (drain-horizon anchor for
+    /// callers stepping `run_until` manually).
+    pub fn last_arrival_ms(&self) -> f64 {
+        self.router.last_arrival_ms()
+    }
+
+    /// Record one window's telemetry and, when allowed, consider a
+    /// rebalance from the smoothed observed rates.
+    fn note_window(&mut self, t_start_s: f64, window_s: f64, may_rebalance: bool) {
+        let offered = self.router.take_window_dealt();
+        for m in ModelId::ALL {
+            self.monitor.observe(m, offered[m.index()]);
+        }
+        self.monitor.tick(window_s.max(1e-9));
+        let mut per_node = Vec::with_capacity(self.nodes.len());
+        let mut served_total = 0u64;
+        let mut bad_total = 0u64;
+        for (ni, eng) in self.nodes.iter().enumerate() {
+            let w = eng.report().snapshot_window(&self.prev_counts[ni], window_s);
+            self.prev_counts[ni] = eng.report().counters();
+            served_total += w.served.iter().sum::<u64>();
+            bad_total += w.violations.iter().sum::<u64>() + w.dropped.iter().sum::<u64>();
+            per_node.push(w);
+        }
+        let total = served_total + per_node
+            .iter()
+            .map(|w| w.dropped.iter().sum::<u64>())
+            .sum::<u64>();
+        let violation_rate = if total == 0 { 0.0 } else { bad_total as f64 / total as f64 };
+
+        let mut rebalanced = false;
+        if may_rebalance && self.cfg.rebalance {
+            let mut observed = [0.0; 5];
+            for m in ModelId::ALL {
+                observed[m.index()] = self.monitor.rate(m);
+            }
+            if rates_changed(&observed, &self.last_planned, self.cfg.change_threshold) {
+                // Plan with prediction headroom, like one node's
+                // reorganizer; baseline moves even when the re-plan is
+                // infeasible so a hopeless load doesn't re-plan every
+                // window.
+                let target = headroomed(&observed);
+                rebalanced = self.rebalance(&target).is_ok();
+                self.last_planned = observed;
+            }
+        }
+        self.windows.push(FleetWindowStats {
+            t_start_s,
+            window_s,
+            offered,
+            per_node,
+            violation_rate,
+            rebalanced,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{ElasticPartitioning, SchedCtx};
+    use crate::workload::{dyn_sources, poisson_streams, SourceMux};
+
+    fn mux_for(pairs: &[(ModelId, f64)], duration_s: f64, seed: u64) -> DynSourceMux {
+        SourceMux::new(dyn_sources(poisson_streams(pairs, duration_s, seed).unwrap()))
+    }
+
+    #[test]
+    fn lockstep_fleet_conserves_and_spans_nodes_past_one_server() {
+        let ctx = SchedCtx::new(4, None);
+        let sched = ElasticPartitioning::gpulet();
+        let lm = LatencyModel::new();
+        let gt = GroundTruth::default();
+        // Grow the load until one node rejects it, so the plan must
+        // genuinely span nodes.
+        let mut rates = [100.0, 0.0, 50.0, 0.0, 40.0];
+        use crate::sched::Scheduler;
+        while sched.schedule(&ctx, &rates).is_ok() {
+            rates.iter_mut().for_each(|r| *r *= 2.0);
+            assert!(rates[0] < 1e7, "load never overflowed one node");
+        }
+        let planner = FleetPlanner::new(&ctx, &sched, 4);
+        let plan = planner.plan(&rates).unwrap();
+        assert!(plan.active_nodes() >= 2, "load must span nodes");
+        let pairs: Vec<(ModelId, f64)> = ModelId::ALL
+            .iter()
+            .map(|&m| (m, rates[m.index()]))
+            .filter(|&(_, r)| r > 0.0)
+            .collect();
+        let duration = 6.0;
+        let cfg = FleetConfig { window_s: 2.0, rebalance: false, ..Default::default() };
+        let mut fleet = FleetEngine::new(
+            &lm,
+            &gt,
+            planner,
+            plan,
+            mux_for(&pairs, duration, 9),
+            duration,
+            &cfg,
+        );
+        fleet.run(duration);
+        let out = fleet.finish();
+        assert!(out.conserved(), "offered != served + dropped");
+        assert_eq!(out.windows.len(), 3);
+        let offered_total: u64 = out.offered.iter().sum();
+        assert!(offered_total > 2_000, "load too small: {offered_total}");
+        // At least two nodes actually served work.
+        let serving_nodes = out
+            .per_node
+            .iter()
+            .filter(|r| {
+                ModelId::ALL
+                    .iter()
+                    .map(|&m| r.model(m).map_or(0, |mm| mm.served))
+                    .sum::<u64>()
+                    > 0
+            })
+            .count();
+        assert!(serving_nodes >= 2, "only {serving_nodes} nodes served");
+        // Windowed offered counts sum to the total.
+        let windowed: u64 = out
+            .windows
+            .iter()
+            .flat_map(|w| w.offered.iter())
+            .sum();
+        assert_eq!(windowed, offered_total);
+    }
+
+    #[test]
+    fn auto_rebalance_fires_and_conserves_under_load_shift() {
+        let ctx = SchedCtx::new(4, None);
+        let sched = ElasticPartitioning::gpulet();
+        let lm = LatencyModel::new();
+        let gt = GroundTruth::default();
+        let planner = FleetPlanner::new(&ctx, &sched, 2);
+        // Plan for a light LeNet-only load, then offer much more plus a
+        // second model: the observed rates drift far past the trigger.
+        let plan = planner.plan(&[80.0, 0.0, 0.0, 0.0, 0.0]).unwrap();
+        let pairs = [(ModelId::Lenet, 300.0), (ModelId::Vgg, 60.0)];
+        let duration = 8.0;
+        let cfg = FleetConfig { window_s: 2.0, rebalance: true, ..Default::default() };
+        let mut fleet = FleetEngine::new(
+            &lm,
+            &gt,
+            planner,
+            plan,
+            mux_for(&pairs, duration, 21),
+            duration,
+            &cfg,
+        );
+        fleet.run(duration);
+        assert!(fleet.rebalances() >= 1, "load shift must trigger a rebalance");
+        let out = fleet.finish();
+        assert!(out.conserved(), "conservation must survive rebalances");
+        assert!(out.windows.iter().any(|w| w.rebalanced));
+        // VGG had no placement before the rebalance: its early arrivals
+        // dropped counted, later ones served.
+        let vgg = out.report.model(ModelId::Vgg).unwrap();
+        assert!(vgg.dropped > 0, "pre-rebalance VGG must drop counted");
+        assert!(vgg.served > 0, "post-rebalance VGG must be served");
+    }
+
+    #[test]
+    fn infeasible_rebalance_keeps_serving() {
+        let ctx = SchedCtx::new(4, None);
+        let sched = ElasticPartitioning::gpulet();
+        let lm = LatencyModel::new();
+        let gt = GroundTruth::default();
+        let planner = FleetPlanner::new(&ctx, &sched, 2);
+        let rates = [100.0, 0.0, 0.0, 0.0, 0.0];
+        let plan = planner.plan(&rates).unwrap();
+        let duration = 3.0;
+        let cfg = FleetConfig { window_s: 1.0, rebalance: false, ..Default::default() };
+        let mut fleet = FleetEngine::new(
+            &lm,
+            &gt,
+            planner,
+            plan,
+            mux_for(&[(ModelId::Lenet, 100.0)], duration, 3),
+            duration,
+            &cfg,
+        );
+        fleet.run_until(ms_to_us(1_000.0));
+        assert!(fleet.rebalance(&[1e9; 5]).is_err(), "impossible load must not plan");
+        assert_eq!(fleet.rebalances(), 0);
+        fleet.run_until(ms_to_us(duration * 1000.0));
+        fleet.run_until(
+            ms_to_us(fleet.last_arrival_ms()) + ms_to_us(cfg.sim.drain_ms),
+        );
+        let out = fleet.finish();
+        assert!(out.conserved());
+        let mm = out.report.model(ModelId::Lenet).unwrap();
+        assert!(mm.served > 0, "fleet must keep serving after a failed re-plan");
+    }
+}

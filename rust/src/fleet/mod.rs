@@ -1,0 +1,69 @@
+//! Fleet tier: multi-node serving behind a deterministic front end.
+//!
+//! The paper maximizes *one* server's GPUs via gpu-let spatial
+//! partitioning; production traffic at the ROADMAP's scale means many
+//! such servers behind a front-end router (the regime ParvaGPU targets
+//! for large-scale cloud DNN inference). This module composes N
+//! single-server reproductions into a cluster:
+//!
+//! * [`FleetSpec`] — the topology: N homogeneous nodes × GPUs with a
+//!   per-node scheduler algorithm, loadable from a `[fleet]` TOML
+//!   section (`config::Config::parse`).
+//! * [`FleetPlanner`] — splits each model's offered rate across nodes
+//!   (first-fit-decreasing water-fill guided by the memoized
+//!   `perfmodel::CapacityTable`), validates every loaded node with a
+//!   real per-node `Scheduler::schedule` call, and returns a
+//!   [`FleetPlan`] of per-node schedules plus per-(node, model) rate
+//!   shares — or a proper `Error` when the fleet cannot hold the load.
+//! * [`Router`] — a deterministic arrival splitter: consumes one
+//!   `DynSourceMux` and deals each arrival to a node via deficit-
+//!   bounded quota counters matching the plan shares. Seed-stable and
+//!   byte-reproducible; arrivals for models with no placement are
+//!   dealt uniformly and counted, so the serving engines drop them
+//!   *visibly* — nothing leaves the system silently.
+//! * [`FleetEngine`] — owns N `ServingEngine`s advanced in lockstep on
+//!   the shared µs clock, aggregates per-node reports into one fleet
+//!   report (`Report::merge`), carves per-node `WindowReport`s each
+//!   window, and periodically *rebalances*: re-plans from observed
+//!   per-window rates and applies per-node
+//!   `swap_schedule(…, Migrate)` — the PR 3 epoch-tagged hand-over, so
+//!   backlog migrates and in-flight batches finish under their old
+//!   constants. Queued work is never lost at a rebalance.
+//!
+//! The tier is *conservative*: a 1-node fleet is byte-identical (JSON
+//! report) to `coordinator::simulate_source` on the same mux/seed, and
+//! fleet-wide conservation (`offered == served + dropped`, per model)
+//! holds for any node count, including across mid-trace rebalances —
+//! `tests/fleet_equivalence.rs` pins both.
+
+pub mod engine;
+pub mod planner;
+pub mod router;
+
+use crate::config::Algo;
+
+pub use engine::{FleetConfig, FleetEngine, FleetOutcome, FleetWindowStats};
+pub use planner::{FleetPlan, FleetPlanner};
+pub use router::Router;
+
+/// Fleet topology: N homogeneous nodes, each a paper-testbed-style
+/// multi-GPU server scheduled by `algo`. Loadable from the `[fleet]`
+/// TOML section (`fleet.nodes`, `fleet.gpus_per_node`, `fleet.algo`,
+/// `fleet.rebalance_s`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FleetSpec {
+    /// Number of serving nodes.
+    pub nodes: usize,
+    /// Physical GPUs per node (homogeneous fleet).
+    pub gpus_per_node: usize,
+    /// Per-node scheduling algorithm.
+    pub algo: Algo,
+    /// Fleet rebalance cadence in seconds (<= 0 disables rebalancing).
+    pub rebalance_s: f64,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        FleetSpec { nodes: 1, gpus_per_node: 4, algo: Algo::GpuletInt, rebalance_s: 20.0 }
+    }
+}

@@ -1,0 +1,420 @@
+//! Deterministic front-end arrival splitter.
+//!
+//! The router consumes ONE merged arrival stream (a [`DynSourceMux`] —
+//! the same pull-based form the serving engine eats) and deals each
+//! arrival to a node with deficit-bounded quota counters matching the
+//! plan's per-(node, model) rate shares:
+//!
+//! * **Quota rule** (Balinski–Young): for model `m` with share vector
+//!   `w`, the `k`-th arrival goes to the node with the highest
+//!   next-share priority `w[n] / (dealt[n] + 1)` among nodes still
+//!   *under quota* (`dealt[n] < k * w[n] / Σw`). The eligible set is
+//!   never empty (the dealt counts sum to `k - 1 < k = Σ quotas`), and
+//!   the resulting counts provably stay within one arrival of the
+//!   ideal fractional split `k·w[n]/Σw` — above by construction, below
+//!   by the quota method's staying-within-the-quota theorem. The
+//!   property test below pins the bound for random shares and node
+//!   counts.
+//! * **Determinism**: no randomness — node choice is a pure function
+//!   of the counters, and exact priority ties resolve to the lowest
+//!   node index. The same mux/seed deals the same arrival to the same
+//!   node, byte-for-byte, regardless of thread count.
+//! * **No placement, no loss**: a model whose plan share is zero
+//!   everywhere is dealt *uniformly* (weight 1 per node) and counted in
+//!   [`Router::unplaced_per_model`]; the receiving engine has no route
+//!   for it and drops it **counted**, exactly like the single-server
+//!   path — fleet conservation (`offered == served + dropped`) holds
+//!   per model with no silent escape hatch.
+//!
+//! Dealt arrivals accumulate in per-node buffers the [`FleetEngine`]
+//! drains each lockstep advance; the buffer high-water mark is tracked
+//! so the windowed dealing footprint stays observable.
+//!
+//! [`FleetEngine`]: super::FleetEngine
+
+use crate::models::ModelId;
+use crate::simclock::{ms_to_us, SimTimeUs};
+use crate::workload::{Arrival, DynSourceMux};
+
+/// Deterministic arrival splitter over one merged source. See the
+/// module docs for the dealing rule.
+pub struct Router {
+    mux: DynSourceMux,
+    nodes: usize,
+    /// Dealing weights per (model, node). A model with no planned
+    /// share anywhere gets uniform weight 1 per node (and is tracked
+    /// as unplaced).
+    weights: [Vec<f64>; 5],
+    /// Σ weights per model.
+    totals: [f64; 5],
+    /// Dealt counts per (model, node) since the last retarget.
+    dealt: [Vec<u64>; 5],
+    /// Σ dealt per model since the last retarget.
+    dealt_model: [u64; 5],
+    /// Lifetime offered counts per model (survives retargets).
+    offered: [u64; 5],
+    /// Offered counts since the last `take_window_dealt`.
+    window: [u64; 5],
+    /// Lifetime dealt counts for models with no placement.
+    unplaced: [u64; 5],
+    placed: [bool; 5],
+    /// Per-node staging buffers (drained by the fleet engine).
+    buffers: Vec<Vec<Arrival>>,
+    /// High-water mark of total buffered arrivals.
+    peak_buffered: usize,
+}
+
+impl Router {
+    /// A router dealing by the plan's per-(node, model) rate shares
+    /// (`node_rates[node][model.index()]`, req/s — only ratios matter).
+    pub fn new(mux: DynSourceMux, node_rates: &[[f64; 5]]) -> Self {
+        let nodes = node_rates.len();
+        assert!(nodes >= 1, "router needs at least one node");
+        let mut r = Router {
+            mux,
+            nodes,
+            weights: Default::default(),
+            totals: [0.0; 5],
+            dealt: Default::default(),
+            dealt_model: [0; 5],
+            offered: [0; 5],
+            window: [0; 5],
+            unplaced: [0; 5],
+            placed: [false; 5],
+            buffers: (0..nodes).map(|_| Vec::new()).collect(),
+            peak_buffered: 0,
+        };
+        r.retarget(node_rates);
+        r
+    }
+
+    /// Re-target the split to a new plan's shares (fleet rebalance).
+    /// The deficit counters restart — the new shares govern the split
+    /// from here on, exactly like the serving engine rebuilds its route
+    /// counters at a schedule swap. Buffered (already-dealt) arrivals
+    /// stay where they were dealt.
+    pub fn retarget(&mut self, node_rates: &[[f64; 5]]) {
+        assert_eq!(node_rates.len(), self.nodes, "retarget must keep the node count");
+        for m in ModelId::ALL {
+            let mi = m.index();
+            let w: Vec<f64> = node_rates.iter().map(|r| r[mi].max(0.0)).collect();
+            let total: f64 = w.iter().sum();
+            self.placed[mi] = total > 0.0;
+            if self.placed[mi] {
+                self.weights[mi] = w;
+                self.totals[mi] = total;
+            } else {
+                // Unplaced: deal uniformly so the engines can drop it
+                // counted — never swallowed at the front end.
+                self.weights[mi] = vec![1.0; self.nodes];
+                self.totals[mi] = self.nodes as f64;
+            }
+            self.dealt[mi].clear();
+            self.dealt[mi].resize(self.nodes, 0);
+            self.dealt_model[mi] = 0;
+        }
+    }
+
+    /// Balinski–Young quota pick for one arrival of model `mi`: highest
+    /// next-share priority among under-quota nodes, ties to the lowest
+    /// index.
+    fn pick(&self, mi: usize) -> usize {
+        let w = &self.weights[mi];
+        let total = self.totals[mi];
+        let k = (self.dealt_model[mi] + 1) as f64;
+        let mut best: Option<usize> = None;
+        let mut best_priority = f64::NEG_INFINITY;
+        for ni in 0..self.nodes {
+            if w[ni] <= 0.0 {
+                continue;
+            }
+            let quota = k * w[ni] / total;
+            if (self.dealt[mi][ni] as f64) >= quota {
+                continue; // at upper quota — ineligible this round
+            }
+            let priority = w[ni] / (self.dealt[mi][ni] + 1) as f64;
+            if priority > best_priority {
+                best_priority = priority;
+                best = Some(ni);
+            }
+        }
+        // The eligible set cannot be empty: Σ dealt = k-1 < k = Σ quota,
+        // so some node is under quota. The fallback only guards float
+        // edge cases at exact quota boundaries.
+        best.unwrap_or_else(|| {
+            (0..self.nodes)
+                .filter(|&ni| w[ni] > 0.0)
+                .min_by(|&a, &b| {
+                    let ka = self.dealt[mi][a] as f64 / w[a];
+                    let kb = self.dealt[mi][b] as f64 / w[b];
+                    ka.total_cmp(&kb)
+                })
+                .expect("model has at least one positive dealing weight")
+        })
+    }
+
+    /// Deal every arrival with µs time <= `t_us` into the per-node
+    /// buffers (the boundary convention matches the serving engine's
+    /// `run_until`, so dealing and serving agree on which side of a
+    /// window cut an arrival lands).
+    pub fn deal_until(&mut self, t_us: SimTimeUs) {
+        while self.mux.peek_time_ms().is_some_and(|t| ms_to_us(t) <= t_us) {
+            let a = self.mux.pull().expect("peeked arrival vanished");
+            let mi = a.model.index();
+            let ni = self.pick(mi);
+            self.dealt[mi][ni] += 1;
+            self.dealt_model[mi] += 1;
+            self.offered[mi] += 1;
+            self.window[mi] += 1;
+            if !self.placed[mi] {
+                self.unplaced[mi] += 1;
+            }
+            self.buffers[ni].push(a);
+        }
+        let buffered: usize = self.buffers.iter().map(Vec::len).sum();
+        self.peak_buffered = self.peak_buffered.max(buffered);
+    }
+
+    /// Deal the rest of the source unconditionally.
+    pub fn deal_all(&mut self) {
+        self.deal_until(SimTimeUs::MAX);
+    }
+
+    /// Take node `n`'s staged arrivals (time-ordered — the mux pulls in
+    /// nondecreasing time order and dealing preserves it per node).
+    pub fn take_buffer(&mut self, node: usize) -> Vec<Arrival> {
+        std::mem::take(&mut self.buffers[node])
+    }
+
+    /// Offered counts per model since the last call (windowed rate
+    /// observation for rebalancing).
+    pub fn take_window_dealt(&mut self) -> [u64; 5] {
+        std::mem::replace(&mut self.window, [0; 5])
+    }
+
+    /// Lifetime offered (dealt) counts per model.
+    pub fn offered_per_model(&self) -> [u64; 5] {
+        self.offered
+    }
+
+    /// Lifetime dealt counts for models that had no placement at deal
+    /// time (the engines drop these, counted).
+    pub fn unplaced_per_model(&self) -> [u64; 5] {
+        self.unplaced
+    }
+
+    /// Dealt counts per node for one model since the last retarget.
+    pub fn dealt_counts(&self, m: ModelId) -> &[u64] {
+        &self.dealt[m.index()]
+    }
+
+    /// Time of the next undealt arrival, if any.
+    pub fn peek_time_ms(&self) -> Option<f64> {
+        self.mux.peek_time_ms()
+    }
+
+    /// Time of the last dealt arrival (0.0 before the first) — the
+    /// fleet's drain horizon anchor, same contract as the mux's.
+    pub fn last_arrival_ms(&self) -> f64 {
+        self.mux.last_arrival_ms()
+    }
+
+    /// True when the source is dry.
+    pub fn is_exhausted(&self) -> bool {
+        self.mux.is_exhausted()
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// High-water mark of simultaneously buffered (dealt, not yet
+    /// drained) arrivals.
+    pub fn peak_buffered(&self) -> usize {
+        self.peak_buffered
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_mini as pt;
+    use crate::workload::{dyn_sources, poisson_streams, MaterializedSource, SourceMux};
+
+    fn lenet_trace(k: usize) -> DynSourceMux {
+        let arrivals: Vec<Arrival> = (0..k)
+            .map(|i| Arrival { time_ms: i as f64, model: ModelId::Lenet, id: i as u64 })
+            .collect();
+        DynSourceMux::of_trace(arrivals)
+    }
+
+    fn node_rates_for(weights: &[f64]) -> Vec<[f64; 5]> {
+        weights
+            .iter()
+            .map(|&w| {
+                let mut r = [0.0; 5];
+                r[ModelId::Lenet.index()] = w;
+                r
+            })
+            .collect()
+    }
+
+    /// Satellite property: for random plan shares and node counts, the
+    /// dealt counts per node stay within 1 of the deficit-ideal share
+    /// `k * w[n] / Σw`, and the per-model totals equal the source's.
+    #[test]
+    fn dealt_counts_stay_within_one_of_ideal_share() {
+        #[derive(Clone, Debug)]
+        struct Case {
+            weights: Vec<f64>,
+            k: usize,
+        }
+        pt::run(
+            pt::Config { cases: 128, ..Default::default() },
+            |rng| {
+                let n = 1 + rng.below(6);
+                let weights: Vec<f64> =
+                    (0..n).map(|_| 0.05 + rng.f64() * 4.0).collect();
+                Case { weights, k: 1 + rng.below(400) }
+            },
+            |c| {
+                let mut out = Vec::new();
+                if c.k > 1 {
+                    out.push(Case { k: c.k / 2, ..c.clone() });
+                }
+                if c.weights.len() > 1 {
+                    for i in 0..c.weights.len() {
+                        let mut w = c.weights.clone();
+                        w.remove(i);
+                        out.push(Case { weights: w, k: c.k });
+                    }
+                }
+                out
+            },
+            |c| {
+                let mut router = Router::new(lenet_trace(c.k), &node_rates_for(&c.weights));
+                router.deal_all();
+                let total_w: f64 = c.weights.iter().sum();
+                let counts = router.dealt_counts(ModelId::Lenet);
+                let dealt_total: u64 = counts.iter().sum();
+                if dealt_total != c.k as u64 {
+                    return Err(format!("dealt {dealt_total} of {} arrivals", c.k));
+                }
+                for (ni, &w) in c.weights.iter().enumerate() {
+                    let ideal = c.k as f64 * w / total_w;
+                    let got = counts[ni] as f64;
+                    if (got - ideal).abs() > 1.0 + 1e-6 {
+                        return Err(format!(
+                            "node {ni}: dealt {got} vs ideal {ideal:.3} (k={}, w={:?})",
+                            c.k, c.weights
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn zero_share_nodes_receive_nothing() {
+        let mut router = Router::new(lenet_trace(100), &node_rates_for(&[2.0, 0.0, 1.0]));
+        router.deal_all();
+        let counts = router.dealt_counts(ModelId::Lenet);
+        assert_eq!(counts[1], 0, "zero-share node must stay empty");
+        assert_eq!(counts.iter().sum::<u64>(), 100);
+        assert!(router.take_buffer(1).is_empty());
+        // 2:1 split within one arrival of ideal.
+        assert!((counts[0] as f64 - 100.0 * 2.0 / 3.0).abs() <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn unplaced_models_deal_uniformly_and_are_counted() {
+        // Shares only for LeNet; VGG arrivals have no placement.
+        let arrivals: Vec<Arrival> = (0..60)
+            .map(|i| Arrival {
+                time_ms: i as f64,
+                model: if i % 2 == 0 { ModelId::Lenet } else { ModelId::Vgg },
+                id: i as u64,
+            })
+            .collect();
+        let mut router =
+            Router::new(DynSourceMux::of_trace(arrivals), &node_rates_for(&[1.0, 1.0]));
+        router.deal_all();
+        let unplaced = router.unplaced_per_model();
+        assert_eq!(unplaced[ModelId::Vgg.index()], 30);
+        assert_eq!(unplaced[ModelId::Lenet.index()], 0);
+        // Uniform dealing: 15 VGG per node.
+        let vgg = router.dealt_counts(ModelId::Vgg);
+        assert_eq!(vgg, &[15, 15]);
+        let offered = router.offered_per_model();
+        assert_eq!(offered[ModelId::Lenet.index()], 30);
+        assert_eq!(offered[ModelId::Vgg.index()], 30);
+    }
+
+    #[test]
+    fn dealing_is_byte_reproducible_and_time_ordered() {
+        let pairs = [(ModelId::Lenet, 120.0), (ModelId::Vgg, 45.0)];
+        let shares = [[80.0, 0.0, 0.0, 0.0, 30.0], [40.0, 0.0, 0.0, 0.0, 15.0]];
+        let deal = || {
+            let mux = SourceMux::new(dyn_sources(
+                poisson_streams(&pairs, 4.0, 77).unwrap(),
+            ));
+            let mut router = Router::new(mux, &shares);
+            router.deal_all();
+            (router.take_buffer(0), router.take_buffer(1))
+        };
+        let (a0, a1) = deal();
+        let (b0, b1) = deal();
+        assert_eq!(a0, b0, "same seed must deal identically");
+        assert_eq!(a1, b1);
+        for chunk in [&a0, &a1] {
+            assert!(!chunk.is_empty());
+            assert!(
+                chunk.windows(2).all(|w| w[0].time_ms <= w[1].time_ms),
+                "per-node chunks must stay time-ordered"
+            );
+        }
+    }
+
+    #[test]
+    fn retarget_restarts_counters_and_keeps_buffers() {
+        let mut router =
+            Router::new(lenet_trace(40), &node_rates_for(&[1.0, 1.0]));
+        router.deal_until(ms_to_us(19.0)); // first 20 arrivals
+        assert_eq!(router.dealt_counts(ModelId::Lenet).iter().sum::<u64>(), 20);
+        // Retarget everything onto node 1.
+        router.retarget(&node_rates_for(&[0.0, 1.0]));
+        assert_eq!(router.dealt_counts(ModelId::Lenet), &[0, 0]);
+        router.deal_all();
+        assert_eq!(router.dealt_counts(ModelId::Lenet), &[0, 20]);
+        // Pre-retarget deals stayed in node 0's buffer.
+        assert_eq!(router.take_buffer(0).len(), 10);
+        assert_eq!(router.take_buffer(1).len(), 30);
+        assert_eq!(router.offered_per_model()[ModelId::Lenet.index()], 40);
+    }
+
+    #[test]
+    fn single_node_router_passes_everything_through_in_order() {
+        let mux = SourceMux::new(dyn_sources(
+            poisson_streams(&[(ModelId::Lenet, 200.0)], 2.0, 5).unwrap(),
+        ));
+        let reference: Vec<Arrival> = mux.clone().materialize();
+        let mut router = Router::new(mux, &node_rates_for(&[1.0]));
+        router.deal_all();
+        assert_eq!(router.take_buffer(0), reference);
+        assert!(router.is_exhausted());
+        assert_eq!(router.last_arrival_ms(), reference.last().unwrap().time_ms);
+    }
+
+    #[test]
+    fn materialized_source_is_usable_directly() {
+        // The router's mux contract is the engine's: any DynSourceMux,
+        // including a single materialized stream.
+        let arrivals =
+            vec![Arrival { time_ms: 1.0, model: ModelId::Resnet, id: 0 }];
+        let mux = SourceMux::new(dyn_sources(vec![MaterializedSource::new(arrivals)]));
+        let mut router = Router::new(mux, &[[0.0, 0.0, 5.0, 0.0, 0.0]]);
+        router.deal_all();
+        assert_eq!(router.dealt_counts(ModelId::Resnet), &[1]);
+    }
+}

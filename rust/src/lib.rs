@@ -39,6 +39,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod experiments;
+pub mod fleet;
 pub mod gpu;
 pub mod interference;
 pub mod metrics;

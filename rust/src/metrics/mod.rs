@@ -89,6 +89,24 @@ impl ModelMetrics {
     pub fn max_ms(&self) -> f64 {
         self.hist.max()
     }
+
+    /// Fold another node's accounting for the same model into this one.
+    /// Counters add; the latency histograms merge bin-exactly, so the
+    /// combined percentiles equal a single-pass histogram over both
+    /// sample sets (see [`Histogram::merge`]) — fleet aggregation cannot
+    /// skew p50/p99 beyond what one server's binning already does.
+    pub fn merge(&mut self, other: &ModelMetrics) {
+        debug_assert!(
+            (self.slo_ms - other.slo_ms).abs() < 1e-9,
+            "merging model metrics with mismatched SLOs ({} vs {})",
+            self.slo_ms,
+            other.slo_ms,
+        );
+        self.served += other.served;
+        self.violations += other.violations;
+        self.dropped += other.dropped;
+        self.hist.merge(&other.hist);
+    }
 }
 
 /// Whole-run metrics: one `ModelMetrics` per served model.
@@ -150,6 +168,19 @@ impl Report {
             .map(|m| m.served - m.violations)
             .sum();
         good as f64 / self.window_s
+    }
+
+    /// Fold another report into this one, per model: counters add and
+    /// latency histograms merge bin-exactly. This is how the fleet tier
+    /// aggregates N per-node reports into one fleet view — merging a
+    /// single report into an empty one reproduces it byte-for-byte
+    /// (same JSON), so a 1-node fleet is indistinguishable from a
+    /// single server. `self.window_s` is kept: the caller sets the
+    /// fleet-wide measurement window when constructing the target.
+    pub fn merge(&mut self, other: &Report) {
+        for (&m, mm) in &other.models {
+            self.model_mut(m, mm.slo_ms).merge(mm);
+        }
     }
 
     /// Counters-only snapshot for later [`Report::snapshot_window`]
@@ -345,6 +376,67 @@ mod tests {
         let w0 = r.snapshot_window(&r.counters(), 20.0);
         assert_eq!(w0.total(), 0);
         assert_eq!(w0.violation_rate(), 0.0);
+    }
+
+    #[test]
+    fn merge_empty_report_is_identity_both_ways() {
+        let mut r = Report::new(5.0);
+        let mm = r.model_mut(ModelId::Lenet, 5.0);
+        mm.record(1.0);
+        mm.record(7.0); // violation
+        mm.record_drop();
+        let json = r.to_json().to_string();
+        // Empty into full: identity.
+        r.merge(&Report::new(5.0));
+        assert_eq!(r.to_json().to_string(), json);
+        // Full into empty (same window): byte-identical reproduction —
+        // the property the 1-node fleet equivalence rests on.
+        let mut fresh = Report::new(5.0);
+        fresh.merge(&r);
+        assert_eq!(fresh.to_json().to_string(), json);
+    }
+
+    #[test]
+    fn merge_matches_single_report_accounting() {
+        // Two "nodes" vs one server recording the same outcomes: every
+        // counter, rate, and interpolated percentile must agree exactly.
+        // (Latencies are multiples of 0.5 ms so the running sums — and
+        // therefore the JSON means — are bit-exact under any addition
+        // order.)
+        let mut one = Report::new(10.0);
+        let mut a = Report::new(10.0);
+        let mut b = Report::new(10.0);
+        for i in 0..40u64 {
+            let ms = 1.0 + ((i * 7) % 18) as f64 * 0.5;
+            one.model_mut(ModelId::Lenet, 5.0).record(ms);
+            let node = if i % 2 == 0 { &mut a } else { &mut b };
+            node.model_mut(ModelId::Lenet, 5.0).record(ms);
+        }
+        one.model_mut(ModelId::Vgg, 130.0).record(50.0);
+        b.model_mut(ModelId::Vgg, 130.0).record(50.0);
+        one.model_mut(ModelId::Vgg, 130.0).record_drop();
+        a.model_mut(ModelId::Vgg, 130.0).record_drop();
+        let mut merged = Report::new(10.0);
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged.to_json().to_string(), one.to_json().to_string());
+        assert_eq!(merged.overall_violation_rate(), one.overall_violation_rate());
+        assert_eq!(merged.throughput_rps(), one.throughput_rps());
+    }
+
+    #[test]
+    fn merge_keeps_overflow_latencies_honest() {
+        // A straggler past the histogram's counted bins on one node must
+        // surface as the merged report's max / high percentiles.
+        let mut a = Report::new(1.0);
+        a.model_mut(ModelId::Resnet, 95.0).record(10.0);
+        let mut b = Report::new(1.0);
+        b.model_mut(ModelId::Resnet, 95.0).record(5_000.0); // overflow bin
+        a.merge(&b);
+        let mm = a.model(ModelId::Resnet).unwrap();
+        assert_eq!(mm.served, 2);
+        assert_eq!(mm.max_ms(), 5_000.0);
+        assert_eq!(mm.p99_ms(), 5_000.0);
     }
 
     #[test]

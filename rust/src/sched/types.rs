@@ -123,7 +123,7 @@ pub fn squish_plan(
 }
 
 /// A complete scheduling decision for the cluster.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Schedule {
     pub lets: Vec<LetPlan>,
 }

@@ -196,6 +196,33 @@ impl Histogram {
         self.sum = 0.0;
         self.max = 0.0;
     }
+
+    /// Fold `other` into `self` bin-by-bin. Because binning is
+    /// deterministic, the merged histogram is *exactly* the histogram
+    /// that would have recorded both sample sets in one pass — so the
+    /// interpolated percentiles of a fleet-merged report equal those of
+    /// an equivalent single-server run, never an approximation of an
+    /// approximation. Both histograms must share the same bin geometry
+    /// (all serving metrics use one configuration).
+    pub fn merge(&mut self, other: &Histogram) {
+        assert!(
+            self.bin_width == other.bin_width && self.bins.len() == other.bins.len(),
+            "merging histograms with different bin geometry ({} x {} vs {} x {})",
+            self.bin_width,
+            self.bins.len(),
+            other.bin_width,
+            other.bins.len(),
+        );
+        for (b, o) in self.bins.iter_mut().zip(other.bins.iter()) {
+            *b += o;
+        }
+        self.overflow += other.overflow;
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -321,6 +348,86 @@ mod tests {
         let p75 = h.percentile(75.0);
         assert!((1.0..2.0).contains(&p75), "p75={p75}");
         assert_eq!(h.percentile(100.0), 1.5); // capped at the true max
+    }
+
+    #[test]
+    fn histogram_merge_empty_into_full_and_back() {
+        let mut full = Histogram::new(0.5, 100);
+        for i in 1..=20 {
+            full.record(i as f64 * 0.3);
+        }
+        let snapshot = (full.count(), full.mean(), full.max(), full.percentile(50.0));
+        // Merging an empty histogram is the identity…
+        let empty = Histogram::new(0.5, 100);
+        full.merge(&empty);
+        assert_eq!(
+            (full.count(), full.mean(), full.max(), full.percentile(50.0)),
+            snapshot
+        );
+        // …and merging into an empty one reproduces the original.
+        let mut target = Histogram::new(0.5, 100);
+        target.merge(&full);
+        assert_eq!(
+            (target.count(), target.mean(), target.max(), target.percentile(50.0)),
+            snapshot
+        );
+        assert_eq!(target.percentile(99.0), full.percentile(99.0));
+    }
+
+    #[test]
+    fn histogram_merge_combines_overflow_bins_and_true_max() {
+        let mut a = Histogram::new(1.0, 4);
+        a.record(0.5);
+        a.record(50.0); // overflow
+        let mut b = Histogram::new(1.0, 4);
+        b.record(80.0); // overflow, larger true max
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max(), 80.0);
+        // Ranks landing in the merged overflow mass report the merged
+        // true maximum (there is no upper edge to interpolate against).
+        assert_eq!(a.percentile(99.0), 80.0);
+        assert_eq!(a.percentile(100.0), 80.0);
+        // Low ranks still resolve inside the counted bins.
+        let p10 = a.percentile(10.0);
+        assert!((0.0..1.0).contains(&p10), "p10={p10}");
+    }
+
+    #[test]
+    fn histogram_merge_percentiles_match_single_pass() {
+        // Interpolated-percentile stability: merging two histograms is
+        // byte-for-byte the histogram of the concatenated samples, so
+        // every percentile matches the single-pass answer exactly.
+        // (Samples are multiples of 0.5 so the running sums are exact
+        // and even the means compare bit-for-bit.)
+        let samples_a: Vec<f64> = (0..250).map(|i| ((i * 7) % 180) as f64 * 0.5).collect();
+        let samples_b: Vec<f64> = (0..175).map(|i| 40.0 + ((i * 13) % 120) as f64 * 0.5).collect();
+        let mut one_pass = Histogram::new(0.5, 2000);
+        let mut a = Histogram::new(0.5, 2000);
+        let mut b = Histogram::new(0.5, 2000);
+        for &x in &samples_a {
+            one_pass.record(x);
+            a.record(x);
+        }
+        for &x in &samples_b {
+            one_pass.record(x);
+            b.record(x);
+        }
+        a.merge(&b);
+        for q in [0.0, 1.0, 25.0, 50.0, 75.0, 90.0, 99.0, 99.9, 100.0] {
+            assert_eq!(a.percentile(q), one_pass.percentile(q), "q={q}");
+        }
+        assert_eq!(a.count(), one_pass.count());
+        assert_eq!(a.mean(), one_pass.mean());
+        assert_eq!(a.max(), one_pass.max());
+    }
+
+    #[test]
+    #[should_panic(expected = "different bin geometry")]
+    fn histogram_merge_rejects_mismatched_geometry() {
+        let mut a = Histogram::new(0.5, 100);
+        let b = Histogram::new(1.0, 100);
+        a.merge(&b);
     }
 
     #[test]

@@ -1,0 +1,209 @@
+//! Fleet-tier conservativeness.
+//!
+//! The fleet layer must add *scale*, never *drift*: a 1-node fleet is
+//! byte-identical (JSON report) to the single-server
+//! `simulate_source` on the same mux/seed — router, lockstep windows,
+//! and report merging are all pass-throughs at N=1 — and for N ∈
+//! {1, 2, 4} fleet-wide conservation (`offered == served + dropped`,
+//! exactly, per model) holds including across a mid-trace rebalance
+//! (per-node `swap_schedule(…, Migrate)` + router re-target). Routing
+//! is a pure function of the seed: re-running a fleet reproduces the
+//! same bytes regardless of the worker-pool thread count.
+
+use gpulets::coordinator::{simulate_source, SimConfig};
+use gpulets::fleet::{FleetConfig, FleetEngine, FleetPlanner};
+use gpulets::interference::GroundTruth;
+use gpulets::models::ModelId;
+use gpulets::perfmodel::LatencyModel;
+use gpulets::sched::{ElasticPartitioning, SchedCtx};
+use gpulets::simclock::ms_to_us;
+use gpulets::workload::{dyn_sources, poisson_streams, DynSourceMux, SourceMux};
+
+fn mux_for(pairs: &[(ModelId, f64)], duration_s: f64, seed: u64) -> DynSourceMux {
+    SourceMux::new(dyn_sources(poisson_streams(pairs, duration_s, seed).unwrap()))
+}
+
+fn assert_conserved_per_model(out: &gpulets::fleet::FleetOutcome) {
+    let (served, dropped) = out.served_dropped();
+    for m in ModelId::ALL {
+        let i = m.index();
+        assert_eq!(
+            out.offered[i],
+            served[i] + dropped[i],
+            "{m}: offered {} != served {} + dropped {}",
+            out.offered[i],
+            served[i],
+            dropped[i]
+        );
+    }
+}
+
+/// A 1-node fleet — windowed lockstep, router pass-through, report
+/// merge — must reproduce the single-server one-shot byte-for-byte,
+/// including the drop accounting for a model the plan does not place
+/// (VGG streams in but only LeNet/ResNet are planned).
+#[test]
+fn one_node_fleet_byte_identical_to_simulate_source() {
+    let ctx = SchedCtx::new(2, None);
+    let scheduler = ElasticPartitioning::gpulet();
+    let planner = FleetPlanner::new(&ctx, &scheduler, 1);
+    let rates = [120.0, 0.0, 60.0, 0.0, 0.0];
+    let plan = planner.plan(&rates).unwrap();
+
+    let pairs = [
+        (ModelId::Lenet, 120.0),
+        (ModelId::Resnet, 60.0),
+        (ModelId::Vgg, 25.0), // no placement: dropped counted, both paths
+    ];
+    let duration = 6.0;
+    let seed = 17;
+    let sim = SimConfig::default();
+    let lm = LatencyModel::new();
+    let gt = GroundTruth::default();
+
+    let single = simulate_source(
+        &lm,
+        &gt,
+        &plan.schedules[0],
+        mux_for(&pairs, duration, seed),
+        duration,
+        &sim,
+    )
+    .to_json()
+    .to_string();
+
+    let cfg = FleetConfig {
+        sim: sim.clone(),
+        window_s: 2.0, // three lockstep windows across the trace
+        rebalance: false,
+        ..Default::default()
+    };
+    let mut fleet = FleetEngine::new(
+        &lm,
+        &gt,
+        planner,
+        plan,
+        mux_for(&pairs, duration, seed),
+        duration,
+        &cfg,
+    );
+    fleet.run(duration);
+    let out = fleet.finish();
+
+    assert_eq!(
+        out.per_node[0].to_json().to_string(),
+        single,
+        "1-node fleet's node report diverged from simulate_source"
+    );
+    assert_eq!(
+        out.report.to_json().to_string(),
+        single,
+        "merging one node's report must be the identity"
+    );
+    assert_conserved_per_model(&out);
+    assert!(out.unplaced[ModelId::Vgg.index()] > 0, "VGG must stream in unplaced");
+    let vgg = out.report.model(ModelId::Vgg).unwrap();
+    assert_eq!(vgg.served, 0);
+    assert_eq!(vgg.dropped, out.offered[ModelId::Vgg.index()]);
+}
+
+/// Conservation across the fleet — exactly, per model — for N ∈
+/// {1, 2, 4}, with a deterministic mid-trace rebalance that both
+/// migrates backlog (Migrate swap on every node) and gives a
+/// previously-unplaced model (GoogLeNet) its first routes.
+#[test]
+fn fleet_conserves_across_mid_trace_rebalance() {
+    let lm = LatencyModel::new();
+    let gt = GroundTruth::default();
+    let ctx = SchedCtx::new(4, None);
+    let scheduler = ElasticPartitioning::gpulet();
+    let initial = [300.0, 0.0, 90.0, 0.0, 60.0];
+    let retarget = [150.0, 40.0, 80.0, 0.0, 50.0];
+    let pairs = [
+        (ModelId::Lenet, 300.0),
+        (ModelId::Googlenet, 40.0), // unplaced until the rebalance
+        (ModelId::Resnet, 90.0),
+        (ModelId::Vgg, 60.0),
+    ];
+    let duration = 6.0;
+    let sim = SimConfig::default();
+
+    for nodes in [1usize, 2, 4] {
+        let planner = FleetPlanner::new(&ctx, &scheduler, nodes);
+        let plan = planner.plan(&initial).unwrap();
+        let cfg = FleetConfig { sim: sim.clone(), rebalance: false, ..Default::default() };
+        let mut fleet = FleetEngine::new(
+            &lm,
+            &gt,
+            planner,
+            plan,
+            mux_for(&pairs, duration, 23),
+            duration,
+            &cfg,
+        );
+        fleet.run_until(ms_to_us(2_500.0));
+        fleet.rebalance(&retarget).unwrap();
+        assert_eq!(fleet.rebalances(), 1);
+        fleet.run_until(ms_to_us(duration * 1000.0));
+        fleet.run_until(ms_to_us(fleet.last_arrival_ms()) + ms_to_us(sim.drain_ms));
+        let out = fleet.finish();
+
+        assert_conserved_per_model(&out);
+        let goo = out.report.model(ModelId::Googlenet).unwrap();
+        assert!(goo.dropped > 0, "n={nodes}: pre-rebalance GoogLeNet must drop counted");
+        assert!(goo.served > 0, "n={nodes}: post-rebalance GoogLeNet must be served");
+        // The placed models kept flowing through the hand-over.
+        for m in [ModelId::Lenet, ModelId::Resnet, ModelId::Vgg] {
+            let mm = out.report.model(m).unwrap();
+            assert!(mm.served > 0, "n={nodes}: {m} served nothing");
+        }
+    }
+}
+
+/// Routing (and everything downstream of it) is a pure function of the
+/// seed: the exact same bytes come out regardless of the experiment
+/// worker-pool thread count (`--threads` only parallelizes sweeps; the
+/// fleet path never touches the pool).
+#[test]
+fn fleet_reports_are_seed_stable_across_thread_counts() {
+    let lm = LatencyModel::new();
+    let gt = GroundTruth::default();
+    let ctx = SchedCtx::new(4, None);
+    let scheduler = ElasticPartitioning::gpulet();
+    let rates = [200.0, 0.0, 80.0, 0.0, 40.0];
+    let pairs = [
+        (ModelId::Lenet, 200.0),
+        (ModelId::Resnet, 80.0),
+        (ModelId::Vgg, 40.0),
+    ];
+    let duration = 4.0;
+
+    let run_fleet = || {
+        let planner = FleetPlanner::new(&ctx, &scheduler, 3);
+        let plan = planner.plan(&rates).unwrap();
+        let cfg = FleetConfig { window_s: 1.0, rebalance: true, ..Default::default() };
+        let mut fleet = FleetEngine::new(
+            &lm,
+            &gt,
+            planner,
+            plan,
+            mux_for(&pairs, duration, 41),
+            duration,
+            &cfg,
+        );
+        fleet.run(duration);
+        let out = fleet.finish();
+        let per_node: Vec<String> =
+            out.per_node.iter().map(|r| r.to_json().to_string()).collect();
+        (out.report.to_json().to_string(), per_node, out.offered, out.rebalances)
+    };
+
+    gpulets::util::par::set_threads(1);
+    let a = run_fleet();
+    gpulets::util::par::set_threads(4);
+    let b = run_fleet();
+    assert_eq!(a.0, b.0, "fleet report must not depend on thread count");
+    assert_eq!(a.1, b.1, "per-node reports must not depend on thread count");
+    assert_eq!(a.2, b.2, "routing must not depend on thread count");
+    assert_eq!(a.3, b.3, "rebalance history must not depend on thread count");
+}
