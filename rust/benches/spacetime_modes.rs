@@ -1,0 +1,9 @@
+//! Bench target for the space-time comparison: the Fig-12/13 workloads
+//! under spatial-only / temporal-only / combined scheduling at a zero
+//! violation budget; writes BENCH_spacetime_modes.json. Diff across PRs
+//! with `gpulets bench-compare`.
+use gpulets::experiments::{common, spacetime};
+
+fn main() {
+    common::run_and_write(&spacetime::Experiment, 0, 1).expect("spacetime bench");
+}

@@ -1,8 +1,9 @@
 //! `gpulets` — CLI launcher for the gpu-let inference serving stack.
 //!
 //! ```text
-//! gpulets run-fig <03|04|05|06|09|12|13|14|15|16|fleet_scale|all|list>
-//! gpulets sweep [--scheduler <gpulet|gpulet+int|sbp|sbp+part|selftune|ideal|all>] [--gpus N]
+//! gpulets run-fig <03|04|05|06|09|12|13|14|15|16|fleet_scale|spacetime|all|list>
+//! gpulets sweep [--scheduler <gpulet|gpulet+int|sbp|sbp+part|selftune|ideal|spacetime|all>]
+//!               [--gpus N]
 //! gpulets serve [--scenario <equal|long-only|short-skew|game|traffic>] [--scale K]
 //!               [--config <toml>] [--algo A] [--gpus N] [--duration S] [--seed X]
 //!               [--rate model=R ...]
@@ -30,10 +31,7 @@ use gpulets::fleet::{FleetConfig, FleetEngine, FleetPlanner};
 use gpulets::interference::GroundTruth;
 use gpulets::models::ModelId;
 use gpulets::runtime::{Engine, ModelRegistry};
-use gpulets::sched::{
-    ElasticPartitioning, GuidedSelfTuning, IdealScheduler, SchedCtx, Scheduler,
-    SquishyBinPacking,
-};
+use gpulets::sched::{SchedCtx, Scheduler};
 use gpulets::util::benchkit;
 use gpulets::util::json::{obj, Json};
 use gpulets::workload::{
@@ -98,7 +96,7 @@ fn print_usage() {
         "gpulets — multi-model inference serving with GPU spatial partitioning\n\
          \n\
          USAGE:\n\
-         \x20 gpulets run-fig <03|...|16|fleet_scale|all|list> [--threads N]\n\
+         \x20 gpulets run-fig <03|...|16|fleet_scale|spacetime|all|list> [--threads N]\n\
          \x20 gpulets sweep [--scheduler NAME|all] [--gpus N] [--threads N]\n\
          \x20 gpulets serve [--scenario NAME] [--scale K] [--config F] [--algo A]\n\
          \x20               [--gpus N] [--duration S] [--seed X] [--rate model=R]...\n\
@@ -109,7 +107,7 @@ fn print_usage() {
          \x20 gpulets bench-compare <baseline.json> <fresh.json>\n\
          \x20 gpulets profile | models | scenarios | help\n\
          \n\
-         schedulers: gpulet gpulet+int sbp sbp+part selftune ideal\n\
+         schedulers: gpulet gpulet+int sbp sbp+part selftune ideal spacetime\n\
          scenarios:  equal long-only short-skew game traffic\n\
          \n\
          --threads N caps the experiment worker pool (default: all\n\
@@ -250,25 +248,20 @@ fn experiment(which: &str) -> Result<()> {
     }
 }
 
-/// Build the scheduler + context pair the CLI vocabulary names.
+/// Build the scheduler + context pair the CLI vocabulary names. The
+/// scheduler's own `interference_aware()` decides whether the context
+/// carries the fitted interference model, so new algos get the right
+/// context without touching this function.
 fn scheduler_for(algo: Algo, gpus: usize) -> (Box<dyn Scheduler>, SchedCtx) {
-    let interference_aware = algo == Algo::GpuletInt;
+    let scheduler = algo.scheduler();
     let ctx = SchedCtx::new(
         gpus,
-        if interference_aware {
+        if scheduler.interference_aware() {
             Some(ex::common::fitted_interference())
         } else {
             None
         },
     );
-    let scheduler: Box<dyn Scheduler> = match algo {
-        Algo::Gpulet => Box::new(ElasticPartitioning::gpulet()),
-        Algo::GpuletInt => Box::new(ElasticPartitioning::gpulet_int()),
-        Algo::Sbp => Box::new(SquishyBinPacking::baseline()),
-        Algo::SbpPart => Box::new(SquishyBinPacking::with_even_partitioning()),
-        Algo::Selftune => Box::new(GuidedSelfTuning),
-        Algo::Ideal => Box::new(IdealScheduler),
-    };
     (scheduler, ctx)
 }
 
@@ -310,7 +303,7 @@ fn sweep(args: &[String]) -> Result<()> {
     })?;
 
     let names: Vec<String> = if which == "all" {
-        ["sbp", "sbp+part", "selftune", "gpulet", "gpulet+int", "ideal"]
+        ["sbp", "sbp+part", "selftune", "gpulet", "gpulet+int", "ideal", "spacetime"]
             .iter()
             .map(|s| s.to_string())
             .collect()

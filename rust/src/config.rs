@@ -18,6 +18,7 @@ pub enum Algo {
     SbpPart,
     Selftune,
     Ideal,
+    Spacetime,
 }
 
 impl Algo {
@@ -29,9 +30,11 @@ impl Algo {
             "sbp+part" | "sbp_part" => Algo::SbpPart,
             "selftune" => Algo::Selftune,
             "ideal" => Algo::Ideal,
+            "spacetime" => Algo::Spacetime,
             other => {
                 return Err(crate::error::Error::parse(format!(
-                    "unknown scheduler {other:?} (gpulet|gpulet+int|sbp|sbp+part|selftune|ideal)"
+                    "unknown scheduler {other:?} \
+                     (gpulet|gpulet+int|sbp|sbp+part|selftune|ideal|spacetime)"
                 )))
             }
         })
@@ -45,6 +48,28 @@ impl Algo {
             Algo::SbpPart => "sbp+part",
             Algo::Selftune => "selftune",
             Algo::Ideal => "ideal",
+            Algo::Spacetime => "spacetime",
+        }
+    }
+
+    /// Instantiate the scheduler this algo names — the one
+    /// `Algo`-to-scheduler mapping, shared by the CLI (`--algo`), the
+    /// fleet planner, and the experiment harnesses. The instance's own
+    /// `Scheduler::interference_aware()` says whether its `SchedCtx`
+    /// needs the fitted interference model.
+    pub fn scheduler(self) -> Box<dyn crate::sched::Scheduler> {
+        use crate::sched::{
+            ElasticPartitioning, GuidedSelfTuning, IdealScheduler, SpaceTimeScheduler,
+            SquishyBinPacking,
+        };
+        match self {
+            Algo::Gpulet => Box::new(ElasticPartitioning::gpulet()),
+            Algo::GpuletInt => Box::new(ElasticPartitioning::gpulet_int()),
+            Algo::Sbp => Box::new(SquishyBinPacking::baseline()),
+            Algo::SbpPart => Box::new(SquishyBinPacking::with_even_partitioning()),
+            Algo::Selftune => Box::new(GuidedSelfTuning),
+            Algo::Ideal => Box::new(IdealScheduler),
+            Algo::Spacetime => Box::new(SpaceTimeScheduler::combined()),
         }
     }
 }
@@ -207,6 +232,7 @@ rebalance_s = 5.0
             Algo::SbpPart,
             Algo::Selftune,
             Algo::Ideal,
+            Algo::Spacetime,
         ] {
             assert_eq!(Algo::parse(a.name()).unwrap(), a);
         }

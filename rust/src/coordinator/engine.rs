@@ -1224,4 +1224,52 @@ mod tests {
         let r_reused = run(&mut reused);
         assert_eq!(r_fresh, r_reused, "reset engine must be byte-identical to fresh");
     }
+
+    #[test]
+    fn shared_let_timeout_constants_use_the_summed_duty_cycle() {
+        // White-box pin of the space-time contract at install_schedule:
+        // a two-assignment let's batching timeout must leave room for
+        // the whole duty cycle (own execution plus every co-tenant's
+        // slot), i.e. `slo_timeout_us(slo, E_g + E_v)` — never the
+        // assignment's solo execution. Interference is deliberately
+        // absent from the constants: it is applied stochastically at
+        // execution time.
+        use crate::coordinator::batcher::slo_timeout_us;
+        let (lm, gt) = world();
+        let cfg = SimConfig::default();
+        let mk = |assignments: Vec<Assignment>| Schedule {
+            lets: vec![LetPlan {
+                spec: GpuLetSpec { gpu: 0, size_pct: 100 },
+                assignments,
+            }],
+        };
+        let g = Assignment { model: ModelId::Googlenet, batch: 4, rate: 20.0 };
+        let v = Assignment { model: ModelId::Vgg, batch: 2, rate: 10.0 };
+        let shared = ServingEngine::new(&lm, &gt, mk(vec![g, v]), 1.0, &cfg);
+        let solo = ServingEngine::new(&lm, &gt, mk(vec![v]), 1.0, &cfg);
+
+        let p = exec_fraction(cfg.mode, 1.0);
+        let e_g = ms_to_us(lm.latency_ms(ModelId::Googlenet, 4, p));
+        let e_v = ms_to_us(lm.latency_ms(ModelId::Vgg, 2, p));
+        let duty = e_g + e_v;
+        let slo_g = ms_to_us(lm.slo_ms(ModelId::Googlenet));
+        let slo_v = ms_to_us(lm.slo_ms(ModelId::Vgg));
+
+        // Both co-tenants' timeouts are armed from the summed duty...
+        assert_eq!(shared.consts[0][0].timeout_us, slo_timeout_us(slo_g, duty));
+        assert_eq!(shared.consts[0][1].timeout_us, slo_timeout_us(slo_v, duty));
+        // ...while the execution estimate stays per-assignment.
+        assert_eq!(shared.consts[0][0].exec_est_us, e_g);
+        assert_eq!(shared.consts[0][1].exec_est_us, e_v);
+        // And the shared timeout is strictly tighter than the same
+        // assignment's solo timeout: the co-tenant's slot comes out of
+        // the allowable batching wait.
+        assert_eq!(solo.consts[0][0].timeout_us, slo_timeout_us(slo_v, e_v));
+        assert!(
+            shared.consts[0][1].timeout_us < solo.consts[0][0].timeout_us,
+            "shared timeout {} must be < solo timeout {}",
+            shared.consts[0][1].timeout_us,
+            solo.consts[0][0].timeout_us
+        );
+    }
 }

@@ -15,15 +15,16 @@
 //! the rungs run serially and the router/engines never touch the
 //! worker pool.
 
+use crate::config::Algo;
 use crate::fleet::{FleetConfig, FleetEngine, FleetOutcome, FleetPlanner};
 use crate::interference::GroundTruth;
 use crate::models::ModelId;
 use crate::perfmodel::LatencyModel;
-use crate::sched::{ElasticPartitioning, SchedCtx};
+use crate::sched::SchedCtx;
 use crate::util::json::{obj, Json};
 use crate::workload::{dyn_sources, varying_streams, FluctuationTrace, SourceMux};
 
-use super::common::{Runnable, RunOutput};
+use super::common::{fitted_interference, Runnable, RunOutput};
 
 /// Node counts of the scaling ladder.
 pub const NODES: [usize; 3] = [1, 4, 16];
@@ -39,12 +40,17 @@ pub struct Rung {
     pub wall_s: f64,
 }
 
-/// Run one rung: `nodes` nodes under `nodes`-times Fig-14 traffic.
-pub fn compute(nodes: usize, duration_s: f64, seed: u64) -> crate::error::Result<Rung> {
+/// Run one rung: `nodes` nodes under `nodes`-times Fig-14 traffic,
+/// planned per node by the scheduler `algo` names (any registered algo,
+/// including `spacetime`, can drive the fleet tier).
+pub fn compute(algo: Algo, nodes: usize, duration_s: f64, seed: u64) -> crate::error::Result<Rung> {
     let scale = nodes as f64;
-    let ctx = SchedCtx::new(4, None);
-    let scheduler = ElasticPartitioning::gpulet();
-    let planner = FleetPlanner::new(&ctx, &scheduler, nodes);
+    let scheduler = algo.scheduler();
+    let ctx = SchedCtx::new(
+        4,
+        if scheduler.interference_aware() { Some(fitted_interference()) } else { None },
+    );
+    let planner = FleetPlanner::new(&ctx, scheduler.as_ref(), nodes);
     let trace = FluctuationTrace::default();
     // Initial plan from the trace's t=0 rates; the wave's 3-4x swell is
     // the rebalancer's job, exactly like one node's Fig-14 reorganizer.
@@ -111,7 +117,7 @@ pub fn render(rungs: &[Rung]) -> String {
 pub fn run() -> String {
     let rungs: Vec<Rung> = NODES
         .iter()
-        .map(|&n| compute(n, DURATION_S, 2024).expect("fig14 rates are plannable"))
+        .map(|&n| compute(Algo::Gpulet, n, DURATION_S, 2024).expect("fig14 rates are plannable"))
         .collect();
     render(&rungs)
 }
@@ -120,7 +126,7 @@ pub fn run() -> String {
 pub fn report() -> RunOutput {
     let rungs: Vec<Rung> = NODES
         .iter()
-        .map(|&n| compute(n, DURATION_S, 2024).expect("fig14 rates are plannable"))
+        .map(|&n| compute(Algo::Gpulet, n, DURATION_S, 2024).expect("fig14 rates are plannable"))
         .collect();
     let rows: Vec<Json> = rungs
         .iter()
@@ -187,17 +193,27 @@ mod tests {
     fn short_rung_conserves_and_is_seed_stable() {
         // A 60 s 2-node slice keeps the test quick; the full ladder is
         // the fleet_scale bench / CLI target.
-        let a = compute(2, 60.0, 7).unwrap();
+        let a = compute(Algo::Gpulet, 2, 60.0, 7).unwrap();
         assert!(a.outcome.conserved(), "offered != served + dropped");
         let offered: u64 = a.outcome.offered.iter().sum();
         assert!(offered > 5_000, "load too small: {offered}");
         // Determinism: identical reports and routing for the same seed.
-        let b = compute(2, 60.0, 7).unwrap();
+        let b = compute(Algo::Gpulet, 2, 60.0, 7).unwrap();
         assert_eq!(
             a.outcome.report.to_json().to_string(),
             b.outcome.report.to_json().to_string()
         );
         assert_eq!(a.outcome.offered, b.outcome.offered);
         assert_eq!(a.outcome.rebalances, b.outcome.rebalances);
+    }
+
+    #[test]
+    fn spacetime_algo_drives_the_fleet_tier() {
+        // The fleet planner is scheduler-agnostic; this pins that the
+        // new algo actually plans, serves, and conserves through it.
+        let r = compute(Algo::Spacetime, 2, 30.0, 7).unwrap();
+        assert!(r.outcome.conserved(), "offered != served + dropped");
+        let offered: u64 = r.outcome.offered.iter().sum();
+        assert!(offered > 1_000, "load too small: {offered}");
     }
 }

@@ -18,6 +18,7 @@ pub mod fig14;
 pub mod fig15;
 pub mod fig16;
 pub mod fleet_scale;
+pub mod spacetime;
 pub mod tables;
 
 use common::Runnable;
@@ -37,6 +38,7 @@ pub fn registry() -> Vec<Box<dyn Runnable>> {
         Box::new(fig15::Experiment),
         Box::new(fig16::Experiment),
         Box::new(fleet_scale::Experiment),
+        Box::new(spacetime::Experiment),
     ]
 }
 
@@ -63,15 +65,15 @@ mod tests {
     #[test]
     fn registry_names_and_files_are_unique() {
         let reg = registry();
-        assert_eq!(reg.len(), 11);
+        assert_eq!(reg.len(), 12);
         let mut names: Vec<&str> = reg.iter().map(|e| e.name()).collect();
         let mut files: Vec<&str> = reg.iter().map(|e| e.bench_file()).collect();
         names.sort_unstable();
         names.dedup();
         files.sort_unstable();
         files.dedup();
-        assert_eq!(names.len(), 11);
-        assert_eq!(files.len(), 11);
+        assert_eq!(names.len(), 12);
+        assert_eq!(files.len(), 12);
         assert!(files.iter().all(|f| f.starts_with("BENCH_") && f.ends_with(".json")));
     }
 

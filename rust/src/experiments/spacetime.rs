@@ -1,0 +1,248 @@
+//! Space-time comparison: the Fig-12/13 scenario set rerun under the
+//! three `SpaceTimeScheduler` modes (spatial-only / temporal-only /
+//! combined), reporting each mode's maximum schedulable scale and its
+//! highest zero-violation operating point (DESIGN.md §10).
+//!
+//! The structural claim this harness pins: combined is an acceptance
+//! superset of spatial-only (it delegates to Elastic Partitioning and
+//! only then tries temporal packing), so its schedulable scale and its
+//! achieved throughput are >= spatial-only on every workload.
+
+use crate::sched::{SchedCtx, Scheduler, SpaceTimeScheduler};
+use crate::util::json::{obj, Json};
+
+use super::common::{
+    eval_workloads, max_schedulable, paper_ctx, scaled, violation_rate_of, Achieved,
+    Runnable, RunOutput,
+};
+
+/// Mode order used by every `[_; 3]` array in this module.
+pub const MODE_NAMES: [&str; 3] = ["spatial", "temporal", "combined"];
+
+pub struct Row {
+    pub workload: String,
+    /// Pure-scheduler maximum schedulable scale per mode.
+    pub schedulable: [f64; 3],
+    /// Highest operating point holding the violation budget per mode.
+    pub achieved: [Achieved; 3],
+}
+
+/// Descending probe grid from a scheduler-level maximum (same 24-point
+/// convention as `common::max_achievable_detail`).
+fn grid_from(k_max: f64) -> Vec<f64> {
+    const GRID: usize = 24;
+    if k_max <= 0.0 {
+        return Vec::new();
+    }
+    (1..=GRID).rev().map(|i| k_max * i as f64 / GRID as f64).collect()
+}
+
+/// Highest grid scale whose deployment holds `viol_budget` (grid is
+/// descending, so the first hit wins).
+fn achieved_on(
+    ctx: &SchedCtx,
+    scheduler: &dyn Scheduler,
+    base: &[f64; 5],
+    grid: &[f64],
+    viol_budget: f64,
+    sim_duration_s: f64,
+) -> Achieved {
+    let total_base: f64 = base.iter().sum();
+    for &k in grid {
+        let rates = scaled(base, k);
+        if let Ok(s) = scheduler.schedule(ctx, &rates) {
+            let v = violation_rate_of(ctx, &s, &rates, sim_duration_s, 99);
+            if v <= viol_budget {
+                return Achieved {
+                    scale: k,
+                    total_rps: k * total_base,
+                    violation_rate: Some(v),
+                };
+            }
+        }
+    }
+    Achieved { scale: 0.0, total_rps: 0.0, violation_rate: None }
+}
+
+pub fn compute(viol_budget: f64, sim_duration_s: f64) -> Vec<Row> {
+    // Every spacetime mode plans interference-aware (the temporal
+    // feasibility check inflates duty cycles by predicted interference).
+    let ctx = paper_ctx(true);
+    let modes = [
+        SpaceTimeScheduler::spatial_only(),
+        SpaceTimeScheduler::temporal_only(),
+        SpaceTimeScheduler::combined(),
+    ];
+
+    // Workloads are independent: fan out over the worker pool; rows
+    // come back in workload order regardless of thread count.
+    let workloads = eval_workloads();
+    let probed = crate::util::par::par_map(&workloads, |(_, base)| {
+        let k_sp = max_schedulable(&ctx, &modes[0], base);
+        let k_tm = max_schedulable(&ctx, &modes[1], base);
+        // Combined accepts everything spatial-only does (elastic-first
+        // delegation), so its schedulable scale is >= spatial's; the
+        // max() keeps that structural against bisection round-off.
+        let k_cb = max_schedulable(&ctx, &modes[2], base).max(k_sp);
+
+        let sp = achieved_on(&ctx, &modes[0], base, &grid_from(k_sp), viol_budget, sim_duration_s);
+        let tm = achieved_on(&ctx, &modes[1], base, &grid_from(k_tm), viol_budget, sim_duration_s);
+        // Probe combined on the union of its own grid and spatial's: at
+        // every spatial grid point combined emits the identical
+        // (delegated) schedule, so its zero-violation operating point
+        // can never land below spatial's.
+        let mut union = grid_from(k_cb);
+        union.extend(grid_from(k_sp));
+        union.sort_by(|a, b| b.total_cmp(a));
+        union.dedup();
+        let cb = achieved_on(&ctx, &modes[2], base, &union, viol_budget, sim_duration_s);
+        ([k_sp, k_tm, k_cb], [sp, tm, cb])
+    });
+    workloads
+        .into_iter()
+        .zip(probed)
+        .map(|((name, _), (schedulable, achieved))| Row {
+            workload: name,
+            schedulable,
+            achieved,
+        })
+        .collect()
+}
+
+pub fn render(rows: &[Row]) -> String {
+    let mut out = String::from(
+        "# Space-time gpu-lets: spatial vs temporal vs combined\n\
+         workload      mode       k_sched  k_achieved  rps_achieved  viol\n",
+    );
+    for r in rows {
+        for (i, mode) in MODE_NAMES.iter().enumerate() {
+            let viol = match r.achieved[i].violation_rate {
+                Some(v) => format!("{:.2}%", v * 100.0),
+                None => "-".to_string(),
+            };
+            out.push_str(&format!(
+                "{:<12} {:<9} {:>8.2} {:>11.2} {:>13.0} {:>6}\n",
+                r.workload, mode, r.schedulable[i], r.achieved[i].scale,
+                r.achieved[i].total_rps, viol
+            ));
+        }
+    }
+    let strict: Vec<&str> = rows
+        .iter()
+        .filter(|r| r.schedulable[2] > r.schedulable[0] * (1.0 + 1e-6))
+        .map(|r| r.workload.as_str())
+        .collect();
+    out.push_str(&format!(
+        "(combined >= spatial on every workload; strictly higher schedulable scale on: {})\n",
+        if strict.is_empty() { "none".to_string() } else { strict.join(", ") }
+    ));
+    out
+}
+
+pub fn run() -> String {
+    render(&compute(0.0, 12.0))
+}
+
+/// Text + JSON for the CLI / bench harness (one `compute()` pass at a
+/// zero violation budget: every reported operating point serves with no
+/// SLO violations at all).
+pub fn report() -> RunOutput {
+    let rows = compute(0.0, 12.0);
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut fields: Vec<(&str, Json)> =
+                vec![("workload", Json::Str(r.workload.clone()))];
+            for (i, &mode) in MODE_NAMES.iter().enumerate() {
+                fields.push((
+                    mode,
+                    obj(vec![
+                        ("max_schedulable_scale", Json::Num(r.schedulable[i])),
+                        ("achieved_scale", Json::Num(r.achieved[i].scale)),
+                        ("achieved_rps", Json::Num(r.achieved[i].total_rps)),
+                        (
+                            "violation_rate",
+                            match r.achieved[i].violation_rate {
+                                Some(v) => Json::Num(v),
+                                None => Json::Null,
+                            },
+                        ),
+                    ]),
+                ));
+            }
+            obj(fields)
+        })
+        .collect();
+    let combined_ge_spatial = rows.iter().all(|r| {
+        r.schedulable[2] >= r.schedulable[0] - 1e-9
+            && r.achieved[2].total_rps >= r.achieved[0].total_rps - 1e-9
+    });
+    let strict: Vec<Json> = rows
+        .iter()
+        .filter(|r| {
+            r.schedulable[2] > r.schedulable[0] * (1.0 + 1e-6)
+                || r.achieved[2].total_rps > r.achieved[0].total_rps + 1e-6
+        })
+        .map(|r| Json::Str(r.workload.clone()))
+        .collect();
+    RunOutput {
+        text: render(&rows),
+        payload: obj(vec![
+            ("figure", Json::Str("spacetime".into())),
+            ("viol_budget", Json::Num(0.0)),
+            ("combined_ge_spatial", Json::Bool(combined_ge_spatial)),
+            ("strict_gain_workloads", Json::Arr(strict)),
+            ("rows", Json::Arr(json_rows)),
+        ]),
+    }
+}
+
+/// The three-mode comparison as a CLI/bench-drivable experiment.
+pub struct Experiment;
+
+impl Runnable for Experiment {
+    fn name(&self) -> &'static str {
+        "spacetime"
+    }
+    fn title(&self) -> &'static str {
+        "space-time scheduling: spatial vs temporal vs combined modes"
+    }
+    fn bench_file(&self) -> &'static str {
+        "BENCH_spacetime_modes.json"
+    }
+    fn run(&self) -> RunOutput {
+        report()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn combined_dominates_spatial_with_zero_violations() {
+        let rows = super::compute(0.0, 6.0);
+        assert_eq!(rows.len(), 5);
+        for r in &rows {
+            assert!(
+                r.schedulable[2] >= r.schedulable[0] - 1e-9,
+                "{}: combined schedulable {} < spatial {}",
+                r.workload,
+                r.schedulable[2],
+                r.schedulable[0]
+            );
+            assert!(
+                r.achieved[2].total_rps >= r.achieved[0].total_rps - 1e-9,
+                "{}: combined achieved {} < spatial {}",
+                r.workload,
+                r.achieved[2].total_rps,
+                r.achieved[0].total_rps
+            );
+            // A zero violation budget means every reported operating
+            // point serves with literally no violations.
+            for (a, mode) in r.achieved.iter().zip(super::MODE_NAMES) {
+                if let Some(v) = a.violation_rate {
+                    assert_eq!(v, 0.0, "{} {mode}: nonzero violations reported", r.workload);
+                }
+            }
+        }
+    }
+}

@@ -323,6 +323,10 @@ impl Scheduler for ElasticPartitioning {
         }
     }
 
+    fn interference_aware(&self) -> bool {
+        self.interference_aware
+    }
+
     fn schedule(&self, ctx: &SchedCtx, rates: &[f64; 5]) -> Result<Schedule> {
         crate::sched::types::validate_rates(rates)?;
         // Reset remain_gpulets: every GPU whole (lines 2-4).

@@ -9,6 +9,10 @@
 //!   temporal-sharing merge), guided by profiled optima (§6.1).
 //! * `ideal` — exhaustive search over per-GPU partition combinations
 //!   (Fig 15 / Fig 16 comparator).
+//! * `spacetime` — Elastic Partitioning extended with a temporal
+//!   packing fallback: gpu-lets may time-slice two models in one duty
+//!   cycle when spatial splitting alone rejects the load (DESIGN.md
+//!   §10).
 //!
 //! All schedulers consume the same `SchedCtx` (profiled latency +
 //! optional fitted interference model) and produce a `Schedule` that
@@ -18,10 +22,30 @@ pub mod elastic;
 pub mod ideal;
 pub mod sbp;
 pub mod selftune;
+pub mod spacetime;
 pub mod types;
 
 pub use elastic::ElasticPartitioning;
 pub use ideal::IdealScheduler;
 pub use sbp::SquishyBinPacking;
 pub use selftune::GuidedSelfTuning;
+pub use spacetime::SpaceTimeScheduler;
 pub use types::{Assignment, LetPlan, SchedCtx, Schedule, Scheduler};
+
+/// One instance of every registered scheduler — the single list the
+/// conformance battery (`tests/scheduler_conformance.rs`), the CLI's
+/// `--algo` vocabulary, and the sweep harness enumerate. Adding a
+/// scheduler here auto-enrolls it in the whole invariant battery; the
+/// battery's round-trip test then forces the matching `config::Algo`
+/// variant to exist.
+pub fn registry() -> Vec<Box<dyn Scheduler>> {
+    vec![
+        Box::new(SquishyBinPacking::baseline()),
+        Box::new(SquishyBinPacking::with_even_partitioning()),
+        Box::new(GuidedSelfTuning),
+        Box::new(ElasticPartitioning::gpulet()),
+        Box::new(ElasticPartitioning::gpulet_int()),
+        Box::new(IdealScheduler),
+        Box::new(SpaceTimeScheduler::combined()),
+    ]
+}

@@ -1,0 +1,634 @@
+//! Space-time scheduling: spatial gpu-let partitioning extended with a
+//! temporal packing pass (the ROADMAP's "add the temporal axis" item;
+//! cf. Dynamic Space-Time Scheduling, arXiv 1901.00041).
+//!
+//! The combined scheduler decides per model pair whether spatial
+//! splitting, temporal sharing, or a dedicated gpu-let wins:
+//!
+//! 1. **Spatial first** — delegate to Elastic Partitioning (Algorithm 1,
+//!    interference-aware whenever the ctx carries a fitted model). When
+//!    it accepts, its schedule is returned unchanged, so `spacetime` is
+//!    byte-identical to `gpulet`/`gpulet+int` on every load the spatial
+//!    scheduler can handle (pinned by `tests/spacetime_equivalence.rs`).
+//! 2. **Temporal fallback** — only when spatial partitioning alone
+//!    rejects, re-pack from scratch with time-sliced duty cycles: a
+//!    gpu-let may host two (or more) models whose executions interleave
+//!    in one repeating round. Beyond Algorithm 1's full-absorption
+//!    MERGE, this pass can boost existing assignments, absorb a rate
+//!    *partially* across several lets, and squish a target let's
+//!    batches to unlock a merge.
+//!
+//! Feasibility of a time-sliced let is the duty-cycle model of
+//! `sched::types` plus two space-time-specific bounds:
+//!
+//! * **duty-sum** — the interference-inflated utilization
+//!   `Σ rate_i·E_i/(b_i·1000)` must stay ≤ 1.0 (all co-tenants' time
+//!   slices fit one wall-clock; enforced again by `Schedule::validate`);
+//! * **timeout slack** — each co-tenant's predicted p99 must fit its
+//!   SLO under the engine's `slo_timeout_us` semantics: the batcher
+//!   arms `timeout = SLO − 1.25·D` and a batch dispatched at the
+//!   timeout completes within its own execution, so we require
+//!   `SLO_i ≥ 1.25·D + E_i` for every model i of a shared let (with D
+//!   the summed, interference-inflated duty). This keeps every planned
+//!   timeout constant at least the model's own (solo) duty — queueing
+//!   behind co-tenants never eats the dispatch window.
+
+use crate::error::{Error, Result};
+use crate::gpu::gpulet::{split_of, GpuLetSpec};
+use crate::models::ModelId;
+use crate::perfmodel::profile_table::PARTITIONS;
+use crate::perfmodel::{LatencyModel, BATCHES};
+use crate::sched::elastic::ElasticPartitioning;
+use crate::sched::types::{
+    squish_plan, Assignment, LetPlan, SchedCtx, Schedule, Scheduler,
+    CAPACITY_FRACTION,
+};
+
+/// Residual-rate epsilon: request rates below this are considered served.
+const EPS_RATE: f64 = 1e-6;
+
+/// Space-time scheduler (`--algo spacetime`): Elastic Partitioning with
+/// a temporal packing fallback. The `spatial_only` / `temporal_only`
+/// variants disable one axis each — the three-mode comparison of
+/// `experiments::spacetime`.
+///
+/// # Examples
+///
+/// ```
+/// use gpulets::sched::{SchedCtx, Scheduler, SpaceTimeScheduler};
+///
+/// let ctx = SchedCtx::new(4, None);
+/// let schedule = SpaceTimeScheduler::combined()
+///     .schedule(&ctx, &[50.0; 5])
+///     .unwrap();
+/// schedule.validate(&ctx.lm, 4).unwrap();
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct SpaceTimeScheduler {
+    /// Allow spatial splitting (gpu-lets smaller than a whole GPU).
+    spatial: bool,
+    /// Allow the temporal packing fallback (time-sliced co-tenants).
+    temporal: bool,
+}
+
+impl SpaceTimeScheduler {
+    /// Both axes: spatial splitting first, temporal packing as the
+    /// fallback. This is the registered `--algo spacetime` variant.
+    pub fn combined() -> Self {
+        SpaceTimeScheduler { spatial: true, temporal: true }
+    }
+
+    /// Temporal sharing disabled — pure delegation to Elastic
+    /// Partitioning (the degenerate-equivalence baseline).
+    pub fn spatial_only() -> Self {
+        SpaceTimeScheduler { spatial: true, temporal: false }
+    }
+
+    /// Spatial splitting disabled — whole-GPU lets only, time-sliced.
+    pub fn temporal_only() -> Self {
+        SpaceTimeScheduler { spatial: false, temporal: true }
+    }
+
+    /// Smallest grid size sustaining `rate` solo (MinRequiredPartition).
+    fn min_required_partition(ctx: &SchedCtx, m: ModelId, rate: f64) -> u32 {
+        for &p in &PARTITIONS {
+            if let Some((r, _)) = ctx.max_rate(m, p) {
+                if r * CAPACITY_FRACTION >= rate {
+                    return p;
+                }
+            }
+        }
+        100
+    }
+
+    /// Worst predicted interference stretch of `alloc[i]` against its
+    /// co-resident lets (index-based exclusion, so a 50:50 GPU pairs
+    /// correctly even when both specs compare equal).
+    fn plan_intf(ctx: &SchedCtx, alloc: &[LetPlan], i: usize) -> f64 {
+        let me = &alloc[i];
+        alloc
+            .iter()
+            .enumerate()
+            .filter(|(j, lp)| *j != i && lp.spec.gpu == me.spec.gpu)
+            .map(|(_, lp)| ctx.predicted_intf(me, lp))
+            .fold(0.0, f64::max)
+    }
+
+    /// Worst predicted stretch of a probe plan not yet in `alloc`.
+    fn intf_against(ctx: &SchedCtx, alloc: &[LetPlan], probe: &LetPlan) -> f64 {
+        alloc
+            .iter()
+            .filter(|lp| lp.spec.gpu == probe.spec.gpu)
+            .map(|lp| ctx.predicted_intf(probe, lp))
+            .fold(0.0, f64::max)
+    }
+
+    /// Timeout-slack bound for a time-sliced let: `SLO_i >= 1.25·D + E_i`
+    /// for every assignment — the planned `slo_timeout_us` constant
+    /// (`SLO − 1.25·D`) stays at least the model's own execution time.
+    fn timeout_slack_ok(lm: &LatencyModel, lp: &LetPlan, intf: f64) -> bool {
+        let d = lp.duty_cycle_ms(lm, intf);
+        let p = lp.spec.fraction();
+        lp.assignments.iter().all(|a| {
+            let e = lm.latency_ms(a.model, a.batch, p) * (1.0 + intf);
+            lm.slo_ms(a.model) + 1e-9 >= 1.25 * d + e
+        })
+    }
+
+    /// Global feasibility of an allocation under mutually-predicted
+    /// interference; time-sliced lets additionally honour the
+    /// timeout-slack bound. Every mutation the packing pass commits is
+    /// re-checked through here.
+    fn all_feasible(&self, ctx: &SchedCtx, alloc: &[LetPlan]) -> bool {
+        (0..alloc.len()).all(|i| {
+            let intf = Self::plan_intf(ctx, alloc, i);
+            let lp = &alloc[i];
+            lp.feasible(&ctx.lm, intf)
+                && lp.utilization(&ctx.lm, intf) <= 1.0 + 1e-9
+                && (lp.assignments.len() < 2
+                    || Self::timeout_slack_ok(&ctx.lm, lp, intf))
+        })
+    }
+
+    /// One squish round over infeasible plans (a newly landed neighbour
+    /// may disturb an existing let), then the authoritative global
+    /// re-check — squishing changes batches, which shifts the predicted
+    /// interference itself.
+    fn repair(&self, ctx: &SchedCtx, trial: &mut [LetPlan]) -> bool {
+        for i in 0..trial.len() {
+            let intf = Self::plan_intf(ctx, trial, i);
+            if !trial[i].feasible(&ctx.lm, intf) {
+                match squish_plan(&ctx.lm, &trial[i], intf) {
+                    Some(sq) => trial[i] = sq,
+                    None => return false,
+                }
+            }
+        }
+        self.all_feasible(ctx, trial)
+    }
+
+    /// Raise the rate of an existing assignment of `m` with spare
+    /// capacity (no structural change: duty cycles and interference are
+    /// untouched, so the capacity cap is the only binding constraint).
+    fn boost(&self, ctx: &SchedCtx, alloc: &mut [LetPlan], m: ModelId, want: f64) -> f64 {
+        let mut best: Option<(usize, usize, f64)> = None;
+        for (i, lp) in alloc.iter().enumerate() {
+            let intf = Self::plan_intf(ctx, alloc, i);
+            let d = lp.duty_cycle_ms(&ctx.lm, intf);
+            for (j, a) in lp.assignments.iter().enumerate() {
+                if a.model != m {
+                    continue;
+                }
+                let cap = a.batch as f64 * 1000.0 / d * CAPACITY_FRACTION;
+                let extra = (cap - a.rate).min(want);
+                if extra > EPS_RATE
+                    && best.is_none_or(|(_, _, e)| extra > e + EPS_RATE)
+                {
+                    best = Some((i, j, extra));
+                }
+            }
+        }
+        let Some((i, j, extra)) = best else { return 0.0 };
+        alloc[i].assignments[j].rate += extra;
+        debug_assert!(self.all_feasible(ctx, alloc));
+        extra
+    }
+
+    /// Place `m` solo on a free gpu-let, best-fit by post-split size
+    /// (SPLIT allowed only in spatial mode; temporal-only packs whole
+    /// GPUs). Returns the absorbed rate.
+    fn place_solo(
+        &self,
+        ctx: &SchedCtx,
+        remain: &mut Vec<GpuLetSpec>,
+        alloc: &mut Vec<LetPlan>,
+        m: ModelId,
+        want: f64,
+    ) -> f64 {
+        let p_ideal = if self.spatial {
+            ctx.knee_pct(m).min(Self::min_required_partition(ctx, m, want))
+        } else {
+            100
+        };
+        let mut order: Vec<(u32, u32, usize, usize)> = remain
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.size_pct >= p_ideal)
+            .map(|(idx, s)| {
+                let use_size = if self.spatial && s.size_pct == 100 && p_ideal < 100 {
+                    split_of(p_ideal).map_or(100, |(a, _)| a)
+                } else {
+                    s.size_pct
+                };
+                (use_size.saturating_sub(p_ideal), s.size_pct, s.gpu, idx)
+            })
+            .collect();
+        order.sort_unstable();
+
+        for (_, _, _, idx) in order {
+            let cand = remain[idx];
+            let (use_spec, leftover) =
+                if self.spatial && cand.size_pct == 100 && p_ideal < 100 {
+                    match split_of(p_ideal) {
+                        Some((a, rem)) => (
+                            GpuLetSpec { gpu: cand.gpu, size_pct: a },
+                            Some(GpuLetSpec { gpu: cand.gpu, size_pct: rem }),
+                        ),
+                        None => (cand, None),
+                    }
+                } else {
+                    (cand, None)
+                };
+            let Some(b) = ctx.best_batch_half_slo(m, use_spec.size_pct) else {
+                continue;
+            };
+            let mut probe = LetPlan {
+                spec: use_spec,
+                assignments: vec![Assignment { model: m, batch: b, rate: 0.0 }],
+            };
+            let p = use_spec.fraction();
+            let intf = Self::intf_against(ctx, alloc, &probe);
+            if 2.0 * ctx.lm.latency_ms(m, b, p) * (1.0 + intf) > ctx.lm.slo_ms(m) {
+                // Interference pushes past the SLO: shrink the batch.
+                let Some(bb) = BATCHES
+                    .iter()
+                    .copied()
+                    .filter(|&bb| {
+                        2.0 * ctx.lm.latency_ms(m, bb, p) * (1.0 + intf)
+                            <= ctx.lm.slo_ms(m)
+                    })
+                    .last()
+                else {
+                    continue;
+                };
+                probe.assignments[0].batch = bb;
+            }
+            let b = probe.assignments[0].batch;
+            let exec = ctx.lm.latency_ms(m, b, p) * (1.0 + intf);
+            let capacity = b as f64 * 1000.0 / exec * CAPACITY_FRACTION;
+            if capacity <= EPS_RATE {
+                continue;
+            }
+            let assigned = want.min(capacity);
+            probe.assignments[0].rate = assigned;
+
+            let mut trial = alloc.clone();
+            trial.push(probe);
+            if !self.repair(ctx, &mut trial) {
+                continue;
+            }
+            *alloc = trial;
+            remain.swap_remove(idx);
+            if let Some(rest) = leftover {
+                remain.push(rest);
+            }
+            return assigned;
+        }
+        0.0
+    }
+
+    /// Time-sliced MERGE of `m` into an allocated let. Unlike Algorithm
+    /// 1's merge this may absorb `want` *partially* and may squish the
+    /// target let's existing batches to make room; the candidate
+    /// absorbing the most rate wins. Returns the absorbed rate.
+    fn merge(
+        &self,
+        ctx: &SchedCtx,
+        alloc: &mut Vec<LetPlan>,
+        m: ModelId,
+        want: f64,
+    ) -> f64 {
+        let mut best: Option<(f64, Vec<LetPlan>)> = None;
+        for i in 0..alloc.len() {
+            if alloc[i].assignments.iter().any(|a| a.model == m) {
+                continue; // same-model top-ups are `boost`'s job
+            }
+            let Some(max_b) = ctx.best_batch_half_slo(m, alloc[i].spec.size_pct)
+            else {
+                continue;
+            };
+            for &b in BATCHES.iter().filter(|&&b| b <= max_b) {
+                let mut trial = alloc.clone();
+                trial[i]
+                    .assignments
+                    .push(Assignment { model: m, batch: b, rate: 0.0 });
+                let mut intf = Self::plan_intf(ctx, &trial, i);
+                if !trial[i].feasible(&ctx.lm, intf) {
+                    // Squish the target's batches to open the round up.
+                    let Some(sq) = squish_plan(&ctx.lm, &trial[i], intf) else {
+                        continue;
+                    };
+                    trial[i] = sq;
+                    intf = Self::plan_intf(ctx, &trial, i);
+                    if !trial[i].feasible(&ctx.lm, intf) {
+                        continue;
+                    }
+                }
+                if !Self::timeout_slack_ok(&ctx.lm, &trial[i], intf) {
+                    continue;
+                }
+                let d = trial[i].duty_cycle_ms(&ctx.lm, intf);
+                let b_used = trial[i].assignments.last().map_or(b, |a| a.batch);
+                let head =
+                    (b_used as f64 * 1000.0 / d * CAPACITY_FRACTION).min(want);
+                if head <= EPS_RATE {
+                    continue;
+                }
+                trial[i].assignments.last_mut().expect("just pushed").rate = head;
+                if !self.repair(ctx, &mut trial) {
+                    continue;
+                }
+                if best.as_ref().is_none_or(|(got, _)| head > got + EPS_RATE) {
+                    best = Some((head, trial));
+                }
+            }
+        }
+        match best {
+            Some((got, trial)) => {
+                *alloc = trial;
+                got
+            }
+            None => 0.0,
+        }
+    }
+
+    /// The temporal packing pass: models in descending rate order; per
+    /// round prefer boosting an existing assignment, then a dedicated
+    /// (possibly split) let, then a time-sliced merge.
+    fn packed(&self, ctx: &SchedCtx, rates: &[f64; 5]) -> Result<Schedule> {
+        let mut remain: Vec<GpuLetSpec> = (0..ctx.num_gpus)
+            .map(|gpu| GpuLetSpec { gpu, size_pct: 100 })
+            .collect();
+        let mut alloc: Vec<LetPlan> = Vec::new();
+
+        let mut models: Vec<(ModelId, f64)> = ModelId::ALL
+            .iter()
+            .map(|&m| (m, rates[m.index()]))
+            .filter(|&(_, r)| r > 0.0)
+            .collect();
+        models.sort_by(|a, b| b.1.total_cmp(&a.1));
+
+        for (m, rate) in models {
+            let mut remaining = rate;
+            let mut rounds = 0usize;
+            while remaining > EPS_RATE {
+                rounds += 1;
+                if rounds > 8 * ctx.num_gpus.max(1) * PARTITIONS.len() {
+                    return Err(Error::NotSchedulable(format!(
+                        "{m}: no progress after {rounds} space-time rounds"
+                    )));
+                }
+                let mut got = self.boost(ctx, &mut alloc, m, remaining);
+                if got <= EPS_RATE {
+                    got = self.place_solo(ctx, &mut remain, &mut alloc, m, remaining);
+                }
+                if got <= EPS_RATE {
+                    got = self.merge(ctx, &mut alloc, m, remaining);
+                }
+                if got <= EPS_RATE {
+                    return Err(Error::NotSchedulable(format!(
+                        "{m}: {remaining:.1} req/s left with no spatial or temporal fit"
+                    )));
+                }
+                remaining -= got;
+            }
+        }
+
+        let sched = Schedule { lets: alloc };
+        sched.validate(&ctx.lm, ctx.num_gpus)?;
+        Ok(sched)
+    }
+}
+
+impl Scheduler for SpaceTimeScheduler {
+    fn name(&self) -> &'static str {
+        match (self.spatial, self.temporal) {
+            (true, true) => "spacetime",
+            (true, false) => "spacetime-spatial",
+            (false, true) => "spacetime-temporal",
+            (false, false) => unreachable!("constructors enable at least one axis"),
+        }
+    }
+
+    fn interference_aware(&self) -> bool {
+        true
+    }
+
+    fn schedule(&self, ctx: &SchedCtx, rates: &[f64; 5]) -> Result<Schedule> {
+        crate::sched::types::validate_rates(rates)?;
+        if self.spatial {
+            // Elastic Partitioning first; its interference awareness
+            // follows the ctx (predicted stretch is 0 without a fitted
+            // model), so one variant covers gpulet and gpulet+int.
+            let spatial = ElasticPartitioning::gpulet_int().schedule(ctx, rates);
+            if spatial.is_ok() || !self.temporal {
+                return spatial;
+            }
+        }
+        self.packed(ctx, rates)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::Scheduler;
+
+    fn ctx(gpus: usize) -> SchedCtx {
+        SchedCtx::new(gpus, None)
+    }
+
+    fn ctx_int(gpus: usize) -> SchedCtx {
+        use crate::interference::linear_model::{
+            profiling_population, train_val_split, InterferenceModel,
+        };
+        use crate::interference::GroundTruth;
+        let (train, _) =
+            train_val_split(profiling_population(&GroundTruth::default()), 0.7, 42);
+        SchedCtx::new(gpus, Some(InterferenceModel::fit(&train).unwrap()))
+    }
+
+    fn sample_rates() -> Vec<[f64; 5]> {
+        vec![
+            [50.0; 5],
+            [100.0, 0.0, 50.0, 0.0, 25.0],
+            [0.0, 200.0, 0.0, 0.0, 80.0],
+            [300.0, 100.0, 100.0, 50.0, 50.0],
+            [0.0; 5],
+            [1e9; 5],
+        ]
+    }
+
+    #[test]
+    fn spatial_only_is_exactly_elastic() {
+        for gpus in [1, 4] {
+            for c in [ctx(gpus), ctx_int(gpus)] {
+                for rates in sample_rates() {
+                    let a = SpaceTimeScheduler::spatial_only().schedule(&c, &rates);
+                    let b = ElasticPartitioning::gpulet_int().schedule(&c, &rates);
+                    match (a, b) {
+                        (Ok(x), Ok(y)) => assert_eq!(x, y, "{rates:?}"),
+                        (Err(_), Err(_)) => {}
+                        (x, y) => panic!(
+                            "verdicts differ on {rates:?}: {:?} vs {:?}",
+                            x.is_ok(),
+                            y.is_ok()
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn combined_returns_elastic_schedule_when_spatial_accepts() {
+        let c = ctx(4);
+        for rates in sample_rates() {
+            if let Ok(e) = ElasticPartitioning::gpulet().schedule(&c, &rates) {
+                let s = SpaceTimeScheduler::combined().schedule(&c, &rates).unwrap();
+                assert_eq!(s, e, "{rates:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn combined_beats_spatial_on_three_long_models_one_gpu() {
+        // 1 GPU, three long-SLO models at 30 req/s each. Elastic places
+        // GoogLeNet on a 20% split and ResNet on the 80% leftover, then
+        // VGG finds no free let and no full-absorption merge (both duty
+        // cycles would blow 2D <= SLO without shrinking the residents'
+        // batches, which Algorithm 1's MERGE cannot do) — NotSchedulable.
+        // The temporal pass squishes ResNet's batch and time-slices VGG
+        // into the same let.
+        let c = ctx(1);
+        let rates = [0.0, 30.0, 30.0, 0.0, 30.0];
+        let spatial_err = SpaceTimeScheduler::spatial_only().schedule(&c, &rates);
+        assert!(spatial_err.is_err(), "elastic unexpectedly schedules the mix");
+        let s = SpaceTimeScheduler::combined().schedule(&c, &rates).unwrap();
+        s.validate(&c.lm, 1).unwrap();
+        let assigned = s.assigned_rates();
+        for m in [ModelId::Googlenet, ModelId::Resnet, ModelId::Vgg] {
+            assert!(
+                assigned[m.index()] >= 30.0 - 1e-6,
+                "{m} assigned {}",
+                assigned[m.index()]
+            );
+        }
+        // The win comes from a time-sliced let.
+        assert!(
+            s.lets.iter().any(|lp| lp.assignments.len() >= 2),
+            "expected a temporally shared let: {:?}",
+            s.lets
+        );
+    }
+
+    #[test]
+    fn temporal_only_time_slices_a_whole_gpu() {
+        // 1 GPU, no splitting allowed: GoogLeNet takes the whole let,
+        // VGG must time-slice into it.
+        let c = ctx(1);
+        let s = SpaceTimeScheduler::temporal_only()
+            .schedule(&c, &[0.0, 30.0, 0.0, 0.0, 30.0])
+            .unwrap();
+        s.validate(&c.lm, 1).unwrap();
+        assert_eq!(s.lets.len(), 1);
+        assert_eq!(s.lets[0].spec.size_pct, 100);
+        assert_eq!(s.lets[0].assignments.len(), 2);
+        // The shared let honours the duty-sum and timeout-slack bounds.
+        let lp = &s.lets[0];
+        assert!(lp.utilization(&c.lm, 0.0) <= 1.0 + 1e-9);
+        assert!(SpaceTimeScheduler::timeout_slack_ok(&c.lm, lp, 0.0));
+    }
+
+    #[test]
+    fn emitted_shared_lets_always_hold_spacetime_bounds() {
+        // Deterministic mini-sweep: every accepted schedule across a
+        // rate grid keeps utilization <= 1 and the timeout slack on all
+        // time-sliced lets, under both ctx flavours.
+        for c in [ctx(2), ctx_int(2)] {
+            for sched in
+                [SpaceTimeScheduler::combined(), SpaceTimeScheduler::temporal_only()]
+            {
+                for g in [0.0, 40.0, 160.0] {
+                    for v in [0.0, 30.0, 90.0] {
+                        for r in [0.0, 50.0] {
+                            let rates = [0.0, g, r, 0.0, v];
+                            let Ok(s) = sched.schedule(&c, &rates) else {
+                                continue;
+                            };
+                            s.validate(&c.lm, 2).unwrap();
+                            // The timeout-slack bound is the packing
+                            // pass's contract; a combined run that
+                            // delegated to Elastic Partitioning only
+                            // promises 2D <= SLO (and byte-identical
+                            // output to `gpulet+int`).
+                            let from_packed = !sched.spatial
+                                || SpaceTimeScheduler::spatial_only()
+                                    .schedule(&c, &rates)
+                                    .is_err();
+                            for (i, lp) in s.lets.iter().enumerate() {
+                                // Inflated bound for packed output;
+                                // delegated schedules guarantee it at
+                                // stretch 0 (the validate-level check).
+                                let intf = if from_packed {
+                                    SpaceTimeScheduler::plan_intf(&c, &s.lets, i)
+                                } else {
+                                    0.0
+                                };
+                                assert!(
+                                    lp.utilization(&c.lm, intf) <= 1.0 + 1e-6,
+                                    "{}: util > 1 on {rates:?}",
+                                    sched.name()
+                                );
+                                if lp.assignments.len() >= 2 && from_packed {
+                                    assert!(
+                                        SpaceTimeScheduler::timeout_slack_ok(
+                                            &c.lm, lp, intf
+                                        ),
+                                        "{}: slack broken on {rates:?}",
+                                        sched.name()
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_load_empty_and_absurd_load_rejected() {
+        let c = ctx(4);
+        for sched in [
+            SpaceTimeScheduler::combined(),
+            SpaceTimeScheduler::spatial_only(),
+            SpaceTimeScheduler::temporal_only(),
+        ] {
+            let s = sched.schedule(&c, &[0.0; 5]).unwrap();
+            assert!(s.lets.is_empty(), "{}", sched.name());
+            let err = sched.schedule(&c, &[1e9; 5]).unwrap_err();
+            assert!(matches!(err, Error::NotSchedulable(_)), "{}", sched.name());
+        }
+    }
+
+    #[test]
+    fn lenet_never_time_sliced_into_long_duty_cycles() {
+        // LeNet's 5 ms SLO cannot absorb any co-tenant's duty cycle:
+        // whatever the packing pass emits, LeNet only ever rides solo
+        // lets. (2D <= SLO with D >= E_lenet + E_other is impossible for
+        // every catalog pairing.)
+        let c = ctx(2);
+        for scale in [1.0, 2.0, 4.0] {
+            let rates = [120.0 * scale, 40.0 * scale, 30.0 * scale, 0.0, 20.0 * scale];
+            let Ok(s) = SpaceTimeScheduler::combined().schedule(&c, &rates) else {
+                continue;
+            };
+            for lp in &s.lets {
+                if lp.assignments.iter().any(|a| a.model == ModelId::Lenet) {
+                    assert_eq!(lp.assignments.len(), 1, "lenet sharing a let");
+                }
+            }
+        }
+    }
+}

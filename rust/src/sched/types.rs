@@ -66,6 +66,26 @@ impl LetPlan {
         })
     }
 
+    /// Duty-sum utilization under interference stretch `intf`:
+    /// `Σ rate_i · E_i / (b_i · 1000)` with `E_i` the interference-
+    /// inflated execution time — the fraction of wall-clock time the
+    /// let must spend executing to keep up with its assigned rates.
+    /// Any feasible plan has utilization ≤ 1.0 (each assignment's
+    /// throughput constraint `rate_i · D ≤ b_i · 1000` bounds its term
+    /// by `E_i / D`, and the terms sum to `D / D = 1`), so `> 1.0` is
+    /// always a planner bug; `Schedule::validate` enforces the bound
+    /// explicitly for temporally-shared lets.
+    pub fn utilization(&self, lm: &LatencyModel, intf: f64) -> f64 {
+        let p = self.spec.fraction();
+        self.assignments
+            .iter()
+            .map(|a| {
+                let e = lm.latency_ms(a.model, a.batch, p) * (1.0 + intf);
+                a.rate * e / (a.batch as f64 * 1000.0)
+            })
+            .sum()
+    }
+
     /// Max additional rate of `model` (batch `b`) this plan could accept
     /// while staying feasible — used by temporal-sharing merges.
     pub fn headroom_rate(&self, lm: &LatencyModel, model: ModelId, b: u32, intf: f64) -> f64 {
@@ -172,7 +192,9 @@ impl Schedule {
     /// themselves):
     /// 1. every gpu-let size valid; per-GPU count/size caps hold;
     /// 2. every assignment has positive rate and batch within limits;
-    /// 3. every let's duty cycle is feasible.
+    /// 3. every let's duty-sum utilization is ≤ 1.0 (the space-time
+    ///    invariant: time slices of all co-tenants fit one wall-clock);
+    /// 4. every let's duty cycle is feasible.
     ///
     /// # Examples
     ///
@@ -223,6 +245,13 @@ impl Schedule {
                 if a.batch == 0 || a.batch > crate::perfmodel::MAX_BATCH {
                     return Err(Error::GpuLet(format!("{}: bad batch {}", a.model, a.batch)));
                 }
+            }
+            let util = lp.utilization(lm, 0.0);
+            if util > 1.0 + 1e-6 {
+                return Err(Error::NotSchedulable(format!(
+                    "gpu{} let {}%: duty-sum utilization {util:.4} > 1.0",
+                    lp.spec.gpu, lp.spec.size_pct
+                )));
             }
             if !lp.feasible(lm, 0.0) {
                 return Err(Error::NotSchedulable(format!(
@@ -353,6 +382,14 @@ pub fn validate_rates(rates: &[f64; 5]) -> Result<()> {
 /// is a plain-data struct, so the bound is automatic.
 pub trait Scheduler: Sync {
     fn name(&self) -> &'static str;
+    /// Whether this scheduler consumes `SchedCtx::intf` (the fitted
+    /// linear interference model). Drives automatic context selection
+    /// in the conformance battery and the CLI: interference-aware
+    /// schedulers get a ctx carrying the fitted model, the rest a plain
+    /// one.
+    fn interference_aware(&self) -> bool {
+        false
+    }
     fn schedule(&self, ctx: &SchedCtx, rates: &[f64; 5]) -> Result<Schedule>;
 }
 
@@ -406,6 +443,22 @@ mod tests {
         assert!((d - want).abs() < 1e-12);
         // LeNet's 5 ms SLO cannot absorb GoogLeNet's duty cycle.
         assert!(!plan.feasible(&lm, 0.0));
+    }
+
+    #[test]
+    fn validate_enforces_duty_sum_utilization_bound() {
+        let lm = lm();
+        let e = lm.latency_ms(ModelId::Lenet, 1, 1.0);
+        // rate · E / (b · 1000) = 2.0 → needs twice the wall-clock.
+        let plan = solo_plan(ModelId::Lenet, 100, 1, 2.0 * 1000.0 / e);
+        assert!((plan.utilization(&lm, 0.0) - 2.0).abs() < 1e-9);
+        let err = Schedule { lets: vec![plan] }.validate(&lm, 1).unwrap_err();
+        assert!(err.to_string().contains("duty-sum utilization"), "{err}");
+        // A feasible plan always sits at utilization ≤ 1.0.
+        let (r, b) = lm.max_rate(ModelId::Vgg, 1.0).unwrap();
+        let ok = solo_plan(ModelId::Vgg, 100, b, r * 0.999);
+        assert!(ok.feasible(&lm, 0.0));
+        assert!(ok.utilization(&lm, 0.0) <= 1.0 + 1e-9);
     }
 
     #[test]

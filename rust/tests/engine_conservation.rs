@@ -6,11 +6,13 @@
 //! debug-build double-serve guard arms inside these runs) — and the
 //! whole path is deterministic given a seed.
 
-use gpulets::coordinator::AdaptiveServer;
+use gpulets::coordinator::{AdaptiveServer, ServingEngine, SimConfig, SwapMode};
 use gpulets::experiments::common::paper_ctx;
+use gpulets::interference::GroundTruth;
 use gpulets::models::ModelId;
-use gpulets::sched::ElasticPartitioning;
-use gpulets::workload::FluctuationTrace;
+use gpulets::perfmodel::LatencyModel;
+use gpulets::sched::{ElasticPartitioning, SchedCtx, Scheduler, SpaceTimeScheduler};
+use gpulets::workload::{dyn_sources, poisson_streams, FluctuationTrace, SourceMux};
 
 #[test]
 fn conservation_across_reorganizations() {
@@ -71,4 +73,72 @@ fn adaptive_path_deterministic_given_seed() {
         a.report.to_json().to_string(),
         c.report.to_json().to_string()
     );
+}
+
+#[test]
+fn temporally_shared_schedule_conserves_across_mid_trace_swaps() {
+    // A time-sliced schedule (two models sharing one gpu-let's duty
+    // cycle) through the raw `ServingEngine`: swap to a spatial layout
+    // mid-trace and back again, with queued + in-flight work crossing
+    // both boundaries. Conservation must stay exact per model —
+    // offered == served + dropped — just like the spatial-only path.
+    let duration_s = 20.0;
+    let rates = [0.0, 30.0, 0.0, 0.0, 30.0]; // googlenet + vgg
+    let ctx1 = SchedCtx::new(1, None);
+    let shared = SpaceTimeScheduler::temporal_only()
+        .schedule(&ctx1, &rates)
+        .expect("googlenet+vgg at 30 req/s time-slice onto one GPU");
+    assert!(
+        shared.lets.iter().any(|l| l.assignments.len() >= 2),
+        "premise: the packed schedule must actually share a let"
+    );
+    // The swap target is a plain spatial layout of the same load.
+    let ctx2 = SchedCtx::new(2, None);
+    let spatial = ElasticPartitioning::gpulet()
+        .schedule(&ctx2, &rates)
+        .expect("two dedicated GPUs trivially hold the load");
+
+    let lm = LatencyModel::new();
+    let gt = GroundTruth::default();
+    let cfg = SimConfig::default();
+    let streams = poisson_streams(
+        &[(ModelId::Googlenet, 30.0), (ModelId::Vgg, 30.0)],
+        duration_s,
+        11,
+    )
+    .unwrap();
+    let mut eng = ServingEngine::new(&lm, &gt, shared.clone(), duration_s, &cfg);
+    eng.attach_source(SourceMux::new(dyn_sources(streams)));
+    eng.run_until(8_000_000); // 8 s under the shared duty cycle
+    eng.swap_schedule(spatial, SwapMode::Migrate);
+    eng.run_until(14_000_000); // 6 s spatial
+    eng.swap_schedule(shared, SwapMode::Migrate);
+    eng.run_stream(); // rest of the trace + drain, shared again
+    eng.close();
+
+    let injected = eng.injected_per_model();
+    let mut total_injected = 0u64;
+    for m in ModelId::ALL {
+        let (served, dropped) = eng
+            .report()
+            .model(m)
+            .map_or((0, 0), |mm| (mm.served, mm.dropped));
+        assert_eq!(
+            served + dropped,
+            injected[m.index()],
+            "{m}: served {served} + dropped {dropped} != injected {}",
+            injected[m.index()]
+        );
+        total_injected += injected[m.index()];
+    }
+    assert!(total_injected > 800, "trace should offer real load: {total_injected}");
+    // Both co-tenants must actually be served through the shared let,
+    // not silently dropped into a trivially-conserving run.
+    for m in [ModelId::Googlenet, ModelId::Vgg] {
+        let served = eng.report().model(m).map_or(0, |mm| mm.served);
+        assert!(
+            served as f64 > 0.8 * duration_s * 30.0,
+            "{m}: only {served} served"
+        );
+    }
 }

@@ -1,0 +1,170 @@
+//! Property tests for the space-time scheduler (`util::proptest_mini`):
+//! every temporally-shared schedule the packing pass emits keeps the
+//! interference-inflated per-let duty-sum utilization <= 1.0 and arms
+//! per-model timeout constants at least as large as the model's own
+//! (solo) duty — and hand-built mutant schedules that break the
+//! duty-sum bound are rejected by `Schedule::validate`.
+
+use gpulets::experiments::common::fitted_interference;
+use gpulets::models::ModelId;
+use gpulets::gpu::gpulet::GpuLetSpec;
+use gpulets::perfmodel::LatencyModel;
+use gpulets::sched::{Assignment, LetPlan, SchedCtx, Schedule, Scheduler, SpaceTimeScheduler};
+use gpulets::util::proptest_mini::{run, Config};
+use gpulets::util::rng::Pcg32;
+
+/// One generated case: a context choice and an offered rate vector.
+type Case = (usize, [f64; 5]);
+
+fn contexts() -> Vec<SchedCtx> {
+    let mut out = Vec::new();
+    for gpus in [1usize, 2, 4] {
+        out.push(SchedCtx::new(gpus, None));
+        out.push(SchedCtx::new(gpus, Some(fitted_interference())));
+    }
+    out
+}
+
+fn gen_case(rng: &mut Pcg32) -> Case {
+    let ctx_idx = rng.below(6);
+    let mut rates = [0.0; 5];
+    for r in rates.iter_mut() {
+        if rng.f64() < 0.7 {
+            *r = rng.range(0.0, 300.0);
+        }
+    }
+    (ctx_idx, rates)
+}
+
+fn shrink_case(case: &Case) -> Vec<Case> {
+    let (ctx_idx, rates) = case;
+    let mut out = Vec::new();
+    for i in 0..5 {
+        if rates[i] > 0.0 {
+            let mut z = *rates;
+            z[i] = 0.0;
+            out.push((*ctx_idx, z));
+            let mut h = *rates;
+            h[i] /= 2.0;
+            out.push((*ctx_idx, h));
+        }
+    }
+    out
+}
+
+/// Worst predicted interference of `lets[i]` against its co-resident
+/// lets — the same victim-first, index-excluded convention the
+/// scheduler's own feasibility pass uses.
+fn worst_intf(ctx: &SchedCtx, lets: &[LetPlan], i: usize) -> f64 {
+    let me = &lets[i];
+    lets.iter()
+        .enumerate()
+        .filter(|(j, lp)| *j != i && lp.spec.gpu == me.spec.gpu)
+        .map(|(_, lp)| ctx.predicted_intf(me, lp))
+        .fold(0.0, f64::max)
+}
+
+/// The two space-time invariants on one emitted schedule.
+fn check_spacetime_bounds(ctx: &SchedCtx, s: &Schedule) -> Result<(), String> {
+    for i in 0..s.lets.len() {
+        let lp = &s.lets[i];
+        let intf = worst_intf(ctx, &s.lets, i);
+        let util = lp.utilization(&ctx.lm, intf);
+        if util > 1.0 + 1e-6 {
+            return Err(format!(
+                "gpu{} let {}%: inflated duty-sum utilization {util:.4} > 1.0",
+                lp.spec.gpu, lp.spec.size_pct
+            ));
+        }
+        if lp.assignments.len() < 2 {
+            continue;
+        }
+        // Timeout constant >= solo duty: the planned `slo_timeout_us`
+        // is SLO − 1.25·D, so SLO >= 1.25·D + E_i must hold for every
+        // co-tenant even under the planning (tightened) SLOs.
+        let d = lp.duty_cycle_ms(&ctx.lm, intf);
+        let p = lp.spec.fraction();
+        for a in &lp.assignments {
+            let e = ctx.lm.latency_ms(a.model, a.batch, p) * (1.0 + intf);
+            if ctx.lm.slo_ms(a.model) + 1e-6 < 1.25 * d + e {
+                return Err(format!(
+                    "gpu{} let {}%: {} timeout slack broken (slo {} < 1.25*{d} + {e})",
+                    lp.spec.gpu,
+                    lp.spec.size_pct,
+                    a.model,
+                    ctx.lm.slo_ms(a.model)
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn emitted_temporal_schedules_hold_duty_sum_and_timeout_slack() {
+    let ctxs = contexts();
+    let spatial = SpaceTimeScheduler::spatial_only();
+    let temporal = SpaceTimeScheduler::temporal_only();
+    let combined = SpaceTimeScheduler::combined();
+    run(
+        Config { cases: 48, seed: 0x5ACE, ..Default::default() },
+        gen_case,
+        shrink_case,
+        |&(ctx_idx, rates)| {
+            let ctx = &ctxs[ctx_idx];
+            // temporal-only always runs the packing pass; combined runs
+            // it exactly when spatial splitting alone rejects the load
+            // (otherwise it returns elastic's schedule, whose invariants
+            // `Schedule::validate` already pins at interference 0).
+            let mut emitted = Vec::new();
+            if let Ok(s) = temporal.schedule(ctx, &rates) {
+                emitted.push(s);
+            }
+            if spatial.schedule(ctx, &rates).is_err() {
+                if let Ok(s) = combined.schedule(ctx, &rates) {
+                    emitted.push(s);
+                }
+            }
+            for s in &emitted {
+                check_spacetime_bounds(ctx, s)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn mutant_schedules_breaking_the_duty_sum_bound_are_rejected() {
+    let lm = LatencyModel::new();
+
+    // Solo mutant: one assignment demanding twice the let's wall-clock.
+    let e = lm.latency_ms(ModelId::Lenet, 1, 1.0);
+    let solo = Schedule {
+        lets: vec![LetPlan {
+            spec: GpuLetSpec { gpu: 0, size_pct: 100 },
+            assignments: vec![Assignment {
+                model: ModelId::Lenet,
+                batch: 1,
+                rate: 2.0 * 1000.0 / e,
+            }],
+        }],
+    };
+    let err = solo.validate(&lm, 1).unwrap_err().to_string();
+    assert!(err.contains("duty-sum utilization"), "unexpected error: {err}");
+
+    // Time-sliced mutant: two co-tenants whose demanded duty fractions
+    // sum to ~1.6 of the let's wall-clock.
+    let e_g = lm.latency_ms(ModelId::Googlenet, 4, 1.0);
+    let e_v = lm.latency_ms(ModelId::Vgg, 1, 1.0);
+    let shared = Schedule {
+        lets: vec![LetPlan {
+            spec: GpuLetSpec { gpu: 0, size_pct: 100 },
+            assignments: vec![
+                Assignment { model: ModelId::Googlenet, batch: 4, rate: 0.8 * 4000.0 / e_g },
+                Assignment { model: ModelId::Vgg, batch: 1, rate: 0.8 * 1000.0 / e_v },
+            ],
+        }],
+    };
+    let err = shared.validate(&lm, 1).unwrap_err().to_string();
+    assert!(err.contains("duty-sum utilization"), "unexpected error: {err}");
+}

@@ -1,0 +1,105 @@
+//! Degenerate equivalence: `SpaceTimeScheduler::spatial_only()` (the
+//! `spacetime` algo with temporal sharing disabled) must be
+//! indistinguishable from `ElasticPartitioning::gpulet_int()` — same
+//! verdict, same `Schedule`, and byte-identical harness JSON on the
+//! Fig-12/13-style searches. The combined mode is pinned elsewhere as a
+//! strict acceptance superset; this file pins the *floor* of that claim:
+//! with the temporal axis off, nothing changes at all.
+
+use gpulets::experiments::common::{
+    eval_workloads, max_achievable_detail, max_schedulable, paper_ctx, scaled, violation_rate_of,
+};
+use gpulets::sched::{ElasticPartitioning, SchedCtx, Scheduler, SpaceTimeScheduler};
+use gpulets::util::json::{obj, Json};
+use gpulets::workload::enumerate_all_scenarios;
+
+/// The Fig-12/13 numbers for one workload, rendered exactly the way the
+/// experiment harnesses render them, so string equality is byte
+/// equality of the emitted JSON.
+fn harness_row(
+    ctx: &SchedCtx,
+    scheduler: &dyn Scheduler,
+    name: &str,
+    base: &[f64; 5],
+) -> Json {
+    let k = max_schedulable(ctx, scheduler, base);
+    let viol = if k > 0.0 {
+        let schedule = scheduler
+            .schedule(ctx, &scaled(base, k))
+            .expect("max_schedulable scale must be schedulable");
+        violation_rate_of(ctx, &schedule, &scaled(base, k), 4.0, 131)
+    } else {
+        0.0
+    };
+    let a = max_achievable_detail(ctx, scheduler, base, 0.1, 4.0);
+    obj(vec![
+        ("workload", Json::Str(name.into())),
+        ("max_schedulable_scale", Json::Num(k)),
+        ("violation_rate_at_max", Json::Num(viol)),
+        ("achieved_scale", Json::Num(a.scale)),
+        ("achieved_rps", Json::Num(a.total_rps)),
+        (
+            "achieved_violation_rate",
+            a.violation_rate.map_or(Json::Null, Json::Num),
+        ),
+    ])
+}
+
+#[test]
+fn spatial_only_matches_elastic_verdicts_and_schedules() {
+    let spatial = SpaceTimeScheduler::spatial_only();
+    let elastic = ElasticPartitioning::gpulet_int();
+    let scenarios = enumerate_all_scenarios();
+    for interference_aware in [false, true] {
+        let ctx = paper_ctx(interference_aware);
+        for sc in scenarios.iter().step_by(11) {
+            match (spatial.schedule(&ctx, &sc.rates), elastic.schedule(&ctx, &sc.rates)) {
+                (Ok(a), Ok(b)) => assert_eq!(
+                    a, b,
+                    "{}: spatial-only diverged from elastic (intf {interference_aware})",
+                    sc.name
+                ),
+                (Err(a), Err(b)) => assert_eq!(
+                    a.to_string(),
+                    b.to_string(),
+                    "{}: rejection reasons diverged (intf {interference_aware})",
+                    sc.name
+                ),
+                (a, b) => panic!(
+                    "{}: verdicts diverged (intf {interference_aware}): \
+                     spatial {:?} vs elastic {:?}",
+                    sc.name,
+                    a.map(|s| s.lets.len()),
+                    b.map(|s| s.lets.len())
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn spatial_only_fig12_fig13_json_is_byte_identical_to_elastic() {
+    // Two evaluation workloads through the full Fig-12 (max achievable
+    // under a violation budget) and Fig-13 (max schedulable + measured
+    // violation rate) searches. Both searches end in simulations, so
+    // equality here means equality of every verdict along the doubling/
+    // bisection bracket, of the emitted schedule at each probed scale,
+    // and of the simulated outcome — i.e. true degeneracy, not just a
+    // matching headline number.
+    let ctx = paper_ctx(true);
+    let spatial = SpaceTimeScheduler::spatial_only();
+    let elastic = ElasticPartitioning::gpulet_int();
+    let picks: Vec<(String, [f64; 5])> = eval_workloads()
+        .into_iter()
+        .filter(|(name, _)| name == "equal" || name == "long-only")
+        .collect();
+    assert_eq!(picks.len(), 2, "expected the equal + long-only workloads");
+    let rows = |s: &dyn Scheduler| -> String {
+        let rows: Vec<Json> = picks
+            .iter()
+            .map(|(name, base)| harness_row(&ctx, s, name, base))
+            .collect();
+        Json::Arr(rows).to_string()
+    };
+    assert_eq!(rows(&spatial), rows(&elastic));
+}
