@@ -1,7 +1,10 @@
-//! Bench target for the fleet tier: 1 / 4 / 16 nodes under scaled
-//! Fig-14 traffic behind the deterministic front-end router; writes
-//! BENCH_fleet_scale.json (timing + per-rung events/s and SLO-violation
-//! share). Diff across PRs with `gpulets bench-compare`.
+//! Bench target for the fleet tier: 1 / 4 / 16 / 64 nodes under scaled
+//! Fig-14 traffic behind the deterministic front-end router, each rung
+//! run under both a pinned-serial (1 worker) and the ambient-parallel
+//! advance; writes BENCH_fleet_scale.json (events/s per (nodes,
+//! threads) cell, parallel speedup incl. the 16-node headline row,
+//! byte-equality vs the serial arm, SLO-violation share, and peak-RSS
+//! proxies). Diff across PRs with `gpulets bench-compare`.
 use gpulets::experiments::{common, fleet_scale};
 
 fn main() {

@@ -570,7 +570,9 @@ fn fleet(args: &[String]) -> Result<()> {
         cfg.duration_s,
         &fleet_cfg,
     );
+    let t0 = std::time::Instant::now();
     engine.run(cfg.duration_s);
+    let wall_s = t0.elapsed().as_secs_f64();
     let out = engine.finish();
 
     println!("\n{}", out.report.table());
@@ -603,10 +605,17 @@ fn fleet(args: &[String]) -> Result<()> {
     if unplaced > 0 {
         println!("  ({unplaced} arrivals had no fleet placement and were dropped counted)");
     }
+    // Manual runs double as measurements (mirrors `gpulets serve`):
+    // events/s over the wall clock, the worker count the parallel
+    // advance resolved, and the peak-RSS proxies.
+    let eps = if wall_s > 0.0 { out.events_processed as f64 / wall_s } else { 0.0 };
     println!(
-        "fleet: {} events processed, peak {} live events across nodes, \
-         peak {} routed-ahead arrivals",
-        out.events_processed, out.peak_live_events, out.peak_routed,
+        "fleet: {} events processed in {wall_s:.2}s ({eps:.0} events/s on {} worker \
+         threads), peak {} live events across nodes, peak {} routed-ahead arrivals",
+        out.events_processed,
+        gpulets::util::par::threads(),
+        out.peak_live_events,
+        out.peak_routed,
     );
     Ok(())
 }

@@ -39,6 +39,31 @@
 //! reference in `tests/engine_equivalence.rs` still pins the whole
 //! pipeline.
 //!
+//! ## Memory layout: flat arena, zero steady-state allocation
+//!
+//! Per-(gpu-let, assignment) state — FIFO queue, duty-timer slot,
+//! precomputed constants, route position — lives in flat arenas indexed
+//! by assignment id (`asg_base[let] + asg`, let-major), not in nested
+//! per-let Vecs. `install_schedule` *reuses* the arenas across swaps
+//! and probe resets (carried-over `VecDeque`s keep their capacity), and
+//! the batch in-flight buffers rotate through a scratch `Vec` at each
+//! `Done` instead of being reallocated per batch. Together with the
+//! recycled fleet chunk path ([`ServingEngine::attach_chunk`]) the
+//! steady-state event loop performs **no heap allocation**: every push/
+//! pop lands in retained-capacity storage.
+//!
+//! ## The fleet chunk path
+//!
+//! `attach_chunk(Vec<Arrival>)` is the allocation-recycling form of
+//! `attach_source(DynSourceMux::of_trace(chunk))` the fleet's lockstep
+//! advance uses: the chunk is peeked/pulled through the same merged
+//! arrival ordering (chunk head and source peek compete; the earlier
+//! wins, chunk first on exact ties) and counts as (at most) one pending
+//! live event, exactly like the single materialized stream it replaces.
+//! The previous — by contract fully consumed — chunk's buffer is handed
+//! back to the caller, so the same `Vec`s cycle router → fleet →
+//! engine → fleet forever.
+//!
 //! ## Lifecycle
 //!
 //! ```text
@@ -136,6 +161,9 @@ enum Event {
     Done { epoch: u32, let_idx: usize },
 }
 
+/// Per-assignment mutable state, arena-allocated in one flat `Vec`
+/// indexed `asg_base[let] + asg` (let-major — the same scan order the
+/// old nested layout had).
 struct AsgState {
     queue: VecDeque<(u64, SimTimeUs)>, // (engine token, arrival µs)
     /// The (only) live duty timer for this assignment: `(fire_at_us,
@@ -159,15 +187,21 @@ struct AsgConst {
 }
 
 struct LetState {
-    /// Parallel to the schedule's assignments.
-    asgs: Vec<AsgState>,
     busy: bool,
     /// Round-robin pointer over assignments.
     next_asg: usize,
     /// Assignment/batch of the in-flight execution (for interference).
     running: Option<(usize, u32)>, // (asg_idx, actual batch)
-    /// In-flight requests: (asg_idx, id, arrival µs).
+    /// In-flight requests: (asg_idx, id, arrival µs). Batches are
+    /// formed in place and the buffer's capacity is recycled through
+    /// `done_scratch` at every `Done` — no per-batch allocation.
     inflight: Vec<(usize, u64, SimTimeUs)>,
+}
+
+impl LetState {
+    fn fresh() -> Self {
+        LetState { busy: false, next_asg: 0, running: None, inflight: Vec::new() }
+    }
 }
 
 /// A retired (pre-swap) in-flight request: everything its `Done` event
@@ -197,15 +231,29 @@ pub struct ServingEngine<'a> {
     epoch: u32,
     /// Routing table: model index -> [(let_idx, asg_idx, weight)].
     routes: Vec<Vec<(usize, usize, f64)>>,
-    /// Reverse map: `[let][asg]` -> position in `routes[model]`.
-    route_pos: Vec<Vec<usize>>,
     /// Per-route in-system counters for deficit-weighted routing:
     /// incremented at enqueue, decremented when a queued request is
     /// dropped — so only work a route actually absorbed counts against
     /// it (dropped requests no longer skew the split under overload).
     served: Vec<Vec<f64>>,
     lets: Vec<LetState>,
-    consts: Vec<Vec<AsgConst>>,
+    /// Flat per-assignment arena (queues + timer slots), indexed
+    /// `asg_base[let] + asg`. Reused across schedule installs.
+    asgs: Vec<AsgState>,
+    /// Flat per-assignment constants, parallel to `asgs`.
+    consts: Vec<AsgConst>,
+    /// Flat reverse map: assignment id -> position in `routes[model]`.
+    route_pos: Vec<usize>,
+    /// Arena base index per gpu-let: let `li`'s assignments occupy
+    /// `asg_base[li] .. asg_base[li] + lets[li].assignments.len()`.
+    asg_base: Vec<usize>,
+    /// Scratch buffer completed batches rotate through (see `handle`).
+    done_scratch: Vec<(usize, u64, SimTimeUs)>,
+    /// Pending fleet-dealt lockstep chunk (time-ordered), consumed via
+    /// the merged arrival peek exactly like an attached source.
+    chunk: Vec<Arrival>,
+    /// Consumption cursor into `chunk`.
+    chunk_pos: usize,
     /// Armed duty-timer slots (live count, for the O(active) metric).
     armed: usize,
     /// Per-GPU serialization for TemporalOnly.
@@ -256,10 +304,15 @@ impl<'a> ServingEngine<'a> {
             schedule: Schedule::default(),
             epoch: 0,
             routes: vec![Vec::new(); 5],
-            route_pos: Vec::new(),
             served: vec![Vec::new(); 5],
             lets: Vec::new(),
+            asgs: Vec::new(),
             consts: Vec::new(),
+            route_pos: Vec::new(),
+            asg_base: Vec::new(),
+            done_scratch: Vec::new(),
+            chunk: Vec::new(),
+            chunk_pos: 0,
             armed: 0,
             gpu_busy: Vec::new(),
             gpu_waiters: Vec::new(),
@@ -287,6 +340,8 @@ impl<'a> ServingEngine<'a> {
     pub fn reset(&mut self, schedule: Schedule, window_s: f64) {
         self.q.clear();
         self.source = None;
+        self.chunk.clear();
+        self.chunk_pos = 0;
         self.rng = Pcg32::seeded(self.cfg.seed);
         self.report = Report::new(window_s);
         self.epoch = 0;
@@ -307,6 +362,63 @@ impl<'a> ServingEngine<'a> {
         debug_assert!(!self.closed, "attach_source after finish/close");
         self.source = Some(source);
         self.note_live();
+    }
+
+    /// Attach a lockstep chunk of pre-routed arrivals (the fleet path),
+    /// returning the previous — by contract fully consumed — chunk's
+    /// buffer, cleared, for reuse. Behaviorally equivalent to
+    /// `attach_source(DynSourceMux::of_trace(chunk))` (same merged
+    /// arrival ordering, same ≤1 pending-live-event accounting) but
+    /// with zero per-window allocation. Times must be nondecreasing,
+    /// which router chunks guarantee.
+    pub fn attach_chunk(&mut self, chunk: Vec<Arrival>) -> Vec<Arrival> {
+        debug_assert!(!self.closed, "attach_chunk after finish/close");
+        debug_assert!(
+            self.chunk_pos == self.chunk.len(),
+            "previous chunk not fully consumed ({}/{})",
+            self.chunk_pos,
+            self.chunk.len()
+        );
+        debug_assert!(chunk.windows(2).all(|w| w[0].time_ms <= w[1].time_ms));
+        let mut spent = std::mem::replace(&mut self.chunk, chunk);
+        self.chunk_pos = 0;
+        spent.clear();
+        self.note_live();
+        spent
+    }
+
+    /// Time of the chunk's next unconsumed arrival, if any.
+    fn chunk_peek_ms(&self) -> Option<f64> {
+        self.chunk.get(self.chunk_pos).map(|a| a.time_ms)
+    }
+
+    /// Earliest pending arrival across the chunk and the attached
+    /// source (ms). The chunk wins exact ties — the two are never mixed
+    /// in practice (the fleet uses chunks, everything else a source).
+    fn arrival_peek_ms(&self) -> Option<f64> {
+        let chunk = self.chunk_peek_ms();
+        let src = self.source.as_ref().and_then(|s| s.peek_time_ms());
+        match (chunk, src) {
+            (Some(c), Some(s)) => Some(if s < c { s } else { c }),
+            (c, s) => c.or(s),
+        }
+    }
+
+    /// Pull the earliest pending arrival (chunk-first on exact ties,
+    /// matching `arrival_peek_ms`).
+    fn pull_arrival(&mut self) -> Option<Arrival> {
+        let chunk = self.chunk_peek_ms();
+        let src = self.source.as_ref().and_then(|s| s.peek_time_ms());
+        match (chunk, src) {
+            (Some(c), Some(s)) if s < c => self.source.as_mut().and_then(|m| m.pull()),
+            (Some(_), _) => {
+                let a = self.chunk[self.chunk_pos];
+                self.chunk_pos += 1;
+                Some(a)
+            }
+            (None, Some(_)) => self.source.as_mut().and_then(|m| m.pull()),
+            (None, None) => None,
+        }
     }
 
     /// Feed arrivals into the event queue (times are absolute ms on the
@@ -342,11 +454,7 @@ impl<'a> ServingEngine<'a> {
             self.events_processed += 1;
             match next {
                 NextEvent::Arrival(at) => {
-                    let a = self
-                        .source
-                        .as_mut()
-                        .and_then(|s| s.pull())
-                        .expect("peeked arrival vanished");
+                    let a = self.pull_arrival().expect("peeked arrival vanished");
                     // Past-time arrivals (a source attached mid-run)
                     // clamp to `now` exactly like bulk `inject` does
                     // via `push_at_us`, so the two ingestion paths
@@ -359,7 +467,7 @@ impl<'a> ServingEngine<'a> {
                     self.route_request(token, a.model, at);
                 }
                 NextEvent::Timer(at, li, ai) => {
-                    self.lets[li].asgs[ai].timer = None;
+                    self.asgs[self.asg_base[li] + ai].timer = None;
                     self.armed -= 1;
                     self.q.advance_to(at);
                     self.fire_timer(li, ai);
@@ -380,9 +488,11 @@ impl<'a> ServingEngine<'a> {
     /// from the source.
     pub fn run_stream(&mut self) {
         debug_assert!(!self.closed, "run_stream after finish/close");
-        while let Some(t_ms) = self.source.as_ref().and_then(|s| s.peek_time_ms()) {
+        while let Some(t_ms) = self.arrival_peek_ms() {
             self.run_until(ms_to_us(t_ms));
         }
+        // Drain horizon from the attached source; chunk consumers (the
+        // fleet) manage their own horizon via the router.
         let last_ms = self.source.as_ref().map_or(0.0, |s| s.last_arrival_ms());
         self.run_until(ms_to_us(last_ms) + ms_to_us(self.cfg.drain_ms));
     }
@@ -391,26 +501,29 @@ impl<'a> ServingEngine<'a> {
     /// semantics; `mode` picks what happens to the queued backlog.
     pub fn swap_schedule(&mut self, next: Schedule, mode: SwapMode) {
         // Retire in-flight batches: their Done events complete them
-        // under the old schedule's model/SLO constants.
+        // under the old schedule's model/SLO constants. Idle lets keep
+        // their inflight buffer (and its capacity) untouched.
         for li in 0..self.lets.len() {
-            let inflight = std::mem::take(&mut self.lets[li].inflight);
-            if inflight.is_empty() {
+            if self.lets[li].inflight.is_empty() {
                 continue;
             }
+            let inflight = std::mem::take(&mut self.lets[li].inflight);
+            let base = self.asg_base[li];
             let mut completions = Vec::with_capacity(inflight.len());
             for (ai, id, arr) in inflight {
                 let m = self.schedule.lets[li].assignments[ai].model;
-                completions.push((m, self.consts[li][ai].slo_ms, id, arr));
+                completions.push((m, self.consts[base + ai].slo_ms, id, arr));
             }
             self.retired.insert((self.epoch, li), completions);
         }
         // Collect (or drop) the queued backlog in FIFO order per queue.
         let mut backlog: Vec<(ModelId, u64, SimTimeUs)> = Vec::new();
         for li in 0..self.lets.len() {
-            for ai in 0..self.lets[li].asgs.len() {
+            let base = self.asg_base[li];
+            for ai in 0..self.schedule.lets[li].assignments.len() {
                 let m = self.schedule.lets[li].assignments[ai].model;
-                let slo_ms = self.consts[li][ai].slo_ms;
-                while let Some((id, arr)) = self.lets[li].asgs[ai].queue.pop_front() {
+                let slo_ms = self.consts[base + ai].slo_ms;
+                while let Some((id, arr)) = self.asgs[base + ai].queue.pop_front() {
                     match mode {
                         SwapMode::Migrate => backlog.push((m, id, arr)),
                         SwapMode::DropQueued => {
@@ -480,12 +593,15 @@ impl<'a> ServingEngine<'a> {
         }
         self.closed = true;
         self.source = None;
+        self.chunk.clear();
+        self.chunk_pos = 0;
         for li in 0..self.lets.len() {
-            for ai in 0..self.lets[li].asgs.len() {
+            let base = self.asg_base[li];
+            for ai in 0..self.schedule.lets[li].assignments.len() {
                 let m = self.schedule.lets[li].assignments[ai].model;
-                let slo_ms = self.consts[li][ai].slo_ms;
-                let pos = self.route_pos[li][ai];
-                while self.lets[li].asgs[ai].queue.pop_front().is_some() {
+                let slo_ms = self.consts[base + ai].slo_ms;
+                let pos = self.route_pos[base + ai];
+                while self.asgs[base + ai].queue.pop_front().is_some() {
                     self.served[m.index()][pos] -= 1.0;
                     self.report.model_mut(m, slo_ms).record_drop();
                 }
@@ -493,9 +609,9 @@ impl<'a> ServingEngine<'a> {
             let inflight = std::mem::take(&mut self.lets[li].inflight);
             for (ai, _id, _arr) in inflight {
                 let m = self.schedule.lets[li].assignments[ai].model;
-                let pos = self.route_pos[li][ai];
+                let pos = self.route_pos[base + ai];
                 self.served[m.index()][pos] -= 1.0;
-                self.report.model_mut(m, self.consts[li][ai].slo_ms).record_drop();
+                self.report.model_mut(m, self.consts[base + ai].slo_ms).record_drop();
             }
         }
         let retired = std::mem::take(&mut self.retired);
@@ -547,7 +663,7 @@ impl<'a> ServingEngine<'a> {
         let sim_t = sim.map(|s| match s {
             NextEvent::Arrival(t) | NextEvent::Timer(t, _, _) | NextEvent::Heap(t) => t,
         });
-        if let Some(at) = self.source.as_ref().and_then(|s| s.peek_time_ms()) {
+        if let Some(at) = self.arrival_peek_ms() {
             let at = ms_to_us(at);
             if at <= t_us && sim_t.is_none_or(|st| at <= st) {
                 return Some(NextEvent::Arrival(at));
@@ -564,9 +680,10 @@ impl<'a> ServingEngine<'a> {
     /// replaces O(log trace) heap churn for every arm/re-arm.
     fn next_timer(&self) -> Option<(SimTimeUs, u64, usize, usize)> {
         let mut best: Option<(SimTimeUs, u64, usize, usize)> = None;
-        for (li, l) in self.lets.iter().enumerate() {
-            for (ai, a) in l.asgs.iter().enumerate() {
-                if let Some((t, s)) = a.timer {
+        for (li, &base) in self.asg_base.iter().enumerate() {
+            let n = self.schedule.lets[li].assignments.len();
+            for ai in 0..n {
+                if let Some((t, s)) = self.asgs[base + ai].timer {
                     if best.is_none_or(|(bt, bs, _, _)| (t, s) < (bt, bs)) {
                         best = Some((t, s, li, ai));
                     }
@@ -582,7 +699,7 @@ impl<'a> ServingEngine<'a> {
     fn arm_timer(&mut self, li: usize, ai: usize, at_us: SimTimeUs) {
         let t = at_us.max(self.q.now_us());
         let seq = self.q.alloc_seq();
-        let slot = &mut self.lets[li].asgs[ai].timer;
+        let slot = &mut self.asgs[self.asg_base[li] + ai].timer;
         if slot.is_none() {
             self.armed += 1;
         }
@@ -592,7 +709,7 @@ impl<'a> ServingEngine<'a> {
     /// A duty timer fired: flush the partial batch if the executor is
     /// idle, otherwise check back shortly after the current run.
     fn fire_timer(&mut self, let_idx: usize, asg_idx: usize) {
-        if self.lets[let_idx].asgs[asg_idx].queue.is_empty() {
+        if self.asgs[self.asg_base[let_idx] + asg_idx].queue.is_empty() {
             return;
         }
         if !self.lets[let_idx].busy {
@@ -606,9 +723,12 @@ impl<'a> ServingEngine<'a> {
     /// Update the live-event high-water mark (heap + armed timers +
     /// pending source arrivals).
     fn note_live(&mut self) {
+        // A nonempty chunk counts as one pending arrival — the same
+        // footprint as the single materialized stream it replaced.
         let live = self.q.len()
             + self.armed
-            + self.source.as_ref().map_or(0, |s| s.pending_len());
+            + self.source.as_ref().map_or(0, |s| s.pending_len())
+            + usize::from(self.chunk_pos < self.chunk.len());
         self.peak_live = self.peak_live.max(live);
     }
 
@@ -623,29 +743,39 @@ impl<'a> ServingEngine<'a> {
             r.clear();
         }
         self.route_pos.clear();
+        self.asg_base.clear();
+        let mut base = 0usize;
         for (li, lp) in self.schedule.lets.iter().enumerate() {
-            let mut pos_row = Vec::with_capacity(lp.assignments.len());
+            self.asg_base.push(base);
+            base += lp.assignments.len();
             for (ai, a) in lp.assignments.iter().enumerate() {
                 self.routes[a.model.index()].push((li, ai, a.rate));
-                pos_row.push(self.routes[a.model.index()].len() - 1);
+                self.route_pos.push(self.routes[a.model.index()].len() - 1);
             }
-            self.route_pos.push(pos_row);
         }
-        self.lets.clear();
-        for lp in &self.schedule.lets {
-            self.lets.push(LetState {
-                asgs: lp
-                    .assignments
-                    .iter()
-                    .map(|_| AsgState { queue: VecDeque::new(), timer: None })
-                    .collect(),
-                busy: false,
-                next_asg: 0,
-                running: None,
-                inflight: Vec::new(),
-            });
+        let total = base;
+        // Reuse the arena across installs: carried-over entries keep
+        // their VecDeque capacity, only the logical state is wiped.
+        self.asgs.truncate(total);
+        for a in &mut self.asgs {
+            a.queue.clear();
+            a.timer = None;
         }
+        self.asgs
+            .resize_with(total, || AsgState { queue: VecDeque::new(), timer: None });
+        let n_lets = self.schedule.lets.len();
+        self.lets.truncate(n_lets);
+        for l in &mut self.lets {
+            l.busy = false;
+            l.next_asg = 0;
+            l.running = None;
+            l.inflight.clear();
+        }
+        self.lets.resize_with(n_lets, LetState::fresh);
         self.armed = 0;
+        // At most one Done per gpu-let is outstanding; pre-reserving
+        // keeps steady-state heap pushes growth-free.
+        self.q.reserve(n_lets);
         // Per-let duty cycle: the sum of all assignments' planned
         // executions. The batching timeout must leave room for a full
         // duty cycle (the request may queue behind every co-assigned
@@ -653,6 +783,7 @@ impl<'a> ServingEngine<'a> {
         let lm = self.lm;
         let mode = self.cfg.mode;
         self.consts.clear();
+        self.consts.reserve(total);
         for lp in &self.schedule.lets {
             let p_exec = exec_fraction(mode, lp.spec.fraction());
             let duty_us: SimTimeUs = lp
@@ -660,21 +791,16 @@ impl<'a> ServingEngine<'a> {
                 .iter()
                 .map(|a| ms_to_us(lm.latency_ms(a.model, a.batch, p_exec)))
                 .sum();
-            self.consts.push(
-                lp.assignments
-                    .iter()
-                    .map(|a| {
-                        let slo_ms = lm.slo_ms(a.model);
-                        let slo_us = ms_to_us(slo_ms);
-                        AsgConst {
-                            exec_est_us: ms_to_us(lm.latency_ms(a.model, a.batch, p_exec)),
-                            slo_us,
-                            timeout_us: super::batcher::slo_timeout_us(slo_us, duty_us),
-                            slo_ms,
-                        }
-                    })
-                    .collect(),
-            );
+            for a in &lp.assignments {
+                let slo_ms = lm.slo_ms(a.model);
+                let slo_us = ms_to_us(slo_ms);
+                self.consts.push(AsgConst {
+                    exec_est_us: ms_to_us(lm.latency_ms(a.model, a.batch, p_exec)),
+                    slo_us,
+                    timeout_us: super::batcher::slo_timeout_us(slo_us, duty_us),
+                    slo_ms,
+                });
+            }
         }
         let num_gpus = self.schedule.lets.iter().map(|l| l.spec.gpu + 1).max().unwrap_or(0);
         for (s, r) in self.served.iter_mut().zip(self.routes.iter()) {
@@ -704,12 +830,20 @@ impl<'a> ServingEngine<'a> {
                     return;
                 }
                 let gpu = self.schedule.lets[let_idx].spec.gpu;
-                let inflight = std::mem::take(&mut self.lets[let_idx].inflight);
-                for (ai, id, arr) in inflight {
+                // Rotate the batch through the scratch buffer: both Vecs
+                // keep their capacity, so completing a batch (and
+                // forming the next one in the emptied buffer) is
+                // allocation-free in steady state.
+                let mut done = std::mem::take(&mut self.done_scratch);
+                std::mem::swap(&mut done, &mut self.lets[let_idx].inflight);
+                let base = self.asg_base[let_idx];
+                for &(ai, id, arr) in &done {
                     let m = self.schedule.lets[let_idx].assignments[ai].model;
-                    let slo_ms = self.consts[let_idx][ai].slo_ms;
+                    let slo_ms = self.consts[base + ai].slo_ms;
                     self.record_completion(id, m, slo_ms, arr, now);
                 }
+                done.clear();
+                self.done_scratch = done;
                 self.lets[let_idx].busy = false;
                 self.lets[let_idx].running = None;
                 if self.cfg.mode == ShareMode::TemporalOnly {
@@ -766,14 +900,15 @@ impl<'a> ServingEngine<'a> {
             (pos, li, ai)
         };
         self.served[m_idx][pos] += 1.0;
-        self.lets[li].asgs[ai].queue.push_back((id, arrival_us));
+        let aid = self.asg_base[li] + ai;
+        self.asgs[aid].queue.push_back((id, arrival_us));
         let b_target = self.schedule.lets[li].assignments[ai].batch as usize;
-        if !self.lets[li].busy && self.lets[li].asgs[ai].queue.len() >= b_target {
+        if !self.lets[li].busy && self.asgs[aid].queue.len() >= b_target {
             self.try_start(li);
-        } else if self.lets[li].asgs[ai].queue.len() == 1 {
+        } else if self.asgs[aid].queue.len() == 1 {
             // Arm the duty timeout for the queue head (absolute, so a
             // migrated head keeps only its remaining allowance).
-            let at = arrival_us + self.consts[li][ai].timeout_us;
+            let at = arrival_us + self.consts[aid].timeout_us;
             self.arm_timer(li, ai, at);
         }
     }
@@ -788,6 +923,7 @@ impl<'a> ServingEngine<'a> {
         }
         let now = self.q.now_us();
         let n_asgs = self.schedule.lets[let_idx].assignments.len();
+        let base = self.asg_base[let_idx];
 
         // Pick next assignment with work, starting from the round-robin
         // pointer.
@@ -797,22 +933,22 @@ impl<'a> ServingEngine<'a> {
             let model = self.schedule.lets[let_idx].assignments[ai].model;
             let batch = self.schedule.lets[let_idx].assignments[ai].batch;
             let AsgConst { exec_est_us, slo_us, timeout_us, slo_ms } =
-                self.consts[let_idx][ai];
+                self.consts[base + ai];
             // Drop hopeless heads first: even starting right now, the
             // request would finish past its SLO.
-            let st = &mut self.lets[let_idx].asgs[ai];
+            let st = &mut self.asgs[base + ai];
             let before = st.queue.len();
             st.queue.retain(|&(_, arr)| now + exec_est_us <= arr + slo_us);
             let dropped = before - st.queue.len();
             if dropped > 0 {
                 // Dropped work no longer counts against the route.
-                let pos = self.route_pos[let_idx][ai];
+                let pos = self.route_pos[base + ai];
                 self.served[model.index()][pos] -= dropped as f64;
                 for _ in 0..dropped {
                     self.report.model_mut(model, slo_ms).record_drop();
                 }
             }
-            let st = &self.lets[let_idx].asgs[ai];
+            let st = &self.asgs[base + ai];
             if !st.queue.is_empty() {
                 let full = st.queue.len() >= batch as usize;
                 let head_arr = st.queue.front().expect("nonempty queue").1;
@@ -839,13 +975,15 @@ impl<'a> ServingEngine<'a> {
 
         let model = self.schedule.lets[let_idx].assignments[ai].model;
         let b_planned = self.schedule.lets[let_idx].assignments[ai].batch;
-        let b_actual =
-            (self.lets[let_idx].asgs[ai].queue.len() as u32).min(b_planned).max(1);
-        let mut inflight = Vec::with_capacity(b_actual as usize);
+        let b_actual = (self.asgs[base + ai].queue.len() as u32).min(b_planned).max(1);
+        // Form the batch in place: the inflight buffer was drained (and
+        // capacity-preserved) at the last Done's scratch rotation, so
+        // this is a no-allocation push in steady state.
+        debug_assert!(self.lets[let_idx].inflight.is_empty());
         for _ in 0..b_actual {
             let (id, arr) =
-                self.lets[let_idx].asgs[ai].queue.pop_front().expect("batch underflow");
-            inflight.push((ai, id, arr));
+                self.asgs[base + ai].queue.pop_front().expect("batch underflow");
+            self.lets[let_idx].inflight.push((ai, id, arr));
         }
 
         let p_me = self.schedule.lets[let_idx].spec.fraction();
@@ -881,7 +1019,6 @@ impl<'a> ServingEngine<'a> {
 
         self.lets[let_idx].busy = true;
         self.lets[let_idx].running = Some((ai, b_actual));
-        self.lets[let_idx].inflight = inflight;
         self.lets[let_idx].next_asg = (ai + 1) % n_asgs;
         self.q.push_after_us(
             ms_to_us(exec),
@@ -900,6 +1037,20 @@ impl<'a> ServingEngine<'a> {
             .find_map(|(i, _)| self.lets[i].running.map(|r| (i, r)))
     }
 }
+
+// The fleet tier advances per-node engines from worker threads
+// (`util::par::par_for_each_mut`), which requires `ServingEngine: Send`.
+// The `'a` borrows (`LatencyModel`'s profile tables, `GroundTruth`'s
+// interference factors) are plain-data structs with no interior
+// mutability — hence `Sync` — and every owned field is `Send`. Pinned
+// at compile time so a future `Cell`/`Rc` regression fails the build:
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    const fn assert_sync<T: Sync>() {}
+    assert_send::<ServingEngine<'static>>();
+    assert_sync::<LatencyModel>();
+    assert_sync::<GroundTruth>();
+};
 
 /// Effective execution fraction under a sharing mode: without static
 /// provisioning (MPS default / temporal) a kernel sees the whole GPU.
@@ -1186,6 +1337,57 @@ mod tests {
     }
 
     #[test]
+    fn chunk_path_matches_of_trace_source_byte_identically() {
+        // `attach_chunk` is advertised as behaviorally equivalent to
+        // `attach_source(of_trace(..))` — pin that: same report, same
+        // event count, and a peak-live footprint no larger than the
+        // single-stream source path's.
+        let (lm, gt) = world();
+        let cfg = SimConfig::default();
+        let rates = [80.0, 0.0, 0.0, 0.0, 40.0];
+        let schedule = sched_for(&rates, 2);
+        let arrivals = generate_arrivals(
+            &[(ModelId::Lenet, 80.0), (ModelId::Vgg, 40.0)],
+            6.0,
+            17,
+        )
+        .unwrap();
+        let horizon = horizon_us(&arrivals, &cfg);
+
+        let mut src = ServingEngine::new(&lm, &gt, schedule.clone(), 6.0, &cfg);
+        src.attach_source(SourceMux::of_trace(arrivals.clone()));
+        src.run_until(horizon);
+        let src_events = src.events_processed();
+        let src_peak = src.peak_live_events();
+        let r_src = src.finish();
+
+        // Feed the same arrivals as 500 ms lockstep chunks, recycling
+        // one buffer exactly like the fleet's advance does.
+        let mut chk = ServingEngine::new(&lm, &gt, schedule, 6.0, &cfg);
+        let mut buf: Vec<Arrival> = Vec::new();
+        let mut i = 0;
+        let mut t = 0;
+        while t < horizon {
+            t = (t + 500_000).min(horizon);
+            buf.clear();
+            while i < arrivals.len() && ms_to_us(arrivals[i].time_ms) <= t {
+                buf.push(arrivals[i]);
+                i += 1;
+            }
+            buf = chk.attach_chunk(buf);
+            chk.run_until(t);
+        }
+        assert_eq!(chk.events_processed(), src_events);
+        assert!(
+            chk.peak_live_events() <= src_peak,
+            "chunk path peak {} must not exceed source path peak {src_peak}",
+            chk.peak_live_events()
+        );
+        let r_chk = chk.finish();
+        assert_eq!(r_src.to_json().to_string(), r_chk.to_json().to_string());
+    }
+
+    #[test]
     fn reset_reproduces_a_fresh_engine_exactly() {
         let (lm, gt) = world();
         let cfg = SimConfig::default();
@@ -1256,20 +1458,21 @@ mod tests {
         let slo_v = ms_to_us(lm.slo_ms(ModelId::Vgg));
 
         // Both co-tenants' timeouts are armed from the summed duty...
-        assert_eq!(shared.consts[0][0].timeout_us, slo_timeout_us(slo_g, duty));
-        assert_eq!(shared.consts[0][1].timeout_us, slo_timeout_us(slo_v, duty));
+        // (the consts arena is flat, let-major: ids 0 and 1 here).
+        assert_eq!(shared.consts[0].timeout_us, slo_timeout_us(slo_g, duty));
+        assert_eq!(shared.consts[1].timeout_us, slo_timeout_us(slo_v, duty));
         // ...while the execution estimate stays per-assignment.
-        assert_eq!(shared.consts[0][0].exec_est_us, e_g);
-        assert_eq!(shared.consts[0][1].exec_est_us, e_v);
+        assert_eq!(shared.consts[0].exec_est_us, e_g);
+        assert_eq!(shared.consts[1].exec_est_us, e_v);
         // And the shared timeout is strictly tighter than the same
         // assignment's solo timeout: the co-tenant's slot comes out of
         // the allowable batching wait.
-        assert_eq!(solo.consts[0][0].timeout_us, slo_timeout_us(slo_v, e_v));
+        assert_eq!(solo.consts[0].timeout_us, slo_timeout_us(slo_v, e_v));
         assert!(
-            shared.consts[0][1].timeout_us < solo.consts[0][0].timeout_us,
+            shared.consts[1].timeout_us < solo.consts[0].timeout_us,
             "shared timeout {} must be < solo timeout {}",
-            shared.consts[0][1].timeout_us,
-            solo.consts[0][0].timeout_us
+            shared.consts[1].timeout_us,
+            solo.consts[0].timeout_us
         );
     }
 }

@@ -1,19 +1,24 @@
 //! Fleet scaling: the Fig-14 fluctuation workload scaled to 1 / 4 / 16
-//! nodes, served by the fleet tier with periodic rebalancing.
+//! / 64 nodes, served by the fleet tier with periodic rebalancing —
+//! under both a pinned-serial and the ambient-parallel worker pool.
 //!
 //! Each rung multiplies the Fig-14 per-model rates by the node count,
 //! so every node sees roughly the single-server paper load and the
 //! series isolates what the *fleet layer* adds: deterministic routing,
 //! lockstep advancement of N engines, merged reporting, and re-planning
-//! at window boundaries. Reported per rung: offered requests, engine
-//! events/s (wall-clock), the fleet-wide SLO-violation share (drops
-//! included), rebalances applied, and the conservation check — the
-//! BENCH payload is the fleet row of the cross-PR perf trajectory
-//! (`gpulets bench-compare`).
+//! at window boundaries. Every rung runs twice — threads pinned to 1
+//! (the serial reference) and at the ambient `util::par` resolution —
+//! and the payload records events/s per (nodes, threads) cell, the
+//! parallel speedup, a byte-equality check against the serial arm
+//! (`matches_serial`: the advance must be thread-count invariant), and
+//! the peak-RSS proxies (peak live events per node, peak routed-ahead
+//! arrivals). The BENCH payload is the fleet row of the cross-PR perf
+//! trajectory (`gpulets bench-compare`).
 //!
 //! Routing is deterministic for a fixed seed regardless of `--threads`:
-//! the rungs run serially and the router/engines never touch the
-//! worker pool.
+//! dealing is serial by construction and the parallel node advance is
+//! proven byte-identical (`tests/fleet_equivalence.rs`), so both arms
+//! produce the same reports and differ only in wall clock.
 
 use crate::config::Algo;
 use crate::fleet::{FleetConfig, FleetEngine, FleetOutcome, FleetPlanner};
@@ -22,27 +27,33 @@ use crate::models::ModelId;
 use crate::perfmodel::LatencyModel;
 use crate::sched::SchedCtx;
 use crate::util::json::{obj, Json};
+use crate::util::par;
 use crate::workload::{dyn_sources, varying_streams, FluctuationTrace, SourceMux};
 
 use super::common::{fitted_interference, Runnable, RunOutput};
 
 /// Node counts of the scaling ladder.
-pub const NODES: [usize; 3] = [1, 4, 16];
+pub const NODES: [usize; 4] = [1, 4, 16, 64];
 
 /// Trace length per rung (s) — covers the first Fig-14 wave's rise,
 /// peak, and fall.
 pub const DURATION_S: f64 = 600.0;
 
-/// One rung's outcome plus its wall-clock cost.
+/// One rung's outcome plus its wall-clock cost, tagged with the worker
+/// count it ran under.
 pub struct Rung {
     pub nodes: usize,
+    /// Resolved worker count the advance ran with.
+    pub threads: usize,
     pub outcome: FleetOutcome,
     pub wall_s: f64,
 }
 
 /// Run one rung: `nodes` nodes under `nodes`-times Fig-14 traffic,
 /// planned per node by the scheduler `algo` names (any registered algo,
-/// including `spacetime`, can drive the fleet tier).
+/// including `spacetime`, can drive the fleet tier). The worker count
+/// is whatever `util::par` currently resolves to — the matrix runner
+/// pins it per arm.
 pub fn compute(algo: Algo, nodes: usize, duration_s: f64, seed: u64) -> crate::error::Result<Rung> {
     let scale = nodes as f64;
     let scheduler = algo.scheduler();
@@ -83,7 +94,7 @@ pub fn compute(algo: Algo, nodes: usize, duration_s: f64, seed: u64) -> crate::e
     engine.run(duration_s);
     let outcome = engine.finish();
     let wall_s = t0.elapsed().as_secs_f64();
-    Ok(Rung { nodes, outcome, wall_s })
+    Ok(Rung { nodes, threads: par::threads(), outcome, wall_s })
 }
 
 fn events_per_s(r: &Rung) -> f64 {
@@ -94,75 +105,146 @@ fn events_per_s(r: &Rung) -> f64 {
     }
 }
 
-pub fn render(rungs: &[Rung]) -> String {
+/// One ladder rung measured under both arms.
+pub struct MatrixRow {
+    pub serial: Rung,
+    pub parallel: Rung,
+}
+
+impl MatrixRow {
+    /// Serving results must be thread-count invariant: merged report
+    /// JSON, routing totals, and rebalance history all byte-equal.
+    pub fn matches_serial(&self) -> bool {
+        self.serial.outcome.report.to_json().to_string()
+            == self.parallel.outcome.report.to_json().to_string()
+            && self.serial.outcome.offered == self.parallel.outcome.offered
+            && self.serial.outcome.rebalances == self.parallel.outcome.rebalances
+    }
+
+    /// Serial wall / parallel wall (1.0 when timing is degenerate).
+    pub fn speedup(&self) -> f64 {
+        if self.parallel.wall_s > 0.0 && self.serial.wall_s > 0.0 {
+            self.serial.wall_s / self.parallel.wall_s
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Run the (nodes × threads) matrix: each rung once with the worker
+/// count pinned to 1 and once at the ambient resolution. The prior
+/// thread override is restored exactly afterwards.
+pub fn matrix(algo: Algo, nodes_list: &[usize], duration_s: f64, seed: u64) -> Vec<MatrixRow> {
+    let saved = par::thread_override();
+    let ambient = par::threads().max(1);
+    let mut rows = Vec::with_capacity(nodes_list.len());
+    for &n in nodes_list {
+        par::set_threads(1);
+        let serial =
+            compute(algo, n, duration_s, seed).expect("fig14 rates are plannable");
+        par::set_threads(ambient);
+        let parallel =
+            compute(algo, n, duration_s, seed).expect("fig14 rates are plannable");
+        rows.push(MatrixRow { serial, parallel });
+    }
+    par::set_threads(saved);
+    rows
+}
+
+pub fn render(rows: &[MatrixRow]) -> String {
     let mut s = String::from(
         "# fleet_scale: N nodes under N-times Fig-14 traffic (600 s, 20 s windows)\n\
-         nodes   offered   events/s   viol%   rebalances   conserved\n",
+         # each rung runs serial (1 worker) and parallel (ambient workers)\n\
+         nodes threads   offered   events/s  speedup   viol%   rebalances   conserved   match\n",
     );
-    for r in rungs {
-        let offered: u64 = r.outcome.offered.iter().sum();
-        s.push_str(&format!(
-            "{:>5} {:>9} {:>10.0} {:>7.2} {:>12} {:>11}\n",
-            r.nodes,
-            offered,
-            events_per_s(r),
-            r.outcome.report.overall_violation_rate() * 100.0,
-            r.outcome.rebalances,
-            if r.outcome.conserved() { "yes" } else { "NO" },
-        ));
+    for row in rows {
+        for (r, arm_of) in [(&row.serial, None), (&row.parallel, Some(row))] {
+            let offered: u64 = r.outcome.offered.iter().sum();
+            let speedup = arm_of
+                .map_or("      -".to_string(), |m| format!("{:>7.2}", m.speedup()));
+            let matches = arm_of.map_or("    -".to_string(), |m| {
+                if m.matches_serial() { "  yes".into() } else { "   NO".into() }
+            });
+            s.push_str(&format!(
+                "{:>5} {:>7} {:>9} {:>10.0} {} {:>7.2} {:>12} {:>11} {}\n",
+                r.nodes,
+                r.threads,
+                offered,
+                events_per_s(r),
+                speedup,
+                r.outcome.report.overall_violation_rate() * 100.0,
+                r.outcome.rebalances,
+                if r.outcome.conserved() { "yes" } else { "NO" },
+                matches,
+            ));
+        }
     }
     s
 }
 
 pub fn run() -> String {
-    let rungs: Vec<Rung> = NODES
-        .iter()
-        .map(|&n| compute(Algo::Gpulet, n, DURATION_S, 2024).expect("fig14 rates are plannable"))
-        .collect();
-    render(&rungs)
+    render(&matrix(Algo::Gpulet, &NODES, DURATION_S, 2024))
+}
+
+fn rung_json(r: &Rung, row: Option<&MatrixRow>) -> Json {
+    let (served, dropped) = r.outcome.served_dropped();
+    let mut fields = vec![
+        ("nodes", Json::Num(r.nodes as f64)),
+        ("threads", Json::Num(r.threads as f64)),
+        (
+            "arm",
+            Json::Str(if row.is_some() { "parallel".into() } else { "serial".into() }),
+        ),
+        ("duration_s", Json::Num(DURATION_S)),
+        (
+            "offered_requests",
+            Json::Num(r.outcome.offered.iter().sum::<u64>() as f64),
+        ),
+        ("served", Json::Num(served.iter().sum::<u64>() as f64)),
+        ("dropped", Json::Num(dropped.iter().sum::<u64>() as f64)),
+        ("events", Json::Num(r.outcome.events_processed as f64)),
+        ("wall_s", Json::Num(r.wall_s)),
+        ("events_per_s", Json::Num(events_per_s(r))),
+        (
+            "violation_share",
+            Json::Num(r.outcome.report.overall_violation_rate()),
+        ),
+        ("rebalances", Json::Num(r.outcome.rebalances as f64)),
+        ("conserved", Json::Bool(r.outcome.conserved())),
+        (
+            "peak_live_events",
+            Json::Num(r.outcome.peak_live_events as f64),
+        ),
+        ("peak_routed", Json::Num(r.outcome.peak_routed as f64)),
+    ];
+    if let Some(m) = row {
+        fields.push(("matches_serial", Json::Bool(m.matches_serial())));
+        fields.push(("speedup", Json::Num(m.speedup())));
+    }
+    obj(fields)
 }
 
 /// Text + JSON for the CLI / bench harness.
 pub fn report() -> RunOutput {
-    let rungs: Vec<Rung> = NODES
+    let rows = matrix(Algo::Gpulet, &NODES, DURATION_S, 2024);
+    let mut rungs: Vec<Json> = Vec::with_capacity(rows.len() * 2);
+    for row in &rows {
+        rungs.push(rung_json(&row.serial, None));
+        rungs.push(rung_json(&row.parallel, Some(row)));
+    }
+    // The headline speedup cell: serial vs parallel at 16 nodes (the
+    // largest rung every machine runs comfortably; 64 is the stress
+    // rung).
+    let speedup_16 = rows
         .iter()
-        .map(|&n| compute(Algo::Gpulet, n, DURATION_S, 2024).expect("fig14 rates are plannable"))
-        .collect();
-    let rows: Vec<Json> = rungs
-        .iter()
-        .map(|r| {
-            let (served, dropped) = r.outcome.served_dropped();
-            obj(vec![
-                ("nodes", Json::Num(r.nodes as f64)),
-                ("duration_s", Json::Num(DURATION_S)),
-                (
-                    "offered_requests",
-                    Json::Num(r.outcome.offered.iter().sum::<u64>() as f64),
-                ),
-                ("served", Json::Num(served.iter().sum::<u64>() as f64)),
-                ("dropped", Json::Num(dropped.iter().sum::<u64>() as f64)),
-                ("events", Json::Num(r.outcome.events_processed as f64)),
-                ("wall_s", Json::Num(r.wall_s)),
-                ("events_per_s", Json::Num(events_per_s(r))),
-                (
-                    "violation_share",
-                    Json::Num(r.outcome.report.overall_violation_rate()),
-                ),
-                ("rebalances", Json::Num(r.outcome.rebalances as f64)),
-                ("conserved", Json::Bool(r.outcome.conserved())),
-                (
-                    "peak_live_events",
-                    Json::Num(r.outcome.peak_live_events as f64),
-                ),
-                ("peak_routed", Json::Num(r.outcome.peak_routed as f64)),
-            ])
-        })
-        .collect();
+        .find(|r| r.serial.nodes == 16)
+        .map_or(1.0, MatrixRow::speedup);
     RunOutput {
-        text: render(&rungs),
+        text: render(&rows),
         payload: obj(vec![
             ("figure", Json::Str("fleet_scale".into())),
-            ("rungs", Json::Arr(rows)),
+            ("speedup_16_nodes", Json::Num(speedup_16)),
+            ("rungs", Json::Arr(rungs)),
         ]),
     }
 }
@@ -175,7 +257,7 @@ impl Runnable for Experiment {
         "fleet_scale"
     }
     fn title(&self) -> &'static str {
-        "fleet tier at 1/4/16 nodes under scaled Fig-14 traffic"
+        "fleet tier at 1/4/16/64 nodes, serial vs parallel advance"
     }
     fn bench_file(&self) -> &'static str {
         "BENCH_fleet_scale.json"
@@ -205,6 +287,27 @@ mod tests {
         );
         assert_eq!(a.outcome.offered, b.outcome.offered);
         assert_eq!(a.outcome.rebalances, b.outcome.rebalances);
+    }
+
+    #[test]
+    fn matrix_parallel_arm_matches_serial_arm() {
+        // The bench's own equality check must hold on a small matrix:
+        // the parallel advance is byte-identical to the serial one.
+        // (Thread settings race benignly with other tests — results are
+        // thread-count invariant by design, which is exactly what this
+        // asserts.)
+        let rows = matrix(Algo::Gpulet, &[1, 2], 30.0, 7);
+        assert_eq!(rows.len(), 2);
+        for row in &rows {
+            assert!(row.serial.outcome.conserved());
+            assert!(row.parallel.outcome.conserved());
+            assert!(
+                row.matches_serial(),
+                "parallel advance diverged from serial at {} nodes",
+                row.serial.nodes
+            );
+            assert!(row.speedup() > 0.0);
+        }
     }
 
     #[test]

@@ -4,16 +4,22 @@
 //! ## Lockstep advance
 //!
 //! `run_until(t)` first lets the router deal every arrival with time
-//! `<= t` into per-node staging buffers, then attaches each node's
-//! chunk as a fresh materialized source and runs that node's engine to
-//! `t`. Each node therefore pulls its arrivals lazily at the exact
-//! virtual times a dedicated single-server engine would — the stepped
-//! `run_until` path is byte-identical to the one-shot streamed path
-//! (`tests/streaming_equivalence.rs`), which is what makes a 1-node
-//! fleet byte-identical to `simulate_source` on the same mux/seed
-//! (`tests/fleet_equivalence.rs`). Nodes are independent: no event on
-//! one node can affect another within an advance, so serving order
-//! inside the lockstep window is exact, not approximate.
+//! `<= t` into per-node staging buffers — serially, because the
+//! Balinski–Young dealer's determinism lives in the order it consumes
+//! the merged stream — then hands each node its chunk
+//! ([`ServingEngine::attach_chunk`], which recycles the buffer back
+//! through the router) and advances **all nodes in parallel**
+//! (`util::par::par_for_each_mut`). Each node pulls its arrivals lazily
+//! at the exact virtual times a dedicated single-server engine would —
+//! the stepped `run_until` path is byte-identical to the one-shot
+//! streamed path (`tests/streaming_equivalence.rs`), which is what
+//! makes a 1-node fleet byte-identical to `simulate_source` on the same
+//! mux/seed (`tests/fleet_equivalence.rs`). Nodes are independent: no
+//! event on one node can affect another within an advance, and each
+//! engine's computation is a deterministic function of its own state
+//! and chunk — so which worker thread runs it cannot change the result,
+//! and the fleet outcome is byte-identical for any thread count
+//! (`tests/fleet_equivalence.rs` pins threads {1, 2, 5}).
 //!
 //! ## Rebalancing
 //!
@@ -47,7 +53,8 @@ use crate::metrics::{CounterSnapshot, Report, WindowReport};
 use crate::models::ModelId;
 use crate::perfmodel::{LatencyModel, RateMonitor};
 use crate::simclock::{ms_to_us, SimTimeUs};
-use crate::workload::DynSourceMux;
+use crate::util::par;
+use crate::workload::{Arrival, DynSourceMux};
 
 use super::planner::{FleetPlan, FleetPlanner};
 use super::router::Router;
@@ -151,6 +158,10 @@ pub struct FleetEngine<'a> {
     plan: FleetPlan,
     nodes: Vec<ServingEngine<'a>>,
     router: Router,
+    /// Per-node recycled chunk buffers: router staging -> engine chunk
+    /// -> back here -> router staging, so lockstep windows allocate
+    /// nothing once capacities stabilize.
+    spares: Vec<Vec<Arrival>>,
     cfg: FleetConfig,
     monitor: RateMonitor,
     /// Rates the current plan was made for (rebalance baseline).
@@ -197,6 +208,7 @@ impl<'a> FleetEngine<'a> {
             plan,
             nodes,
             router,
+            spares: (0..n).map(|_| Vec::new()).collect(),
             cfg: cfg.clone(),
             monitor: RateMonitor::new(cfg.ewma_alpha),
             last_planned,
@@ -207,16 +219,24 @@ impl<'a> FleetEngine<'a> {
     }
 
     /// Deal every arrival with time `<= t_us` and advance every node to
-    /// `t_us` in lockstep.
+    /// `t_us` in lockstep: dealing stays serial (the dealer's
+    /// determinism), node advance fans out over the worker pool.
     pub fn run_until(&mut self, t_us: SimTimeUs) {
         self.router.deal_until(t_us);
         for (ni, eng) in self.nodes.iter_mut().enumerate() {
-            let chunk = self.router.take_buffer(ni);
-            if !chunk.is_empty() {
-                eng.attach_source(DynSourceMux::of_trace(chunk));
-            }
-            eng.run_until(t_us);
+            let chunk = self
+                .router
+                .take_buffer_with(ni, std::mem::take(&mut self.spares[ni]));
+            self.spares[ni] = if chunk.is_empty() {
+                chunk // nothing dealt: keep the spare, skip the attach
+            } else {
+                eng.attach_chunk(chunk)
+            };
         }
+        // Byte-identical to the serial loop for any worker count: nodes
+        // share no state within an advance, and each engine's run is a
+        // deterministic function of its own state and chunk.
+        par::par_for_each_mut(&mut self.nodes, |eng| eng.run_until(t_us));
     }
 
     /// Re-plan for `rates` and hand the fleet over live: every node
@@ -252,13 +272,19 @@ impl<'a> FleetEngine<'a> {
             t_ms = t_end_ms;
         }
         // Arrivals past the nominal duration (a source longer than the
-        // run) still stream through, one lockstep hop per arrival, and
-        // get a catch-up telemetry window so Σ windows.offered always
-        // equals the outcome's offered totals.
+        // run) still stream through — dealt in one batch and drained
+        // with a single lockstep advance to the last arrival (no
+        // rebalance boundary can intervene past the nominal end), then
+        // a catch-up telemetry window so Σ windows.offered always
+        // equals the outcome's offered totals. Note `peak_routed` sees
+        // the whole tail staged at once; it is a router-footprint
+        // diagnostic, not part of the serving result.
         let mut tail_end_ms = t_ms;
-        while let Some(t) = self.router.peek_time_ms() {
-            self.run_until(ms_to_us(t));
-            tail_end_ms = tail_end_ms.max(t);
+        if self.router.peek_time_ms().is_some() {
+            self.router.deal_all();
+            let last = self.router.last_arrival_ms();
+            self.run_until(ms_to_us(last));
+            tail_end_ms = tail_end_ms.max(last);
         }
         if tail_end_ms > t_ms {
             self.note_window(t_ms / 1000.0, (tail_end_ms - t_ms) / 1000.0, false);

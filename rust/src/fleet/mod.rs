@@ -22,9 +22,12 @@
 //!   dealt uniformly and counted, so the serving engines drop them
 //!   *visibly* — nothing leaves the system silently.
 //! * [`FleetEngine`] — owns N `ServingEngine`s advanced in lockstep on
-//!   the shared µs clock, aggregates per-node reports into one fleet
-//!   report (`Report::merge`), carves per-node `WindowReport`s each
-//!   window, and periodically *rebalances*: re-plans from observed
+//!   the shared µs clock: the router deals serially (determinism), then
+//!   all nodes advance **in parallel** over the `util::par` worker pool
+//!   with recycled chunk buffers — byte-identical to the serial advance
+//!   for any thread count. It aggregates per-node reports into one
+//!   fleet report (`Report::merge`), carves per-node `WindowReport`s
+//!   each window, and periodically *rebalances*: re-plans from observed
 //!   per-window rates and applies per-node
 //!   `swap_schedule(…, Migrate)` — the PR 3 epoch-tagged hand-over, so
 //!   backlog migrates and in-flight batches finish under their old

@@ -183,7 +183,17 @@ impl Router {
     /// Take node `n`'s staged arrivals (time-ordered — the mux pulls in
     /// nondecreasing time order and dealing preserves it per node).
     pub fn take_buffer(&mut self, node: usize) -> Vec<Arrival> {
-        std::mem::take(&mut self.buffers[node])
+        self.take_buffer_with(node, Vec::new())
+    }
+
+    /// `take_buffer`, leaving `spare` (cleared) behind as the node's
+    /// next staging buffer. The fleet engine hands back each node's
+    /// previously consumed chunk here, so steady-state dealing pushes
+    /// into retained-capacity buffers instead of growing fresh ones
+    /// every lockstep window.
+    pub fn take_buffer_with(&mut self, node: usize, mut spare: Vec<Arrival>) -> Vec<Arrival> {
+        spare.clear();
+        std::mem::replace(&mut self.buffers[node], spare)
     }
 
     /// Offered counts per model since the last call (windowed rate

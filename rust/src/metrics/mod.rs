@@ -178,8 +178,18 @@ impl Report {
     /// single server. `self.window_s` is kept: the caller sets the
     /// fleet-wide measurement window when constructing the target.
     pub fn merge(&mut self, other: &Report) {
+        use std::collections::btree_map::Entry;
         for (&m, mm) in &other.models {
-            self.model_mut(m, mm.slo_ms).merge(mm);
+            match self.models.entry(m) {
+                Entry::Occupied(e) => e.into_mut().merge(mm),
+                // First sight of this model: one pre-sized clone instead
+                // of building a zero-filled histogram and folding into
+                // it bin by bin (the fleet's `finish` merges N node
+                // reports — this is the bulk of that fold).
+                Entry::Vacant(v) => {
+                    v.insert(mm.clone());
+                }
+            }
         }
     }
 

@@ -96,7 +96,10 @@ impl<E> EventQueue<E> {
         }
     }
 
-    /// Reserve room for at least `additional` more events.
+    /// Reserve room for at least `additional` more events. Bulk feeders
+    /// (`ServingEngine::inject`) and steady-state bounds (one `Done`
+    /// slot per gpu-let at `install_schedule`) reserve up front so the
+    /// heap never grows inside the event loop.
     pub fn reserve(&mut self, additional: usize) {
         self.heap.reserve(additional);
     }

@@ -9,6 +9,14 @@
 //! vary widely in cost) load-balance instead of tail-stalling a static
 //! chunking.
 //!
+//! `par_for_each_mut` / `par_map_mut` are the mutable fork-join forms:
+//! each worker claims an index from the same atomic counter and gets
+//! the **exclusive** `&mut` to that item (every index is handed out
+//! exactly once, so the borrows are provably disjoint). The fleet tier
+//! advances its per-node serving engines this way — each engine's
+//! computation is identical to the serial loop's, so results stay
+//! byte-identical for any worker count.
+//!
 //! The worker count resolves, in priority order: the process-wide
 //! override set by the CLI `--threads` flag (`set_threads`), the
 //! `GPULETS_THREADS` environment variable (how the bench targets are
@@ -24,6 +32,14 @@ static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
 /// automatic choice (env var, then `available_parallelism`).
 pub fn set_threads(n: usize) {
     THREAD_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// The raw override value (`0` = auto) — lets callers that temporarily
+/// re-pin the worker count (the fleet-scale bench's serial/parallel
+/// arms) restore the exact prior state instead of freezing the
+/// auto-resolved value into an explicit override.
+pub fn thread_override() -> usize {
+    THREAD_OVERRIDE.load(Ordering::Relaxed)
 }
 
 /// Resolved worker count for the next `par_map` call.
@@ -91,6 +107,112 @@ where
         .collect()
 }
 
+/// Base pointer of a `&mut [T]` handed to scoped workers. Sharing it is
+/// sound because the atomic dispatch index gives out each element index
+/// exactly once, so no two workers ever touch the same item.
+struct SlicePtr<T>(*mut T);
+unsafe impl<T: Send> Sync for SlicePtr<T> {}
+
+/// Apply `f` to every item through an exclusive `&mut`, fanned out over
+/// the configured worker count. Same atomic work-stealing dispatch as
+/// `par_map`; a worker panic propagates to the caller after all workers
+/// join (`std::thread::scope` semantics).
+pub fn par_for_each_mut<T, F>(items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(&mut T) + Sync,
+{
+    par_for_each_mut_threads(threads(), items, f)
+}
+
+/// `par_for_each_mut` with an explicit worker count (1 = fully serial,
+/// no threads spawned — the reference path equivalence tests compare
+/// against).
+pub fn par_for_each_mut_threads<T, F>(workers: usize, items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(&mut T) + Sync,
+{
+    let n = items.len();
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        for item in items.iter_mut() {
+            f(item);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let base = SlicePtr(items.as_mut_ptr());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                let base = &base;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    // SAFETY: `fetch_add` hands index `i` to exactly
+                    // one worker, so this is the only live `&mut` to
+                    // items[i]; the slice outlives the scope (it is
+                    // borrowed across it) and `i < n` is checked above.
+                    f(unsafe { &mut *base.0.add(i) });
+                }
+            });
+        }
+    });
+}
+
+/// `par_map` over exclusive `&mut` items: mutate in place and collect
+/// `f`'s results in **input order**, independent of worker count.
+pub fn par_map_mut<T, R, F>(items: &mut [T], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(&mut T) -> R + Sync,
+{
+    par_map_mut_threads(threads(), items, f)
+}
+
+/// `par_map_mut` with an explicit worker count (1 = fully serial).
+pub fn par_map_mut_threads<T, R, F>(workers: usize, items: &mut [T], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(&mut T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return items.iter_mut().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let base = SlicePtr(items.as_mut_ptr());
+    let out: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                let base = &base;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    // SAFETY: as in `par_for_each_mut_threads` — the
+                    // atomic index makes the `&mut` exclusive.
+                    let r = f(unsafe { &mut *base.0.add(i) });
+                    out.lock().unwrap()[i] = Some(r);
+                }
+            });
+        }
+    });
+    out.into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("par_map_mut worker skipped a slot"))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,7 +238,96 @@ mod tests {
     fn override_wins_and_clears() {
         set_threads(3);
         assert_eq!(threads(), 3);
+        assert_eq!(thread_override(), 3);
         set_threads(0);
+        assert_eq!(thread_override(), 0);
         assert!(threads() >= 1);
+    }
+
+    #[test]
+    fn par_map_mut_matches_the_serial_reference_in_input_order() {
+        // The 1-worker path is the serial reference; every worker count
+        // must produce the same mutations and the same ordered results.
+        let step = |x: &mut u64| {
+            *x = x.wrapping_mul(3) + 1;
+            *x ^ 7
+        };
+        let mut reference: Vec<u64> = (0..97).collect();
+        let want: Vec<u64> = reference.iter_mut().map(step).collect();
+        for workers in [1, 2, 3, 8, 64] {
+            let mut items: Vec<u64> = (0..97).collect();
+            let got = par_map_mut_threads(workers, &mut items, step);
+            assert_eq!(got, want, "workers={workers}: results out of order");
+            assert_eq!(items, reference, "workers={workers}: mutations diverged");
+        }
+    }
+
+    #[test]
+    fn par_for_each_mut_visits_every_item_exactly_once() {
+        for workers in [1, 2, 7, 32] {
+            let mut items = vec![0u32; 1000];
+            par_for_each_mut_threads(workers, &mut items, |x| *x += 1);
+            assert!(
+                items.iter().all(|&x| x == 1),
+                "workers={workers}: an item was skipped or double-visited"
+            );
+        }
+        let mut empty: Vec<u32> = vec![];
+        par_for_each_mut_threads(4, &mut empty, |x| *x += 1);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn par_for_each_mut_propagates_worker_panics() {
+        let mut items: Vec<u32> = (0..64).collect();
+        par_for_each_mut_threads(4, &mut items, |x| {
+            if *x == 13 {
+                panic!("worker panic must reach the caller");
+            }
+        });
+    }
+
+    /// Property form of the serial-equivalence claim: random sizes and
+    /// worker counts, compared against the 1-worker reference.
+    #[test]
+    fn par_map_mut_equals_serial_for_random_sizes_and_workers() {
+        use crate::util::proptest_mini as pt;
+        #[derive(Clone, Debug)]
+        struct Case {
+            n: usize,
+            workers: usize,
+        }
+        pt::run(
+            pt::Config { cases: 64, ..Default::default() },
+            |rng| Case { n: rng.below(200), workers: 1 + rng.below(9) },
+            |c| {
+                let mut out = Vec::new();
+                if c.n > 0 {
+                    out.push(Case { n: c.n / 2, ..*c });
+                }
+                if c.workers > 1 {
+                    out.push(Case { workers: c.workers / 2, ..*c });
+                }
+                out
+            },
+            |c| {
+                let step = |x: &mut u64| {
+                    *x = x.wrapping_add(11);
+                    *x * 2
+                };
+                let mut a: Vec<u64> = (0..c.n as u64).collect();
+                let mut b = a.clone();
+                let want: Vec<u64> = b.iter_mut().map(step).collect();
+                let got = par_map_mut_threads(c.workers, &mut a, step);
+                if got != want {
+                    return Err(format!("results diverged at n={} w={}", c.n, c.workers));
+                }
+                if a != b {
+                    return Err(format!("mutations diverged at n={} w={}", c.n, c.workers));
+                }
+                Ok(())
+            },
+        );
     }
 }

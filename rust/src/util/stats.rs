@@ -213,6 +213,21 @@ impl Histogram {
             other.bin_width,
             other.bins.len(),
         );
+        if self.count == 0 && self.overflow == 0 {
+            // Nothing recorded yet: adopt `other`'s bins wholesale
+            // (reusing our allocation) instead of adding into a zeroed
+            // vector — `0 + x == x` for every counter, and `sum`/`max`
+            // start at exactly 0.0, so this is bit-identical to the
+            // general path below.
+            self.bins.clone_from(&other.bins);
+            self.overflow = other.overflow;
+            self.count = other.count;
+            self.sum += other.sum;
+            if other.max > self.max {
+                self.max = other.max;
+            }
+            return;
+        }
         for (b, o) in self.bins.iter_mut().zip(other.bins.iter()) {
             *b += o;
         }

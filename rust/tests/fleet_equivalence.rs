@@ -6,9 +6,16 @@
 //! and report merging are all pass-throughs at N=1 — and for N ∈
 //! {1, 2, 4} fleet-wide conservation (`offered == served + dropped`,
 //! exactly, per model) holds including across a mid-trace rebalance
-//! (per-node `swap_schedule(…, Migrate)` + router re-target). Routing
-//! is a pure function of the seed: re-running a fleet reproduces the
-//! same bytes regardless of the worker-pool thread count.
+//! (per-node `swap_schedule(…, Migrate)` + router re-target). The
+//! lockstep advance now fans the per-node engines out over the
+//! `util::par` worker pool, so thread-count invariance is a *proven*
+//! property, not a vacuous one: the parallel battery below pins the
+//! full fleet outcome byte-identical for threads ∈ {1, 2, 5} at
+//! N ∈ {1, 4, 16}, across a mid-trace rebalance.
+//!
+//! Thread settings are process-global; these tests may race each
+//! other's `set_threads` calls benignly — results are thread-count
+//! invariant by design, which is exactly what is being asserted.
 
 use gpulets::coordinator::{simulate_source, SimConfig};
 use gpulets::fleet::{FleetConfig, FleetEngine, FleetPlanner};
@@ -161,9 +168,10 @@ fn fleet_conserves_across_mid_trace_rebalance() {
 }
 
 /// Routing (and everything downstream of it) is a pure function of the
-/// seed: the exact same bytes come out regardless of the experiment
-/// worker-pool thread count (`--threads` only parallelizes sweeps; the
-/// fleet path never touches the pool).
+/// seed: the exact same bytes come out regardless of the worker-pool
+/// thread count — the fleet's node advance runs *on* the pool now, so
+/// this is the end-to-end `run()` form of the invariance the parallel
+/// battery below proves per `run_until` step.
 #[test]
 fn fleet_reports_are_seed_stable_across_thread_counts() {
     let lm = LatencyModel::new();
@@ -202,8 +210,84 @@ fn fleet_reports_are_seed_stable_across_thread_counts() {
     let a = run_fleet();
     gpulets::util::par::set_threads(4);
     let b = run_fleet();
+    gpulets::util::par::set_threads(0);
     assert_eq!(a.0, b.0, "fleet report must not depend on thread count");
     assert_eq!(a.1, b.1, "per-node reports must not depend on thread count");
     assert_eq!(a.2, b.2, "routing must not depend on thread count");
     assert_eq!(a.3, b.3, "rebalance history must not depend on thread count");
+}
+
+/// The tentpole's hard equivalence bar: the parallel lockstep advance
+/// is byte-identical to the serial one. For N ∈ {1, 4, 16} nodes the
+/// *entire* fleet outcome — merged report JSON, every per-node report
+/// JSON, routing totals, unplaced counts, rebalance history, event
+/// counts, and both peak-footprint metrics — must be bit-equal across
+/// worker counts {1, 2, 5}, with a mid-trace rebalance exercising the
+/// swap/retarget path under every setting.
+#[test]
+fn parallel_advance_is_byte_identical_across_thread_counts() {
+    let lm = LatencyModel::new();
+    let gt = GroundTruth::default();
+    let ctx = SchedCtx::new(4, None);
+    let scheduler = ElasticPartitioning::gpulet();
+    let initial = [300.0, 0.0, 90.0, 0.0, 60.0];
+    let retarget = [150.0, 40.0, 80.0, 0.0, 50.0];
+    let pairs = [
+        (ModelId::Lenet, 300.0),
+        (ModelId::Googlenet, 40.0), // unplaced until the rebalance —
+        // dealt uniformly, so every node sees arrivals even at N=16
+        (ModelId::Resnet, 90.0),
+        (ModelId::Vgg, 60.0),
+    ];
+    let duration = 6.0;
+    let sim = SimConfig::default();
+
+    for nodes in [1usize, 4, 16] {
+        let outcome_bytes = |threads: usize| {
+            gpulets::util::par::set_threads(threads);
+            let planner = FleetPlanner::new(&ctx, &scheduler, nodes);
+            let plan = planner.plan(&initial).unwrap();
+            let cfg =
+                FleetConfig { sim: sim.clone(), rebalance: false, ..Default::default() };
+            let mut fleet = FleetEngine::new(
+                &lm,
+                &gt,
+                planner,
+                plan,
+                mux_for(&pairs, duration, 23),
+                duration,
+                &cfg,
+            );
+            fleet.run_until(ms_to_us(2_500.0));
+            fleet.rebalance(&retarget).unwrap();
+            fleet.run_until(ms_to_us(duration * 1000.0));
+            fleet.run_until(ms_to_us(fleet.last_arrival_ms()) + ms_to_us(sim.drain_ms));
+            let out = fleet.finish();
+            assert_conserved_per_model(&out);
+            let mut s = out.report.to_json().to_string();
+            for r in &out.per_node {
+                s.push('\n');
+                s.push_str(&r.to_json().to_string());
+            }
+            s.push_str(&format!(
+                "\n{:?} {:?} {} {} {} {}",
+                out.offered,
+                out.unplaced,
+                out.rebalances,
+                out.events_processed,
+                out.peak_live_events,
+                out.peak_routed,
+            ));
+            s
+        };
+        let serial = outcome_bytes(1);
+        for threads in [2usize, 5] {
+            let parallel = outcome_bytes(threads);
+            assert_eq!(
+                serial, parallel,
+                "n={nodes}: outcome diverged between 1 and {threads} workers"
+            );
+        }
+    }
+    gpulets::util::par::set_threads(0);
 }
