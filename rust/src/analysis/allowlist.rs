@@ -1,0 +1,234 @@
+//! The count-based ratchet allowlist (`rust/lint_allow.toml`, parsed
+//! with `tomlmini`).
+//!
+//! Each `[allow.NN]` entry pins one `(rule, file)` pair to at most
+//! `count` findings, with a mandatory one-line `reason`. Semantics:
+//!
+//! * found `<=` count — all findings for the pair are suppressed; a
+//!   strict undershoot is reported as *slack* (tighten the count).
+//! * found `>` count — the ratchet fires: **every** finding for the
+//!   pair is reported, so a regression cannot hide under an old budget.
+//! * an entry with no findings at all is reported as *stale*.
+//! * an entry with a missing/empty `reason` is itself a blocking
+//!   finding (`allowlist-policy`) — justifications are not optional.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::Result;
+use crate::util::tomlmini::{TomlDoc, TomlValue};
+
+use super::report::{Finding, LintReport};
+
+/// One `[allow.NN]` entry.
+#[derive(Clone, Debug)]
+pub struct AllowEntry {
+    /// The `NN` section key (kept for diagnostics).
+    pub key: String,
+    pub rule: String,
+    pub file: String,
+    pub count: usize,
+    pub reason: String,
+}
+
+/// The parsed allowlist.
+#[derive(Clone, Debug, Default)]
+pub struct Allowlist {
+    pub entries: Vec<AllowEntry>,
+}
+
+impl Allowlist {
+    /// Parse allowlist TOML text.
+    pub fn parse(text: &str) -> Result<Allowlist> {
+        let doc = TomlDoc::parse(text)?;
+        let mut by_key: BTreeMap<String, BTreeMap<String, TomlValue>> = BTreeMap::new();
+        for (rest, v) in doc.keys_under("allow") {
+            if let Some((key, field)) = rest.split_once('.') {
+                by_key.entry(key.to_string()).or_default().insert(field.to_string(), v.clone());
+            }
+        }
+        let mut entries = Vec::new();
+        for (key, fields) in by_key {
+            let rule = match fields.get("rule") {
+                Some(v) => v.as_str()?.to_string(),
+                None => {
+                    return Err(crate::error::Error::parse(format!(
+                        "allowlist entry [allow.{key}] has no `rule`"
+                    )))
+                }
+            };
+            let file = match fields.get("file") {
+                Some(v) => v.as_str()?.to_string(),
+                None => {
+                    return Err(crate::error::Error::parse(format!(
+                        "allowlist entry [allow.{key}] has no `file`"
+                    )))
+                }
+            };
+            let count = match fields.get("count") {
+                Some(v) => v.as_i64()?.max(0) as usize,
+                None => {
+                    return Err(crate::error::Error::parse(format!(
+                        "allowlist entry [allow.{key}] has no `count`"
+                    )))
+                }
+            };
+            let reason = match fields.get("reason") {
+                Some(v) => v.as_str()?.trim().to_string(),
+                None => String::new(),
+            };
+            entries.push(AllowEntry { key, rule, file, count, reason });
+        }
+        Ok(Allowlist { entries })
+    }
+
+    /// Load from `path`; a missing file is an empty allowlist.
+    pub fn load(path: &Path) -> Result<Allowlist> {
+        if !path.exists() {
+            return Ok(Allowlist::default());
+        }
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Fold raw findings through the ratchet into `report`.
+    pub fn apply(&self, findings: Vec<Finding>, report: &mut LintReport) {
+        let mut groups: BTreeMap<(String, String), Vec<Finding>> = BTreeMap::new();
+        for f in findings {
+            groups.entry((f.rule.to_string(), f.file.clone())).or_default().push(f);
+        }
+        // Sum budgets per (rule, file) — split entries are legal when
+        // two sites in one file need different justifications.
+        let mut budget: BTreeMap<(String, String), usize> = BTreeMap::new();
+        for e in &self.entries {
+            *budget.entry((e.rule.clone(), e.file.clone())).or_default() += e.count;
+            if e.reason.is_empty() {
+                report.findings.push(Finding::new(
+                    "allowlist-policy",
+                    "lint_allow.toml",
+                    1,
+                    format!(
+                        "[allow.{}] ({} {}) has no `reason` — every entry needs a \
+                         one-line justification",
+                        e.key, e.rule, e.file
+                    ),
+                ));
+            }
+        }
+        for ((rule, file), allowed) in &budget {
+            match groups.get(&(rule.clone(), file.clone())).map(Vec::len) {
+                None => report.stale.push((rule.clone(), file.clone())),
+                Some(found) if found <= *allowed => {
+                    report.suppressed += found;
+                    groups.remove(&(rule.clone(), file.clone()));
+                    if found < *allowed {
+                        report.slack.push((rule.clone(), file.clone(), *allowed, found));
+                    }
+                }
+                // Over budget: the whole group stays visible below.
+                Some(_) => {}
+            }
+        }
+        for (_, fs) in groups {
+            report.findings.extend(fs);
+        }
+        report.findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    }
+
+    /// Render a fresh allowlist pinning exactly the given findings,
+    /// carrying forward reasons from `prior` where the (rule, file)
+    /// pair already had one (`gpulets lint --fix-allowlist`).
+    pub fn regenerate(findings: &[Finding], prior: &Allowlist) -> String {
+        let mut counts: BTreeMap<(String, String), usize> = BTreeMap::new();
+        for f in findings {
+            *counts.entry((f.rule.to_string(), f.file.clone())).or_default() += 1;
+        }
+        let mut doc = TomlDoc::default();
+        for (n, ((rule, file), count)) in counts.iter().enumerate() {
+            let reason = prior
+                .entries
+                .iter()
+                .find(|e| &e.rule == rule && &e.file == file && !e.reason.is_empty())
+                .map_or("TODO: justify this entry", |e| e.reason.as_str());
+            let key = format!("allow.{:02}", n + 1);
+            doc.set(format!("{key}.rule"), TomlValue::Str(rule.clone()));
+            doc.set(format!("{key}.file"), TomlValue::Str(file.clone()));
+            doc.set(format!("{key}.count"), TomlValue::Int(*count as i64));
+            doc.set(format!("{key}.reason"), TomlValue::Str(reason.to_string()));
+        }
+        let mut out = String::from(
+            "# gpulets lint allowlist — a count-based ratchet.\n\
+             # Every [allow.NN] entry pins (rule, file) to at most `count` findings and\n\
+             # MUST carry a one-line `reason`; see DESIGN.md §11 for the policy.\n\
+             # Regenerate with `cargo run --bin gpulets -- lint --fix-allowlist`.\n",
+        );
+        out.push_str(&doc.to_toml());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALLOW: &str = "\
+[allow.01]\nrule = \"no-unwrap-in-lib\"\nfile = \"src/a.rs\"\ncount = 2\nreason = \"infallible\"\n\
+[allow.02]\nrule = \"no-hash-iter\"\nfile = \"src/sched/b.rs\"\ncount = 1\nreason = \"\"\n";
+
+    fn f(rule: &'static str, file: &str, line: usize) -> Finding {
+        Finding::new(rule, file, line, "m")
+    }
+
+    #[test]
+    fn suppresses_within_budget_and_ratchets_over() {
+        let a = Allowlist::parse(ALLOW).unwrap();
+        let mut r = LintReport::default();
+        a.apply(
+            vec![
+                f("no-unwrap-in-lib", "src/a.rs", 3),
+                f("no-unwrap-in-lib", "src/a.rs", 9),
+                f("no-hash-iter", "src/sched/b.rs", 1),
+                f("no-hash-iter", "src/sched/b.rs", 2),
+            ],
+            &mut r,
+        );
+        assert_eq!(r.suppressed, 2, "within-budget pair suppressed");
+        // Entry 02 is over budget (found 2 > allowed 1): both visible.
+        let hash: Vec<_> = r.findings.iter().filter(|x| x.rule == "no-hash-iter").collect();
+        assert_eq!(hash.len(), 2, "ratchet must surface the whole group");
+        // Entry 02 also has an empty reason: policy finding.
+        assert!(r.findings.iter().any(|x| x.rule == "allowlist-policy"));
+    }
+
+    #[test]
+    fn slack_and_stale_are_noted() {
+        let a = Allowlist::parse(ALLOW).unwrap();
+        let mut r = LintReport::default();
+        a.apply(vec![f("no-unwrap-in-lib", "src/a.rs", 3)], &mut r);
+        assert_eq!(r.slack.len(), 1);
+        assert_eq!(r.slack[0].2, 2);
+        assert_eq!(r.slack[0].3, 1);
+        assert_eq!(r.stale.len(), 1, "entry 02 matched nothing");
+    }
+
+    #[test]
+    fn regenerate_round_trips_and_keeps_reasons() {
+        let prior = Allowlist::parse(ALLOW).unwrap();
+        let findings =
+            vec![f("no-unwrap-in-lib", "src/a.rs", 3), f("no-unwrap-in-lib", "src/a.rs", 5)];
+        let text = Allowlist::regenerate(&findings, &prior);
+        let back = Allowlist::parse(&text).unwrap();
+        assert_eq!(back.entries.len(), 1);
+        assert_eq!(back.entries[0].count, 2);
+        assert_eq!(back.entries[0].reason, "infallible", "reason carried forward");
+        let mut r = LintReport::default();
+        back.apply(findings, &mut r);
+        assert!(r.clean(), "regenerated allowlist must suppress exactly the findings");
+    }
+
+    #[test]
+    fn missing_fields_are_parse_errors_and_missing_file_is_empty() {
+        assert!(Allowlist::parse("[allow.01]\nrule = \"x\"\n").is_err());
+        let a = Allowlist::load(Path::new("/nonexistent/lint_allow.toml")).unwrap();
+        assert!(a.entries.is_empty());
+    }
+}

@@ -1,0 +1,323 @@
+//! A minimal line-oriented Rust lexer for the lint pass (offline
+//! stand-in for `syn` — the repo's no-dependency discipline applies to
+//! its own tooling too).
+//!
+//! The lexer does one job: split each source line into its *code* text
+//! and its *comment* text, with string/char-literal contents blanked
+//! out of the code, so the line-oriented rules in
+//! [`super::rules`] can pattern-match code without tripping over
+//! `"panic! in a string"` or `// unwrap() in a comment`. It also marks
+//! lines inside `#[cfg(test)]`-gated regions (including compound forms
+//! like `#[cfg(all(test, …))]`), which most rules skip.
+//!
+//! Handled: `//` line comments, nested `/* */` block comments, string
+//! literals with escapes, raw strings `r#"…"#` (any hash count), byte
+//! strings/chars, char literals vs. lifetimes. Not handled (and not
+//! needed here): attributes spanning lines, macros that generate
+//! `unsafe`/collection code.
+
+/// One source line, split into code and comment channels.
+#[derive(Clone, Debug, Default)]
+pub struct Line {
+    /// Code text with string/char-literal contents removed (the
+    /// delimiting quotes remain, so `.expect("msg")` reads
+    /// `.expect("")`).
+    pub code: String,
+    /// Comment text (both `//` and `/* */` bodies) on this line.
+    pub comment: String,
+    /// True when the line sits inside a `#[cfg(test)]`-gated item.
+    pub in_test: bool,
+}
+
+enum State {
+    Normal,
+    /// Inside `/* */`, tracking nesting depth.
+    Block(u32),
+    /// Inside a `"…"` string literal.
+    Str,
+    /// Inside a raw string, closed by `"` followed by this many `#`s.
+    RawStr(usize),
+}
+
+/// Lex `text` into per-line code/comment channels and mark test
+/// regions.
+pub fn lex(text: &str) -> Vec<Line> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut lines: Vec<Line> = Vec::new();
+    let mut cur = Line::default();
+    let mut state = State::Normal;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Normal => {
+                let next = chars.get(i + 1).copied();
+                let prev_ident = i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_');
+                match c {
+                    '/' if next == Some('/') => {
+                        // Line comment: the rest of the line.
+                        while i < chars.len() && chars[i] != '\n' {
+                            cur.comment.push(chars[i]);
+                            i += 1;
+                        }
+                    }
+                    '/' if next == Some('*') => {
+                        state = State::Block(1);
+                        i += 2;
+                    }
+                    '"' => {
+                        cur.code.push('"');
+                        state = State::Str;
+                        i += 1;
+                    }
+                    'r' | 'b' if !prev_ident && raw_open(&chars, i).is_some() => {
+                        let (hashes, body_at) = raw_open(&chars, i).unwrap_or((0, i + 1));
+                        cur.code.push_str("r\"");
+                        state = State::RawStr(hashes);
+                        i = body_at;
+                    }
+                    'b' if !prev_ident && next == Some('"') => {
+                        cur.code.push_str("b\"");
+                        state = State::Str;
+                        i += 2;
+                    }
+                    'b' if !prev_ident && next == Some('\'') => {
+                        // Byte char literal: delegate to the char arm.
+                        cur.code.push('b');
+                        i += 1;
+                    }
+                    '\'' => {
+                        if next == Some('\\') {
+                            // Escaped char literal: skip the escape
+                            // lead-in, then scan to the closing quote
+                            // (handles '\'' and '\u{…}').
+                            cur.code.push_str("''");
+                            i += 3;
+                            while i < chars.len() && chars[i] != '\'' {
+                                i += 1;
+                            }
+                            i += 1;
+                        } else if chars.get(i + 2).copied() == Some('\'') {
+                            // Plain char literal 'x'.
+                            cur.code.push_str("''");
+                            i += 3;
+                        } else {
+                            // Lifetime or loop label.
+                            cur.code.push('\'');
+                            i += 1;
+                        }
+                    }
+                    _ => {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+            State::Block(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    state = State::Block(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    state = if depth > 1 { State::Block(depth - 1) } else { State::Normal };
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    state = State::Normal;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && chars[i + 1..].iter().take(hashes).filter(|&&h| h == '#').count() == hashes {
+                    cur.code.push('"');
+                    state = State::Normal;
+                    i += 1 + hashes;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    mark_test_regions(&mut lines);
+    lines
+}
+
+/// Detect a raw-string opener at `i` (`r"`, `r#"`, `br##"`, …).
+/// Returns (hash count, index of the first body char).
+fn raw_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i + 1;
+    if chars[i] == 'b' {
+        if chars.get(j).copied() != Some('r') {
+            return None;
+        }
+        j += 1;
+    }
+    let mut hashes = 0;
+    while chars.get(j).copied() == Some('#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j).copied() == Some('"') {
+        Some((hashes, j + 1))
+    } else {
+        None
+    }
+}
+
+/// Mark every line inside a `#[cfg(test)]`-gated item (the attribute
+/// line, any lines up to its opening brace, and the braced body).
+/// Compound gates like `#[cfg(all(test, feature = "x"))]` count too —
+/// the `test` predicate is what makes the code unreachable in library
+/// builds.
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut region_close: Option<i64> = None;
+    for line in lines.iter_mut() {
+        if region_close.is_some() || pending {
+            line.in_test = true;
+        }
+        if region_close.is_none() && !pending && is_test_attr(&line.code) {
+            pending = true;
+            line.in_test = true;
+        }
+        for ch in line.code.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if pending {
+                        region_close = Some(depth);
+                        pending = false;
+                    }
+                }
+                '}' => {
+                    if region_close == Some(depth) {
+                        region_close = None;
+                    }
+                    depth -= 1;
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+fn is_test_attr(code: &str) -> bool {
+    code.contains("#[cfg(") && has_word(code, "test")
+}
+
+/// True when `word` occurs in `s` with non-identifier characters (or
+/// the text boundary) on both sides.
+pub fn has_word(s: &str, word: &str) -> bool {
+    let bytes = s.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = s[from..].find(word) {
+        let start = from + pos;
+        let end = start + word.len();
+        let ok_left = start == 0 || !is_ident_byte(bytes[start - 1]);
+        let ok_right = end == bytes.len() || !is_ident_byte(bytes[end]);
+        if ok_left && ok_right {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn separates_code_and_comments() {
+        let lines = lex("let x = 1; // unwrap() here is a comment\n");
+        assert_eq!(lines.len(), 1);
+        assert!(lines[0].code.contains("let x = 1;"));
+        assert!(!lines[0].code.contains("unwrap"));
+        assert!(lines[0].comment.contains("unwrap()"));
+    }
+
+    #[test]
+    fn blanks_string_contents_keeps_quotes() {
+        let lines = lex("call(\"panic! inside\"); other();\n");
+        assert!(!lines[0].code.contains("panic!"));
+        assert!(lines[0].code.contains("call(\"\"); other();"));
+    }
+
+    #[test]
+    fn raw_and_byte_strings_do_not_leak() {
+        let src = "let a = r#\"has \"quotes\" and unwrap()\"#;\nlet b = b\"panic!\";\nafter();\n";
+        let lines = lex(src);
+        assert!(!lines[0].code.contains("unwrap"));
+        assert!(!lines[1].code.contains("panic!"));
+        assert!(lines[2].code.contains("after();"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let lines = lex("let q = '\"'; fn f<'a>(x: &'a str) {} let e = '\\''; let n = '\\n';\n");
+        // The double quote inside the char literal must not open a string.
+        assert!(lines[0].code.contains("fn f<'a>"));
+        assert!(lines[0].code.contains("let n ="));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let lines = lex("a(); /* one /* two */ still comment */ b();\n");
+        assert!(lines[0].code.contains("a();"));
+        assert!(lines[0].code.contains("b();"));
+        assert!(!lines[0].code.contains("still"));
+        assert!(lines[0].comment.contains("still comment"));
+    }
+
+    #[test]
+    fn multiline_strings_span_lines() {
+        let lines = lex("let s = \"line one\nline two unwrap()\";\ntail();\n");
+        assert!(!lines[1].code.contains("unwrap"));
+        assert!(lines[2].code.contains("tail();"));
+    }
+
+    #[test]
+    fn test_regions_cover_cfg_test_and_compound_forms() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n  fn t() { x.unwrap(); }\n}\nfn lib2() {}\n#[cfg(all(test, feature = \"pjrt\"))]\nmod more {\n  fn u() {}\n}\nfn lib3() {}\n";
+        let lines = lex(src);
+        assert!(!lines[0].in_test);
+        assert!(lines[1].in_test, "attribute line");
+        assert!(lines[3].in_test, "body line");
+        assert!(lines[4].in_test, "closing brace");
+        assert!(!lines[5].in_test, "after region");
+        assert!(lines[6].in_test, "compound cfg(all(test, …))");
+        assert!(lines[8].in_test);
+        assert!(!lines[10].in_test);
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(has_word("use std::collections::HashMap;", "HashMap"));
+        assert!(!has_word("MyHashMapLike", "HashMap"));
+        assert!(has_word("#[cfg(all(test, feature = \"\"))]", "test"));
+        assert!(!has_word("latest", "test"));
+    }
+}

@@ -1,0 +1,134 @@
+//! `gpulets lint` — the zero-dependency determinism & soundness
+//! static-analysis pass (DESIGN.md §11).
+//!
+//! Every headline claim in this repo rests on the simulator being
+//! deterministic: iteration order, float comparisons and tie-breaks
+//! must be bit-stable, and `util::par`'s unsafe hand-off must stay
+//! justified. The runtime equivalence batteries catch a regression
+//! *after* it ships nondeterminism; this pass catches the source
+//! patterns at review time, as a blocking CI gate.
+//!
+//! Layout: [`lexer`] splits source lines into code/comment channels,
+//! [`rules`] holds the six checks, [`allowlist`] is the count-based
+//! ratchet (`rust/lint_allow.toml`), [`report`] renders human and JSON
+//! output. `lint_tree` walks `<root>/src/**/*.rs` in sorted order —
+//! the lint's own output is deterministic, like everything else here.
+
+pub mod allowlist;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+use crate::error::Result;
+
+pub use allowlist::Allowlist;
+pub use report::{Finding, LintReport};
+
+/// Run the per-file rules over one source text, as if it lived at
+/// `relpath` (repo-relative, forward slashes). The fixture tests feed
+/// synthetic paths through this to exercise the path-scoped rules.
+pub fn lint_source(relpath: &str, text: &str) -> Vec<Finding> {
+    rules::check_file(relpath, &lexer::lex(text))
+}
+
+/// Walk `<root>/src/**/*.rs` (sorted), run every per-file rule plus
+/// the cross-file registry check. Returns raw findings (allowlist not
+/// yet applied) and the number of files scanned.
+pub fn collect_tree(root: &Path) -> Result<(Vec<Finding>, usize)> {
+    let src = root.join("src");
+    let mut files = Vec::new();
+    walk(&src, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    let mut config_lines = None;
+    let mut sched_lines = None;
+    for path in &files {
+        let text = std::fs::read_to_string(path)?;
+        let rel = relpath(root, path);
+        let lines = lexer::lex(&text);
+        findings.extend(rules::check_file(&rel, &lines));
+        if rel == "src/config.rs" {
+            config_lines = Some(lines);
+        } else if rel == "src/sched/mod.rs" {
+            sched_lines = Some(lines);
+        }
+    }
+    if let (Some(cfg), Some(sched)) = (&config_lines, &sched_lines) {
+        findings.extend(rules::check_registry("src/config.rs", cfg, sched));
+    }
+    Ok((findings, files.len()))
+}
+
+/// Full lint run: collect findings, fold through the allowlist at
+/// `<root>/lint_allow.toml`. `report.clean()` decides the exit code.
+pub fn lint_tree(root: &Path) -> Result<LintReport> {
+    let (findings, files_scanned) = collect_tree(root)?;
+    let allow = Allowlist::load(&root.join("lint_allow.toml"))?;
+    let mut report = LintReport { files_scanned, ..Default::default() };
+    allow.apply(findings, &mut report);
+    Ok(report)
+}
+
+/// Regenerate `<root>/lint_allow.toml` to pin exactly the current
+/// findings, carrying forward existing reasons (`--fix-allowlist`).
+/// Returns the rendered text after writing it.
+pub fn fix_allowlist(root: &Path) -> Result<String> {
+    let (findings, _) = collect_tree(root)?;
+    let path = root.join("lint_allow.toml");
+    let prior = Allowlist::load(&path)?;
+    let text = Allowlist::regenerate(&findings, &prior);
+    std::fs::write(&path, &text)?;
+    Ok(text)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn relpath(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lint_source_routes_path_scoping() {
+        let src = "use std::collections::HashMap;\nfn f() { x.unwrap(); }\n";
+        let fs = lint_source("src/fleet/x.rs", src);
+        assert!(fs.iter().any(|f| f.rule == "no-hash-iter" && f.line == 1));
+        assert!(fs.iter().any(|f| f.rule == "no-unwrap-in-lib" && f.line == 2));
+        assert!(lint_source("src/bin/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn the_real_tree_is_clean() {
+        // The same invariant CI enforces: zero unallowlisted findings
+        // over this repo's own sources.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let report = lint_tree(root).expect("lint over the real tree must run");
+        assert!(
+            report.clean(),
+            "lint found violations:\n{}",
+            report.render_human()
+        );
+        assert!(report.files_scanned > 40, "walked {} files", report.files_scanned);
+    }
+}

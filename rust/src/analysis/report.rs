@@ -1,0 +1,137 @@
+//! Lint findings and the human/JSON report renderers.
+
+use crate::util::json::{obj, Json};
+
+/// One rule violation at a `file:line` span.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule id (`no-hash-iter`, `total-cmp-sorts`, …).
+    pub rule: &'static str,
+    /// Repo-relative path with forward slashes (e.g. `src/sched/sbp.rs`).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(rule: &'static str, file: &str, line: usize, message: impl Into<String>) -> Self {
+        Finding { rule, file: file.to_string(), line, message: message.into() }
+    }
+
+    /// The `file:line` span string used in both report forms.
+    pub fn span(&self) -> String {
+        format!("{}:{}", self.file, self.line)
+    }
+}
+
+/// The outcome of a full lint run, after the allowlist is applied.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    /// Findings NOT covered by the allowlist — nonempty means exit 1.
+    pub findings: Vec<Finding>,
+    /// Findings suppressed by allowlist entries.
+    pub suppressed: usize,
+    /// Allowlist entries whose budget exceeds the current finding count
+    /// (`(rule, file, allowed, found)`) — candidates for tightening.
+    pub slack: Vec<(String, String, usize, usize)>,
+    /// Allowlist entries that matched nothing at all — stale pins.
+    pub stale: Vec<(String, String)>,
+    /// Files scanned.
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable report: one `file:line [rule] message` per
+    /// finding, then the suppression/slack summary.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{} [{}] {}\n", f.span(), f.rule, f.message));
+        }
+        for (rule, file, allowed, found) in &self.slack {
+            out.push_str(&format!(
+                "note: allowlist slack: [{rule}] {file} allows {allowed}, found {found} \
+                 — tighten the count\n"
+            ));
+        }
+        for (rule, file) in &self.stale {
+            out.push_str(&format!(
+                "note: stale allowlist entry: [{rule}] {file} matched no findings\n"
+            ));
+        }
+        out.push_str(&format!(
+            "lint: {} file(s), {} finding(s), {} suppressed by allowlist\n",
+            self.files_scanned,
+            self.findings.len(),
+            self.suppressed
+        ));
+        out
+    }
+
+    /// Machine-readable report via `util::json` (BTreeMap-backed, so
+    /// output is deterministic).
+    pub fn render_json(&self) -> String {
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                obj(vec![
+                    ("rule", Json::Str(f.rule.to_string())),
+                    ("file", Json::Str(f.file.clone())),
+                    ("line", Json::Num(f.line as f64)),
+                    ("message", Json::Str(f.message.clone())),
+                ])
+            })
+            .collect();
+        let slack: Vec<Json> = self
+            .slack
+            .iter()
+            .map(|(rule, file, allowed, found)| {
+                obj(vec![
+                    ("rule", Json::Str(rule.clone())),
+                    ("file", Json::Str(file.clone())),
+                    ("allowed", Json::Num(*allowed as f64)),
+                    ("found", Json::Num(*found as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("findings", Json::Arr(findings)),
+            ("suppressed", Json::Num(self.suppressed as f64)),
+            ("slack", Json::Arr(slack)),
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            ("clean", Json::Bool(self.clean())),
+        ])
+        .to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_report_has_file_line_spans() {
+        let mut r = LintReport { files_scanned: 1, ..Default::default() };
+        r.findings.push(Finding::new("no-hash-iter", "src/sched/x.rs", 12, "HashMap banned"));
+        let text = r.render_human();
+        assert!(text.contains("src/sched/x.rs:12 [no-hash-iter] HashMap banned"));
+        assert!(!r.clean());
+    }
+
+    #[test]
+    fn json_report_parses_back() {
+        let mut r = LintReport { files_scanned: 3, suppressed: 2, ..Default::default() };
+        r.findings.push(Finding::new("total-cmp-sorts", "src/a.rs", 7, "partial_cmp in sort_by"));
+        let parsed = Json::parse(&r.render_json()).expect("self-rendered JSON must parse");
+        let fs = parsed.get("findings").unwrap().as_arr().unwrap();
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].get("line").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(parsed.get("suppressed").unwrap().as_usize().unwrap(), 2);
+    }
+}

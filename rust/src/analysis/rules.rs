@@ -1,0 +1,496 @@
+//! The six lint rules. Each is a line/region pass over the lexed
+//! code/comment channels of one file, except `registry-enrollment`,
+//! which is a cross-file structural check over `config.rs` and
+//! `sched/mod.rs`. DESIGN.md §11 catalogs what each rule pins and why.
+
+use super::lexer::{has_word, Line};
+use super::report::Finding;
+
+/// Rule ids, in report order.
+pub const RULES: &[&str] = &[
+    "no-hash-iter",
+    "total-cmp-sorts",
+    "safety-comment",
+    "no-unwrap-in-lib",
+    "no-alloc-region",
+    "registry-enrollment",
+];
+
+/// Directories where hashed collections are banned outright: anything
+/// whose iteration order feeds a scheduling decision, a merge, or a
+/// report.
+const HASH_SCOPED_DIRS: &[&str] = &[
+    "src/sched/",
+    "src/coordinator/",
+    "src/fleet/",
+    "src/metrics/",
+    "src/simclock/",
+    "src/workload/",
+];
+
+/// Calls inside a `// lint: no-alloc` region that allocate. Matched on
+/// blanked code with a left identifier boundary, so `.clone_from(`
+/// (which reuses the destination's buffers) does not trip `.clone()`.
+const ALLOC_PATTERNS: &[&str] = &[
+    "Vec::new",
+    "VecDeque::new",
+    "String::new",
+    "BTreeMap::new",
+    "BTreeSet::new",
+    "HashMap::new",
+    "HashSet::new",
+    "Box::new",
+    "vec!",
+    "format!",
+    ".to_vec()",
+    ".to_string()",
+    ".to_owned()",
+    ".collect()",
+    ".collect::<",
+    "with_capacity(",
+    ".clone()",
+];
+
+/// Run every per-file rule over one lexed file. `relpath` is
+/// repo-relative with forward slashes (`src/sched/sbp.rs`); path
+/// scoping keys off it.
+pub fn check_file(relpath: &str, lines: &[Line]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    no_hash_iter(relpath, lines, &mut out);
+    total_cmp_sorts(relpath, lines, &mut out);
+    safety_comment(relpath, lines, &mut out);
+    no_unwrap_in_lib(relpath, lines, &mut out);
+    no_alloc_region(relpath, lines, &mut out);
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// Rule 1 — `no-hash-iter`: `HashMap`/`HashSet` are banned in the
+/// deterministic core (scheduling, serving, fleet, metrics, clock,
+/// workload). Their iteration order is randomized per process, which is
+/// exactly the nondeterminism the byte-equality batteries exist to
+/// catch — use `BTreeMap`/`BTreeSet` or an indexed arena.
+fn no_hash_iter(relpath: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    if !HASH_SCOPED_DIRS.iter().any(|d| relpath.starts_with(d)) {
+        return;
+    }
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for ty in ["HashMap", "HashSet"] {
+            if has_word(&line.code, ty) {
+                out.push(Finding::new(
+                    "no-hash-iter",
+                    relpath,
+                    i + 1,
+                    format!("{ty} in a determinism-scoped dir; use BTreeMap/BTreeSet"),
+                ));
+            }
+        }
+    }
+}
+
+/// Rule 2 — `total-cmp-sorts`: float comparators passed to
+/// `sort_by`/`sort_unstable_by`/`min_by`/`max_by` must use `total_cmp`.
+/// `partial_cmp(..).unwrap()` panics on NaN and `unwrap_or` variants
+/// silently reorder — either way the tie-break is not total (PR 2's
+/// fix, now enforced).
+fn total_cmp_sorts(relpath: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    const CALLS: &[&str] = &[".sort_by(", ".sort_unstable_by(", ".min_by(", ".max_by("];
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for call in CALLS {
+            for pos in find_all(&line.code, call) {
+                let window = paren_window(lines, i, pos + call.len() - 1);
+                if window.contains("partial_cmp") {
+                    out.push(Finding::new(
+                        "total-cmp-sorts",
+                        relpath,
+                        i + 1,
+                        format!("partial_cmp inside {}..); use total_cmp", &call[1..call.len() - 1]),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// Rule 3 — `safety-comment`: every `unsafe` occurrence needs a
+/// `// SAFETY:` comment on the same line or on the comment block
+/// directly above it, stating the invariant that makes it sound (the
+/// `util::par` SlicePtr hand-off is the motivating site).
+fn safety_comment(relpath: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test || !has_word(&line.code, "unsafe") {
+            continue;
+        }
+        let mut ok = line.comment.contains("SAFETY:");
+        let mut j = i;
+        while !ok && j > 0 && lines[j - 1].code.trim().is_empty() {
+            j -= 1;
+            ok = lines[j].comment.contains("SAFETY:");
+        }
+        if !ok {
+            out.push(Finding::new(
+                "safety-comment",
+                relpath,
+                i + 1,
+                "unsafe without an adjacent `// SAFETY:` comment",
+            ));
+        }
+    }
+}
+
+/// Rule 4 — `no-unwrap-in-lib`: `unwrap()` / `expect(` / `panic!` are
+/// banned in library code (everything under `src/` except `src/bin/`).
+/// Reachable failures must travel the `Error` path; structurally
+/// infallible sites get pinned in `lint_allow.toml` with a reason.
+///
+/// Known limitation: `.expect(` on a `self` receiver is skipped — that
+/// shape is a user-defined method (`util::json`'s `Parser::expect`),
+/// not `Option::expect`.
+fn no_unwrap_in_lib(relpath: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    if !relpath.starts_with("src/") || relpath.starts_with("src/bin/") {
+        return;
+    }
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        for pat in [".unwrap()", ".expect(", "panic!"] {
+            for pos in find_all(code, pat) {
+                if pat == ".expect(" && self_receiver(&code[..pos]) {
+                    continue;
+                }
+                if pat == "panic!" && pos > 0 && is_ident_left(code.as_bytes()[pos - 1]) {
+                    continue;
+                }
+                out.push(Finding::new(
+                    "no-unwrap-in-lib",
+                    relpath,
+                    i + 1,
+                    format!("`{pat}` in library code; return Error or allowlist with a reason"),
+                ));
+            }
+        }
+    }
+}
+
+/// Rule 5 — `no-alloc-region`: inside `// lint: no-alloc` …
+/// `// lint: end-no-alloc` regions (the PR 7 steady-state hot loops),
+/// flag calls that allocate. The regions are the engine's
+/// allocation-free contract made mechanical — `cargo bench` catches the
+/// throughput regression, this catches the cause at review time.
+fn no_alloc_region(relpath: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    let mut open: Option<usize> = None;
+    for (i, line) in lines.iter().enumerate() {
+        // A marker is a comment *starting* with the directive (after
+        // the `//`s) — prose that merely mentions the markers, like
+        // this module's own docs, is not a region boundary.
+        let directive = line.comment.trim_start_matches(['/', '*', ' ']);
+        if directive.starts_with("lint: end-no-alloc") {
+            if open.is_none() {
+                out.push(Finding::new(
+                    "no-alloc-region",
+                    relpath,
+                    i + 1,
+                    "`lint: end-no-alloc` without a matching `lint: no-alloc`",
+                ));
+            }
+            open = None;
+            continue;
+        }
+        if directive.starts_with("lint: no-alloc") {
+            if open.is_some() {
+                out.push(Finding::new(
+                    "no-alloc-region",
+                    relpath,
+                    i + 1,
+                    "nested `lint: no-alloc` region",
+                ));
+            }
+            open = Some(i + 1);
+            continue;
+        }
+        if open.is_none() || line.in_test {
+            continue;
+        }
+        for pat in ALLOC_PATTERNS {
+            for pos in find_all(&line.code, pat) {
+                if pos > 0 && pat.starts_with(|c: char| c.is_ascii_alphabetic())
+                    && is_ident_left(line.code.as_bytes()[pos - 1])
+                {
+                    continue;
+                }
+                out.push(Finding::new(
+                    "no-alloc-region",
+                    relpath,
+                    i + 1,
+                    format!("allocating call `{pat}` inside a no-alloc region"),
+                ));
+            }
+        }
+    }
+    if let Some(start) = open {
+        out.push(Finding::new(
+            "no-alloc-region",
+            relpath,
+            start,
+            "unclosed `lint: no-alloc` region (missing `lint: end-no-alloc`)",
+        ));
+    }
+}
+
+/// Rule 6 — `registry-enrollment`: every `Algo` enum variant must have
+/// a `Algo::V => Box::new(CTOR)` arm in `config.rs`, and that exact
+/// constructor (whitespace-normalized) must appear in
+/// `sched::registry()`. This closes the PR 6 auto-enrollment loop
+/// mechanically: a scheduler reachable from `--algo` that is absent
+/// from the registry would silently skip the whole conformance battery.
+pub fn check_registry(
+    config_rel: &str,
+    config_lines: &[Line],
+    sched_lines: &[Line],
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let variants = enum_variants(config_lines, "Algo");
+    if variants.is_empty() {
+        out.push(Finding::new(
+            "registry-enrollment",
+            config_rel,
+            1,
+            "could not find `enum Algo` variants to check",
+        ));
+        return out;
+    }
+    let config_code = normalized_code(config_lines);
+    let sched_code = normalized_code(sched_lines);
+    for (variant, lineno) in variants {
+        let arm_key = format!("Algo::{variant}=>Box::new(");
+        let Some(pos) = config_code.find(&arm_key) else {
+            out.push(Finding::new(
+                "registry-enrollment",
+                config_rel,
+                lineno,
+                format!("Algo::{variant} has no `Algo::{variant} => Box::new(..)` arm in scheduler()"),
+            ));
+            continue;
+        };
+        let Some(ctor) = balanced(&config_code[pos + arm_key.len()..]) else {
+            out.push(Finding::new(
+                "registry-enrollment",
+                config_rel,
+                lineno,
+                format!("unbalanced constructor expression for Algo::{variant}"),
+            ));
+            continue;
+        };
+        let enrolled = format!("Box::new({ctor})");
+        if !sched_code.contains(&enrolled) {
+            out.push(Finding::new(
+                "registry-enrollment",
+                config_rel,
+                lineno,
+                format!("constructor `{ctor}` for Algo::{variant} is not enrolled in sched::registry()"),
+            ));
+        }
+    }
+    out
+}
+
+/// Variant idents (with 1-based line numbers) of `enum <name>` —
+/// non-test code lines between the enum's braces whose first token is a
+/// capitalized ident.
+fn enum_variants(lines: &[Line], name: &str) -> Vec<(String, usize)> {
+    let header = format!("enum {name}");
+    let mut out = Vec::new();
+    let mut depth: Option<i64> = None;
+    let mut level: i64 = 0;
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let starting = depth.is_none() && line.code.contains(&header);
+        for ch in line.code.chars() {
+            match ch {
+                '{' => {
+                    level += 1;
+                    if starting && depth.is_none() {
+                        depth = Some(level);
+                    }
+                }
+                '}' => {
+                    if depth == Some(level) {
+                        return out;
+                    }
+                    level -= 1;
+                }
+                _ => {}
+            }
+        }
+        if depth.is_some() && !starting {
+            let t = line.code.trim().trim_end_matches(',');
+            let ident: String =
+                t.chars().take_while(|c| c.is_ascii_alphanumeric() || *c == '_').collect();
+            if ident.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+                out.push((ident, i + 1));
+            }
+        }
+    }
+    out
+}
+
+/// All non-test code, joined and stripped of whitespace — the
+/// normalization both sides of the registry comparison share.
+fn normalized_code(lines: &[Line]) -> String {
+    lines
+        .iter()
+        .filter(|l| !l.in_test)
+        .flat_map(|l| l.code.chars())
+        .filter(|c| !c.is_whitespace())
+        .collect()
+}
+
+/// The prefix of `s` up to the `)` balancing an already-open paren.
+fn balanced(s: &str) -> Option<&str> {
+    let mut depth = 1i64;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(&s[..i]);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// The argument window of a call: characters from the `(` at
+/// `(li, col)` through its balancing `)`, spanning up to 40 lines.
+fn paren_window(lines: &[Line], li: usize, col: usize) -> String {
+    let mut out = String::new();
+    let mut depth = 0i64;
+    for (k, line) in lines.iter().enumerate().skip(li).take(40) {
+        let start = if k == li { col } else { 0 };
+        for c in line.code[start.min(line.code.len())..].chars() {
+            out.push(c);
+            match c {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return out;
+                    }
+                }
+                _ => {}
+            }
+        }
+        out.push(' ');
+    }
+    out
+}
+
+/// Byte offsets of every occurrence of `pat` in `s`.
+fn find_all(s: &str, pat: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = s[from..].find(pat) {
+        out.push(from + p);
+        from += p + 1;
+    }
+    out
+}
+
+fn is_ident_left(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// True when the text before a `.expect(` occurrence ends with the
+/// whole word `self` (so `myself.expect(` still counts as a finding).
+fn self_receiver(before: &str) -> bool {
+    before.strip_suffix("self").is_some_and(|rest| {
+        rest.bytes().next_back().is_none_or(|b| !is_ident_left(b))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn findings(rel: &str, src: &str) -> Vec<Finding> {
+        check_file(rel, &lex(src))
+    }
+
+    #[test]
+    fn hash_iter_scoped_to_deterministic_dirs() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(findings("src/sched/x.rs", src).len(), 1);
+        assert!(findings("src/gpu/x.rs", src).is_empty(), "out-of-scope dir");
+        let test_src = "#[cfg(test)]\nmod t {\n use std::collections::HashMap;\n}\n";
+        assert!(findings("src/sched/x.rs", test_src).is_empty(), "tests exempt");
+    }
+
+    #[test]
+    fn total_cmp_window_spans_lines() {
+        let src = "fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| {\n        a.partial_cmp(b).unwrap()\n    });\n}\n";
+        let fs = findings("src/x.rs", src);
+        assert!(fs.iter().any(|f| f.rule == "total-cmp-sorts" && f.line == 2));
+        let good = "fn f(v: &mut Vec<f64>) { v.sort_by(|a, b| a.total_cmp(b)); }\n";
+        assert!(findings("src/x.rs", good).iter().all(|f| f.rule != "total-cmp-sorts"));
+    }
+
+    #[test]
+    fn safety_comment_looks_up_through_comment_block() {
+        let good = "// SAFETY: index handed out exactly once.\n// (second comment line)\nunsafe impl Sync for X {}\n";
+        assert!(findings("src/util/x.rs", good).iter().all(|f| f.rule != "safety-comment"));
+        let bad = "fn f() {\n    unsafe { work() };\n}\n";
+        let fs = findings("src/util/x.rs", bad);
+        assert!(fs.iter().any(|f| f.rule == "safety-comment" && f.line == 2));
+    }
+
+    #[test]
+    fn unwrap_rule_skips_bins_tests_and_self_expect() {
+        let src = "fn f() { x.unwrap(); }\n";
+        assert_eq!(findings("src/sched/x.rs", src).len(), 1);
+        assert!(findings("src/bin/x.rs", src).is_empty());
+        assert!(findings("tests/x.rs", src).is_empty());
+        let method = "fn f(&mut self) { self.expect(b) }\n";
+        assert!(findings("src/util/x.rs", method).is_empty());
+        let strings = "fn f() { log(\"don't panic!\"); } // unwrap() in comment\n";
+        assert!(findings("src/util/x.rs", strings).is_empty());
+    }
+
+    #[test]
+    fn no_alloc_region_flags_allocs_not_clone_from() {
+        let src = "fn f(dst: &mut Vec<u8>, src: &Vec<u8>) {\n    // lint: no-alloc\n    dst.clone_from(src);\n    let v = src.clone();\n    // lint: end-no-alloc\n    let w = src.clone();\n}\n";
+        let fs = findings("src/x.rs", src);
+        let alloc: Vec<_> = fs.iter().filter(|f| f.rule == "no-alloc-region").collect();
+        assert_eq!(alloc.len(), 1, "{alloc:?}");
+        assert_eq!(alloc[0].line, 4);
+    }
+
+    #[test]
+    fn unclosed_region_is_a_finding() {
+        let fs = findings("src/x.rs", "// lint: no-alloc\nfn f() {}\n");
+        assert!(fs.iter().any(|f| f.rule == "no-alloc-region" && f.line == 1));
+    }
+
+    #[test]
+    fn registry_rule_matches_ctor_text() {
+        let config = "pub enum Algo {\n    Good,\n    Missing,\n}\nimpl Algo {\n    pub fn scheduler(self) -> B {\n        match self {\n            Algo::Good => Box::new(GoodSched::new()),\n            Algo::Missing => Box::new(MissingSched::make()),\n        }\n    }\n}\n";
+        let sched = "pub fn registry() -> V {\n    vec![Box::new(GoodSched::new())]\n}\n";
+        let fs = check_registry("src/config.rs", &lex(config), &lex(sched));
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].line, 3, "span must point at the variant");
+        assert!(fs[0].message.contains("MissingSched::make()"));
+    }
+}

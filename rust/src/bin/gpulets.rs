@@ -11,6 +11,7 @@
 //!               [--seed X] [--algo A] [--gpus N] [--duration S] [--config <toml>]
 //! gpulets serve-real [--artifacts DIR] [--duration S] [--rate M=R ...]
 //! gpulets experiment <fig3|...|fig16|tables|all>   # legacy alias of run-fig
+//! gpulets lint [path] [--json] [--fix-allowlist]   # static-analysis gate
 //! gpulets profile            # dump the offline L(b,p) profile grid
 //! gpulets models             # Table 4
 //! gpulets scenarios          # Table 5
@@ -68,6 +69,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("fleet") => fleet(&args[1..]),
         Some("serve-real") => serve_real(&args[1..]),
         Some("bench-compare") => bench_compare(&args[1..]),
+        Some("lint") => lint_cmd(&args[1..]),
         Some("profile") => {
             print!("{}", ex::fig03::run());
             Ok(())
@@ -105,6 +107,7 @@ fn print_usage() {
          \x20 gpulets serve-real [--artifacts DIR] [--duration S] [--rate model=R]...\n\
          \x20 gpulets experiment <fig3|...|fig16|tables|all> [--threads N]\n\
          \x20 gpulets bench-compare <baseline.json> <fresh.json>\n\
+         \x20 gpulets lint [path] [--json] [--fix-allowlist]\n\
          \x20 gpulets profile | models | scenarios | help\n\
          \n\
          schedulers: gpulet gpulet+int sbp sbp+part selftune ideal spacetime\n\
@@ -118,8 +121,57 @@ fn print_usage() {
          bench targets); sweep writes BENCH_sweep_schedulability.json\n\
          (plain counts, no timing envelope). Both land in the CWD.\n\
          bench-compare diffs two BENCH files by bench name and prints\n\
-         per-bench speedups (baseline mean / fresh mean)."
+         per-bench speedups (baseline mean / fresh mean).\n\
+         \n\
+         lint runs the determinism & soundness static-analysis pass\n\
+         (DESIGN.md 11) over <path>/src (default: the rust/ crate) and\n\
+         exits 1 on findings not pinned in lint_allow.toml;\n\
+         --fix-allowlist regenerates the allowlist in place."
     );
+}
+
+/// `gpulets lint [path] [--json] [--fix-allowlist]` — the blocking CI
+/// gate. Exit 0 when clean, 1 on unallowlisted findings, 2 on
+/// operational errors (unreadable tree, malformed allowlist).
+fn lint_cmd(args: &[String]) -> Result<()> {
+    let mut root: Option<String> = None;
+    let mut json = false;
+    let mut fix = false;
+    for a in args {
+        match a.as_str() {
+            "--json" => json = true,
+            "--fix-allowlist" => fix = true,
+            flag if flag.starts_with("--") => {
+                return Err(gpulets::Error::Other(format!("unknown lint flag {flag:?}")))
+            }
+            path => root = Some(path.to_string()),
+        }
+    }
+    let root = match root {
+        Some(p) => std::path::PathBuf::from(p),
+        // Run from either the crate dir (CI's working-directory) or
+        // the repo root.
+        None if std::path::Path::new("src").is_dir() => std::path::PathBuf::from("."),
+        None => std::path::PathBuf::from("rust"),
+    };
+    if fix {
+        let text = gpulets::analysis::fix_allowlist(&root)?;
+        eprintln!(
+            "wrote {} ({} entries)",
+            root.join("lint_allow.toml").display(),
+            text.lines().filter(|l| l.starts_with("[allow.")).count()
+        );
+    }
+    let report = gpulets::analysis::lint_tree(&root)?;
+    if json {
+        println!("{}", report.render_json());
+    } else {
+        print!("{}", report.render_human());
+    }
+    if !report.clean() {
+        std::process::exit(1);
+    }
+    Ok(())
 }
 
 /// Split an optional leading positional argument from trailing flags:

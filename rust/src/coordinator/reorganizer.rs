@@ -202,7 +202,9 @@ impl<'a, S: Scheduler> AdaptiveServer<'a, S> {
             // agree on which window a boundary arrival belongs to.
             let w1_us = ms_to_us(t_end * 1000.0);
             while obs.peek_time_ms().is_some_and(|t_ms| ms_to_us(t_ms) <= w1_us) {
-                let a = obs.pull().expect("peeked arrival");
+                // Peek said an arrival is there; a None pull would mean
+                // the tap lost it — stop observing rather than panic.
+                let Some(a) = obs.pull() else { break };
                 monitor.observe(a.model, 1);
             }
             monitor.tick(t_end - t);

@@ -222,6 +222,9 @@ impl<'a> FleetEngine<'a> {
     /// `t_us` in lockstep: dealing stays serial (the dealer's
     /// determinism), node advance fans out over the worker pool.
     pub fn run_until(&mut self, t_us: SimTimeUs) {
+        // lint: no-alloc — the PR 7 lockstep advance: chunk buffers
+        // recycle through `spares`, so steady-state windows allocate
+        // nothing once capacities stabilize.
         self.router.deal_until(t_us);
         for (ni, eng) in self.nodes.iter_mut().enumerate() {
             let chunk = self
@@ -237,6 +240,7 @@ impl<'a> FleetEngine<'a> {
         // share no state within an advance, and each engine's run is a
         // deterministic function of its own state and chunk.
         par::par_for_each_mut(&mut self.nodes, |eng| eng.run_until(t_us));
+        // lint: end-no-alloc
     }
 
     /// Re-plan for `rates` and hand the fleet over live: every node

@@ -11,9 +11,12 @@ pub fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Result<Vec<f64>> {
     }
     for col in 0..n {
         // Partial pivot.
+        // `col..n` is nonempty (col < n), so max_by always yields a
+        // pivot; total_cmp keeps the choice total even against NaN
+        // input (the singularity check below still rejects it).
         let pivot = (col..n)
-            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
-            .unwrap();
+            .max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))
+            .unwrap_or(col);
         if a[pivot][col].abs() < 1e-12 {
             return Err(Error::Other("solve: singular matrix".into()));
         }

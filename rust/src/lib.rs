@@ -34,6 +34,7 @@
 //! assert!(assigned >= 250.0 - 1e-6);
 //! assert!(schedule.total_allocated_pct() <= 400);
 //! ```
+pub mod analysis;
 pub mod apps;
 pub mod config;
 pub mod coordinator;

@@ -96,6 +96,8 @@ impl ModelMetrics {
     /// sample sets (see [`Histogram::merge`]) — fleet aggregation cannot
     /// skew p50/p99 beyond what one server's binning already does.
     pub fn merge(&mut self, other: &ModelMetrics) {
+        // lint: no-alloc — counters add in place; the histogram merge
+        // reuses self's bins (see Histogram::merge).
         debug_assert!(
             (self.slo_ms - other.slo_ms).abs() < 1e-9,
             "merging model metrics with mismatched SLOs ({} vs {})",
@@ -106,6 +108,7 @@ impl ModelMetrics {
         self.violations += other.violations;
         self.dropped += other.dropped;
         self.hist.merge(&other.hist);
+        // lint: end-no-alloc
     }
 }
 
@@ -178,6 +181,9 @@ impl Report {
     /// single server. `self.window_s` is kept: the caller sets the
     /// fleet-wide measurement window when constructing the target.
     pub fn merge(&mut self, other: &Report) {
+        // lint: no-alloc — the steady-state path (model already seen)
+        // merges entirely in place through the entry API; the one
+        // first-sight clone below is pinned in lint_allow.toml.
         use std::collections::btree_map::Entry;
         for (&m, mm) in &other.models {
             match self.models.entry(m) {
@@ -191,6 +197,7 @@ impl Report {
                 }
             }
         }
+        // lint: end-no-alloc
     }
 
     /// Counters-only snapshot for later [`Report::snapshot_window`]

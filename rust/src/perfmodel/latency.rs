@@ -142,7 +142,7 @@ pub fn knee(curve: &[(u32, f64)]) -> u32 {
         // Too few feasible points to measure curvature: take the best.
         return pts
             .iter()
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(&b.1))
             .map_or(fallback, |&(s, _)| s as u32);
     }
     let slope = |a: (f64, f64), b: (f64, f64)| (b.1 - a.1) / (b.0 - a.0);

@@ -52,7 +52,7 @@ impl RateMonitor {
     pub fn rates_desc(&self) -> Vec<(ModelId, f64)> {
         let mut v: Vec<(ModelId, f64)> =
             ModelId::ALL.iter().map(|&m| (m, self.rate(m))).collect();
-        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v.sort_by(|a, b| b.1.total_cmp(&a.1));
         v
     }
 

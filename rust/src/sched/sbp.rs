@@ -73,14 +73,18 @@ impl SquishyBinPacking {
             else {
                 continue;
             };
-            // Capacity for the incoming model within the squished cycle.
+            // Capacity for the incoming model within the squished cycle
+            // (squish preserves the assignment just pushed, so `last`
+            // is the incoming model; fall back to the probed batch).
             let d = squished.duty_cycle_ms(&ctx.lm, 0.0);
-            let b_new = squished.assignments.last().unwrap().batch;
+            let b_new = squished.assignments.last().map_or(b, |a| a.batch);
             let cap = b_new as f64 * 1000.0 / d * crate::sched::types::CAPACITY_FRACTION;
             let take = want.min(cap);
             if take > EPS_RATE && best.as_ref().is_none_or(|(_, t)| take > *t) {
                 let mut committed = squished;
-                committed.assignments.last_mut().unwrap().rate = take;
+                if let Some(last) = committed.assignments.last_mut() {
+                    last.rate = take;
+                }
                 // Re-verify with the real rate in place.
                 if committed.feasible(&ctx.lm, 0.0) {
                     best = Some((committed, take));

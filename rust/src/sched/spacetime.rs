@@ -334,7 +334,9 @@ impl SpaceTimeScheduler {
                 if head <= EPS_RATE {
                     continue;
                 }
-                trial[i].assignments.last_mut().expect("just pushed").rate = head;
+                if let Some(last) = trial[i].assignments.last_mut() {
+                    last.rate = head;
+                }
                 if !self.repair(ctx, &mut trial) {
                     continue;
                 }

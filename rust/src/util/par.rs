@@ -111,6 +111,12 @@ where
 /// sound because the atomic dispatch index gives out each element index
 /// exactly once, so no two workers ever touch the same item.
 struct SlicePtr<T>(*mut T);
+// SAFETY: sharing the base pointer across scoped workers is sound
+// because the atomic dispatch index hands out each element index
+// exactly once — no two workers ever form a reference to the same
+// item — and `T: Send` lets the items themselves move between
+// threads. The pointer is only dereferenced inside the scope that
+// borrows the slice, so it cannot dangle.
 unsafe impl<T: Send> Sync for SlicePtr<T> {}
 
 /// Apply `f` to every item through an exclusive `&mut`, fanned out over

@@ -24,7 +24,7 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     percentile_sorted(&v, q)
 }
 
@@ -48,7 +48,7 @@ pub fn percentile_sorted(v: &[f64], q: f64) -> f64 {
 /// Empirical CDF evaluated at chosen quantile levels: returns (q, value) rows.
 pub fn cdf_points(xs: &[f64], qs: &[f64]) -> Vec<(f64, f64)> {
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     qs.iter().map(|&q| (q, percentile_sorted(&v, q))).collect()
 }
 
@@ -205,6 +205,8 @@ impl Histogram {
     /// approximation. Both histograms must share the same bin geometry
     /// (all serving metrics use one configuration).
     pub fn merge(&mut self, other: &Histogram) {
+        // lint: no-alloc — merge runs per node per window on the fleet
+        // hot path; both arms reuse `self`'s bin allocation.
         assert!(
             self.bin_width == other.bin_width && self.bins.len() == other.bins.len(),
             "merging histograms with different bin geometry ({} x {} vs {} x {})",
@@ -226,6 +228,7 @@ impl Histogram {
             if other.max > self.max {
                 self.max = other.max;
             }
+            self.debug_check_conserved();
             return;
         }
         for (b, o) in self.bins.iter_mut().zip(other.bins.iter()) {
@@ -237,6 +240,20 @@ impl Histogram {
         if other.max > self.max {
             self.max = other.max;
         }
+        self.debug_check_conserved();
+        // lint: end-no-alloc
+    }
+
+    /// Debug-only conservation check: binned + overflow observations
+    /// must equal the total count — `record` maintains this one sample
+    /// at a time, and both `merge` arms must preserve it exactly (the
+    /// merged bins are the sum of the inputs' bins).
+    fn debug_check_conserved(&self) {
+        debug_assert_eq!(
+            self.bins.iter().sum::<u64>() + self.overflow,
+            self.count,
+            "histogram bins diverged from the observation count"
+        );
     }
 }
 

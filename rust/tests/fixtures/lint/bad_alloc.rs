@@ -1,0 +1,10 @@
+//! Fixture: allocation inside a `lint: no-alloc` region is flagged
+//! (expected finding: line 6, the `.collect()` call; the unclosed /
+//! nested marker diagnostics are pinned by the rules unit tests).
+pub fn hot(xs: &[u64]) -> u64 {
+    // lint: no-alloc
+    let doubled: Vec<u64> = xs.iter().map(|x| x * 2).collect();
+    let total: u64 = doubled.iter().sum();
+    // lint: end-no-alloc
+    total
+}

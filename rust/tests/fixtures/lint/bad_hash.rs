@@ -1,0 +1,11 @@
+//! Fixture: `HashMap` in a scheduler-scoped path must be flagged
+//! (expected findings: lines 3 and 6 when lexed as `src/sched/...`).
+use std::collections::HashMap;
+
+pub fn count(xs: &[u32]) -> usize {
+    let mut m: HashMap<u32, u32> = HashMap::new();
+    for &x in xs {
+        *m.entry(x).or_default() += 1;
+    }
+    m.len()
+}

@@ -1,0 +1,12 @@
+//! Fixture: float orderings routed through `partial_cmp` are flagged
+//! (expected findings: lines 5 and 9; line 9 needs the multi-line
+//! paren window to see the closure body on line 10).
+pub fn sort_desc(v: &mut [f64]) {
+    v.sort_by(|a, b| b.partial_cmp(a).unwrap_or(core::cmp::Ordering::Equal));
+}
+
+pub fn best(v: &[f64]) -> Option<f64> {
+    v.iter().copied().max_by(|a, b| {
+        a.partial_cmp(b).unwrap_or(core::cmp::Ordering::Equal)
+    })
+}

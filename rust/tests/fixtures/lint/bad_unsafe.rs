@@ -1,0 +1,5 @@
+//! Fixture: `unsafe` without an adjacent `// SAFETY:` comment
+//! (expected finding: line 4).
+pub fn read_first(p: *const u32) -> u32 {
+    unsafe { *p }
+}

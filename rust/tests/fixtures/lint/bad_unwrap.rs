@@ -1,0 +1,23 @@
+//! Fixture: unwrap/expect/panic! outside test regions are flagged
+//! (expected findings: lines 5, 9 and 13; the unwrap inside the
+//! `#[cfg(test)]` module must NOT be flagged).
+pub fn first(v: &[u32]) -> u32 {
+    *v.first().unwrap()
+}
+
+pub fn must(v: Option<u32>) -> u32 {
+    v.expect("present")
+}
+
+pub fn boom() {
+    panic!("no");
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn in_tests_unwrap_is_fine() {
+        assert_eq!(super::must(Some(1)), 1);
+        assert_eq!(Some(2).unwrap(), 2);
+    }
+}

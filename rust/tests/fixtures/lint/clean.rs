@@ -1,0 +1,43 @@
+//! Fixture: near-miss constructs that must NOT trigger any rule, even
+//! when lexed under the strictest path scope (`src/sched/...`).
+//!
+//! Mentions HashMap in a doc comment only, and prose about the
+//! `// lint: no-alloc` marker is not a directive.
+
+pub fn strings_are_blanked() -> &'static str {
+    "use std::collections::HashMap and panic!(now) and x.unwrap()"
+}
+
+pub fn sort_total(v: &mut [f64]) {
+    v.sort_by(|a, b| a.total_cmp(b));
+}
+
+pub struct Parser {
+    pos: usize,
+}
+
+impl Parser {
+    /// `self.expect(..)` is a parser method, not `Option::expect`.
+    pub fn expect(&mut self, b: u8) -> bool {
+        self.pos += 1;
+        b == 0
+    }
+
+    pub fn run(&mut self) -> bool {
+        self.expect(b'{')
+    }
+}
+
+// SAFETY: the pointer is valid for reads by the caller contract.
+pub unsafe fn read(p: *const u32) -> u32 {
+    // SAFETY: forwarded from the caller contract above.
+    unsafe { *p }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(Some(1).unwrap(), 1);
+    }
+}

@@ -1,0 +1,16 @@
+//! Fixture config: `Algo` with one enrolled and one missing variant
+//! (expected finding: line 6, `Missing` not enrolled in registry()).
+
+pub enum Algo {
+    Enrolled,
+    Missing,
+}
+
+impl Algo {
+    pub fn scheduler(self) -> Box<dyn Send> {
+        match self {
+            Algo::Enrolled => Box::new(EnrolledSched::new()),
+            Algo::Missing => Box::new(MissingSched::with_window(4)),
+        }
+    }
+}

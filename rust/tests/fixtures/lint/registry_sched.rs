@@ -1,0 +1,6 @@
+//! Fixture sched registry: only `EnrolledSched` is enrolled, so the
+//! `Algo::Missing` constructor from the config fixture has no entry.
+
+pub fn registry() -> Vec<Box<dyn Send>> {
+    vec![Box::new(EnrolledSched::new())]
+}

@@ -1,0 +1,153 @@
+//! Lint conformance: the fixture battery for `gpulets lint`
+//! (DESIGN.md §11). Each fixture under `tests/fixtures/lint/` contains
+//! exactly the violations its name advertises; the tests pin rule,
+//! file and line, so a lexer or rule regression shows up as a moved or
+//! missing finding rather than a silently weaker gate.
+//!
+//! Pinned here (tier-1, `cargo test`):
+//! * each of the six rules fires on its bad fixture at the exact
+//!   expected `file:line` spans, and respects its path scope;
+//! * the clean fixture — strings, doc comments, `self.expect(..)`,
+//!   SAFETY'd unsafe, `#[cfg(test)]` regions — produces zero findings
+//!   under the strictest path scope;
+//! * the allowlist round-trips through `tomlmini`: regenerated text
+//!   parses back and suppresses exactly the findings it pinned;
+//! * the lint run over this crate's real `src/` tree is clean — the
+//!   same self-test CI enforces as a blocking gate.
+
+use std::path::Path;
+
+use gpulets::analysis::{self, lexer, rules, Allowlist, Finding, LintReport};
+
+const BAD_HASH: &str = include_str!("fixtures/lint/bad_hash.rs");
+const BAD_SORT: &str = include_str!("fixtures/lint/bad_sort.rs");
+const BAD_UNSAFE: &str = include_str!("fixtures/lint/bad_unsafe.rs");
+const BAD_UNWRAP: &str = include_str!("fixtures/lint/bad_unwrap.rs");
+const BAD_ALLOC: &str = include_str!("fixtures/lint/bad_alloc.rs");
+const CLEAN: &str = include_str!("fixtures/lint/clean.rs");
+const REG_CONFIG: &str = include_str!("fixtures/lint/registry_config.rs");
+const REG_SCHED: &str = include_str!("fixtures/lint/registry_sched.rs");
+
+fn spans(findings: &[Finding]) -> Vec<String> {
+    findings.iter().map(Finding::span).collect()
+}
+
+fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn no_hash_iter_fires_in_scoped_dirs_only() {
+    let found = analysis::lint_source("src/sched/bad_hash.rs", BAD_HASH);
+    assert_eq!(rules_of(&found), ["no-hash-iter", "no-hash-iter"]);
+    assert_eq!(spans(&found), ["src/sched/bad_hash.rs:3", "src/sched/bad_hash.rs:6"]);
+    // The same text outside the determinism-scoped dirs is legal.
+    let outside = analysis::lint_source("src/perfmodel/bad_hash.rs", BAD_HASH);
+    assert!(outside.is_empty(), "scope leak: {outside:?}");
+}
+
+#[test]
+fn total_cmp_sorts_fires_across_multiline_closures() {
+    let found = analysis::lint_source("src/perfmodel/bad_sort.rs", BAD_SORT);
+    assert_eq!(rules_of(&found), ["total-cmp-sorts", "total-cmp-sorts"]);
+    // Line 9's `max_by` closure only reveals `partial_cmp` on line 10 —
+    // the paren window must span the call, not just the call line.
+    assert_eq!(spans(&found), ["src/perfmodel/bad_sort.rs:5", "src/perfmodel/bad_sort.rs:9"]);
+}
+
+#[test]
+fn safety_comment_fires_on_bare_unsafe() {
+    let found = analysis::lint_source("src/util/bad_unsafe.rs", BAD_UNSAFE);
+    assert_eq!(rules_of(&found), ["safety-comment"]);
+    assert_eq!(spans(&found), ["src/util/bad_unsafe.rs:4"]);
+}
+
+#[test]
+fn no_unwrap_in_lib_fires_outside_tests_and_bins() {
+    let found = analysis::lint_source("src/util/bad_unwrap.rs", BAD_UNWRAP);
+    assert_eq!(rules_of(&found), ["no-unwrap-in-lib"; 3]);
+    // Lines 5 (.unwrap()), 9 (.expect) and 13 (panic!); the unwrap in
+    // the fixture's #[cfg(test)] module must not appear.
+    assert_eq!(
+        spans(&found),
+        ["src/util/bad_unwrap.rs:5", "src/util/bad_unwrap.rs:9", "src/util/bad_unwrap.rs:13"]
+    );
+    let in_bin = analysis::lint_source("src/bin/bad_unwrap.rs", BAD_UNWRAP);
+    assert!(in_bin.is_empty(), "src/bin/ is out of scope: {in_bin:?}");
+}
+
+#[test]
+fn no_alloc_region_fires_on_allocating_call() {
+    let found = analysis::lint_source("src/fleet/bad_alloc.rs", BAD_ALLOC);
+    assert_eq!(rules_of(&found), ["no-alloc-region"]);
+    assert_eq!(spans(&found), ["src/fleet/bad_alloc.rs:6"]);
+    assert!(found[0].message.contains(".collect()"), "message names the call: {found:?}");
+}
+
+#[test]
+fn registry_enrollment_flags_the_missing_variant() {
+    let config = lexer::lex(REG_CONFIG);
+    let sched = lexer::lex(REG_SCHED);
+    let found = rules::check_registry("src/config.rs", &config, &sched);
+    assert_eq!(rules_of(&found), ["registry-enrollment"]);
+    // Anchored at the `Missing` variant's declaration line.
+    assert_eq!(spans(&found), ["src/config.rs:6"]);
+    assert!(
+        found[0].message.contains("MissingSched::with_window(4)"),
+        "message names the unenrolled constructor: {found:?}"
+    );
+}
+
+#[test]
+fn clean_fixture_has_zero_findings_under_strictest_scope() {
+    let found = analysis::lint_source("src/sched/clean.rs", CLEAN);
+    assert!(found.is_empty(), "false positives: {found:?}");
+}
+
+#[test]
+fn allowlist_round_trips_through_tomlmini() {
+    let found = analysis::lint_source("src/util/bad_unwrap.rs", BAD_UNWRAP);
+    assert_eq!(found.len(), 3);
+    // Regenerate from scratch: one [allow.01] entry, count 3, TODO reason.
+    let text = Allowlist::regenerate(&found, &Allowlist::default());
+    let back = Allowlist::parse(&text).expect("regenerated allowlist must parse");
+    assert_eq!(back.entries.len(), 1);
+    assert_eq!(back.entries[0].rule, "no-unwrap-in-lib");
+    assert_eq!(back.entries[0].file, "src/util/bad_unwrap.rs");
+    assert_eq!(back.entries[0].count, 3);
+    assert_eq!(back.entries[0].reason, "TODO: justify this entry");
+    // Applying it suppresses exactly the findings it pinned.
+    let mut report = LintReport::default();
+    back.apply(found, &mut report);
+    assert!(report.clean(), "regenerated allowlist must make the run clean: {report:?}");
+    assert_eq!(report.suppressed, 3);
+    assert!(report.slack.is_empty() && report.stale.is_empty());
+}
+
+#[test]
+fn allowlist_ratchet_surfaces_regressions_whole() {
+    let found = analysis::lint_source("src/util/bad_unwrap.rs", BAD_UNWRAP);
+    let allow = Allowlist::parse(
+        "[allow.01]\nrule = \"no-unwrap-in-lib\"\nfile = \"src/util/bad_unwrap.rs\"\n\
+         count = 2\nreason = \"two were justified once\"\n",
+    )
+    .expect("hand-written allowlist must parse");
+    let mut report = LintReport::default();
+    allow.apply(found, &mut report);
+    // 3 found > 2 allowed: every finding surfaces, none hide under the budget.
+    assert_eq!(report.findings.len(), 3, "ratchet must surface the whole group");
+    assert_eq!(report.suppressed, 0);
+    assert!(!report.clean());
+}
+
+#[test]
+fn the_real_tree_passes_its_own_lint() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = analysis::lint_tree(root).expect("lint walk over the real tree");
+    assert!(
+        report.clean(),
+        "the crate must pass its own lint gate:\n{}",
+        report.render_human()
+    );
+    assert!(report.files_scanned > 40, "walk saw {} files", report.files_scanned);
+}
