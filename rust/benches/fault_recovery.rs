@@ -1,0 +1,12 @@
+//! Bench target for the robustness tier: a 4-node fleet under a flash
+//! crowd to 1.8x of its schedulable capacity loses one node mid-swell
+//! and recovers it, once per admission mode (off / shed / degrade);
+//! writes BENCH_fault_recovery.json (per-mode conservation ledger,
+//! re-plan failures, recovery time, and the headline admitted-SLO-
+//! attainment ordering: shed and degrade must beat the admit-everything
+//! baseline). Diff across PRs with `gpulets bench-compare`.
+use gpulets::experiments::{common, fault_recovery};
+
+fn main() {
+    common::run_and_write(&fault_recovery::Experiment, 0, 1).expect("fault_recovery bench");
+}

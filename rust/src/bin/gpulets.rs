@@ -4,11 +4,13 @@
 //! gpulets run-fig <03|04|05|06|09|12|13|14|15|16|fleet_scale|spacetime|all|list>
 //! gpulets sweep [--scheduler <gpulet|gpulet+int|sbp|sbp+part|selftune|ideal|spacetime|all>]
 //!               [--gpus N]
-//! gpulets serve [--scenario <equal|long-only|short-skew|game|traffic>] [--scale K]
-//!               [--config <toml>] [--algo A] [--gpus N] [--duration S] [--seed X]
-//!               [--rate model=R ...]
+//! gpulets serve [--scenario <equal|long-only|short-skew|game|traffic|flashcrowd>]
+//!               [--scale K] [--config <toml>] [--algo A] [--gpus N] [--duration S]
+//!               [--seed X] [--rate model=R ...]
 //! gpulets fleet [--nodes N] [--rebalance S] [--scenario NAME] [--scale K]
 //!               [--seed X] [--algo A] [--gpus N] [--duration S] [--config <toml>]
+//!               [--admission <off|shed|degrade>] [--faults <toml>]
+//!               [--fault-seed X [--fault-episodes N]]
 //! gpulets serve-real [--artifacts DIR] [--duration S] [--rate M=R ...]
 //! gpulets experiment <fig3|...|fig16|tables|all>   # legacy alias of run-fig
 //! gpulets lint [path] [--json] [--fix-allowlist]   # static-analysis gate
@@ -28,7 +30,7 @@ use gpulets::coordinator::server::RealServer;
 use gpulets::coordinator::{ServingEngine, SimConfig};
 use gpulets::error::Result;
 use gpulets::experiments as ex;
-use gpulets::fleet::{FleetConfig, FleetEngine, FleetPlanner};
+use gpulets::fleet::{AdmissionMode, FleetConfig, FleetEngine, FleetPlanner};
 use gpulets::interference::GroundTruth;
 use gpulets::models::ModelId;
 use gpulets::runtime::{Engine, ModelRegistry};
@@ -36,8 +38,9 @@ use gpulets::sched::{SchedCtx, Scheduler};
 use gpulets::util::benchkit;
 use gpulets::util::json::{obj, Json};
 use gpulets::workload::{
-    dyn_sources, enumerate_all_scenarios, generate_arrivals, named_scenarios,
-    poisson_streams, DynSourceMux, SourceMux,
+    dyn_sources, enumerate_all_scenarios, flashcrowd_streams, generate_arrivals,
+    named_scenarios, poisson_streams, DynSourceMux, FaultPlan, FlashCrowdSpec,
+    SourceMux,
 };
 
 fn main() {
@@ -104,6 +107,8 @@ fn print_usage() {
          \x20               [--gpus N] [--duration S] [--seed X] [--rate model=R]...\n\
          \x20 gpulets fleet [--nodes N] [--rebalance S] [--scenario NAME] [--scale K]\n\
          \x20               [--seed X] [--algo A] [--gpus N] [--duration S] [--config F]\n\
+         \x20               [--admission off|shed|degrade] [--faults F]\n\
+         \x20               [--fault-seed X [--fault-episodes N]]\n\
          \x20 gpulets serve-real [--artifacts DIR] [--duration S] [--rate model=R]...\n\
          \x20 gpulets experiment <fig3|...|fig16|tables|all> [--threads N]\n\
          \x20 gpulets bench-compare <baseline.json> <fresh.json>\n\
@@ -111,7 +116,15 @@ fn print_usage() {
          \x20 gpulets profile | models | scenarios | help\n\
          \n\
          schedulers: gpulet gpulet+int sbp sbp+part selftune ideal spacetime\n\
-         scenarios:  equal long-only short-skew game traffic\n\
+         scenarios:  equal long-only short-skew game traffic flashcrowd\n\
+         \n\
+         --scenario flashcrowd serves the configured rates with a 3x\n\
+         correlated burst mid-trace (deterministic exact-draw source).\n\
+         fleet's --admission gates arrivals at the front end when the\n\
+         observed demand outgrows the plan (shed = refuse counted,\n\
+         degrade = rewrite to the [admission] fallback.<model> from the\n\
+         config, defaulting to lenet); --faults scripts node failures\n\
+         from a [faults] TOML section, --fault-seed generates them.\n\
          \n\
          --threads N caps the experiment worker pool (default: all\n\
          cores, or GPULETS_THREADS); results are byte-identical for\n\
@@ -463,6 +476,32 @@ fn poisson_mux(rates: &[f64; 5], duration_s: f64, seed: u64) -> Result<(DynSourc
     Ok((SourceMux::new(dyn_sources(streams)), n))
 }
 
+/// The `--scenario flashcrowd` envelope: the configured rates as the
+/// baseline with a 3x correlated burst over the middle half of the
+/// trace (sinusoidal ramps, exact-draw deterministic source).
+fn flashcrowd_spec(rates: &[f64; 5], duration_s: f64) -> FlashCrowdSpec {
+    FlashCrowdSpec {
+        base: *rates,
+        peak_mult: 3.0,
+        t_start_s: duration_s * 0.25,
+        ramp_s: duration_s * 0.125,
+        hold_s: duration_s * 0.25,
+    }
+}
+
+/// Streamed flash-crowd workload over the configured rates (shared by
+/// serve and fleet when `--scenario flashcrowd` is in effect).
+fn flashcrowd_mux(
+    rates: &[f64; 5],
+    duration_s: f64,
+    seed: u64,
+) -> Result<(DynSourceMux, usize)> {
+    let spec = flashcrowd_spec(rates, duration_s);
+    let streams = flashcrowd_streams(&spec, duration_s, 1.0, seed)?;
+    let n = streams.len();
+    Ok((SourceMux::new(dyn_sources(streams)), n))
+}
+
 /// Print one schedule's gpu-let layout (shared by serve and fleet).
 fn print_schedule(schedule: &gpulets::sched::Schedule, indent: &str) {
     for lp in &schedule.lets {
@@ -484,7 +523,14 @@ fn print_schedule(schedule: &gpulets::sched::Schedule, indent: &str) {
 /// print the schedule and the per-model report.
 fn serve(args: &[String]) -> Result<()> {
     let mut cfg = Config::default();
-    parse_flags(args, &mut cfg)?;
+    let mut flashcrowd = false;
+    parse_kv_flags(args, |flag, val| {
+        if flag == "--scenario" && val == "flashcrowd" {
+            flashcrowd = true;
+            return Ok(true);
+        }
+        apply_config_flag(&mut cfg, flag, val)
+    })?;
 
     let (scheduler, ctx) = scheduler_for(cfg.algo, cfg.num_gpus);
 
@@ -505,9 +551,18 @@ fn serve(args: &[String]) -> Result<()> {
     // The workload streams into the engine (one pending arrival per
     // model), so `--scale N` can push the offered load arbitrarily high
     // without ever materializing an arrival vector.
-    let (mux, n_streams) = poisson_mux(&cfg.rates, cfg.duration_s, cfg.seed)?;
+    let (mux, n_streams) = if flashcrowd {
+        flashcrowd_mux(&cfg.rates, cfg.duration_s, cfg.seed)?
+    } else {
+        poisson_mux(&cfg.rates, cfg.duration_s, cfg.seed)?
+    };
+    let kind = if flashcrowd {
+        "flash-crowd (3x burst mid-trace)"
+    } else {
+        "Poisson"
+    };
     println!(
-        "\nserving a streamed Poisson workload for {}s ({}; {n_streams} arrival streams)...",
+        "\nserving a streamed {kind} workload for {}s ({}; {n_streams} arrival streams)...",
         cfg.duration_s,
         cfg.share_mode.name()
     );
@@ -556,6 +611,10 @@ fn serve(args: &[String]) -> Result<()> {
 /// report the merged fleet metrics plus per-node breakdown.
 fn fleet(args: &[String]) -> Result<()> {
     let mut cfg = Config::default();
+    let mut flashcrowd = false;
+    let mut fault_seed: Option<u64> = None;
+    let mut fault_episodes = 1usize;
+    let mut faults_file: Option<String> = None;
     parse_kv_flags(args, |flag, val| match flag {
         "--nodes" => {
             cfg.fleet.nodes = parse_num::<usize>(flag, val, "an integer >= 1")?.max(1);
@@ -565,8 +624,47 @@ fn fleet(args: &[String]) -> Result<()> {
             cfg.fleet.rebalance_s = parse_num(flag, val, "seconds (0 disables)")?;
             Ok(true)
         }
+        "--admission" => {
+            cfg.admission.mode = AdmissionMode::parse(val)?;
+            Ok(true)
+        }
+        "--faults" => {
+            faults_file = Some(val.to_string());
+            Ok(true)
+        }
+        "--fault-seed" => {
+            fault_seed = Some(parse_num(flag, val, "an integer")?);
+            Ok(true)
+        }
+        "--fault-episodes" => {
+            fault_episodes = parse_num(flag, val, "an integer")?;
+            Ok(true)
+        }
+        "--scenario" if val == "flashcrowd" => {
+            flashcrowd = true;
+            Ok(true)
+        }
         _ => apply_config_flag(&mut cfg, flag, val),
     })?;
+    if let Some(path) = &faults_file {
+        let text = std::fs::read_to_string(path)?;
+        cfg.faults = FaultPlan::from_toml(&gpulets::util::tomlmini::TomlDoc::parse(&text)?)?;
+    } else if let Some(seed) = fault_seed {
+        cfg.faults =
+            FaultPlan::generate(seed, cfg.fleet.nodes, cfg.duration_s, fault_episodes)?;
+    }
+    // CLI `--admission degrade` without configured fallbacks degrades
+    // everything to the cheapest model rather than shedding it all.
+    if cfg.admission.mode == AdmissionMode::Degrade
+        && cfg.admission.fallback.iter().all(Option::is_none)
+    {
+        for m in ModelId::ALL {
+            if m != ModelId::Lenet {
+                cfg.admission.fallback[m.index()] = Some(ModelId::Lenet);
+            }
+        }
+        println!("(no [admission] fallbacks configured: degrading to lenet)");
+    }
 
     let spec = cfg.fleet;
     let (scheduler, ctx) = scheduler_for(spec.algo, spec.gpus_per_node);
@@ -593,16 +691,33 @@ fn fleet(args: &[String]) -> Result<()> {
         print_schedule(s, "  ");
     }
 
-    let (mux, _) = poisson_mux(&cfg.rates, cfg.duration_s, cfg.seed)?;
+    let (mux, _) = if flashcrowd {
+        flashcrowd_mux(&cfg.rates, cfg.duration_s, cfg.seed)?
+    } else {
+        poisson_mux(&cfg.rates, cfg.duration_s, cfg.seed)?
+    };
     let cadence = if spec.rebalance_s > 0.0 {
         format!("rebalance every {}s", spec.rebalance_s)
     } else {
         "rebalancing off".to_string()
     };
+    let kind = if flashcrowd { "flash-crowd" } else { "Poisson" };
     println!(
-        "\nrouting a streamed Poisson workload for {}s across {} nodes ({cadence})...",
-        cfg.duration_s, spec.nodes,
+        "\nrouting a streamed {kind} workload for {}s across {} nodes ({cadence}, \
+         admission {})...",
+        cfg.duration_s,
+        spec.nodes,
+        match cfg.admission.mode {
+            AdmissionMode::Off => "off",
+            AdmissionMode::Shed => "shed",
+            AdmissionMode::Degrade => "degrade",
+        },
     );
+    if !cfg.faults.is_empty() {
+        for e in cfg.faults.events() {
+            println!("  fault: node {} {:?} at {:.1}s", e.node, e.kind, e.at_s);
+        }
+    }
     // Serve/measure against the TRUE SLOs (the experiments' convention;
     // `ctx.lm` is the planner's SLO-tightened view).
     let lm = gpulets::perfmodel::LatencyModel::new();
@@ -622,6 +737,8 @@ fn fleet(args: &[String]) -> Result<()> {
         cfg.duration_s,
         &fleet_cfg,
     );
+    engine.set_admission(cfg.admission.clone());
+    engine.set_fault_plan(cfg.faults.clone())?;
     let t0 = std::time::Instant::now();
     engine.run(cfg.duration_s);
     let wall_s = t0.elapsed().as_secs_f64();
@@ -630,11 +747,16 @@ fn fleet(args: &[String]) -> Result<()> {
     println!("\n{}", out.report.table());
     println!(
         "fleet throughput {:.0} req/s, goodput {:.0} req/s, violations {:.2}%, \
-         {} rebalances",
+         {} rebalances, {} re-plan failures",
         out.report.throughput_rps(),
         out.report.goodput_rps(),
         out.report.overall_violation_rate() * 100.0,
         out.rebalances,
+        out.replan_failures,
+    );
+    println!(
+        "admitted SLO attainment {:.2}% (goodput over admitted traffic)",
+        out.report.admitted_slo_attainment() * 100.0
     );
     for (ni, r) in out.per_node.iter().enumerate() {
         let (served, dropped) = ModelId::ALL.iter().fold((0u64, 0u64), |acc, &m| {
@@ -645,14 +767,22 @@ fn fleet(args: &[String]) -> Result<()> {
             r.overall_violation_rate() * 100.0
         );
     }
+    let demand: u64 = out.demand.iter().sum();
     let offered: u64 = out.offered.iter().sum();
+    let shed: u64 = out.shed.iter().sum();
+    let lost: u64 = out.lost_to_failure().iter().sum();
     let (served, dropped) = out.served_dropped();
     let (served, dropped) =
         (served.iter().sum::<u64>(), dropped.iter().sum::<u64>());
     println!(
-        "requests: {offered} offered = {served} served + {dropped} dropped{}",
+        "requests: {demand} demand = {offered} dealt + {shed} shed; \
+         {offered} dealt = {served} served + {dropped} dropped + {lost} lost{}",
         if out.conserved() { " (conserved)" } else { " (LOST!)" }
     );
+    let degraded: u64 = out.degraded.iter().sum();
+    if degraded > 0 {
+        println!("  ({degraded} arrivals degraded to their fallback model)");
+    }
     let unplaced: u64 = out.unplaced.iter().sum();
     if unplaced > 0 {
         println!("  ({unplaced} arrivals had no fleet placement and were dropped counted)");

@@ -4,10 +4,11 @@
 use std::path::Path;
 
 use crate::error::Result;
-use crate::fleet::FleetSpec;
+use crate::fleet::{AdmissionMode, AdmissionSpec, FleetSpec};
 use crate::gpu::ShareMode;
 use crate::models::ModelId;
 use crate::util::tomlmini::TomlDoc;
+use crate::workload::FaultPlan;
 
 /// Which scheduling algorithm to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -96,6 +97,12 @@ pub struct Config {
     /// single-server settings: `gpus_per_node` = `gpu.count`, `algo` =
     /// `sched.algo`, `rebalance_s` = `sched.period_s`).
     pub fleet: FleetSpec,
+    /// Admission policy (`[admission]` section: `mode`, `headroom`,
+    /// `fallback.<model> = "<cheaper model>"`); default off.
+    pub admission: AdmissionSpec,
+    /// Scripted node faults (`[faults]` section,
+    /// `events = ["down@12.5:0", ...]`); default none.
+    pub faults: FaultPlan,
 }
 
 impl Default for Config {
@@ -111,6 +118,8 @@ impl Default for Config {
             reorg_s: 12.0,
             artifacts_dir: "artifacts".into(),
             fleet: FleetSpec::default(),
+            admission: AdmissionSpec::default(),
+            faults: FaultPlan::none(),
         }
     }
 }
@@ -149,6 +158,29 @@ impl Config {
             let m = ModelId::parse(name)?;
             cfg.rates[m.index()] = v.as_f64()?;
         }
+        cfg.admission.mode =
+            AdmissionMode::parse(&doc.str_or("admission.mode", "off")?)?;
+        cfg.admission.headroom = doc.f64_or("admission.headroom", cfg.admission.headroom)?;
+        if !(cfg.admission.headroom.is_finite()
+            && cfg.admission.headroom > 0.0
+            && cfg.admission.headroom <= 1.0)
+        {
+            return Err(crate::error::Error::parse(format!(
+                "admission.headroom must be in (0, 1], got {}",
+                cfg.admission.headroom
+            )));
+        }
+        for (name, v) in doc.keys_under("admission.fallback") {
+            let from = ModelId::parse(name)?;
+            let to = ModelId::parse(v.as_str()?)?;
+            if from == to {
+                return Err(crate::error::Error::parse(format!(
+                    "admission.fallback.{name} maps {from} to itself"
+                )));
+            }
+            cfg.admission.fallback[from.index()] = Some(to);
+        }
+        cfg.faults = FaultPlan::from_toml(&doc)?;
         Ok(cfg)
     }
 }
@@ -221,6 +253,38 @@ rebalance_s = 5.0
         // Degenerate node counts clamp to 1 instead of panicking later.
         let c = Config::parse("[fleet]\nnodes = 0\n").unwrap();
         assert_eq!(c.fleet.nodes, 1);
+    }
+
+    #[test]
+    fn admission_and_faults_sections_parse() {
+        // Absent sections: gate off, no faults.
+        let c = Config::parse("[gpu]\ncount = 4\n").unwrap();
+        assert_eq!(c.admission.mode, AdmissionMode::Off);
+        assert!(c.faults.is_empty());
+        let c = Config::parse(
+            r#"
+[admission]
+mode = "degrade"
+headroom = 0.8
+[admission.fallback]
+vgg = "lenet"
+resnet = "lenet"
+[faults]
+events = ["down@12.5:0", "up@30.0:0"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.admission.mode, AdmissionMode::Degrade);
+        assert_eq!(c.admission.headroom, 0.8);
+        assert_eq!(c.admission.fallback[ModelId::Vgg.index()], Some(ModelId::Lenet));
+        assert_eq!(c.admission.fallback[ModelId::Resnet.index()], Some(ModelId::Lenet));
+        assert_eq!(c.admission.fallback[ModelId::Lenet.index()], None);
+        assert_eq!(c.faults.events().len(), 2);
+        // Self-fallback, bad mode, and out-of-range headroom all error.
+        assert!(Config::parse("[admission.fallback]\nvgg = \"vgg\"\n").is_err());
+        assert!(Config::parse("[admission]\nmode = \"maybe\"\n").is_err());
+        assert!(Config::parse("[admission]\nheadroom = 1.5\n").is_err());
+        assert!(Config::parse("[admission]\nheadroom = 0.0\n").is_err());
     }
 
     #[test]

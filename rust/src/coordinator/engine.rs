@@ -639,6 +639,55 @@ impl<'a> ServingEngine<'a> {
         self.report
     }
 
+    /// Tear the node down as a *failure*: every request queued, in
+    /// flight, retired, or pending in the heap dies with the node and
+    /// is accounted as `lost_to_failure` — the conservation identity
+    /// becomes `offered == served + dropped + shed + lost_to_failure`.
+    /// Unlike [`ServingEngine::close`] the engine stays open: the empty
+    /// schedule is installed (arrivals routed here while down drop
+    /// *counted*, like any unroutable model), the clock does not move,
+    /// and a later `swap_schedule` re-admits the node with a real
+    /// schedule. The epoch bump makes pre-failure `Done` events
+    /// harmless: they find no retired entry and fall through.
+    pub fn fail(&mut self) {
+        debug_assert!(!self.closed, "fail after finish/close");
+        for li in 0..self.lets.len() {
+            let base = self.asg_base[li];
+            // In-flight batches die on the failed executor.
+            let inflight = std::mem::take(&mut self.lets[li].inflight);
+            for (ai, _id, _arr) in inflight {
+                let m = self.schedule.lets[li].assignments[ai].model;
+                self.report.model_mut(m, self.consts[base + ai].slo_ms).record_lost();
+            }
+            // Queued backlog: nothing survives to migrate.
+            for ai in 0..self.schedule.lets[li].assignments.len() {
+                let m = self.schedule.lets[li].assignments[ai].model;
+                let slo_ms = self.consts[base + ai].slo_ms;
+                while self.asgs[base + ai].queue.pop_front().is_some() {
+                    self.report.model_mut(m, slo_ms).record_lost();
+                }
+            }
+        }
+        // Pre-failure retired batches (from earlier swaps) die too.
+        let retired = std::mem::take(&mut self.retired);
+        for completions in retired.into_values() {
+            for (m, slo_ms, _id, _arr) in completions {
+                self.report.model_mut(m, slo_ms).record_lost();
+            }
+        }
+        // Bulk-injected arrivals still pending in the heap are destroyed
+        // with the node; `Done` events drain with them (their batches
+        // were accounted above). The clock must not move — the node
+        // keeps lockstepping with the fleet while down.
+        for (_, ev) in self.q.drain_events() {
+            if let Event::Arrive { model, .. } = ev {
+                self.report.model_mut(model, self.lm.slo_ms(model)).record_lost();
+            }
+        }
+        self.epoch += 1;
+        self.install_schedule(Schedule::default());
+    }
+
     // ---- internals -------------------------------------------------------
 
     /// Merged three-way peek: the earliest of (pending source arrival,

@@ -1,0 +1,376 @@
+//! Fault recovery under a flash crowd: kill 1 of 4 nodes mid-swell and
+//! compare admission policies (PR 9's robustness headline).
+//!
+//! The scenario composes the three new robustness pieces end to end: a
+//! [`FlashCrowdSpec`] drives an equal-mix workload from a comfortable
+//! quiet load (~60% of what the fleet can schedule) to a 3x peak the
+//! fleet *cannot* hold, a scripted [`FaultPlan`] takes one node down in
+//! the middle of the crowd's hold phase and recovers it two windows
+//! before the crowd subsides, and the same trace runs three times —
+//! admission `off` (admit everything, the pre-PR-9 behaviour), `shed`
+//! (refuse the slice the active plan cannot serve), and `degrade`
+//! (rewrite that slice to the cheapest model instead).
+//!
+//! The payload records, per mode, the full conservation ledger
+//! (`demand = offered + shed`, `offered = served + dropped + lost`),
+//! the re-plan failure count (the peak is deliberately infeasible, so
+//! failover re-planning *must* fall back to the stale plan and say so),
+//! the recovery time (node-down until the first post-recovery window
+//! back under 5% violations), and the headline metric: **SLO attainment
+//! of admitted traffic**, which shedding or degrading must raise over
+//! the admit-everything baseline — that ordering is what
+//! `BENCH_fault_recovery.json` tracks across PRs.
+
+use crate::config::Algo;
+use crate::fleet::{
+    AdmissionMode, AdmissionSpec, FleetConfig, FleetEngine, FleetOutcome, FleetPlanner,
+};
+use crate::interference::GroundTruth;
+use crate::models::ModelId;
+use crate::perfmodel::LatencyModel;
+use crate::sched::SchedCtx;
+use crate::util::json::{obj, Json};
+use crate::workload::{
+    dyn_sources, flashcrowd_streams, FaultEvent, FaultKind, FaultPlan, FlashCrowdSpec,
+    SourceMux,
+};
+
+use super::common::{max_schedulable, paper_ctx, Runnable, RunOutput};
+
+/// Fleet size; the fault kills one of these nodes.
+pub const NODES: usize = 4;
+
+/// Full-scale trace length (s); tests run a shorter slice.
+pub const DURATION_S: f64 = 240.0;
+
+/// Crowd peak as a multiple of the base rates: 3x of a 60%-utilized
+/// fleet is a 1.8x overload — infeasible by design, so the admission
+/// gate has real work even before the node dies.
+pub const PEAK_MULT: f64 = 3.0;
+
+/// Quiet-phase fraction of the fleet's maximum schedulable load.
+const BASE_UTIL: f64 = 0.6;
+
+/// Post-recovery "healthy again" threshold on the per-window violation
+/// rate of admitted traffic.
+const RECOVERY_VIOL: f64 = 0.05;
+
+/// Base (quiet-phase) rates: the equal-mix scenario scaled so NODES
+/// nodes sit at ~`BASE_UTIL` of their schedulable limit — derived from
+/// the scheduler itself rather than hard-coded, so the overload factor
+/// survives capacity-model changes.
+pub fn base_rates() -> [f64; 5] {
+    let ctx = paper_ctx(false);
+    let sched = Algo::Gpulet.scheduler();
+    let k = max_schedulable(&ctx, sched.as_ref(), &[50.0; 5]);
+    let mut base = [50.0; 5];
+    base.iter_mut().for_each(|r| *r *= k * BASE_UTIL * NODES as f64);
+    base
+}
+
+/// Crowd timeline as fractions of the run: quiet quarter, 1/8 ramp up,
+/// quarter hold at peak, 1/8 ramp down, quiet tail.
+fn crowd_spec(base: [f64; 5], duration_s: f64) -> FlashCrowdSpec {
+    FlashCrowdSpec {
+        base,
+        peak_mult: PEAK_MULT,
+        t_start_s: 0.25 * duration_s,
+        ramp_s: 0.125 * duration_s,
+        hold_s: 0.25 * duration_s,
+    }
+}
+
+/// The admission policy under test: `degrade` falls back to LeNet (the
+/// cheapest model) for every other model, mirroring the CLI default.
+fn admission_for(mode: AdmissionMode) -> AdmissionSpec {
+    let mut spec = AdmissionSpec { mode, ..AdmissionSpec::default() };
+    if mode == AdmissionMode::Degrade {
+        for m in ModelId::ALL {
+            if m != ModelId::Lenet {
+                spec.fallback[m.index()] = Some(ModelId::Lenet);
+            }
+        }
+    }
+    spec
+}
+
+pub fn mode_name(mode: AdmissionMode) -> &'static str {
+    match mode {
+        AdmissionMode::Off => "off",
+        AdmissionMode::Shed => "shed",
+        AdmissionMode::Degrade => "degrade",
+    }
+}
+
+/// One admission mode's run over the identical trace and fault script.
+pub struct ModeRun {
+    pub mode: AdmissionMode,
+    /// When the node died (s).
+    pub t_down_s: f64,
+    /// When it recovered (s).
+    pub t_up_s: f64,
+    pub outcome: FleetOutcome,
+    pub wall_s: f64,
+}
+
+impl ModeRun {
+    /// Time from the node's death until the first whole post-recovery
+    /// window back under [`RECOVERY_VIOL`] violations; negative when the
+    /// run never got healthy again before the trace ended.
+    pub fn recovery_s(&self) -> f64 {
+        for w in &self.outcome.windows {
+            if w.t_start_s >= self.t_up_s && w.violation_rate <= RECOVERY_VIOL {
+                return w.t_start_s + w.window_s - self.t_down_s;
+            }
+        }
+        -1.0
+    }
+
+    pub fn attainment(&self) -> f64 {
+        self.outcome.report.admitted_slo_attainment()
+    }
+}
+
+/// Run the kill-1-of-NODES flash-crowd trace under one admission mode.
+/// The fault script is a pure function of the duration: down at 45% of
+/// the run (mid-hold), up at 65% (two 10 s windows before the crowd
+/// fully subsides at full scale).
+pub fn compute(
+    mode: AdmissionMode,
+    duration_s: f64,
+    seed: u64,
+) -> crate::error::Result<ModeRun> {
+    let base = base_rates();
+    let spec = crowd_spec(base, duration_s);
+    let scheduler = Algo::Gpulet.scheduler();
+    let ctx = SchedCtx::new(4, None);
+    let planner = FleetPlanner::new(&ctx, scheduler.as_ref(), NODES);
+    let plan = planner.plan(&base)?;
+    let streams = flashcrowd_streams(&spec, duration_s, 1.0, seed)?;
+    let lm = LatencyModel::new();
+    let gt = GroundTruth::default();
+    let mut cfg = FleetConfig::default();
+    // 10 s windows: the gate re-aims and the failover re-plans twice as
+    // often as the default 20 s cadence — recovery time is measured in
+    // these windows.
+    cfg.window_s = 10.0;
+    let mut engine = FleetEngine::new(
+        &lm,
+        &gt,
+        planner,
+        plan,
+        SourceMux::new(dyn_sources(streams)),
+        duration_s,
+        &cfg,
+    );
+    let t_down_s = 0.45 * duration_s;
+    let t_up_s = 0.65 * duration_s;
+    engine.set_fault_plan(FaultPlan::new(vec![
+        FaultEvent { at_s: t_down_s, node: NODES - 1, kind: FaultKind::Down },
+        FaultEvent { at_s: t_up_s, node: NODES - 1, kind: FaultKind::Up },
+    ])?)?;
+    engine.set_admission(admission_for(mode));
+    let t0 = std::time::Instant::now();
+    engine.run(duration_s);
+    let outcome = engine.finish();
+    Ok(ModeRun { mode, t_down_s, t_up_s, outcome, wall_s: t0.elapsed().as_secs_f64() })
+}
+
+/// All three admission arms over the identical trace + fault script.
+pub fn matrix(duration_s: f64, seed: u64) -> Vec<ModeRun> {
+    [AdmissionMode::Off, AdmissionMode::Shed, AdmissionMode::Degrade]
+        .into_iter()
+        .map(|mode| {
+            compute(mode, duration_s, seed)
+                .expect("fault_recovery base rates are plannable")
+        })
+        .collect()
+}
+
+pub fn render(runs: &[ModeRun]) -> String {
+    let mut s = String::from(
+        "# fault_recovery: 4-node fleet, flash crowd to 1.8x capacity,\n\
+         # node 3 down at 45% / up at 65% of the run — per admission mode\n\
+         mode       demand  offered     shed degraded   served  dropped     lost \
+         replans  attain%  recover_s\n",
+    );
+    for r in runs {
+        let (served, dropped) = r.outcome.served_dropped();
+        s.push_str(&format!(
+            "{:<8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>7} {:>8.2} {:>10.1}\n",
+            mode_name(r.mode),
+            r.outcome.demand.iter().sum::<u64>(),
+            r.outcome.offered.iter().sum::<u64>(),
+            r.outcome.shed.iter().sum::<u64>(),
+            r.outcome.degraded.iter().sum::<u64>(),
+            served.iter().sum::<u64>(),
+            dropped.iter().sum::<u64>(),
+            r.outcome.lost_to_failure().iter().sum::<u64>(),
+            r.outcome.replan_failures,
+            r.attainment() * 100.0,
+            r.recovery_s(),
+        ));
+    }
+    s
+}
+
+pub fn run() -> String {
+    render(&matrix(DURATION_S, 2024))
+}
+
+fn mode_json(r: &ModeRun) -> Json {
+    let (served, dropped) = r.outcome.served_dropped();
+    obj(vec![
+        ("mode", Json::Str(mode_name(r.mode).into())),
+        ("demand", Json::Num(r.outcome.demand.iter().sum::<u64>() as f64)),
+        ("offered", Json::Num(r.outcome.offered.iter().sum::<u64>() as f64)),
+        ("shed", Json::Num(r.outcome.shed.iter().sum::<u64>() as f64)),
+        ("degraded", Json::Num(r.outcome.degraded.iter().sum::<u64>() as f64)),
+        ("served", Json::Num(served.iter().sum::<u64>() as f64)),
+        ("dropped", Json::Num(dropped.iter().sum::<u64>() as f64)),
+        (
+            "lost_to_failure",
+            Json::Num(r.outcome.lost_to_failure().iter().sum::<u64>() as f64),
+        ),
+        ("rebalances", Json::Num(r.outcome.rebalances as f64)),
+        ("replan_failures", Json::Num(r.outcome.replan_failures as f64)),
+        ("conserved", Json::Bool(r.outcome.conserved())),
+        (
+            "violation_share",
+            Json::Num(r.outcome.report.overall_violation_rate()),
+        ),
+        ("admitted_slo_attainment", Json::Num(r.attainment())),
+        ("t_down_s", Json::Num(r.t_down_s)),
+        ("t_up_s", Json::Num(r.t_up_s)),
+        ("recovery_s", Json::Num(r.recovery_s())),
+        ("wall_s", Json::Num(r.wall_s)),
+    ])
+}
+
+/// Text + JSON for the CLI / bench harness.
+pub fn report() -> RunOutput {
+    let runs = matrix(DURATION_S, 2024);
+    let attain_of = |m: AdmissionMode| {
+        runs.iter().find(|r| r.mode == m).map_or(0.0, ModeRun::attainment)
+    };
+    let off = attain_of(AdmissionMode::Off);
+    let shed = attain_of(AdmissionMode::Shed);
+    let degrade = attain_of(AdmissionMode::Degrade);
+    RunOutput {
+        text: render(&runs),
+        payload: obj(vec![
+            ("figure", Json::Str("fault_recovery".into())),
+            ("nodes", Json::Num(NODES as f64)),
+            ("duration_s", Json::Num(DURATION_S)),
+            ("peak_mult", Json::Num(PEAK_MULT)),
+            ("attainment_off", Json::Num(off)),
+            ("attainment_shed", Json::Num(shed)),
+            ("attainment_degrade", Json::Num(degrade)),
+            ("shed_minus_off", Json::Num(shed - off)),
+            ("degrade_minus_off", Json::Num(degrade - off)),
+            ("modes", Json::Arr(runs.iter().map(mode_json).collect())),
+        ]),
+    }
+}
+
+/// Fault recovery as a CLI/bench-drivable experiment.
+pub struct Experiment;
+
+impl Runnable for Experiment {
+    fn name(&self) -> &'static str {
+        "fault_recovery"
+    }
+    fn title(&self) -> &'static str {
+        "kill 1 of 4 nodes mid-flash-crowd; admission off vs shed vs degrade"
+    }
+    fn bench_file(&self) -> &'static str {
+        "BENCH_fault_recovery.json"
+    }
+    fn run(&self) -> RunOutput {
+        report()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A 120 s slice keeps the test quick; the 240 s ladder is the
+    /// bench / CLI target. Admission off must visibly suffer (drops +
+    /// losses) and shedding must beat it on admitted SLO attainment —
+    /// the experiment's headline claim.
+    #[test]
+    fn crowd_plus_fault_overload_and_shedding_raises_attainment() {
+        let off = compute(AdmissionMode::Off, 120.0, 7).unwrap();
+        let shed = compute(AdmissionMode::Shed, 120.0, 7).unwrap();
+        assert!(off.outcome.conserved(), "off-mode ledger must balance");
+        assert!(shed.outcome.conserved(), "shed-mode ledger must balance");
+        // The scenario is a genuine overload + fault: the baseline
+        // drops work, and the dead node destroys in-flight work.
+        let (_, dropped) = off.outcome.served_dropped();
+        assert!(dropped.iter().sum::<u64>() > 0, "1.8x peak must force drops");
+        assert!(
+            off.outcome.lost_to_failure().iter().sum::<u64>() > 0,
+            "node death must lose queued/in-flight work"
+        );
+        assert_eq!(off.outcome.shed, [0u64; 5], "gate off must never shed");
+        // The gate actually engaged, and admitted traffic fared better.
+        assert!(
+            shed.outcome.shed.iter().sum::<u64>() > 0,
+            "shed gate must refuse part of the 1.8x peak"
+        );
+        assert!(
+            shed.attainment() > off.attainment(),
+            "shedding must raise admitted SLO attainment: {} vs {}",
+            shed.attainment(),
+            off.attainment()
+        );
+        // Determinism: same mode, same seed, same ledger.
+        let again = compute(AdmissionMode::Off, 120.0, 7).unwrap();
+        assert_eq!(off.outcome.demand, again.outcome.demand);
+        assert_eq!(off.outcome.offered, again.outcome.offered);
+        assert_eq!(
+            off.outcome.report.to_json().to_string(),
+            again.outcome.report.to_json().to_string()
+        );
+    }
+
+    #[test]
+    fn degrade_mode_rewrites_and_beats_the_baseline() {
+        let off = compute(AdmissionMode::Off, 120.0, 7).unwrap();
+        let deg = compute(AdmissionMode::Degrade, 120.0, 7).unwrap();
+        assert!(deg.outcome.conserved(), "degrade-mode ledger must balance");
+        assert!(
+            deg.outcome.degraded.iter().sum::<u64>() > 0,
+            "overload must trigger fallback rewrites"
+        );
+        // LeNet is the fallback, never degraded itself.
+        assert_eq!(deg.outcome.degraded[ModelId::Lenet.index()], 0);
+        assert!(
+            deg.attainment() > off.attainment(),
+            "degrading must raise admitted SLO attainment: {} vs {}",
+            deg.attainment(),
+            off.attainment()
+        );
+    }
+
+    #[test]
+    fn recovery_is_observed_after_the_node_returns() {
+        let shed = compute(AdmissionMode::Shed, 120.0, 7).unwrap();
+        // Service continued after the node's return: post-recovery
+        // windows still deal traffic.
+        let post: u64 = shed
+            .outcome
+            .windows
+            .iter()
+            .filter(|w| w.t_start_s >= shed.t_up_s)
+            .map(|w| w.offered.iter().sum::<u64>())
+            .sum();
+        assert!(post > 0, "no traffic dealt after the node recovered");
+        let rec = shed.recovery_s();
+        assert!(
+            rec < 0.0 || rec >= shed.t_up_s - shed.t_down_s,
+            "recovery cannot precede the node's return: {rec}"
+        );
+    }
+}

@@ -7,6 +7,7 @@
 //! [`common::Runnable`] trait + [`registry`] list what can be driven.
 
 pub mod common;
+pub mod fault_recovery;
 pub mod fig03;
 pub mod fig04;
 pub mod fig05;
@@ -39,6 +40,7 @@ pub fn registry() -> Vec<Box<dyn Runnable>> {
         Box::new(fig16::Experiment),
         Box::new(fleet_scale::Experiment),
         Box::new(spacetime::Experiment),
+        Box::new(fault_recovery::Experiment),
     ]
 }
 
@@ -65,15 +67,15 @@ mod tests {
     #[test]
     fn registry_names_and_files_are_unique() {
         let reg = registry();
-        assert_eq!(reg.len(), 12);
+        assert_eq!(reg.len(), 13);
         let mut names: Vec<&str> = reg.iter().map(|e| e.name()).collect();
         let mut files: Vec<&str> = reg.iter().map(|e| e.bench_file()).collect();
         names.sort_unstable();
         names.dedup();
         files.sort_unstable();
         files.dedup();
-        assert_eq!(names.len(), 12);
-        assert_eq!(files.len(), 12);
+        assert_eq!(names.len(), 13);
+        assert_eq!(files.len(), 13);
         assert!(files.iter().all(|f| f.starts_with("BENCH_") && f.ends_with(".json")));
     }
 
@@ -83,6 +85,7 @@ mod tests {
         assert_eq!(find("fig3").unwrap().name(), "fig03");
         assert_eq!(find("fig03").unwrap().name(), "fig03");
         assert_eq!(find("fleet_scale").unwrap().name(), "fleet_scale");
+        assert_eq!(find("fault_recovery").unwrap().name(), "fault_recovery");
         assert!(find("fig07").is_none());
         assert!(find("bogus").is_none());
     }

@@ -35,15 +35,48 @@
 //! PR 3 hand-over semantics, now fleet-wide. The router re-targets its
 //! quota counters to the new shares in the same instant. An infeasible
 //! re-plan (the observed load outgrew the fleet) keeps the current
-//! plan serving — rebalancing degrades, never destroys.
+//! plan serving — rebalancing degrades, never destroys — and is
+//! *counted* in [`FleetEngine::replan_failures`] with a log line, so a
+//! fleet silently limping on a stale plan is observable.
+//!
+//! ## Faults
+//!
+//! A [`FaultPlan`] scripts node failures and recoveries. `run`
+//! consumes it at window boundaries (an event at time `t` fires at the
+//! first boundary `>= t`, so fault timing is a pure function of the
+//! plan and the window grid — thread-count independent). `NodeDown`
+//! destroys the node's backlog and in-flight work
+//! ([`ServingEngine::fail`], every request accounted as
+//! `lost_to_failure`), marks it dead in the router, and re-plans the
+//! survivors via [`FleetPlanner::plan_masked`]; `NodeUp` re-admits the
+//! node and re-plans the full fleet. Either re-plan may be infeasible;
+//! the fleet then keeps the stale plan (dead nodes still take no new
+//! arrivals — the router's liveness mask zeroes their weights) and
+//! counts the failure.
+//!
+//! ## Admission
+//!
+//! An optional [`AdmissionSpec`] arms the router's front-end gate.
+//! Each window boundary re-aims it: the EWMA-observed *demand* rate
+//! per model (counted pre-gate, so shedding cannot hide the overload
+//! it is shedding) is compared with the active plan's schedulable
+//! capacity (`FleetPlan::total_share`), and the admitted fraction is
+//! set to keep admitted load inside `capacity * headroom`. Over-quota
+//! arrivals shed (counted) or degrade to a configured cheaper model.
 //!
 //! ## Conservation
 //!
-//! Every arrival the router deals is offered to exactly one node, and
-//! each node's engine accounts every offered request as served or
-//! dropped (including across swaps and at close). So fleet-wide,
-//! `offered[m] == served[m] + dropped[m]` exactly, for any node count
-//! and any rebalance history — `tests/fleet_equivalence.rs` pins it.
+//! Every arrival pulled from the source is either shed at the gate
+//! (counted per original model) or dealt to exactly one node, and each
+//! node's engine accounts every dealt request as served, dropped, or —
+//! when the node fails — lost (including across swaps and at close).
+//! So fleet-wide, `demand[m] == offered[m] + shed[m]` and
+//! `offered[m] == served[m] + dropped[m] + lost_to_failure[m]`
+//! exactly, for any node count, any rebalance history, and any fault
+//! script — `tests/fleet_equivalence.rs` pins it. (Degraded arrivals
+//! are offered under their fallback model, so the per-model demand
+//! split holds whenever degrade is off; the aggregate identity holds
+//! always.)
 
 use crate::coordinator::reorganizer::{headroomed, rates_changed};
 use crate::coordinator::{ServingEngine, SimConfig, SwapMode};
@@ -54,10 +87,10 @@ use crate::models::ModelId;
 use crate::perfmodel::{LatencyModel, RateMonitor};
 use crate::simclock::{ms_to_us, SimTimeUs};
 use crate::util::par;
-use crate::workload::{Arrival, DynSourceMux};
+use crate::workload::{Arrival, DynSourceMux, FaultKind, FaultPlan};
 
 use super::planner::{FleetPlan, FleetPlanner};
-use super::router::Router;
+use super::router::{AdmissionSpec, Router};
 
 /// Fleet run configuration (the per-node engines share `sim`).
 #[derive(Clone, Debug)]
@@ -92,8 +125,14 @@ impl Default for FleetConfig {
 pub struct FleetWindowStats {
     pub t_start_s: f64,
     pub window_s: f64,
-    /// Requests the router dealt this window, per model.
+    /// Requests the router dealt (post-gate) this window, per model.
     pub offered: [u64; 5],
+    /// Requests pulled from the source this window per *original*
+    /// model, admitted or not (`offered` + shed, modulo degrades).
+    pub demand: [u64; 5],
+    /// Requests the admission gate refused this window, per original
+    /// model.
+    pub shed: [u64; 5],
     /// Windowed delta report per node.
     pub per_node: Vec<WindowReport>,
     /// Fleet-wide SLO violation rate (drops included) this window.
@@ -113,12 +152,25 @@ pub struct FleetOutcome {
     pub per_node: Vec<Report>,
     /// Per-window telemetry from [`FleetEngine::run`].
     pub windows: Vec<FleetWindowStats>,
-    /// Requests the router offered per model (== served + dropped).
+    /// Requests the router dealt (post-gate) per model
+    /// (== served + dropped + lost_to_failure).
     pub offered: [u64; 5],
+    /// Requests pulled from the source per *original* model, admitted
+    /// or not (Σ demand == Σ offered + Σ shed).
+    pub demand: [u64; 5],
+    /// Requests the admission gate refused, per original model.
+    pub shed: [u64; 5],
+    /// Requests rewritten to their fallback model, per original model
+    /// (diagnostic — served/dropped accounting lives under the
+    /// fallback).
+    pub degraded: [u64; 5],
     /// Offered requests for models that had no placement when dealt.
     pub unplaced: [u64; 5],
     /// Rebalances applied.
     pub rebalances: u64,
+    /// Re-plans (auto-rebalance or failover) that found no feasible
+    /// placement and left the previous plan serving.
+    pub replan_failures: u64,
     /// Events processed across all node engines.
     pub events_processed: u64,
     /// Sum of per-node peak live-event counts (each node is O(active)).
@@ -142,18 +194,47 @@ impl FleetOutcome {
         (served, dropped)
     }
 
-    /// Exact conservation check: offered == served + dropped, per model.
+    /// Fleet-wide lost-to-failure totals per model.
+    pub fn lost_to_failure(&self) -> [u64; 5] {
+        let mut lost = [0u64; 5];
+        for m in ModelId::ALL {
+            if let Some(mm) = self.report.model(m) {
+                lost[m.index()] = mm.lost_to_failure;
+            }
+        }
+        lost
+    }
+
+    /// Exact conservation check, per model:
+    /// `offered == served + dropped + lost_to_failure` (every dealt
+    /// request is accounted by its node) and, at the gate,
+    /// `Σ demand == Σ offered + Σ shed` (every pulled request is shed
+    /// or dealt). When nothing was degraded the gate identity holds
+    /// per model too; a degraded request is demanded under its
+    /// original model but offered under its fallback.
     pub fn conserved(&self) -> bool {
         let (served, dropped) = self.served_dropped();
-        ModelId::ALL
-            .iter()
-            .all(|&m| self.offered[m.index()] == served[m.index()] + dropped[m.index()])
+        let lost = self.lost_to_failure();
+        let dealt_ok = ModelId::ALL.iter().all(|&m| {
+            let i = m.index();
+            self.offered[i] == served[i] + dropped[i] + lost[i]
+        });
+        let demand_total: u64 = self.demand.iter().sum();
+        let gate_ok =
+            demand_total == self.offered.iter().sum::<u64>() + self.shed.iter().sum::<u64>();
+        let per_model_gate_ok = self.degraded != [0u64; 5]
+            || ModelId::ALL.iter().all(|&m| {
+                let i = m.index();
+                self.demand[i] == self.offered[i] + self.shed[i]
+            });
+        dealt_ok && gate_ok && per_model_gate_ok
     }
 }
 
 /// N single-server engines behind one deterministic router. See the
 /// module docs for the lockstep and rebalance semantics.
 pub struct FleetEngine<'a> {
+    lm: &'a LatencyModel,
     planner: FleetPlanner<'a>,
     plan: FleetPlan,
     nodes: Vec<ServingEngine<'a>>,
@@ -164,11 +245,19 @@ pub struct FleetEngine<'a> {
     spares: Vec<Vec<Arrival>>,
     cfg: FleetConfig,
     monitor: RateMonitor,
-    /// Rates the current plan was made for (rebalance baseline).
+    /// Rates the current plan was made for (rebalance baseline, and
+    /// the demand estimate failover re-plans place for).
     last_planned: [f64; 5],
     prev_counts: Vec<CounterSnapshot>,
     windows: Vec<FleetWindowStats>,
     rebalances: u64,
+    /// Scripted faults, consumed in order at window boundaries.
+    faults: FaultPlan,
+    fault_pos: usize,
+    /// Node liveness (mirrors the router's mask; the planner masks
+    /// placements by it).
+    alive: Vec<bool>,
+    replan_failures: u64,
 }
 
 impl<'a> FleetEngine<'a> {
@@ -204,6 +293,7 @@ impl<'a> FleetEngine<'a> {
             last_planned[m.index()] = plan.total_share(m);
         }
         FleetEngine {
+            lm,
             planner,
             plan,
             nodes,
@@ -215,7 +305,37 @@ impl<'a> FleetEngine<'a> {
             prev_counts: vec![CounterSnapshot::default(); n],
             windows: Vec::new(),
             rebalances: 0,
+            faults: FaultPlan::none(),
+            fault_pos: 0,
+            alive: vec![true; n],
+            replan_failures: 0,
         }
+    }
+
+    /// Arm a scripted fault plan, consumed by [`run`] at window
+    /// boundaries (an event at `t` fires at the first boundary
+    /// `>= t`). Errors if the plan references a node the fleet does
+    /// not have.
+    ///
+    /// [`run`]: FleetEngine::run
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) -> Result<()> {
+        if let Some(max) = plan.max_node() {
+            if max >= self.nodes.len() {
+                return Err(crate::error::Error::Other(format!(
+                    "fault plan references node {max}, fleet has {}",
+                    self.nodes.len()
+                )));
+            }
+        }
+        self.faults = plan;
+        self.fault_pos = 0;
+        Ok(())
+    }
+
+    /// Arm the router's admission gate (default off). The gate is
+    /// re-aimed from observed demand at every window boundary.
+    pub fn set_admission(&mut self, spec: AdmissionSpec) {
+        self.router.set_admission(spec);
     }
 
     /// Deal every arrival with time `<= t_us` and advance every node to
@@ -249,15 +369,65 @@ impl<'a> FleetEngine<'a> {
     /// lost) and the router re-targets its quota counters to the new
     /// shares. An infeasible re-plan leaves the fleet untouched.
     pub fn rebalance(&mut self, rates: &[f64; 5]) -> Result<()> {
-        let next = self.planner.plan(rates)?;
+        let next = self.planner.plan_masked(rates, &self.alive)?;
+        self.install_plan(next);
+        self.last_planned = *rates;
+        self.rebalances += 1;
+        Ok(())
+    }
+
+    /// Swap every node to `next` (Migrate semantics) and re-target the
+    /// router in the same instant.
+    fn install_plan(&mut self, next: FleetPlan) {
         for (eng, s) in self.nodes.iter_mut().zip(next.schedules.iter()) {
             eng.swap_schedule(s.clone(), SwapMode::Migrate);
         }
         self.router.retarget(&next.node_rates);
         self.plan = next;
-        self.last_planned = *rates;
-        self.rebalances += 1;
-        Ok(())
+    }
+
+    /// Fire every scripted fault with `at_s <= t_s`, in plan order.
+    /// Down: destroy the node's work (counted as lost), mask it out of
+    /// routing, and re-plan the survivors for the demand the current
+    /// plan was made for. Up: unmask and re-plan the full fleet. A
+    /// failed re-plan keeps the stale plan serving (the dead node
+    /// still takes no new arrivals) and is counted + logged.
+    fn apply_faults(&mut self, t_s: f64) {
+        while self.fault_pos < self.faults.events().len()
+            && self.faults.events()[self.fault_pos].at_s <= t_s
+        {
+            let ev = self.faults.events()[self.fault_pos];
+            self.fault_pos += 1;
+            match ev.kind {
+                FaultKind::Down => {
+                    if !self.alive[ev.node] {
+                        continue; // already down — nothing to destroy
+                    }
+                    self.nodes[ev.node].fail();
+                    self.alive[ev.node] = false;
+                    self.router.set_alive(ev.node, false);
+                }
+                FaultKind::Up => {
+                    if self.alive[ev.node] {
+                        continue;
+                    }
+                    self.alive[ev.node] = true;
+                    self.router.set_alive(ev.node, true);
+                }
+            }
+            let target = self.last_planned;
+            match self.planner.plan_masked(&target, &self.alive) {
+                Ok(next) => self.install_plan(next),
+                Err(e) => {
+                    self.replan_failures += 1;
+                    eprintln!(
+                        "fleet: node {} {:?} at {:.1}s — re-plan infeasible, keeping \
+                         current plan: {e}",
+                        ev.node, ev.kind, ev.at_s
+                    );
+                }
+            }
+        }
     }
 
     /// Serve `duration_s` of the source in telemetry windows, auto-
@@ -271,6 +441,10 @@ impl<'a> FleetEngine<'a> {
         while t_ms < end_ms {
             let t_end_ms = (t_ms + window_ms).min(end_ms);
             self.run_until(ms_to_us(t_end_ms));
+            // Scripted faults fire at the first boundary at/after their
+            // time — before the window's telemetry, so the lost counts
+            // land in the window that ends at the fault.
+            self.apply_faults(t_end_ms / 1000.0);
             let final_window = t_end_ms >= end_ms;
             self.note_window(t_ms / 1000.0, (t_end_ms - t_ms) / 1000.0, !final_window);
             t_ms = t_end_ms;
@@ -313,13 +487,28 @@ impl<'a> FleetEngine<'a> {
         for r in &per_node {
             report.merge(r);
         }
+        // Shed requests never reached a node, so no engine counted
+        // them — fold the router's gate counts into the merged report
+        // here, under each original model's SLO, so the fleet report's
+        // own conservation (`total == served + dropped + shed + lost`)
+        // closes.
+        let shed = self.router.shed_per_model();
+        for m in ModelId::ALL {
+            if shed[m.index()] > 0 {
+                report.model_mut(m, self.lm.slo_ms(m)).shed += shed[m.index()];
+            }
+        }
         FleetOutcome {
             report,
             per_node,
             windows: self.windows,
             offered: self.router.offered_per_model(),
+            demand: self.router.demand_per_model(),
+            shed,
+            degraded: self.router.degraded_per_model(),
             unplaced: self.router.unplaced_per_model(),
             rebalances: self.rebalances,
+            replan_failures: self.replan_failures,
             events_processed: events,
             peak_live_events: peak,
             peak_routed: self.router.peak_buffered(),
@@ -334,6 +523,17 @@ impl<'a> FleetEngine<'a> {
     /// Rebalances applied so far.
     pub fn rebalances(&self) -> u64 {
         self.rebalances
+    }
+
+    /// Re-plans (auto-rebalance or failover) that found no feasible
+    /// placement so far.
+    pub fn replan_failures(&self) -> u64 {
+        self.replan_failures
+    }
+
+    /// Per-node liveness under the armed fault plan.
+    pub fn alive(&self) -> &[bool] {
+        &self.alive
     }
 
     /// Router-side offered counts so far, per model.
@@ -351,8 +551,14 @@ impl<'a> FleetEngine<'a> {
     /// rebalance from the smoothed observed rates.
     fn note_window(&mut self, t_start_s: f64, window_s: f64, may_rebalance: bool) {
         let offered = self.router.take_window_dealt();
+        let demand = self.router.take_window_demand();
+        let shed = self.router.take_window_shed();
+        // The monitor sees pre-gate demand: the planner and the
+        // admission gate must aim at what users ask for, not at what
+        // the gate already let through. With admission off the demand
+        // and dealt windows are the same counts.
         for m in ModelId::ALL {
-            self.monitor.observe(m, offered[m.index()]);
+            self.monitor.observe(m, demand[m.index()]);
         }
         self.monitor.tick(window_s.max(1e-9));
         let mut per_node = Vec::with_capacity(self.nodes.len());
@@ -371,26 +577,52 @@ impl<'a> FleetEngine<'a> {
             .sum::<u64>();
         let violation_rate = if total == 0 { 0.0 } else { bad_total as f64 / total as f64 };
 
-        let mut rebalanced = false;
-        if may_rebalance && self.cfg.rebalance {
-            let mut observed = [0.0; 5];
-            for m in ModelId::ALL {
-                observed[m.index()] = self.monitor.rate(m);
-            }
-            if rates_changed(&observed, &self.last_planned, self.cfg.change_threshold) {
-                // Plan with prediction headroom, like one node's
-                // reorganizer; baseline moves even when the re-plan is
-                // infeasible so a hopeless load doesn't re-plan every
-                // window.
-                let target = headroomed(&observed);
-                rebalanced = self.rebalance(&target).is_ok();
-                self.last_planned = observed;
-            }
+        let mut observed = [0.0; 5];
+        for m in ModelId::ALL {
+            observed[m.index()] = self.monitor.rate(m);
         }
+        let mut rebalanced = false;
+        if may_rebalance
+            && self.cfg.rebalance
+            && rates_changed(&observed, &self.last_planned, self.cfg.change_threshold)
+        {
+            // Plan with prediction headroom, like one node's
+            // reorganizer; baseline moves even when the re-plan is
+            // infeasible so a hopeless load doesn't re-plan every
+            // window.
+            let target = headroomed(&observed);
+            match self.rebalance(&target) {
+                Ok(()) => rebalanced = true,
+                Err(e) => {
+                    // The observed load outgrew the fleet: keep the
+                    // stale plan serving, but never silently — count
+                    // it and say so.
+                    self.replan_failures += 1;
+                    eprintln!(
+                        "fleet: re-plan at {:.1}s infeasible, keeping current \
+                         plan: {e}",
+                        t_start_s + window_s
+                    );
+                }
+            }
+            // The baseline tracks the *observed* rates either way, so
+            // a hopeless load doesn't re-plan every window.
+            self.last_planned = observed;
+        }
+        // Re-aim the admission gate every window from smoothed demand
+        // vs what the (possibly just-swapped) plan can schedule. A
+        // no-op with admission off.
+        let mut capacity = [0.0; 5];
+        for m in ModelId::ALL {
+            capacity[m.index()] = self.plan.total_share(m);
+        }
+        self.router.update_admission(&observed, &capacity);
         self.windows.push(FleetWindowStats {
             t_start_s,
             window_s,
             offered,
+            demand,
+            shed,
             per_node,
             violation_rate,
             rebalanced,
@@ -501,6 +733,135 @@ mod tests {
         let vgg = out.report.model(ModelId::Vgg).unwrap();
         assert!(vgg.dropped > 0, "pre-rebalance VGG must drop counted");
         assert!(vgg.served > 0, "post-rebalance VGG must be served");
+    }
+
+    #[test]
+    fn node_failure_loses_counted_and_recovery_restores_service() {
+        use crate::workload::FaultEvent;
+        let ctx = SchedCtx::new(4, None);
+        let sched = ElasticPartitioning::gpulet();
+        let lm = LatencyModel::new();
+        let gt = GroundTruth::default();
+        let planner = FleetPlanner::new(&ctx, &sched, 2);
+        // Light load: one survivor can hold it, so the failover re-plan
+        // succeeds and nothing is shed.
+        let rates = [120.0, 0.0, 0.0, 0.0, 40.0];
+        let plan = planner.plan(&rates).unwrap();
+        let duration = 8.0;
+        let cfg = FleetConfig { window_s: 1.0, rebalance: false, ..Default::default() };
+        let pairs = [(ModelId::Lenet, 120.0), (ModelId::Vgg, 40.0)];
+        let mut fleet = FleetEngine::new(
+            &lm,
+            &gt,
+            planner,
+            plan,
+            mux_for(&pairs, duration, 11),
+            duration,
+            &cfg,
+        );
+        fleet
+            .set_fault_plan(
+                crate::workload::FaultPlan::new(vec![
+                    FaultEvent { at_s: 2.0, node: 0, kind: FaultKind::Down },
+                    FaultEvent { at_s: 5.0, node: 0, kind: FaultKind::Up },
+                ])
+                .unwrap(),
+            )
+            .unwrap();
+        fleet.run(duration);
+        assert_eq!(fleet.replan_failures(), 0, "survivor can hold this load");
+        assert_eq!(fleet.alive(), &[true, true], "node 0 must be back up");
+        let out = fleet.finish();
+        assert!(out.conserved(), "conservation must survive down->up->re-plan");
+        let lost: u64 = out.lost_to_failure().iter().sum();
+        assert!(lost > 0, "the killed node had work to lose");
+        assert_eq!(out.shed, [0; 5]);
+        // Node 0 served again after recovery: its whole-run served
+        // count exceeds what it could have amassed before the 2 s kill
+        // alone is not provable cheaply, but the fleet as a whole kept
+        // serving and node 0's report shows service.
+        let n0: u64 = ModelId::ALL
+            .iter()
+            .map(|&m| out.per_node[0].model(m).map_or(0, |mm| mm.served))
+            .sum();
+        assert!(n0 > 0, "recovered node must have served");
+        // An out-of-range fault plan is rejected up front.
+        let mut fleet2 = FleetEngine::new(
+            &lm,
+            &gt,
+            FleetPlanner::new(&ctx, &sched, 2),
+            FleetPlanner::new(&ctx, &sched, 2).plan(&rates).unwrap(),
+            mux_for(&pairs, 1.0, 11),
+            1.0,
+            &cfg,
+        );
+        assert!(fleet2
+            .set_fault_plan(
+                crate::workload::FaultPlan::new(vec![FaultEvent {
+                    at_s: 0.5,
+                    node: 7,
+                    kind: FaultKind::Down,
+                }])
+                .unwrap(),
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn infeasible_failover_counts_replan_failure_and_conserves() {
+        use crate::workload::FaultEvent;
+        let ctx = SchedCtx::new(4, None);
+        let sched = ElasticPartitioning::gpulet();
+        let lm = LatencyModel::new();
+        let gt = GroundTruth::default();
+        use crate::sched::Scheduler;
+        // A load one node rejects: killing one of two nodes makes the
+        // failover re-plan infeasible — the stale plan keeps serving,
+        // the dead node takes nothing, and the failure is counted.
+        let mut rates = [100.0, 0.0, 50.0, 0.0, 40.0];
+        while sched.schedule(&ctx, &rates).is_ok() {
+            rates.iter_mut().for_each(|r| *r *= 2.0);
+            assert!(rates[0] < 1e7);
+        }
+        let planner = FleetPlanner::new(&ctx, &sched, 2);
+        let Ok(plan) = planner.plan(&rates) else {
+            // Two nodes can't hold it either — grow the fleet instead
+            // of asserting on capacity specifics.
+            return;
+        };
+        let pairs: Vec<(ModelId, f64)> = ModelId::ALL
+            .iter()
+            .map(|&m| (m, rates[m.index()]))
+            .filter(|&(_, r)| r > 0.0)
+            .collect();
+        let duration = 4.0;
+        let cfg = FleetConfig { window_s: 1.0, rebalance: false, ..Default::default() };
+        let mut fleet = FleetEngine::new(
+            &lm,
+            &gt,
+            planner,
+            plan,
+            mux_for(&pairs, duration, 13),
+            duration,
+            &cfg,
+        );
+        fleet
+            .set_fault_plan(
+                crate::workload::FaultPlan::new(vec![FaultEvent {
+                    at_s: 1.5,
+                    node: 1,
+                    kind: FaultKind::Down,
+                }])
+                .unwrap(),
+            )
+            .unwrap();
+        fleet.run(duration);
+        assert!(fleet.replan_failures() >= 1, "infeasible failover must be counted");
+        assert_eq!(fleet.alive(), &[true, false]);
+        let out = fleet.finish();
+        assert!(out.conserved(), "stale-plan serving must still conserve");
+        assert!(out.lost_to_failure().iter().sum::<u64>() > 0);
+        assert!(out.replan_failures >= 1, "outcome must surface the count");
     }
 
     #[test]

@@ -33,11 +33,21 @@
 //!   backlog migrates and in-flight batches finish under their old
 //!   constants. Queued work is never lost at a rebalance.
 //!
+//! Robustness (PR 9) extends the tier with *fault tolerance* and
+//! *admission control*: a scripted `workload::FaultPlan` kills and
+//! recovers nodes at lockstep boundaries (destroyed work is accounted
+//! as `lost_to_failure`, survivors are re-planned via
+//! [`FleetPlanner::plan_masked`]), and an [`AdmissionSpec`] arms a
+//! deterministic front-end gate that sheds — or degrades to a cheaper
+//! fallback model — the slice of demand the active plan cannot serve
+//! within SLO.
+//!
 //! The tier is *conservative*: a 1-node fleet is byte-identical (JSON
 //! report) to `coordinator::simulate_source` on the same mux/seed, and
-//! fleet-wide conservation (`offered == served + dropped`, per model)
-//! holds for any node count, including across mid-trace rebalances —
-//! `tests/fleet_equivalence.rs` pins both.
+//! fleet-wide conservation (`demand == offered + shed` at the gate and
+//! `offered == served + dropped + lost_to_failure`, per model) holds
+//! for any node count, including across mid-trace rebalances and node
+//! failures — `tests/fleet_equivalence.rs` pins both.
 
 pub mod engine;
 pub mod planner;
@@ -47,7 +57,7 @@ use crate::config::Algo;
 
 pub use engine::{FleetConfig, FleetEngine, FleetOutcome, FleetWindowStats};
 pub use planner::{FleetPlan, FleetPlanner};
-pub use router::Router;
+pub use router::{AdmissionMode, AdmissionSpec, Router};
 
 /// Fleet topology: N homogeneous nodes, each a paper-testbed-style
 /// multi-GPU server scheduled by `algo`. Loadable from the `[fleet]`

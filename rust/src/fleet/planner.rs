@@ -122,6 +122,47 @@ impl<'a> FleetPlanner<'a> {
         }))
     }
 
+    /// Place `rates` across only the *alive* subset of the fleet
+    /// (`alive[i]` = node `i` may take load). Dead nodes get the empty
+    /// schedule and zero rate shares, so the plan still spans all
+    /// `self.nodes` slots and the fleet engine's node/router indexing
+    /// is unchanged. With every node alive this is exactly [`plan`];
+    /// with none alive it is `NotSchedulable`.
+    ///
+    /// [`plan`]: FleetPlanner::plan
+    pub fn plan_masked(&self, rates: &[f64; 5], alive: &[bool]) -> Result<FleetPlan> {
+        if alive.len() != self.nodes {
+            return Err(Error::Other(format!(
+                "alive mask covers {} nodes, fleet has {}",
+                alive.len(),
+                self.nodes
+            )));
+        }
+        if alive.iter().all(|&a| a) {
+            return self.plan(rates);
+        }
+        let survivors: Vec<usize> =
+            (0..self.nodes).filter(|&i| alive[i]).collect();
+        if survivors.is_empty() {
+            return Err(Error::NotSchedulable(
+                "no alive node to place load on".into(),
+            ));
+        }
+        // Plan a dense sub-fleet of the survivors, then scatter the
+        // schedules/shares back to their original node slots.
+        let sub = FleetPlanner::new(self.ctx, self.scheduler, survivors.len());
+        let dense = sub.plan(rates)?;
+        let mut plan = FleetPlan {
+            schedules: vec![Schedule::default(); self.nodes],
+            node_rates: vec![[0.0f64; 5]; self.nodes],
+        };
+        for (di, &ni) in survivors.iter().enumerate() {
+            plan.schedules[ni] = dense.schedules[di].clone();
+            plan.node_rates[ni] = dense.node_rates[di];
+        }
+        Ok(plan)
+    }
+
     /// One FFD water-fill pass at a given estimated fill target,
     /// validated by per-node scheduler calls.
     fn try_fill(
@@ -276,6 +317,35 @@ mod tests {
         let mut bad = [10.0; 5];
         bad[2] = f64::NAN;
         assert!(FleetPlanner::new(&ctx, &sched, 2).plan(&bad).is_err());
+    }
+
+    #[test]
+    fn masked_plan_skips_dead_nodes_and_covers_rates() {
+        let ctx = planner_ctx();
+        let sched = ElasticPartitioning::gpulet();
+        let rates = [300.0, 150.0, 100.0, 60.0, 90.0];
+        let planner = FleetPlanner::new(&ctx, &sched, 4);
+        let plan = planner.plan_masked(&rates, &[true, false, true, true]).unwrap();
+        assert_eq!(plan.nodes(), 4, "masked plan must keep full node indexing");
+        assert!(plan.schedules[1].lets.is_empty(), "dead node must stay idle");
+        assert_eq!(plan.node_rates[1], [0.0; 5]);
+        for m in ModelId::ALL {
+            assert!(
+                (plan.total_share(m) - rates[m.index()]).abs() < 1e-6,
+                "{m}: survivors must absorb the full offered rate"
+            );
+        }
+        // All-alive mask is exactly the unmasked plan.
+        let all = planner.plan_masked(&rates, &[true; 4]).unwrap();
+        let direct = planner.plan(&rates).unwrap();
+        assert_eq!(all.node_rates, direct.node_rates);
+        assert_eq!(all.schedules, direct.schedules);
+        // No survivors / wrong mask length are proper errors.
+        assert!(matches!(
+            planner.plan_masked(&rates, &[false; 4]).unwrap_err(),
+            Error::NotSchedulable(_)
+        ));
+        assert!(planner.plan_masked(&rates, &[true; 3]).is_err());
     }
 
     #[test]

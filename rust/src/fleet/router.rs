@@ -23,8 +23,23 @@
 //!   everywhere is dealt *uniformly* (weight 1 per node) and counted in
 //!   [`Router::unplaced_per_model`]; the receiving engine has no route
 //!   for it and drops it **counted**, exactly like the single-server
-//!   path — fleet conservation (`offered == served + dropped`) holds
-//!   per model with no silent escape hatch.
+//!   path — fleet conservation (`offered == served + dropped + shed +
+//!   lost_to_failure`) holds per model with no silent escape hatch.
+//! * **Admission gate** (optional): before dealing, each arrival passes
+//!   a per-model largest-remainder gate aimed by
+//!   [`Router::update_admission`] from observed demand vs schedulable
+//!   capacity. Over-quota arrivals are **shed** (refused, counted under
+//!   the original model) or **degraded** (rewritten to a configured
+//!   cheaper fallback model and dealt — offered counts then accrue to
+//!   the fallback, with a separate per-original-model `degraded`
+//!   diagnostic). The gate is a pure function of the arrival sequence
+//!   and the admit fractions, so admission decisions are
+//!   byte-reproducible; with [`AdmissionMode::Off`] the deal path is
+//!   bit-for-bit the ungated one.
+//! * **Liveness mask**: [`Router::set_alive`] marks nodes down/up and
+//!   rebuilds the dealing weights from the retained plan shares — dead
+//!   nodes get weight zero, and a model whose only shares sit on dead
+//!   nodes falls back to uniform dealing over the *alive* nodes.
 //!
 //! Dealt arrivals accumulate in per-node buffers the [`FleetEngine`]
 //! drains each lockstep advance; the buffer high-water mark is tracked
@@ -32,9 +47,65 @@
 //!
 //! [`FleetEngine`]: super::FleetEngine
 
+use crate::error::{Error, Result};
 use crate::models::ModelId;
 use crate::simclock::{ms_to_us, SimTimeUs};
 use crate::workload::{Arrival, DynSourceMux};
+
+/// What the admission gate does with an over-quota arrival.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// No gate: every arrival is dealt (the historical behavior).
+    #[default]
+    Off,
+    /// Refuse over-quota arrivals; counted per model as `shed`.
+    Shed,
+    /// Rewrite over-quota arrivals to the model's configured cheaper
+    /// fallback and deal them; models without a fallback shed instead.
+    Degrade,
+}
+
+impl AdmissionMode {
+    /// Parse a CLI/config spelling: `off` | `shed` | `degrade`.
+    pub fn parse(s: &str) -> Result<AdmissionMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" => Ok(AdmissionMode::Off),
+            "shed" => Ok(AdmissionMode::Shed),
+            "degrade" => Ok(AdmissionMode::Degrade),
+            other => Err(Error::parse(format!(
+                "unknown admission mode {other:?} (want off|shed|degrade)"
+            ))),
+        }
+    }
+}
+
+/// Admission-control policy for the router's front-end gate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdmissionSpec {
+    pub mode: AdmissionMode,
+    /// Degrade target per original model (`ModelId::index`-indexed).
+    /// `None` = no fallback: over-quota arrivals shed even in
+    /// `Degrade` mode. A degraded arrival bypasses the fallback's own
+    /// gate (documented limitation: one rewrite, no cascades).
+    pub fallback: [Option<ModelId>; 5],
+    /// Target utilization of schedulable capacity: the gate admits up
+    /// to `capacity * headroom` req/s per model, keeping the admitted
+    /// load strictly inside what the plan can serve within SLO.
+    pub headroom: f64,
+}
+
+impl Default for AdmissionSpec {
+    fn default() -> Self {
+        AdmissionSpec { mode: AdmissionMode::Off, fallback: [None; 5], headroom: 0.9 }
+    }
+}
+
+impl AdmissionSpec {
+    /// The degrade target for `m`, if configured and distinct from `m`.
+    fn fallback_for(&self, m: ModelId) -> Option<ModelId> {
+        self.fallback[m.index()].filter(|&f| f != m)
+    }
+}
 
 /// Deterministic arrival splitter over one merged source. See the
 /// module docs for the dealing rule.
@@ -51,10 +122,20 @@ pub struct Router {
     dealt: [Vec<u64>; 5],
     /// Σ dealt per model since the last retarget.
     dealt_model: [u64; 5],
-    /// Lifetime offered counts per model (survives retargets).
+    /// Lifetime offered counts per model (survives retargets). Counted
+    /// *post-gate*: a degraded arrival is offered under its fallback
+    /// model, a shed one under none — so `offered == served + dropped`
+    /// holds per dealt model and shed is accounted separately.
     offered: [u64; 5],
-    /// Offered counts since the last `take_window_dealt`.
+    /// Offered (post-gate) counts since the last `take_window_dealt`.
     window: [u64; 5],
+    /// Lifetime demand counts: every pulled arrival under its
+    /// *original* model, gate or no gate.
+    demand: [u64; 5],
+    /// Demand counts since the last `take_window_demand` — what the
+    /// rate monitor and the admission updater must see (feeding them
+    /// post-gate counts would hide the very overload being shed).
+    demand_window: [u64; 5],
     /// Lifetime dealt counts for models with no placement.
     unplaced: [u64; 5],
     placed: [bool; 5],
@@ -62,6 +143,28 @@ pub struct Router {
     buffers: Vec<Vec<Arrival>>,
     /// High-water mark of total buffered arrivals.
     peak_buffered: usize,
+    /// The active plan's per-(node, model) shares, retained so the
+    /// dealing weights can be rebuilt when liveness changes.
+    node_rates: Vec<[f64; 5]>,
+    /// Liveness mask: dead nodes take no new arrivals.
+    alive: Vec<bool>,
+    admission: AdmissionSpec,
+    /// Admitted fraction per model (1.0 = admit everything), aimed by
+    /// `update_admission`.
+    admit_frac: [f64; 5],
+    /// Arrivals seen / admitted per model since the last re-aim — the
+    /// largest-remainder pair: admit while `admitted < ceil(seen *
+    /// frac)`, which realizes the fraction exactly (within one arrival)
+    /// with a deterministic, evenly interleaved pattern.
+    gate_seen: [u64; 5],
+    gate_admitted: [u64; 5],
+    /// Lifetime shed counts per *original* model.
+    shed: [u64; 5],
+    /// Shed counts since the last `take_window_shed`.
+    shed_window: [u64; 5],
+    /// Lifetime degraded counts per *original* model (diagnostic; the
+    /// offered/served accounting lives under the fallback model).
+    degraded: [u64; 5],
 }
 
 impl Router {
@@ -79,13 +182,31 @@ impl Router {
             dealt_model: [0; 5],
             offered: [0; 5],
             window: [0; 5],
+            demand: [0; 5],
+            demand_window: [0; 5],
             unplaced: [0; 5],
             placed: [false; 5],
             buffers: (0..nodes).map(|_| Vec::new()).collect(),
             peak_buffered: 0,
+            node_rates: Vec::new(),
+            alive: vec![true; nodes],
+            admission: AdmissionSpec::default(),
+            admit_frac: [1.0; 5],
+            gate_seen: [0; 5],
+            gate_admitted: [0; 5],
+            shed: [0; 5],
+            shed_window: [0; 5],
+            degraded: [0; 5],
         };
         r.retarget(node_rates);
         r
+    }
+
+    /// Install an admission policy (default: [`AdmissionMode::Off`]).
+    /// The gate starts wide open — `update_admission` aims it from
+    /// observed demand at window boundaries.
+    pub fn set_admission(&mut self, spec: AdmissionSpec) {
+        self.admission = spec;
     }
 
     /// Re-target the split to a new plan's shares (fleet rebalance).
@@ -95,23 +216,78 @@ impl Router {
     /// stay where they were dealt.
     pub fn retarget(&mut self, node_rates: &[[f64; 5]]) {
         assert_eq!(node_rates.len(), self.nodes, "retarget must keep the node count");
+        self.node_rates.clear();
+        self.node_rates.extend_from_slice(node_rates);
+        self.rebuild_weights();
+    }
+
+    /// Mark a node down (`false`) or back up (`true`) and rebuild the
+    /// dealing weights from the retained plan shares. A dead node takes
+    /// no new arrivals; its already-dealt buffer stays put (the fleet
+    /// engine accounts it as lost). The deficit counters restart, like
+    /// a retarget.
+    pub fn set_alive(&mut self, node: usize, alive: bool) {
+        assert!(node < self.nodes, "node {node} out of range");
+        self.alive[node] = alive;
+        self.rebuild_weights();
+    }
+
+    /// Dealing weights from the retained shares masked by liveness.
+    fn rebuild_weights(&mut self) {
+        let any_alive = self.alive.iter().any(|&a| a);
         for m in ModelId::ALL {
             let mi = m.index();
-            let w: Vec<f64> = node_rates.iter().map(|r| r[mi].max(0.0)).collect();
+            let w: Vec<f64> = (0..self.nodes)
+                .map(|ni| {
+                    if self.alive[ni] {
+                        self.node_rates[ni][mi].max(0.0)
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
             let total: f64 = w.iter().sum();
             self.placed[mi] = total > 0.0;
             if self.placed[mi] {
                 self.weights[mi] = w;
                 self.totals[mi] = total;
             } else {
-                // Unplaced: deal uniformly so the engines can drop it
-                // counted — never swallowed at the front end.
-                self.weights[mi] = vec![1.0; self.nodes];
-                self.totals[mi] = self.nodes as f64;
+                // Unplaced — or every share sits on a dead node: deal
+                // uniformly over the alive nodes so the engines can
+                // drop it counted — never swallowed at the front end.
+                // With no node alive at all, uniform over everything
+                // (the dealt arrivals land in dead buffers and the
+                // fleet engine accounts them as lost).
+                self.weights[mi] = (0..self.nodes)
+                    .map(|ni| if !any_alive || self.alive[ni] { 1.0 } else { 0.0 })
+                    .collect();
+                self.totals[mi] = self.weights[mi].iter().sum();
             }
             self.dealt[mi].clear();
             self.dealt[mi].resize(self.nodes, 0);
             self.dealt_model[mi] = 0;
+        }
+    }
+
+    /// Re-aim the admission gate: per model, compare the observed
+    /// demand rate (req/s — typically the fleet's EWMA estimate) with
+    /// the active plan's schedulable capacity and set the admitted
+    /// fraction to `min(1, capacity * headroom / observed)`. Resets the
+    /// gate's seen/admitted counters so the new fraction applies from
+    /// the next arrival. No-op when admission is off.
+    pub fn update_admission(&mut self, observed: &[f64; 5], capacity: &[f64; 5]) {
+        if self.admission.mode == AdmissionMode::Off {
+            return;
+        }
+        for mi in 0..5 {
+            let allowed = capacity[mi] * self.admission.headroom;
+            self.admit_frac[mi] = if observed[mi] <= allowed || observed[mi] <= 0.0 {
+                1.0
+            } else {
+                (allowed / observed[mi]).clamp(0.0, 1.0)
+            };
+            self.gate_seen[mi] = 0;
+            self.gate_admitted[mi] = 0;
         }
     }
 
@@ -159,7 +335,34 @@ impl Router {
     /// window cut an arrival lands).
     pub fn deal_until(&mut self, t_us: SimTimeUs) {
         while self.mux.peek_time_ms().is_some_and(|t| ms_to_us(t) <= t_us) {
-            let a = self.mux.pull().expect("peeked arrival vanished");
+            let mut a = self.mux.pull().expect("peeked arrival vanished");
+            let orig = a.model.index();
+            self.demand[orig] += 1;
+            self.demand_window[orig] += 1;
+            if self.admission.mode != AdmissionMode::Off {
+                // Largest-remainder gate: admit while the admitted
+                // count is under ceil(seen * frac) — realizes the
+                // fraction exactly with an evenly interleaved,
+                // deterministic pattern.
+                self.gate_seen[orig] += 1;
+                let quota =
+                    (self.gate_seen[orig] as f64 * self.admit_frac[orig]).ceil() as u64;
+                if self.gate_admitted[orig] < quota {
+                    self.gate_admitted[orig] += 1;
+                } else {
+                    match self.admission.fallback_for(a.model) {
+                        Some(fb) if self.admission.mode == AdmissionMode::Degrade => {
+                            a.model = fb;
+                            self.degraded[orig] += 1;
+                        }
+                        _ => {
+                            self.shed[orig] += 1;
+                            self.shed_window[orig] += 1;
+                            continue;
+                        }
+                    }
+                }
+            }
             let mi = a.model.index();
             let ni = self.pick(mi);
             self.dealt[mi][ni] += 1;
@@ -196,10 +399,47 @@ impl Router {
         std::mem::replace(&mut self.buffers[node], spare)
     }
 
-    /// Offered counts per model since the last call (windowed rate
-    /// observation for rebalancing).
+    /// Offered (post-gate, dealt) counts per model since the last call.
     pub fn take_window_dealt(&mut self) -> [u64; 5] {
         std::mem::replace(&mut self.window, [0; 5])
+    }
+
+    /// Demand counts per *original* model since the last call — every
+    /// arrival pulled from the source, admitted or not (windowed rate
+    /// observation for rebalancing and admission aiming).
+    pub fn take_window_demand(&mut self) -> [u64; 5] {
+        std::mem::replace(&mut self.demand_window, [0; 5])
+    }
+
+    /// Shed counts per original model since the last call.
+    pub fn take_window_shed(&mut self) -> [u64; 5] {
+        std::mem::replace(&mut self.shed_window, [0; 5])
+    }
+
+    /// Lifetime demand counts per original model (pre-gate).
+    pub fn demand_per_model(&self) -> [u64; 5] {
+        self.demand
+    }
+
+    /// Lifetime shed counts per original model.
+    pub fn shed_per_model(&self) -> [u64; 5] {
+        self.shed
+    }
+
+    /// Lifetime degraded counts per original model (served/dropped
+    /// accounting for these lives under the fallback model).
+    pub fn degraded_per_model(&self) -> [u64; 5] {
+        self.degraded
+    }
+
+    /// The current per-model admitted fractions (1.0 = gate open).
+    pub fn admit_fractions(&self) -> [f64; 5] {
+        self.admit_frac
+    }
+
+    /// Per-node liveness mask.
+    pub fn alive(&self) -> &[bool] {
+        &self.alive
     }
 
     /// Lifetime offered (dealt) counts per model.
@@ -414,6 +654,143 @@ mod tests {
         assert_eq!(router.take_buffer(0), reference);
         assert!(router.is_exhausted());
         assert_eq!(router.last_arrival_ms(), reference.last().unwrap().time_ms);
+    }
+
+    #[test]
+    fn shed_gate_realizes_the_admit_fraction_exactly() {
+        let gated = |frac_setup: &dyn Fn(&mut Router)| {
+            let mut router =
+                Router::new(lenet_trace(100), &node_rates_for(&[1.0, 1.0]));
+            router.set_admission(AdmissionSpec {
+                mode: AdmissionMode::Shed,
+                headroom: 1.0,
+                ..Default::default()
+            });
+            frac_setup(&mut router);
+            router.deal_all();
+            router
+        };
+        // Observed demand at 2x capacity → admit exactly half,
+        // interleaved (largest-remainder), rest shed under the model.
+        let mut caps = [0.0; 5];
+        caps[ModelId::Lenet.index()] = 100.0;
+        let mut demand = [0.0; 5];
+        demand[ModelId::Lenet.index()] = 200.0;
+        let r = gated(&|r| r.update_admission(&demand, &caps));
+        let li = ModelId::Lenet.index();
+        assert_eq!(r.shed_per_model()[li], 50);
+        assert_eq!(r.offered_per_model()[li], 50);
+        assert_eq!(r.dealt_counts(ModelId::Lenet).iter().sum::<u64>(), 50);
+        assert!((r.admit_fractions()[li] - 0.5).abs() < 1e-12);
+        // Replays byte-identically.
+        let r2 = gated(&|r| r.update_admission(&demand, &caps));
+        assert_eq!(r.shed_per_model(), r2.shed_per_model());
+        // Demand under capacity*headroom → gate wide open, nothing shed.
+        let open = gated(&|r| r.update_admission(&caps, &demand));
+        assert_eq!(open.shed_per_model(), [0; 5]);
+        assert_eq!(open.offered_per_model()[li], 100);
+        // Default (un-aimed) gate also admits everything.
+        let idle = gated(&|_| {});
+        assert_eq!(idle.shed_per_model(), [0; 5]);
+    }
+
+    #[test]
+    fn degrade_rewrites_to_fallback_and_keeps_conservation_per_model() {
+        // VGG over capacity with LeNet as its cheaper fallback: the
+        // over-quota half is dealt *as LeNet* and diagnosed as
+        // degraded[VGG]; nothing is shed.
+        let arrivals: Vec<Arrival> = (0..100)
+            .map(|i| Arrival { time_ms: i as f64, model: ModelId::Vgg, id: i as u64 })
+            .collect();
+        let shares = [[50.0, 50.0, 0.0, 0.0, 0.0], [50.0, 50.0, 0.0, 0.0, 0.0]];
+        let mut router = Router::new(DynSourceMux::of_trace(arrivals), &shares);
+        let mut fallback = [None; 5];
+        fallback[ModelId::Vgg.index()] = Some(ModelId::Lenet);
+        router.set_admission(AdmissionSpec {
+            mode: AdmissionMode::Degrade,
+            fallback,
+            headroom: 1.0,
+        });
+        let (vi, li) = (ModelId::Vgg.index(), ModelId::Lenet.index());
+        let mut demand = [0.0; 5];
+        demand[vi] = 200.0;
+        let mut caps = [0.0; 5];
+        caps[vi] = 100.0;
+        caps[li] = 1000.0;
+        router.update_admission(&demand, &caps);
+        router.deal_all();
+        assert_eq!(router.shed_per_model(), [0; 5], "degrade must not shed");
+        assert_eq!(router.degraded_per_model()[vi], 50);
+        assert_eq!(router.offered_per_model()[vi], 50);
+        assert_eq!(router.offered_per_model()[li], 50, "fallback takes the rest");
+        let demand_w = router.take_window_demand();
+        assert_eq!(demand_w[vi], 100, "demand window counts the original model");
+        assert_eq!(demand_w[li], 0);
+        // No fallback configured → Degrade mode sheds like Shed mode.
+        let mut router2 =
+            Router::new(lenet_trace(100), &node_rates_for(&[1.0, 1.0]));
+        router2.set_admission(AdmissionSpec {
+            mode: AdmissionMode::Degrade,
+            ..Default::default()
+        });
+        let mut d2 = [0.0; 5];
+        d2[li] = 200.0;
+        let mut c2 = [0.0; 5];
+        c2[li] = 100.0;
+        router2.update_admission(&d2, &c2);
+        router2.deal_all();
+        assert_eq!(router2.shed_per_model()[li], 50);
+    }
+
+    #[test]
+    fn admission_off_leaves_the_deal_path_untouched() {
+        let deal = |gate: bool| {
+            let mut router =
+                Router::new(lenet_trace(50), &node_rates_for(&[2.0, 1.0]));
+            if gate {
+                // Off mode: update_admission is a no-op even with
+                // demand far over capacity.
+                router.update_admission(&[1e6; 5], &[1.0; 5]);
+            }
+            router.deal_all();
+            (
+                router.take_buffer(0),
+                router.take_buffer(1),
+                router.shed_per_model(),
+                router.take_window_dealt(),
+                router.take_window_demand(),
+            )
+        };
+        let a = deal(false);
+        let b = deal(true);
+        assert_eq!(a, b, "Off mode must be bit-for-bit the ungated path");
+        assert_eq!(a.2, [0; 5]);
+        assert_eq!(
+            a.3, a.4,
+            "with no gate the dealt and demand windows are the same counts"
+        );
+    }
+
+    #[test]
+    fn set_alive_reroutes_to_survivors_and_restores_on_recovery() {
+        let mut router = Router::new(lenet_trace(90), &node_rates_for(&[1.0, 1.0, 1.0]));
+        router.deal_until(ms_to_us(29.0)); // 30 dealt across all three
+        router.set_alive(0, false);
+        router.deal_until(ms_to_us(59.0)); // 30 more, node 0 dead
+        let after_down = router.dealt_counts(ModelId::Lenet).to_vec();
+        assert_eq!(after_down[0], 0, "dead node must take nothing");
+        assert_eq!(after_down.iter().sum::<u64>(), 30);
+        router.set_alive(0, true);
+        router.deal_all(); // last 30, full fleet again
+        assert!(router.dealt_counts(ModelId::Lenet)[0] > 0, "recovered node serves");
+        assert_eq!(router.offered_per_model()[ModelId::Lenet.index()], 90);
+        // A model placed ONLY on the dead node falls back to uniform
+        // dealing over the alive nodes (dropped counted downstream).
+        let mut solo = Router::new(lenet_trace(20), &node_rates_for(&[1.0, 0.0]));
+        solo.set_alive(0, false);
+        solo.deal_all();
+        assert_eq!(solo.dealt_counts(ModelId::Lenet), &[0, 20]);
+        assert_eq!(solo.alive(), &[false, true]);
     }
 
     #[test]

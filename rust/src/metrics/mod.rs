@@ -14,6 +14,11 @@ pub struct ModelMetrics {
     pub served: u64,
     pub violations: u64,
     pub dropped: u64,
+    /// Requests refused at the admission gate (never dealt to a node).
+    pub shed: u64,
+    /// Requests destroyed by a node failure: queued backlog, in-flight
+    /// batches, and staged arrivals on the node at the instant it died.
+    pub lost_to_failure: u64,
     hist: Histogram,
 }
 
@@ -25,6 +30,8 @@ impl ModelMetrics {
             served: 0,
             violations: 0,
             dropped: 0,
+            shed: 0,
+            lost_to_failure: 0,
             hist: Histogram::new(0.5, 2000),
         }
     }
@@ -44,28 +51,54 @@ impl ModelMetrics {
         self.dropped += 1;
     }
 
-    /// Total requests that entered the system.
-    pub fn total(&self) -> u64 {
-        self.served + self.dropped
+    /// Record a request shed at the admission gate. Shed traffic never
+    /// enters a queue, so it is *not* admitted and does not count
+    /// against the SLO attainment of admitted traffic.
+    pub fn record_shed(&mut self) {
+        self.shed += 1;
     }
 
-    /// SLO violation rate including drops, in [0, 1].
+    /// Record a request destroyed by a node failure (queued, staged, or
+    /// in flight on the node when it died). Counted as an SLO failure
+    /// of admitted traffic, like a drop.
+    pub fn record_lost(&mut self) {
+        self.lost_to_failure += 1;
+    }
+
+    /// Total requests that entered accounting — the per-model
+    /// conservation total: `served + dropped + shed + lost_to_failure`.
+    pub fn total(&self) -> u64 {
+        self.served + self.dropped + self.shed + self.lost_to_failure
+    }
+
+    /// Requests the admission gate let through (everything except
+    /// shed): served, dropped, or lost to a failure after admission.
+    pub fn admitted(&self) -> u64 {
+        self.served + self.dropped + self.lost_to_failure
+    }
+
+    /// SLO violation rate of *admitted* traffic, in [0, 1] — drops and
+    /// failure losses count as violations; shed requests are excluded
+    /// from both numerator and denominator (they were never promised a
+    /// latency). With zero shed/lost this is the historical
+    /// drops-included violation rate.
     pub fn violation_rate(&self) -> f64 {
-        let total = self.total();
-        if total == 0 {
+        let admitted = self.admitted();
+        if admitted == 0 {
             0.0
         } else {
-            (self.violations + self.dropped) as f64 / total as f64
+            (self.violations + self.dropped + self.lost_to_failure) as f64
+                / admitted as f64
         }
     }
 
-    /// Goodput fraction: served within SLO / total offered.
+    /// Goodput fraction: served within SLO / admitted.
     pub fn goodput_fraction(&self) -> f64 {
-        let total = self.total();
-        if total == 0 {
+        let admitted = self.admitted();
+        if admitted == 0 {
             1.0
         } else {
-            (self.served - self.violations) as f64 / total as f64
+            (self.served - self.violations) as f64 / admitted as f64
         }
     }
 
@@ -107,6 +140,8 @@ impl ModelMetrics {
         self.served += other.served;
         self.violations += other.violations;
         self.dropped += other.dropped;
+        self.shed += other.shed;
+        self.lost_to_failure += other.lost_to_failure;
         self.hist.merge(&other.hist);
         // lint: end-no-alloc
     }
@@ -137,18 +172,36 @@ impl Report {
         self.models.iter()
     }
 
-    /// Aggregate SLO violation rate across all models (drops included).
+    /// Aggregate SLO violation rate of admitted traffic across all
+    /// models (drops and failure losses included; shed excluded).
     pub fn overall_violation_rate(&self) -> f64 {
-        let total: u64 = self.models.values().map(|m| m.total()).sum();
-        if total == 0 {
+        let admitted: u64 = self.models.values().map(|m| m.admitted()).sum();
+        if admitted == 0 {
             return 0.0;
         }
         let bad: u64 = self
             .models
             .values()
-            .map(|m| m.violations + m.dropped)
+            .map(|m| m.violations + m.dropped + m.lost_to_failure)
             .sum();
-        bad as f64 / total as f64
+        bad as f64 / admitted as f64
+    }
+
+    /// SLO attainment of *admitted* traffic: served-within-SLO over
+    /// everything the admission gate let through. This is the headline
+    /// admission-control metric — shedding infeasible load should raise
+    /// it relative to an admit-everything baseline.
+    pub fn admitted_slo_attainment(&self) -> f64 {
+        let admitted: u64 = self.models.values().map(|m| m.admitted()).sum();
+        if admitted == 0 {
+            return 1.0;
+        }
+        let good: u64 = self
+            .models
+            .values()
+            .map(|m| m.served - m.violations)
+            .sum();
+        good as f64 / admitted as f64
     }
 
     /// Requests served per second over the window.
@@ -208,22 +261,27 @@ impl Report {
             rows: self
                 .models
                 .iter()
-                .map(|(m, mm)| (*m, (mm.served, mm.violations, mm.dropped)))
+                .map(|(m, mm)| {
+                    (*m, (mm.served, mm.violations, mm.dropped, mm.shed, mm.lost_to_failure))
+                })
                 .collect(),
         }
     }
 
     /// The per-window delta view since `prev` (a snapshot taken at the
-    /// window start): served/violations/dropped per model over the last
-    /// `window_s` seconds.
+    /// window start): served/violations/dropped/shed/lost per model
+    /// over the last `window_s` seconds.
     pub fn snapshot_window(&self, prev: &CounterSnapshot, window_s: f64) -> WindowReport {
         let mut w = WindowReport { window_s, ..WindowReport::default() };
         for (m, mm) in &self.models {
-            let (ps, pv, pd) = prev.rows.get(m).copied().unwrap_or((0, 0, 0));
+            let (ps, pv, pd, psh, pl) =
+                prev.rows.get(m).copied().unwrap_or((0, 0, 0, 0, 0));
             let i = m.index();
             w.served[i] = mm.served - ps;
             w.violations[i] = mm.violations - pv;
             w.dropped[i] = mm.dropped - pd;
+            w.shed[i] = mm.shed - psh;
+            w.lost[i] = mm.lost_to_failure - pl;
         }
         w
     }
@@ -240,6 +298,8 @@ impl Report {
                     ("served", Json::Num(mm.served as f64)),
                     ("violations", Json::Num(mm.violations as f64)),
                     ("dropped", Json::Num(mm.dropped as f64)),
+                    ("shed", Json::Num(mm.shed as f64)),
+                    ("lost_to_failure", Json::Num(mm.lost_to_failure as f64)),
                     ("p50_ms", Json::Num(mm.p50_ms())),
                     ("p99_ms", Json::Num(mm.p99_ms())),
                     ("mean_ms", Json::Num(mm.mean_ms())),
@@ -252,6 +312,7 @@ impl Report {
             ("throughput_rps", Json::Num(self.throughput_rps())),
             ("goodput_rps", Json::Num(self.goodput_rps())),
             ("violation_rate", Json::Num(self.overall_violation_rate())),
+            ("admitted_slo_attainment", Json::Num(self.admitted_slo_attainment())),
             ("models", Json::Arr(rows)),
         ])
     }
@@ -259,14 +320,16 @@ impl Report {
     /// Pretty per-model table (used by the CLI and examples).
     pub fn table(&self) -> String {
         let mut s = String::from(
-            "model           served  dropped  viol%   p50ms   p99ms    max\n",
+            "model           served  dropped   shed   lost  viol%   p50ms   p99ms    max\n",
         );
         for (m, mm) in &self.models {
             s.push_str(&format!(
-                "{:<15} {:>6} {:>8} {:>6.2} {:>7.1} {:>7.1} {:>6.1}\n",
+                "{:<15} {:>6} {:>8} {:>6} {:>6} {:>6.2} {:>7.1} {:>7.1} {:>6.1}\n",
                 m.name(),
                 mm.served,
                 mm.dropped,
+                mm.shed,
+                mm.lost_to_failure,
                 mm.violation_rate() * 100.0,
                 mm.p50_ms(),
                 mm.p99_ms(),
@@ -282,8 +345,9 @@ impl Report {
 /// continuously-running engine.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct CounterSnapshot {
-    /// Per-model (served, violations, dropped) at snapshot time.
-    rows: BTreeMap<ModelId, (u64, u64, u64)>,
+    /// Per-model (served, violations, dropped, shed, lost_to_failure)
+    /// at snapshot time.
+    rows: BTreeMap<ModelId, (u64, u64, u64, u64, u64)>,
 }
 
 /// One window's worth of serving outcomes (deltas between two
@@ -294,23 +358,33 @@ pub struct WindowReport {
     pub served: [u64; 5],
     pub violations: [u64; 5],
     pub dropped: [u64; 5],
+    pub shed: [u64; 5],
+    pub lost: [u64; 5],
 }
 
 impl WindowReport {
-    /// Requests that entered accounting in this window.
+    /// Requests that entered accounting in this window (the
+    /// conservation total: served + dropped + shed + lost).
     pub fn total(&self) -> u64 {
-        self.served.iter().sum::<u64>() + self.dropped.iter().sum::<u64>()
+        self.served.iter().sum::<u64>()
+            + self.dropped.iter().sum::<u64>()
+            + self.shed.iter().sum::<u64>()
+            + self.lost.iter().sum::<u64>()
     }
 
-    /// SLO violation rate (drops included) in this window, in [0, 1].
+    /// SLO violation rate of admitted traffic (drops and failure
+    /// losses included, shed excluded) in this window, in [0, 1].
     pub fn violation_rate(&self) -> f64 {
-        let total = self.total();
-        if total == 0 {
+        let admitted = self.served.iter().sum::<u64>()
+            + self.dropped.iter().sum::<u64>()
+            + self.lost.iter().sum::<u64>();
+        if admitted == 0 {
             return 0.0;
         }
-        let bad: u64 =
-            self.violations.iter().sum::<u64>() + self.dropped.iter().sum::<u64>();
-        bad as f64 / total as f64
+        let bad: u64 = self.violations.iter().sum::<u64>()
+            + self.dropped.iter().sum::<u64>()
+            + self.lost.iter().sum::<u64>();
+        bad as f64 / admitted as f64
     }
 
     /// Served req/s for one model over the window.
@@ -465,6 +539,43 @@ mod tests {
         assert!(j.contains("\"violation_rate\""));
         assert!(j.contains("\"lenet\""));
         assert_eq!(j, r.to_json().to_string());
+    }
+
+    #[test]
+    fn shed_and_lost_accounting() {
+        let mut r = Report::new(10.0);
+        let mm = r.model_mut(ModelId::Lenet, 5.0);
+        mm.record(1.0); // within SLO
+        mm.record(9.0); // violation
+        mm.record_drop();
+        mm.record_shed();
+        mm.record_shed();
+        mm.record_lost();
+        // Conservation total counts everything; admitted excludes shed.
+        assert_eq!(mm.total(), 6);
+        assert_eq!(mm.admitted(), 4);
+        // Violation rate is over admitted traffic: 1 violation + 1 drop
+        // + 1 lost out of 4 admitted.
+        assert!((mm.violation_rate() - 3.0 / 4.0).abs() < 1e-12);
+        assert!((mm.goodput_fraction() - 1.0 / 4.0).abs() < 1e-12);
+        assert!((r.admitted_slo_attainment() - 1.0 / 4.0).abs() < 1e-12);
+        // Counters survive merge and the window-delta path.
+        let snap = r.counters();
+        let mm = r.model_mut(ModelId::Lenet, 5.0);
+        mm.record_shed();
+        mm.record_lost();
+        let w = r.snapshot_window(&snap, 10.0);
+        assert_eq!(w.shed[ModelId::Lenet.index()], 1);
+        assert_eq!(w.lost[ModelId::Lenet.index()], 1);
+        let mut merged = Report::new(10.0);
+        merged.merge(&r);
+        let mm = merged.model(ModelId::Lenet).unwrap();
+        assert_eq!(mm.shed, 3);
+        assert_eq!(mm.lost_to_failure, 2);
+        let j = merged.to_json().to_string();
+        assert!(j.contains("\"shed\""));
+        assert!(j.contains("\"lost_to_failure\""));
+        assert!(j.contains("\"admitted_slo_attainment\""));
     }
 
     #[test]

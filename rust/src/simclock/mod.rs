@@ -178,6 +178,15 @@ impl<E> EventQueue<E> {
         })
     }
 
+    /// Remove and return every pending event *without* advancing the
+    /// clock (arbitrary order). Teardown accounting: a node failure
+    /// destroys its future events, but the engine keeps running on the
+    /// shared clock, so — unlike a `pop` loop — `now` must not jump to
+    /// the drained events' times.
+    pub fn drain_events(&mut self) -> Vec<(SimTimeUs, E)> {
+        self.heap.drain().map(|e| (e.time_us, e.event)).collect()
+    }
+
     /// Time of the next event (µs) without popping.
     pub fn peek_time_us(&self) -> Option<SimTimeUs> {
         self.heap.peek().map(|e| e.time_us)

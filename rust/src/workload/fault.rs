@@ -1,0 +1,229 @@
+//! Deterministic node-fault plans for fleet robustness runs.
+//!
+//! A [`FaultPlan`] scripts when fleet nodes die and recover:
+//! `NodeDown{at, node}` destroys the node's queued backlog and
+//! in-flight work (accounted as `lost_to_failure`) and `NodeUp{at,
+//! node}` re-admits it. The fleet engine consumes the plan at lockstep
+//! window boundaries — an event with time `t` fires at the first
+//! boundary `>= t` — so fault timing is a pure function of the plan and
+//! the window grid, independent of worker-thread count (the repo's
+//! byte-identity invariant extends to faulty runs).
+//!
+//! Plans come from two deterministic constructors: a TOML `[faults]`
+//! section (`events = ["down@12.5:0", "up@30:0"]`, each entry
+//! `kind@seconds:node`) and a seeded generator ([`FaultPlan::generate`])
+//! that draws non-overlapping down→up episodes from a `Pcg32` stream.
+
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg32;
+use crate::util::tomlmini::TomlDoc;
+
+/// What happens to the node at the event time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The node fails: its queued/in-flight work is lost (counted) and
+    /// the survivors are re-planned.
+    Down,
+    /// The node recovers and is re-admitted at the next re-plan.
+    Up,
+}
+
+/// One scripted fault event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Virtual time (s) the event takes effect (snapped to the next
+    /// lockstep boundary by the consumer).
+    pub at_s: f64,
+    /// Fleet node index.
+    pub node: usize,
+    pub kind: FaultKind,
+}
+
+/// A time-sorted script of node failures and recoveries.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Events sorted by `at_s` (stable: equal times keep insertion
+    /// order, so "down then up at t" means exactly that).
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// A plan from explicit events; times must be finite and
+    /// non-negative. Events are stably sorted by time.
+    pub fn new(mut events: Vec<FaultEvent>) -> Result<FaultPlan> {
+        for e in &events {
+            if !e.at_s.is_finite() || e.at_s < 0.0 {
+                return Err(Error::parse(format!(
+                    "fault event time must be finite and >= 0, got {}",
+                    e.at_s
+                )));
+            }
+        }
+        events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        Ok(FaultPlan { events })
+    }
+
+    /// The empty plan (no faults) — the default for every run.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Parse the `[faults]` TOML section of `doc`: an `events` array of
+    /// `"kind@seconds:node"` strings, e.g.
+    /// `events = ["down@12.5:0", "up@30:0"]`. A missing section is the
+    /// empty plan.
+    pub fn from_toml(doc: &TomlDoc) -> Result<FaultPlan> {
+        let Some(v) = doc.get("faults.events") else {
+            return Ok(FaultPlan::none());
+        };
+        let mut events = Vec::new();
+        for item in v.as_arr()? {
+            events.push(parse_event(item.as_str()?)?);
+        }
+        FaultPlan::new(events)
+    }
+
+    /// A seeded random plan: `episodes` non-overlapping down→up pairs,
+    /// each on a random node, with the down time uniform in the first
+    /// 70% of the horizon and an outage of 5–25% of it (clipped to the
+    /// horizon — a node still down at the end simply never recovers).
+    /// Episodes that would overlap an existing outage on the same node
+    /// are skipped, so the plan is always well-formed. Deterministic in
+    /// `(seed, nodes, duration_s, episodes)`.
+    pub fn generate(
+        seed: u64,
+        nodes: usize,
+        duration_s: f64,
+        episodes: usize,
+    ) -> Result<FaultPlan> {
+        if nodes == 0 {
+            return Err(Error::parse("fault plan needs >= 1 node".into()));
+        }
+        if !duration_s.is_finite() || duration_s <= 0.0 {
+            return Err(Error::parse(format!("bad fault horizon {duration_s}")));
+        }
+        let mut rng = Pcg32::new(seed, 0xFA17);
+        let mut spans: Vec<(usize, f64, f64)> = Vec::new(); // (node, down, up)
+        for _ in 0..episodes {
+            let node = rng.below(nodes);
+            let down = rng.f64() * 0.7 * duration_s;
+            let up = down + (0.05 + rng.f64() * 0.20) * duration_s;
+            let overlaps = spans
+                .iter()
+                .any(|&(n, d, u)| n == node && down < u && d < up);
+            if !overlaps {
+                spans.push((node, down, up));
+            }
+        }
+        let mut events = Vec::new();
+        for (node, down, up) in spans {
+            events.push(FaultEvent { at_s: down, node, kind: FaultKind::Down });
+            if up < duration_s {
+                events.push(FaultEvent { at_s: up, node, kind: FaultKind::Up });
+            }
+        }
+        FaultPlan::new(events)
+    }
+
+    /// The scripted events, time-sorted.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Largest node index referenced, if any — fleet construction
+    /// validates it against the actual node count.
+    pub fn max_node(&self) -> Option<usize> {
+        self.events.iter().map(|e| e.node).max()
+    }
+}
+
+/// One `"kind@seconds:node"` event, e.g. `"down@12.5:0"`.
+fn parse_event(s: &str) -> Result<FaultEvent> {
+    let bad = || Error::parse(format!("bad fault event {s:?} (want kind@seconds:node)"));
+    let (kind, rest) = s.split_once('@').ok_or_else(bad)?;
+    let kind = match kind.trim() {
+        "down" => FaultKind::Down,
+        "up" => FaultKind::Up,
+        _ => return Err(bad()),
+    };
+    let (at, node) = rest.split_once(':').ok_or_else(bad)?;
+    let at_s: f64 = at.trim().parse().map_err(|_| bad())?;
+    let node: usize = node.trim().parse().map_err(|_| bad())?;
+    Ok(FaultEvent { at_s, node, kind })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_toml_events_and_sorts() {
+        let doc = TomlDoc::parse(
+            "[faults]\nevents = [\"up@30:1\", \"down@12.5:1\", \"down@40:0\"]\n",
+        )
+        .unwrap();
+        let plan = FaultPlan::from_toml(&doc).unwrap();
+        let ev = plan.events();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0], FaultEvent { at_s: 12.5, node: 1, kind: FaultKind::Down });
+        assert_eq!(ev[1], FaultEvent { at_s: 30.0, node: 1, kind: FaultKind::Up });
+        assert_eq!(ev[2].kind, FaultKind::Down);
+        assert_eq!(plan.max_node(), Some(1));
+    }
+
+    #[test]
+    fn missing_section_is_empty_plan() {
+        let doc = TomlDoc::parse("[fleet]\nnodes = 4\n").unwrap();
+        assert!(FaultPlan::from_toml(&doc).unwrap().is_empty());
+        assert!(FaultPlan::none().is_empty());
+        assert_eq!(FaultPlan::none().max_node(), None);
+    }
+
+    #[test]
+    fn rejects_malformed_events() {
+        for bad in ["sideways@1:0", "down@x:0", "down@1:x", "down@1", "down"] {
+            let doc =
+                TomlDoc::parse(&format!("[faults]\nevents = [\"{bad}\"]\n")).unwrap();
+            assert!(FaultPlan::from_toml(&doc).is_err(), "{bad} must not parse");
+        }
+        assert!(FaultPlan::new(vec![FaultEvent {
+            at_s: f64::NAN,
+            node: 0,
+            kind: FaultKind::Down,
+        }])
+        .is_err());
+    }
+
+    #[test]
+    fn generator_is_deterministic_and_well_formed() {
+        let a = FaultPlan::generate(7, 4, 100.0, 3).unwrap();
+        let b = FaultPlan::generate(7, 4, 100.0, 3).unwrap();
+        assert_eq!(a, b, "same seed must script the same faults");
+        assert!(!a.is_empty());
+        // Per node, downs and ups strictly alternate (no double-down).
+        for node in 0..4 {
+            let mut down = false;
+            for e in a.events().iter().filter(|e| e.node == node) {
+                match e.kind {
+                    FaultKind::Down => {
+                        assert!(!down, "node {node} went down twice");
+                        down = true;
+                    }
+                    FaultKind::Up => {
+                        assert!(down, "node {node} came up while up");
+                        down = false;
+                    }
+                }
+            }
+        }
+        // Different seeds differ (overwhelmingly likely).
+        let c = FaultPlan::generate(8, 4, 100.0, 3).unwrap();
+        assert_ne!(a, c);
+        assert!(FaultPlan::generate(7, 0, 100.0, 1).is_err());
+        assert!(FaultPlan::generate(7, 4, f64::NAN, 1).is_err());
+    }
+}

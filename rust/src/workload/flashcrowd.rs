@@ -1,0 +1,264 @@
+//! Flash-crowd arrival source: a deterministic burst modulation layered
+//! on the exact-draw inhomogeneous sampler.
+//!
+//! A [`FlashCrowdSpec`] multiplies a per-model base rate table by a
+//! shared burst envelope — quiet at 1×, a sinusoidal ramp up to
+//! `peak_mult`, a plateau, and a symmetric ramp down (`ramp_s = 0`
+//! degenerates to a step) — the "correlated multi-model burst" shape
+//! the ROADMAP's millions-of-users scenario engine calls for. Each
+//! [`FlashCrowdSource`] wraps the *same* unit-rate-exposure sampler as
+//! [`VaryingSource`] (piecewise-constant over `step_s` windows, one
+//! `Pcg32` stream per model), so draws are exact, resumable, and
+//! byte-reproducible for a given seed, and every window's rate is
+//! validated up front exactly like [`varying_streams`].
+//!
+//! [`varying_streams`]: super::source::varying_streams
+
+use std::f64::consts::PI;
+
+use crate::error::Result;
+use crate::models::ModelId;
+
+use super::generator::{validate_duration, validate_rate, validate_step};
+use super::source::{ArrivalSource, DynSource, VaryingSource};
+
+/// Shape of a flash crowd over a base rate table. All models burst
+/// together (correlated), scaled by the same envelope.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FlashCrowdSpec {
+    /// Baseline rate (req/s) per model, `ModelId::index`-indexed.
+    pub base: [f64; 5],
+    /// Envelope multiplier at the crowd's peak (>= 1).
+    pub peak_mult: f64,
+    /// Burst onset (s).
+    pub t_start_s: f64,
+    /// Sinusoidal ramp length (s) on each side; 0 = step modulation.
+    pub ramp_s: f64,
+    /// Plateau at the peak (s).
+    pub hold_s: f64,
+}
+
+impl Default for FlashCrowdSpec {
+    fn default() -> Self {
+        FlashCrowdSpec {
+            base: [0.0; 5],
+            peak_mult: 3.0,
+            t_start_s: 0.0,
+            ramp_s: 0.0,
+            hold_s: 0.0,
+        }
+    }
+}
+
+impl FlashCrowdSpec {
+    /// The burst envelope at time `t_s`: 1.0 when quiet, `peak_mult` on
+    /// the plateau, half-sinusoid in between.
+    pub fn envelope(&self, t_s: f64) -> f64 {
+        let dt = t_s - self.t_start_s;
+        let end = 2.0 * self.ramp_s + self.hold_s;
+        if dt < 0.0 || dt >= end {
+            return 1.0;
+        }
+        let gain = self.peak_mult - 1.0;
+        let shape = if dt < self.ramp_s {
+            (PI / 2.0 * dt / self.ramp_s).sin()
+        } else if dt < self.ramp_s + self.hold_s {
+            1.0
+        } else {
+            (PI / 2.0 * (end - dt) / self.ramp_s).sin()
+        };
+        1.0 + gain * shape
+    }
+
+    /// Offered rate for `m` at time `t_s` (req/s).
+    pub fn rate_at(&self, m: ModelId, t_s: f64) -> f64 {
+        self.base[m.index()] * self.envelope(t_s)
+    }
+
+    /// Peak offered rate per model (the plateau level) — what a planner
+    /// would need to hold to serve the whole crowd within SLO.
+    pub fn peak_rates(&self) -> [f64; 5] {
+        let mut r = self.base;
+        r.iter_mut().for_each(|x| *x *= self.peak_mult);
+        r
+    }
+}
+
+/// One model's flash-crowd arrival stream — the exact-draw
+/// inhomogeneous sampler with the spec's envelope as its rate function.
+#[derive(Clone)]
+pub struct FlashCrowdSource {
+    inner: Box<dyn DynSource>,
+}
+
+impl FlashCrowdSource {
+    /// Crate-private like the other sources: external construction goes
+    /// through [`flashcrowd_streams`], which validates every window of
+    /// every model's rate up front.
+    pub(crate) fn new(
+        spec: FlashCrowdSpec,
+        model: ModelId,
+        duration_s: f64,
+        step_s: f64,
+        seed: u64,
+        stream: u64,
+    ) -> Self {
+        let inner = VaryingSource::new(
+            model,
+            move |m, t| spec.rate_at(m, t),
+            duration_s,
+            step_s,
+            seed,
+            stream,
+        );
+        FlashCrowdSource { inner: Box::new(inner) }
+    }
+}
+
+impl ArrivalSource for FlashCrowdSource {
+    fn next(&mut self) -> Option<(f64, ModelId)> {
+        self.inner.next()
+    }
+}
+
+/// Per-model flash-crowd streams over `spec` — one stream per model
+/// with a positive base rate, stream ids `i + 201` (disjoint from the
+/// Poisson `i + 1` and varying `i + 101` id spaces, so flash-crowd
+/// draws never collide with other sources on the same seed). The spec
+/// and every window's rate are validated here.
+pub fn flashcrowd_streams(
+    spec: &FlashCrowdSpec,
+    duration_s: f64,
+    step_s: f64,
+    seed: u64,
+) -> Result<Vec<FlashCrowdSource>> {
+    validate_duration(duration_s)?;
+    validate_step(step_s)?;
+    for (i, m) in ModelId::ALL.into_iter().enumerate() {
+        // Validate the base itself first: a negative or NaN base must
+        // error even though zero-base models emit no stream.
+        validate_rate(m, spec.base[i])?;
+        if spec.base[i] == 0.0 {
+            continue;
+        }
+        let mut win = 0u64;
+        loop {
+            let w0 = win as f64 * step_s;
+            if w0 >= duration_s {
+                break;
+            }
+            validate_rate(m, spec.rate_at(m, w0))?;
+            win += 1;
+        }
+    }
+    Ok(ModelId::ALL
+        .into_iter()
+        .enumerate()
+        .filter(|&(i, _)| spec.base[i] > 0.0)
+        .map(|(i, m)| {
+            FlashCrowdSource::new(*spec, m, duration_s, step_s, seed, i as u64 + 201)
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{dyn_sources, SourceMux};
+
+    fn spec() -> FlashCrowdSpec {
+        FlashCrowdSpec {
+            base: [100.0, 0.0, 40.0, 0.0, 20.0],
+            peak_mult: 3.0,
+            t_start_s: 10.0,
+            ramp_s: 5.0,
+            hold_s: 10.0,
+        }
+    }
+
+    #[test]
+    fn envelope_shape_is_quiet_ramp_peak_ramp_quiet() {
+        let s = spec();
+        assert_eq!(s.envelope(0.0), 1.0);
+        assert_eq!(s.envelope(9.999), 1.0);
+        let mid_ramp = s.envelope(12.5);
+        assert!(mid_ramp > 1.0 && mid_ramp < 3.0, "{mid_ramp}");
+        assert!((s.envelope(15.0) - 3.0).abs() < 1e-9);
+        assert!((s.envelope(20.0) - 3.0).abs() < 1e-9);
+        let falling = s.envelope(27.5);
+        assert!(falling > 1.0 && falling < 3.0, "{falling}");
+        assert_eq!(s.envelope(30.0), 1.0);
+        assert_eq!(s.envelope(1e9), 1.0);
+        // Step modulation: ramp_s = 0 jumps straight to the peak.
+        let step = FlashCrowdSpec { ramp_s: 0.0, hold_s: 10.0, ..s };
+        assert_eq!(step.envelope(9.999), 1.0);
+        assert!((step.envelope(10.0) - 3.0).abs() < 1e-9);
+        assert_eq!(step.envelope(20.0), 1.0);
+        assert_eq!(s.peak_rates(), [300.0, 0.0, 120.0, 0.0, 60.0]);
+    }
+
+    #[test]
+    fn draws_match_varying_streams_exactly() {
+        // The flash-crowd source IS the varying sampler with the
+        // envelope rate function — pin the byte-identity (modulo the
+        // disjoint stream-id space, reproduced here explicitly).
+        let s = spec();
+        let duration = 40.0;
+        let streamed = SourceMux::new(dyn_sources(
+            flashcrowd_streams(&s, duration, 1.0, 42).unwrap(),
+        ))
+        .materialize();
+        let models: Vec<ModelId> = ModelId::ALL
+            .into_iter()
+            .filter(|m| s.base[m.index()] > 0.0)
+            .collect();
+        let reference: Vec<_> = models
+            .iter()
+            .map(|&m| {
+                VaryingSource::new(
+                    m,
+                    move |mm, t| s.rate_at(mm, t),
+                    duration,
+                    1.0,
+                    42,
+                    m.index() as u64 + 201,
+                )
+            })
+            .collect();
+        let expect = SourceMux::new(dyn_sources(reference)).materialize();
+        assert_eq!(streamed, expect);
+        assert!(!streamed.is_empty());
+    }
+
+    #[test]
+    fn burst_windows_carry_more_arrivals_and_replay_identically() {
+        let s = spec();
+        let a = SourceMux::new(dyn_sources(flashcrowd_streams(&s, 40.0, 1.0, 7).unwrap()))
+            .materialize();
+        let b = SourceMux::new(dyn_sources(flashcrowd_streams(&s, 40.0, 1.0, 7).unwrap()))
+            .materialize();
+        assert_eq!(a, b, "same seed must replay byte-identically");
+        let quiet = a.iter().filter(|x| x.time_ms < 10_000.0).count() as f64 / 10.0;
+        let peak = a
+            .iter()
+            .filter(|x| (15_000.0..25_000.0).contains(&x.time_ms))
+            .count() as f64
+            / 10.0;
+        assert!(
+            peak > 2.0 * quiet,
+            "peak windows must burst: {peak:.1}/s vs quiet {quiet:.1}/s"
+        );
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let mut bad = spec();
+        bad.base[0] = f64::NAN;
+        assert!(flashcrowd_streams(&bad, 10.0, 1.0, 1).is_err());
+        let mut neg = spec();
+        neg.peak_mult = -4.0; // envelope dips negative mid-burst
+        assert!(flashcrowd_streams(&neg, 40.0, 1.0, 1).is_err());
+        assert!(flashcrowd_streams(&spec(), f64::NAN, 1.0, 1).is_err());
+        assert!(flashcrowd_streams(&spec(), 10.0, 0.0, 1).is_err());
+    }
+}

@@ -1,13 +1,17 @@
 //! Workload generation: Poisson request arrivals (materialized traces
 //! and pull-based streams), the paper's request scenarios (Table 5 +
-//! the 1,023-scenario population), and the Fig 14 rate-fluctuation
-//! traces.
+//! the 1,023-scenario population), the Fig 14 rate-fluctuation traces,
+//! flash-crowd burst sources, and scripted node-fault plans.
 
+pub mod fault;
+pub mod flashcrowd;
 pub mod generator;
 pub mod scenarios;
 pub mod source;
 pub mod trace;
 
+pub use fault::{FaultEvent, FaultKind, FaultPlan};
+pub use flashcrowd::{flashcrowd_streams, FlashCrowdSource, FlashCrowdSpec};
 pub use generator::{generate_arrivals, generate_varying, Arrival};
 pub use scenarios::{enumerate_all_scenarios, named_scenarios, Scenario};
 pub use source::{

@@ -4,7 +4,9 @@
 //! every arrival is served or dropped exactly once — never lost at a
 //! window cut or schedule swap, never served twice (the engine's
 //! debug-build double-serve guard arms inside these runs) — and the
-//! whole path is deterministic given a seed.
+//! whole path is deterministic given a seed. PR 9 adds the failure
+//! path: `ServingEngine::fail()` destroys work *counted* (the identity
+//! grows a `lost_to_failure` term), never silently.
 
 use gpulets::coordinator::{AdaptiveServer, ServingEngine, SimConfig, SwapMode};
 use gpulets::experiments::common::paper_ctx;
@@ -140,5 +142,64 @@ fn temporally_shared_schedule_conserves_across_mid_trace_swaps() {
             served as f64 > 0.8 * duration_s * 30.0,
             "{m}: only {served} served"
         );
+    }
+}
+
+#[test]
+fn node_failure_accounts_every_request_as_lost_dropped_or_served() {
+    // The PR 9 failure path through the raw `ServingEngine`: `fail()`
+    // mid-trace destroys queued + in-flight work (counted as
+    // `lost_to_failure`), arrivals routed to the downed node drop
+    // *counted* against the empty schedule, and a `Migrate` swap
+    // re-admits the node. The conservation identity becomes
+    // `injected == served + dropped + lost_to_failure`, exactly.
+    let duration_s = 12.0;
+    let rates = [120.0, 0.0, 0.0, 0.0, 40.0]; // lenet + vgg
+    let ctx = SchedCtx::new(2, None);
+    let schedule = ElasticPartitioning::gpulet()
+        .schedule(&ctx, &rates)
+        .expect("two GPUs hold lenet+vgg at these rates");
+
+    let lm = LatencyModel::new();
+    let gt = GroundTruth::default();
+    let cfg = SimConfig::default();
+    let streams = poisson_streams(
+        &[(ModelId::Lenet, 120.0), (ModelId::Vgg, 40.0)],
+        duration_s,
+        13,
+    )
+    .unwrap();
+    let mut eng = ServingEngine::new(&lm, &gt, schedule.clone(), duration_s, &cfg);
+    eng.attach_source(SourceMux::new(dyn_sources(streams)));
+    eng.run_until(4_000_000); // 4 s of healthy service
+    eng.fail(); // the node dies with work queued and in flight
+    eng.run_until(7_000_000); // 3 s down: arrivals drop counted
+    eng.swap_schedule(schedule, SwapMode::Migrate); // recovery
+    eng.run_stream();
+    eng.close();
+
+    let injected = eng.injected_per_model();
+    let mut total_lost = 0u64;
+    let mut total_dropped = 0u64;
+    for m in ModelId::ALL {
+        let (served, dropped, lost) = eng
+            .report()
+            .model(m)
+            .map_or((0, 0, 0), |mm| (mm.served, mm.dropped, mm.lost_to_failure));
+        assert_eq!(
+            served + dropped + lost,
+            injected[m.index()],
+            "{m}: served {served} + dropped {dropped} + lost {lost} != injected {}",
+            injected[m.index()]
+        );
+        total_lost += lost;
+        total_dropped += dropped;
+    }
+    assert!(total_lost > 0, "failing mid-trace must destroy in-progress work");
+    assert!(total_dropped > 0, "arrivals during the outage must drop counted");
+    // Both models are served again after the Migrate re-admission.
+    for m in [ModelId::Lenet, ModelId::Vgg] {
+        let served = eng.report().model(m).map_or(0, |mm| mm.served);
+        assert!(served > 0, "{m}: nothing served across the failure");
     }
 }

@@ -16,15 +16,29 @@
 //! Thread settings are process-global; these tests may race each
 //! other's `set_threads` calls benignly — results are thread-count
 //! invariant by design, which is exactly what is being asserted.
+//!
+//! PR 9 extends the battery with *faults*: node death/recovery and the
+//! admission gate must preserve both the per-model dealt identity
+//! (`offered == served + dropped + lost_to_failure`) and the gate
+//! identity (`demand == offered + shed`), and the whole fault timeline
+//! must stay byte-identical across worker counts — fault application is
+//! serial by construction, so a thread count must never shift *when* a
+//! node dies relative to the arrival stream. A `proptest_mini` sweep
+//! over randomly generated fault plans pins conservation for arbitrary
+//! outage patterns, not just the scripted ones.
 
 use gpulets::coordinator::{simulate_source, SimConfig};
-use gpulets::fleet::{FleetConfig, FleetEngine, FleetPlanner};
+use gpulets::fleet::{AdmissionMode, AdmissionSpec, FleetConfig, FleetEngine, FleetPlanner};
 use gpulets::interference::GroundTruth;
 use gpulets::models::ModelId;
 use gpulets::perfmodel::LatencyModel;
 use gpulets::sched::{ElasticPartitioning, SchedCtx};
 use gpulets::simclock::ms_to_us;
-use gpulets::workload::{dyn_sources, poisson_streams, DynSourceMux, SourceMux};
+use gpulets::util::proptest_mini;
+use gpulets::util::rng::Pcg32;
+use gpulets::workload::{
+    dyn_sources, poisson_streams, DynSourceMux, FaultEvent, FaultKind, FaultPlan, SourceMux,
+};
 
 fn mux_for(pairs: &[(ModelId, f64)], duration_s: f64, seed: u64) -> DynSourceMux {
     SourceMux::new(dyn_sources(poisson_streams(pairs, duration_s, seed).unwrap()))
@@ -32,17 +46,32 @@ fn mux_for(pairs: &[(ModelId, f64)], duration_s: f64, seed: u64) -> DynSourceMux
 
 fn assert_conserved_per_model(out: &gpulets::fleet::FleetOutcome) {
     let (served, dropped) = out.served_dropped();
+    let lost = out.lost_to_failure();
     for m in ModelId::ALL {
         let i = m.index();
         assert_eq!(
             out.offered[i],
-            served[i] + dropped[i],
-            "{m}: offered {} != served {} + dropped {}",
+            served[i] + dropped[i] + lost[i],
+            "{m}: offered {} != served {} + dropped {} + lost {}",
             out.offered[i],
             served[i],
-            dropped[i]
+            dropped[i],
+            lost[i]
         );
+        // Gate identity per model (degrades move accounting across
+        // models, so only exact when nothing was degraded).
+        if out.degraded == [0u64; 5] {
+            assert_eq!(
+                out.demand[i],
+                out.offered[i] + out.shed[i],
+                "{m}: demand {} != offered {} + shed {}",
+                out.demand[i],
+                out.offered[i],
+                out.shed[i]
+            );
+        }
     }
+    assert!(out.conserved(), "FleetOutcome::conserved must agree with the per-model check");
 }
 
 /// A 1-node fleet — windowed lockstep, router pass-through, report
@@ -290,4 +319,173 @@ fn parallel_advance_is_byte_identical_across_thread_counts() {
         }
     }
     gpulets::util::par::set_threads(0);
+}
+
+/// The PR 9 fault battery: a scripted down→up outage plus an armed shed
+/// gate must (a) conserve exactly under the extended identities, (b)
+/// actually lose work to the failure and serve again after recovery,
+/// and (c) remain *byte-identical* across worker counts {1, 2, 5} —
+/// fault application and gate decisions are serial, so the entire
+/// timeline (who died when, what was lost, what was shed) is a pure
+/// function of the seed and the fault plan.
+#[test]
+fn fault_timeline_is_byte_identical_across_thread_counts() {
+    let lm = LatencyModel::new();
+    let gt = GroundTruth::default();
+    let ctx = SchedCtx::new(4, None);
+    let scheduler = ElasticPartitioning::gpulet();
+    let rates = [300.0, 0.0, 90.0, 0.0, 60.0];
+    let pairs = [
+        (ModelId::Lenet, 300.0),
+        (ModelId::Resnet, 90.0),
+        (ModelId::Vgg, 60.0),
+    ];
+    let duration = 6.0;
+    let faults = FaultPlan::new(vec![
+        FaultEvent { at_s: 2.0, node: 1, kind: FaultKind::Down },
+        FaultEvent { at_s: 4.0, node: 1, kind: FaultKind::Up },
+    ])
+    .unwrap();
+
+    let outcome_bytes = |threads: usize| {
+        gpulets::util::par::set_threads(threads);
+        let planner = FleetPlanner::new(&ctx, &scheduler, 4);
+        let plan = planner.plan(&rates).unwrap();
+        let cfg = FleetConfig { window_s: 1.0, rebalance: true, ..Default::default() };
+        let mut fleet = FleetEngine::new(
+            &lm,
+            &gt,
+            planner,
+            plan,
+            mux_for(&pairs, duration, 23),
+            duration,
+            &cfg,
+        );
+        fleet.set_fault_plan(faults.clone()).unwrap();
+        fleet.set_admission(AdmissionSpec {
+            mode: AdmissionMode::Shed,
+            ..AdmissionSpec::default()
+        });
+        fleet.run(duration);
+        let out = fleet.finish();
+        assert_conserved_per_model(&out);
+        assert!(
+            out.lost_to_failure().iter().sum::<u64>() > 0,
+            "the outage must destroy queued/in-flight work"
+        );
+        assert_eq!(out.degraded, [0u64; 5], "shed mode never degrades");
+        // Node 1 served again after recovery: its whole-run report
+        // includes post-recovery service, so it served *something*
+        // despite losing its backlog at t=2 s.
+        let node1_served: u64 =
+            out.per_node[1].models().map(|(_, mm)| mm.served).sum();
+        assert!(node1_served > 0, "recovered node must serve again");
+        let mut s = out.report.to_json().to_string();
+        for r in &out.per_node {
+            s.push('\n');
+            s.push_str(&r.to_json().to_string());
+        }
+        s.push_str(&format!(
+            "\n{:?} {:?} {:?} {:?} {} {} {}",
+            out.demand,
+            out.offered,
+            out.shed,
+            out.lost_to_failure(),
+            out.rebalances,
+            out.replan_failures,
+            out.events_processed,
+        ));
+        s
+    };
+    let serial = outcome_bytes(1);
+    for threads in [2usize, 5] {
+        let parallel = outcome_bytes(threads);
+        assert_eq!(
+            serial, parallel,
+            "fault timeline diverged between 1 and {threads} workers"
+        );
+    }
+    gpulets::util::par::set_threads(0);
+}
+
+/// Conservation is not a property of *nice* fault scripts: randomly
+/// generated plans (arbitrary outage counts, overlaps resolved by the
+/// generator, nodes that never recover) must keep the ledger exact.
+#[test]
+fn prop_random_fault_plans_conserve() {
+    let lm = LatencyModel::new();
+    let gt = GroundTruth::default();
+    let ctx = SchedCtx::new(2, None);
+    let scheduler = ElasticPartitioning::gpulet();
+    let rates = [150.0, 0.0, 45.0, 0.0, 30.0];
+    let pairs = [
+        (ModelId::Lenet, 150.0),
+        (ModelId::Resnet, 45.0),
+        (ModelId::Vgg, 30.0),
+    ];
+    let duration = 3.0;
+    let nodes = 3usize;
+
+    #[derive(Clone, Debug)]
+    struct Case {
+        fault_seed: u64,
+        episodes: usize,
+    }
+    let gen = |rng: &mut Pcg32| Case {
+        fault_seed: rng.next_u64(),
+        episodes: 1 + rng.below(4),
+    };
+    let shrink = |c: &Case| {
+        if c.episodes > 1 {
+            vec![Case { fault_seed: c.fault_seed, episodes: c.episodes - 1 }]
+        } else {
+            Vec::new()
+        }
+    };
+    proptest_mini::run(
+        proptest_mini::Config { cases: 10, seed: 0xFA17, ..Default::default() },
+        gen,
+        shrink,
+        |case| {
+            let faults =
+                FaultPlan::generate(case.fault_seed, nodes, duration, case.episodes)
+                    .map_err(|e| e.to_string())?;
+            let planner = FleetPlanner::new(&ctx, &scheduler, nodes);
+            let plan = planner.plan(&rates).map_err(|e| e.to_string())?;
+            let cfg = FleetConfig { window_s: 0.5, rebalance: true, ..Default::default() };
+            let mut fleet = FleetEngine::new(
+                &lm,
+                &gt,
+                planner,
+                plan,
+                mux_for(&pairs, duration, 31),
+                duration,
+                &cfg,
+            );
+            fleet.set_fault_plan(faults).map_err(|e| e.to_string())?;
+            fleet.run(duration);
+            let out = fleet.finish();
+            let (served, dropped) = out.served_dropped();
+            let lost = out.lost_to_failure();
+            for m in ModelId::ALL {
+                let i = m.index();
+                if out.offered[i] != served[i] + dropped[i] + lost[i] {
+                    return Err(format!(
+                        "{m}: offered {} != served {} + dropped {} + lost {}",
+                        out.offered[i], served[i], dropped[i], lost[i]
+                    ));
+                }
+                if out.demand[i] != out.offered[i] + out.shed[i] {
+                    return Err(format!(
+                        "{m}: demand {} != offered {} + shed {}",
+                        out.demand[i], out.offered[i], out.shed[i]
+                    ));
+                }
+            }
+            if !out.conserved() {
+                return Err("FleetOutcome::conserved() == false".into());
+            }
+            Ok(())
+        },
+    );
 }
