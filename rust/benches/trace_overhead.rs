@@ -1,0 +1,12 @@
+//! Bench target for the telemetry layer: the same 2-node fleet run at
+//! three tracer settings (off / 1-in-1024 sampled / full capture);
+//! writes BENCH_trace_overhead.json (events/s and wall overhead per
+//! arm, trace-event counts, the results-identical and
+//! ledger-reconciles invariants). Diff across PRs with
+//! `gpulets bench-compare` — the traced arms must stay within noise of
+//! the untraced one.
+use gpulets::experiments::{common, trace_overhead};
+
+fn main() {
+    common::run_and_write(&trace_overhead::Experiment, 0, 1).expect("trace_overhead bench");
+}

@@ -9,7 +9,7 @@
 //! patterns at review time, as a blocking CI gate.
 //!
 //! Layout: [`lexer`] splits source lines into code/comment channels,
-//! [`rules`] holds the six checks, [`allowlist`] is the count-based
+//! [`rules`] holds the seven checks, [`allowlist`] is the count-based
 //! ratchet (`rust/lint_allow.toml`), [`report`] renders human and JSON
 //! output. `lint_tree` walks `<root>/src/**/*.rs` in sorted order —
 //! the lint's own output is deterministic, like everything else here.

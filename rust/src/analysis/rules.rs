@@ -1,4 +1,4 @@
-//! The six lint rules. Each is a line/region pass over the lexed
+//! The seven lint rules. Each is a line/region pass over the lexed
 //! code/comment channels of one file, except `registry-enrollment`,
 //! which is a cross-file structural check over `config.rs` and
 //! `sched/mod.rs`. DESIGN.md §11 catalogs what each rule pins and why.
@@ -13,6 +13,7 @@ pub const RULES: &[&str] = &[
     "safety-comment",
     "no-unwrap-in-lib",
     "no-alloc-region",
+    "no-wall-clock",
     "registry-enrollment",
 ];
 
@@ -61,6 +62,7 @@ pub fn check_file(relpath: &str, lines: &[Line]) -> Vec<Finding> {
     safety_comment(relpath, lines, &mut out);
     no_unwrap_in_lib(relpath, lines, &mut out);
     no_alloc_region(relpath, lines, &mut out);
+    no_wall_clock(relpath, lines, &mut out);
     out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
     out
 }
@@ -245,7 +247,39 @@ fn no_alloc_region(relpath: &str, lines: &[Line], out: &mut Vec<Finding>) {
     }
 }
 
-/// Rule 6 — `registry-enrollment`: every `Algo` enum variant must have
+/// Rule 6 — `no-wall-clock`: `std::time::Instant` / `SystemTime` are
+/// banned in library code. Everything on the serving path is stamped
+/// with integer-µs *sim* time (`simclock`) — a wall-clock read is
+/// either a determinism leak (results that vary run to run) or a
+/// measurement that belongs in a bench harness. The bench/CLI timing
+/// sites that legitimately read the wall clock are pinned in
+/// `lint_allow.toml`; `src/util/par.rs` (the worker pool) is exempt by
+/// scope, like the `benches/` tree.
+fn no_wall_clock(relpath: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    if !relpath.starts_with("src/") || relpath == "src/util/par.rs" {
+        return;
+    }
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for ty in ["Instant", "SystemTime"] {
+            if has_word(&line.code, ty) {
+                out.push(Finding::new(
+                    "no-wall-clock",
+                    relpath,
+                    i + 1,
+                    format!(
+                        "{ty} in library code; use simclock sim time, or allowlist a \
+                         bench-timing site with a reason"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Rule 7 — `registry-enrollment`: every `Algo` enum variant must have
 /// a `Algo::V => Box::new(CTOR)` arm in `config.rs`, and that exact
 /// constructor (whitespace-normalized) must appear in
 /// `sched::registry()`. This closes the PR 6 auto-enrollment loop
@@ -482,6 +516,28 @@ mod tests {
     fn unclosed_region_is_a_finding() {
         let fs = findings("src/x.rs", "// lint: no-alloc\nfn f() {}\n");
         assert!(fs.iter().any(|f| f.rule == "no-alloc-region" && f.line == 1));
+    }
+
+    #[test]
+    fn wall_clock_scoped_and_word_bounded() {
+        let src = "use std::time::Instant;\nfn f() { let t = Instant::now(); }\n";
+        assert_eq!(
+            findings("src/sched/x.rs", src)
+                .iter()
+                .filter(|f| f.rule == "no-wall-clock")
+                .count(),
+            2
+        );
+        // Exempt scopes: the worker pool, benches, tests.
+        assert!(findings("src/util/par.rs", src).iter().all(|f| f.rule != "no-wall-clock"));
+        assert!(findings("benches/x.rs", src).is_empty());
+        let test_src = "#[cfg(test)]\nmod t {\n use std::time::Instant;\n}\n";
+        assert!(findings("src/x.rs", test_src).is_empty());
+        // Word boundary: prose-ish identifiers and comments don't trip.
+        let near = "fn f() { let x = Instantiate::new(); } // Instant in comment\n";
+        assert!(findings("src/x.rs", near).iter().all(|f| f.rule != "no-wall-clock"));
+        let sys = "fn f() { let t = std::time::SystemTime::now(); }\n";
+        assert!(findings("src/x.rs", sys).iter().any(|f| f.rule == "no-wall-clock"));
     }
 
     #[test]

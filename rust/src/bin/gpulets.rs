@@ -7,10 +7,13 @@
 //! gpulets serve [--scenario <equal|long-only|short-skew|game|traffic|flashcrowd>]
 //!               [--scale K] [--config <toml>] [--algo A] [--gpus N] [--duration S]
 //!               [--seed X] [--rate model=R ...]
+//!               [--trace out.json [--trace-sample N]] [--gauges out.csv]
 //! gpulets fleet [--nodes N] [--rebalance S] [--scenario NAME] [--scale K]
 //!               [--seed X] [--algo A] [--gpus N] [--duration S] [--config <toml>]
-//!               [--admission <off|shed|degrade>] [--faults <toml>]
+//!               [--admission <off|shed|degrade>] [--faults <toml>|N]
 //!               [--fault-seed X [--fault-episodes N]]
+//!               [--trace out.json [--trace-sample N]] [--gauges out.csv]
+//! gpulets timeline <trace.json>            # summarize a saved trace
 //! gpulets serve-real [--artifacts DIR] [--duration S] [--rate M=R ...]
 //! gpulets experiment <fig3|...|fig16|tables|all>   # legacy alias of run-fig
 //! gpulets lint [path] [--json] [--fix-allowlist]   # static-analysis gate
@@ -35,6 +38,7 @@ use gpulets::interference::GroundTruth;
 use gpulets::models::ModelId;
 use gpulets::runtime::{Engine, ModelRegistry};
 use gpulets::sched::{SchedCtx, Scheduler};
+use gpulets::telemetry::{export, EventKind, Timeline, Tracer};
 use gpulets::util::benchkit;
 use gpulets::util::json::{obj, Json};
 use gpulets::workload::{
@@ -71,6 +75,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("serve") => serve(&args[1..]),
         Some("fleet") => fleet(&args[1..]),
         Some("serve-real") => serve_real(&args[1..]),
+        Some("timeline") => timeline_cmd(&args[1..]),
         Some("bench-compare") => bench_compare(&args[1..]),
         Some("lint") => lint_cmd(&args[1..]),
         Some("profile") => {
@@ -105,10 +110,13 @@ fn print_usage() {
          \x20 gpulets sweep [--scheduler NAME|all] [--gpus N] [--threads N]\n\
          \x20 gpulets serve [--scenario NAME] [--scale K] [--config F] [--algo A]\n\
          \x20               [--gpus N] [--duration S] [--seed X] [--rate model=R]...\n\
+         \x20               [--trace out.json [--trace-sample N]] [--gauges out.csv]\n\
          \x20 gpulets fleet [--nodes N] [--rebalance S] [--scenario NAME] [--scale K]\n\
          \x20               [--seed X] [--algo A] [--gpus N] [--duration S] [--config F]\n\
-         \x20               [--admission off|shed|degrade] [--faults F]\n\
+         \x20               [--admission off|shed|degrade] [--faults F|N]\n\
          \x20               [--fault-seed X [--fault-episodes N]]\n\
+         \x20               [--trace out.json [--trace-sample N]] [--gauges out.csv]\n\
+         \x20 gpulets timeline <trace.json>\n\
          \x20 gpulets serve-real [--artifacts DIR] [--duration S] [--rate model=R]...\n\
          \x20 gpulets experiment <fig3|...|fig16|tables|all> [--threads N]\n\
          \x20 gpulets bench-compare <baseline.json> <fresh.json>\n\
@@ -124,7 +132,9 @@ fn print_usage() {
          observed demand outgrows the plan (shed = refuse counted,\n\
          degrade = rewrite to the [admission] fallback.<model> from the\n\
          config, defaulting to lenet); --faults scripts node failures\n\
-         from a [faults] TOML section, --fault-seed generates them.\n\
+         from a [faults] TOML section (or, given a bare integer N,\n\
+         generates N seeded episodes); --fault-seed generates them\n\
+         from an explicit seed.\n\
          \n\
          --threads N caps the experiment worker pool (default: all\n\
          cores, or GPULETS_THREADS); results are byte-identical for\n\
@@ -135,6 +145,15 @@ fn print_usage() {
          (plain counts, no timing envelope). Both land in the CWD.\n\
          bench-compare diffs two BENCH files by bench name and prints\n\
          per-bench speedups (baseline mean / fresh mean).\n\
+         \n\
+         --trace records the request-lifecycle event stream (sim-time\n\
+         stamped, deterministic) and writes a Chrome trace-event JSON\n\
+         loadable in chrome://tracing or Perfetto; --trace-sample N\n\
+         keeps every Nth request span (hash-based, seedless — the exact\n\
+         event ledger rides along regardless); --gauges writes the\n\
+         per-window gauge series (queue depths, utilization, deals,\n\
+         admit fractions) as tidy CSV. `timeline` replays a saved\n\
+         trace file into a text summary.\n\
          \n\
          lint runs the determinism & soundness static-analysis pass\n\
          (DESIGN.md 11) over <path>/src (default: the rust/ crate) and\n\
@@ -238,6 +257,76 @@ fn set_threads_flag(val: &str) -> Result<()> {
 fn parse_num<T: std::str::FromStr>(flag: &str, val: &str, what: &str) -> Result<T> {
     val.parse()
         .map_err(|_| gpulets::Error::Other(format!("{flag} expects {what}")))
+}
+
+/// Ring capacity per tracer when `--trace`/`--gauges` is on. Overflow
+/// overwrites the oldest events; the export reports the count as
+/// `dropped_events` (the exact ledger is unaffected). Raise sampling
+/// (`--trace-sample`) rather than expecting an unbounded ring.
+const TRACE_CAP: usize = 1 << 18;
+
+/// The `--trace` / `--trace-sample` / `--gauges` flag trio shared by
+/// `serve` and `fleet`.
+#[derive(Default)]
+struct TraceOpts {
+    trace: Option<String>,
+    gauges: Option<String>,
+    sample: u64,
+}
+
+impl TraceOpts {
+    /// Recognize and absorb one of the trace flags.
+    fn apply(&mut self, flag: &str, val: &str) -> Result<bool> {
+        match flag {
+            "--trace" => self.trace = Some(val.to_string()),
+            "--gauges" => self.gauges = Some(val.to_string()),
+            "--trace-sample" => {
+                self.sample = parse_num::<u64>(flag, val, "an integer >= 1")?.max(1);
+            }
+            _ => return Ok(false),
+        }
+        Ok(true)
+    }
+
+    fn enabled(&self) -> bool {
+        self.trace.is_some() || self.gauges.is_some()
+    }
+
+    fn sample_n(&self) -> u64 {
+        self.sample.max(1)
+    }
+
+    /// Write whatever outputs were requested from the finished run's
+    /// timeline.
+    fn write(&self, tl: &Timeline) -> Result<()> {
+        if let Some(path) = &self.trace {
+            std::fs::write(path, export::chrome_trace(tl).to_string())?;
+            println!(
+                "[wrote {path}: {} trace events ({} lost to ring overflow), \
+                 {} gauge window(s) — load in chrome://tracing or Perfetto]",
+                tl.events.len(),
+                tl.dropped_events,
+                tl.windows.len(),
+            );
+        }
+        if let Some(path) = &self.gauges {
+            std::fs::write(path, export::gauges_csv(tl))?;
+            println!("[wrote {path}: {} gauge window(s) as tidy CSV]", tl.windows.len());
+        }
+        Ok(())
+    }
+}
+
+/// `gpulets timeline <trace.json>`: replay a saved Chrome-trace export
+/// into a text summary (ledger, per-track batch stats, fault markers).
+fn timeline_cmd(args: &[String]) -> Result<()> {
+    let Some(path) = args.first() else {
+        return Err(gpulets::Error::Other("timeline expects <trace.json>".into()));
+    };
+    let text = std::fs::read_to_string(path)?;
+    let doc = Json::parse(&text)?;
+    print!("{}", export::summarize(&doc)?);
+    Ok(())
 }
 
 /// Parse a trailing `--threads N` (the only flag `run-fig` takes) and
@@ -524,9 +613,13 @@ fn print_schedule(schedule: &gpulets::sched::Schedule, indent: &str) {
 fn serve(args: &[String]) -> Result<()> {
     let mut cfg = Config::default();
     let mut flashcrowd = false;
+    let mut trace = TraceOpts::default();
     parse_kv_flags(args, |flag, val| {
         if flag == "--scenario" && val == "flashcrowd" {
             flashcrowd = true;
+            return Ok(true);
+        }
+        if trace.apply(flag, val)? {
             return Ok(true);
         }
         apply_config_flag(&mut cfg, flag, val)
@@ -574,9 +667,20 @@ fn serve(args: &[String]) -> Result<()> {
         cfg.duration_s,
         &SimConfig { mode: cfg.share_mode, seed: cfg.seed, ..Default::default() },
     );
+    if trace.enabled() {
+        engine.set_tracer(Tracer::new(0, TRACE_CAP, trace.sample_n()));
+    }
     engine.attach_source(mux);
     engine.run_stream();
     engine.close();
+    if trace.enabled() {
+        // Single-server run: one tracer, no gauge windows (the
+        // per-window series is fleet-tier — `gpulets fleet --gauges`).
+        let mut tl = Timeline { sample_n: trace.sample_n(), ..Default::default() };
+        engine.tracer_mut().drain_into(&mut tl);
+        tl.sort_events();
+        trace.write(&tl)?;
+    }
     let report = engine.report();
     println!("\n{}", report.table());
     println!(
@@ -615,7 +719,12 @@ fn fleet(args: &[String]) -> Result<()> {
     let mut fault_seed: Option<u64> = None;
     let mut fault_episodes = 1usize;
     let mut faults_file: Option<String> = None;
-    parse_kv_flags(args, |flag, val| match flag {
+    let mut trace = TraceOpts::default();
+    parse_kv_flags(args, |flag, val| {
+        if trace.apply(flag, val)? {
+            return Ok(true);
+        }
+        match flag {
         "--nodes" => {
             cfg.fleet.nodes = parse_num::<usize>(flag, val, "an integer >= 1")?.max(1);
             Ok(true)
@@ -645,10 +754,19 @@ fn fleet(args: &[String]) -> Result<()> {
             Ok(true)
         }
         _ => apply_config_flag(&mut cfg, flag, val),
+        }
     })?;
-    if let Some(path) = &faults_file {
-        let text = std::fs::read_to_string(path)?;
-        cfg.faults = FaultPlan::from_toml(&gpulets::util::tomlmini::TomlDoc::parse(&text)?)?;
+    if let Some(spec) = &faults_file {
+        // `--faults N` (a bare integer) generates N outage episodes
+        // from the run seed; anything else is a [faults] TOML path.
+        if let Ok(episodes) = spec.parse::<usize>() {
+            cfg.faults =
+                FaultPlan::generate(cfg.seed, cfg.fleet.nodes, cfg.duration_s, episodes)?;
+        } else {
+            let text = std::fs::read_to_string(spec)?;
+            cfg.faults =
+                FaultPlan::from_toml(&gpulets::util::tomlmini::TomlDoc::parse(&text)?)?;
+        }
     } else if let Some(seed) = fault_seed {
         cfg.faults =
             FaultPlan::generate(seed, cfg.fleet.nodes, cfg.duration_s, fault_episodes)?;
@@ -726,6 +844,8 @@ fn fleet(args: &[String]) -> Result<()> {
         sim: SimConfig { mode: cfg.share_mode, seed: cfg.seed, ..Default::default() },
         window_s: if spec.rebalance_s > 0.0 { spec.rebalance_s } else { cfg.period_s },
         rebalance: spec.rebalance_s > 0.0,
+        trace_cap: if trace.enabled() { TRACE_CAP } else { 0 },
+        trace_sample: trace.sample_n(),
         ..Default::default()
     };
     let mut engine = FleetEngine::new(
@@ -799,7 +919,43 @@ fn fleet(args: &[String]) -> Result<()> {
         out.peak_live_events,
         out.peak_routed,
     );
+    if trace.enabled() {
+        trace.write(&out.timeline)?;
+        reconcile_trace(&out);
+    }
     Ok(())
+}
+
+/// Cross-check the trace's exact event ledger against the fleet's own
+/// counters — the two are kept by independent code paths (tracer hooks
+/// vs. router/report accounting), so agreement here means the trace is
+/// a faithful record of the run, not an approximation of it.
+fn reconcile_trace(out: &gpulets::fleet::FleetOutcome) {
+    let tl = &out.timeline;
+    let (served, dropped) = out.served_dropped();
+    let checks: [(&str, u64, u64); 7] = [
+        ("deal == dealt", tl.count(EventKind::Deal), out.offered.iter().sum()),
+        ("arrival == dealt", tl.count(EventKind::Arrival), out.offered.iter().sum()),
+        ("shed", tl.count(EventKind::Shed), out.shed.iter().sum()),
+        ("degrade", tl.count(EventKind::Degrade), out.degraded.iter().sum()),
+        ("batch-done == served", tl.count(EventKind::BatchDone), served.iter().sum()),
+        (
+            "drop + timeout == dropped",
+            tl.count(EventKind::Drop) + tl.count(EventKind::Timeout),
+            dropped.iter().sum(),
+        ),
+        ("lost", tl.count(EventKind::Lost), out.lost_to_failure().iter().sum()),
+    ];
+    let mut clean = true;
+    for (what, ledger, counter) in checks {
+        if ledger != counter {
+            println!("  trace ledger MISMATCH: {what}: {ledger} != {counter}");
+            clean = false;
+        }
+    }
+    if clean {
+        println!("  (trace ledger reconciles exactly with the fleet counters)");
+    }
 }
 
 /// Real serving on the PJRT CPU runtime (the `real` clock path). Without

@@ -120,6 +120,7 @@ use crate::models::{profile, ModelId};
 use crate::perfmodel::LatencyModel;
 use crate::sched::Schedule;
 use crate::simclock::{ms_to_us, us_to_ms, EventQueue, SimTimeUs};
+use crate::telemetry::{EventKind, LetQueueGauge, Tracer, NO_LET};
 use crate::util::rng::Pcg32;
 use crate::workload::{Arrival, DynSourceMux};
 
@@ -282,6 +283,11 @@ pub struct ServingEngine<'a> {
     /// Double-serve guard over engine tokens, populated only under
     /// debug_assertions.
     served_ids: BTreeSet<u64>,
+    /// Telemetry recorder (DESIGN.md §13). Defaults to `Tracer::off()`,
+    /// where every hook is a single predictable branch — the no-alloc
+    /// hot-loop contract holds with the hooks inlined. Span events are
+    /// keyed by the engine token (deterministic in pull order).
+    tracer: Tracer,
     closed: bool,
 }
 
@@ -326,6 +332,7 @@ impl<'a> ServingEngine<'a> {
             peak_live: 0,
             events_processed: 0,
             served_ids: BTreeSet::new(),
+            tracer: Tracer::off(),
             closed: false,
         };
         eng.install_schedule(schedule);
@@ -351,8 +358,56 @@ impl<'a> ServingEngine<'a> {
         self.peak_live = 0;
         self.events_processed = 0;
         self.served_ids.clear();
+        self.tracer = self.tracer.fresh();
         self.closed = false;
         self.install_schedule(schedule);
+    }
+
+    /// Install a telemetry recorder (default: disabled). The engine
+    /// stamps every event with the tracer's node index; the fleet gives
+    /// each node its own tracer so parallel advance never shares a sink.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
+    }
+
+    /// The telemetry recorder (ledger access).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Mutable recorder access — the fleet drains per-node rings
+    /// through this, serially, at merge points.
+    pub fn tracer_mut(&mut self) -> &mut Tracer {
+        &mut self.tracer
+    }
+
+    /// Append per-(gpu-let, model) queue depths in arena order
+    /// (let-major — deterministic) for the window gauge snapshot.
+    pub fn queue_gauges(&self, out: &mut Vec<LetQueueGauge>) {
+        for (li, lp) in self.schedule.lets.iter().enumerate() {
+            let base = self.asg_base[li];
+            for (ai, a) in lp.assignments.iter().enumerate() {
+                out.push(LetQueueGauge {
+                    let_idx: li as u32,
+                    model: a.model.index() as u8,
+                    depth: self.asgs[base + ai].queue.len() as u32,
+                });
+            }
+        }
+    }
+
+    /// Batches currently executing (≤ one per gpu-let).
+    pub fn in_flight_batches(&self) -> u64 {
+        self.lets.iter().filter(|l| l.busy).count() as u64
+    }
+
+    /// Share of gpu-lets mid-batch at this instant — the duty-cycle
+    /// utilization proxy the window gauges record.
+    pub fn busy_fraction(&self) -> f64 {
+        if self.lets.is_empty() {
+            return 0.0;
+        }
+        self.in_flight_batches() as f64 / self.lets.len() as f64
     }
 
     /// Attach a pull-based arrival source (replacing any previous one).
@@ -466,6 +521,7 @@ impl<'a> ServingEngine<'a> {
                     let token = self.next_token;
                     self.next_token += 1;
                     self.injected[a.model.index()] += 1;
+                    self.tracer.span(at, EventKind::Arrival, NO_LET, a.model, self.epoch, token);
                     self.route_request(token, a.model, at);
                 }
                 NextEvent::Timer(at, li, ai) => {
@@ -530,6 +586,7 @@ impl<'a> ServingEngine<'a> {
                     match mode {
                         SwapMode::Migrate => backlog.push((m, id, arr)),
                         SwapMode::DropQueued => {
+                            self.tracer.span(self.q.now_us(), EventKind::Drop, li as u32, m, self.epoch, id);
                             self.report.model_mut(m, slo_ms).record_drop()
                         }
                     }
@@ -538,6 +595,7 @@ impl<'a> ServingEngine<'a> {
         }
         self.epoch += 1;
         self.install_schedule(next);
+        self.tracer.mark(self.q.now_us(), EventKind::Swap, self.epoch, 0, 1);
         // Re-route oldest-first across ALL old queues (stable on the
         // deterministic collection order), so a target queue's head is
         // its oldest request and the duty timer — armed from the head's
@@ -598,28 +656,32 @@ impl<'a> ServingEngine<'a> {
         self.source = None;
         self.chunk.clear();
         self.chunk_pos = 0;
+        let now = self.q.now_us();
         for li in 0..self.lets.len() {
             let base = self.asg_base[li];
             for ai in 0..self.schedule.lets[li].assignments.len() {
                 let m = self.schedule.lets[li].assignments[ai].model;
                 let slo_ms = self.consts[base + ai].slo_ms;
                 let pos = self.route_pos[base + ai];
-                while self.asgs[base + ai].queue.pop_front().is_some() {
+                while let Some((id, _arr)) = self.asgs[base + ai].queue.pop_front() {
                     self.served[m.index()][pos] -= 1.0;
+                    self.tracer.span(now, EventKind::Drop, li as u32, m, self.epoch, id);
                     self.report.model_mut(m, slo_ms).record_drop();
                 }
             }
             let inflight = std::mem::take(&mut self.lets[li].inflight);
-            for (ai, _id, _arr) in inflight {
+            for (ai, id, _arr) in inflight {
                 let m = self.schedule.lets[li].assignments[ai].model;
                 let pos = self.route_pos[base + ai];
                 self.served[m.index()][pos] -= 1.0;
+                self.tracer.span(now, EventKind::Drop, li as u32, m, self.epoch, id);
                 self.report.model_mut(m, self.consts[base + ai].slo_ms).record_drop();
             }
         }
         let retired = std::mem::take(&mut self.retired);
-        for completions in retired.into_values() {
-            for (m, slo_ms, _id, _arr) in completions {
+        for ((ep, li), completions) in retired {
+            for (m, slo_ms, id, _arr) in completions {
+                self.tracer.span(now, EventKind::Drop, li as u32, m, ep, id);
                 self.report.model_mut(m, slo_ms).record_drop();
             }
         }
@@ -627,7 +689,8 @@ impl<'a> ServingEngine<'a> {
         // closes before running past the trace end) are drops too —
         // conservation must hold for every close point.
         while let Some((_, ev)) = self.q.pop() {
-            if let Event::Arrive { model, .. } = ev {
+            if let Event::Arrive { model, token } = ev {
+                self.tracer.span(now, EventKind::Drop, NO_LET, model, self.epoch, token);
                 self.report.model_mut(model, self.lm.slo_ms(model)).record_drop();
             }
         }
@@ -651,18 +714,25 @@ impl<'a> ServingEngine<'a> {
     /// harmless: they find no retired entry and fall through.
     pub fn fail(&mut self) {
         debug_assert!(!self.closed, "fail after finish/close");
+        let now = self.q.now_us();
         for li in 0..self.lets.len() {
             let base = self.asg_base[li];
             // In-flight batches die on the failed executor.
             let inflight = std::mem::take(&mut self.lets[li].inflight);
-            for (ai, _id, _arr) in inflight {
+            for (ai, id, _arr) in inflight {
                 let m = self.schedule.lets[li].assignments[ai].model;
+                self.tracer.batch(now, EventKind::Lost, li as u32, m, self.epoch, id, 1);
                 self.report.model_mut(m, self.consts[base + ai].slo_ms).record_lost();
             }
             // Queued backlog: nothing survives to migrate.
             for ai in 0..self.schedule.lets[li].assignments.len() {
                 let m = self.schedule.lets[li].assignments[ai].model;
                 let slo_ms = self.consts[base + ai].slo_ms;
+                let depth = self.asgs[base + ai].queue.len() as u32;
+                if depth > 0 {
+                    let id0 = self.asgs[base + ai].queue.front().map_or(0, |&(id, _)| id);
+                    self.tracer.batch(now, EventKind::Lost, li as u32, m, self.epoch, id0, depth);
+                }
                 while self.asgs[base + ai].queue.pop_front().is_some() {
                     self.report.model_mut(m, slo_ms).record_lost();
                 }
@@ -670,7 +740,10 @@ impl<'a> ServingEngine<'a> {
         }
         // Pre-failure retired batches (from earlier swaps) die too.
         let retired = std::mem::take(&mut self.retired);
-        for completions in retired.into_values() {
+        for ((ep, li), completions) in retired {
+            if let Some(&(m0, _, id0, _)) = completions.first() {
+                self.tracer.batch(now, EventKind::Lost, li as u32, m0, ep, id0, completions.len() as u32);
+            }
             for (m, slo_ms, _id, _arr) in completions {
                 self.report.model_mut(m, slo_ms).record_lost();
             }
@@ -679,9 +752,16 @@ impl<'a> ServingEngine<'a> {
         // with the node; `Done` events drain with them (their batches
         // were accounted above). The clock must not move — the node
         // keeps lockstepping with the fleet while down.
+        let mut heap_lost = [0u32; 5];
         for (_, ev) in self.q.drain_events() {
             if let Event::Arrive { model, .. } = ev {
+                heap_lost[model.index()] += 1;
                 self.report.model_mut(model, self.lm.slo_ms(model)).record_lost();
+            }
+        }
+        for m in ModelId::ALL {
+            if heap_lost[m.index()] > 0 {
+                self.tracer.batch(now, EventKind::Lost, NO_LET, m, self.epoch, 0, heap_lost[m.index()]);
             }
         }
         self.epoch += 1;
@@ -872,6 +952,7 @@ impl<'a> ServingEngine<'a> {
     fn handle(&mut self, now: SimTimeUs, ev: Event) {
         match ev {
             Event::Arrive { model, token } => {
+                self.tracer.span(now, EventKind::Arrival, NO_LET, model, self.epoch, token);
                 self.route_request(token, model, now);
             }
             Event::Done { epoch, let_idx } => {
@@ -879,6 +960,9 @@ impl<'a> ServingEngine<'a> {
                     // A pre-swap execution finishing under the old
                     // schedule's constants.
                     if let Some(completions) = self.retired.remove(&(epoch, let_idx)) {
+                        if let Some(&(m0, _, id0, _)) = completions.first() {
+                            self.tracer.batch(now, EventKind::BatchDone, let_idx as u32, m0, epoch, id0, completions.len() as u32);
+                        }
                         for (m, slo_ms, id, arr) in completions {
                             self.record_completion(id, m, slo_ms, arr, now);
                         }
@@ -893,6 +977,10 @@ impl<'a> ServingEngine<'a> {
                 let mut done = std::mem::take(&mut self.done_scratch);
                 std::mem::swap(&mut done, &mut self.lets[let_idx].inflight);
                 let base = self.asg_base[let_idx];
+                if let Some(&(ai0, id0, _)) = done.first() {
+                    let m0 = self.schedule.lets[let_idx].assignments[ai0].model;
+                    self.tracer.batch(now, EventKind::BatchDone, let_idx as u32, m0, epoch, id0, done.len() as u32);
+                }
                 for &(ai, id, arr) in &done {
                     let m = self.schedule.lets[let_idx].assignments[ai].model;
                     let slo_ms = self.consts[base + ai].slo_ms;
@@ -938,6 +1026,7 @@ impl<'a> ServingEngine<'a> {
     fn route_request(&mut self, id: u64, model: ModelId, arrival_us: SimTimeUs) {
         let m_idx = model.index();
         if self.routes[m_idx].is_empty() {
+            self.tracer.span(self.q.now_us(), EventKind::Drop, NO_LET, model, self.epoch, id);
             self.report.model_mut(model, self.lm.slo_ms(model)).record_drop();
             return;
         }
@@ -958,6 +1047,7 @@ impl<'a> ServingEngine<'a> {
         self.served[m_idx][pos] += 1.0;
         let aid = self.asg_base[li] + ai;
         self.asgs[aid].queue.push_back((id, arrival_us));
+        self.tracer.span(self.q.now_us(), EventKind::Enqueue, li as u32, model, self.epoch, id);
         let b_target = self.schedule.lets[li].assignments[ai].batch as usize;
         if !self.lets[li].busy && self.asgs[aid].queue.len() >= b_target {
             self.try_start(li);
@@ -992,9 +1082,17 @@ impl<'a> ServingEngine<'a> {
                 self.consts[base + ai];
             // Drop hopeless heads first: even starting right now, the
             // request would finish past its SLO.
+            let epoch = self.epoch;
+            let tracer = &mut self.tracer;
             let st = &mut self.asgs[base + ai];
             let before = st.queue.len();
-            st.queue.retain(|&(_, arr)| now + exec_est_us <= arr + slo_us);
+            st.queue.retain(|&(id, arr)| {
+                let keep = now + exec_est_us <= arr + slo_us;
+                if !keep {
+                    tracer.span(now, EventKind::Timeout, let_idx as u32, model, epoch, id);
+                }
+                keep
+            });
             let dropped = before - st.queue.len();
             if dropped > 0 {
                 // Dropped work no longer counts against the route.
@@ -1040,6 +1138,10 @@ impl<'a> ServingEngine<'a> {
             let (id, arr) =
                 self.asgs[base + ai].queue.pop_front().expect("batch underflow");
             self.lets[let_idx].inflight.push((ai, id, arr));
+        }
+        if let Some(&(_, id0, _)) = self.lets[let_idx].inflight.first() {
+            self.tracer.batch(now, EventKind::BatchForm, let_idx as u32, model, self.epoch, id0, b_actual);
+            self.tracer.batch(now, EventKind::BatchStart, let_idx as u32, model, self.epoch, id0, b_actual);
         }
 
         let p_me = self.schedule.lets[let_idx].spec.fraction();

@@ -21,6 +21,7 @@ pub mod fig16;
 pub mod fleet_scale;
 pub mod spacetime;
 pub mod tables;
+pub mod trace_overhead;
 
 use common::Runnable;
 
@@ -41,6 +42,7 @@ pub fn registry() -> Vec<Box<dyn Runnable>> {
         Box::new(fleet_scale::Experiment),
         Box::new(spacetime::Experiment),
         Box::new(fault_recovery::Experiment),
+        Box::new(trace_overhead::Experiment),
     ]
 }
 
@@ -67,15 +69,15 @@ mod tests {
     #[test]
     fn registry_names_and_files_are_unique() {
         let reg = registry();
-        assert_eq!(reg.len(), 13);
+        assert_eq!(reg.len(), 14);
         let mut names: Vec<&str> = reg.iter().map(|e| e.name()).collect();
         let mut files: Vec<&str> = reg.iter().map(|e| e.bench_file()).collect();
         names.sort_unstable();
         names.dedup();
         files.sort_unstable();
         files.dedup();
-        assert_eq!(names.len(), 13);
-        assert_eq!(files.len(), 13);
+        assert_eq!(names.len(), 14);
+        assert_eq!(files.len(), 14);
         assert!(files.iter().all(|f| f.starts_with("BENCH_") && f.ends_with(".json")));
     }
 

@@ -1,0 +1,244 @@
+//! Tracing overhead: the same fleet run at three telemetry settings —
+//! off (`trace_cap = 0`), sampled spans (1 in 1024), and full capture
+//! (every span) — reporting events/s per arm and the relative wall
+//! cost of turning the tracer on.
+//!
+//! Two invariants ride along with the timing and are asserted by the
+//! tests (and recorded in the payload):
+//!
+//! * **Results are tracing-independent.** The merged report JSON and
+//!   the routing counters are byte-identical across all three arms —
+//!   telemetry observes the run, it never perturbs it.
+//! * **The ledger reconciles.** The trace's exact event ledger (kept
+//!   pre-sampling, `n`-weighted) matches the fleet's own accounting:
+//!   `deal == dealt`, `batch-done == served`,
+//!   `drop + timeout == dropped`, `lost == lost_to_failure`. The two
+//!   sides are counted by independent code paths, so agreement means
+//!   the trace is a faithful record, not an approximation.
+
+use crate::config::Algo;
+use crate::fleet::{FleetConfig, FleetEngine, FleetOutcome, FleetPlanner};
+use crate::interference::GroundTruth;
+use crate::perfmodel::LatencyModel;
+use crate::sched::SchedCtx;
+use crate::telemetry::EventKind;
+use crate::util::json::{obj, Json};
+use crate::workload::{dyn_sources, poisson_streams, SourceMux};
+
+use super::common::{fitted_interference, Runnable, RunOutput};
+
+/// Nodes in the measured fleet.
+pub const NODES: usize = 2;
+
+/// Trace length (s) per arm.
+pub const DURATION_S: f64 = 120.0;
+
+/// Ring capacity per tracer in the traced arms (the CLI default).
+pub const TRACE_CAP: usize = 1 << 18;
+
+/// One telemetry setting's measured run.
+pub struct Arm {
+    pub label: &'static str,
+    /// Span-sampling modulus (0 = tracing off).
+    pub sample_n: u64,
+    pub outcome: FleetOutcome,
+    pub wall_s: f64,
+}
+
+/// Run the fixed workload (equal scenario scaled per node) under one
+/// telemetry setting.
+pub fn compute(
+    label: &'static str,
+    trace_cap: usize,
+    trace_sample: u64,
+    nodes: usize,
+    duration_s: f64,
+    seed: u64,
+) -> crate::error::Result<Arm> {
+    let rates = [50.0 * nodes as f64; 5];
+    let scheduler = Algo::Gpulet.scheduler();
+    let ctx = SchedCtx::new(
+        4,
+        if scheduler.interference_aware() { Some(fitted_interference()) } else { None },
+    );
+    let planner = FleetPlanner::new(&ctx, scheduler.as_ref(), nodes);
+    let plan = planner.plan(&rates)?;
+    let pairs: Vec<_> = crate::models::ModelId::ALL
+        .iter()
+        .map(|&m| (m, rates[m.index()]))
+        .collect();
+    let streams = poisson_streams(&pairs, duration_s, seed)?;
+    let lm = LatencyModel::new();
+    let gt = GroundTruth::default();
+    let cfg = FleetConfig { trace_cap, trace_sample, ..Default::default() };
+    let mut engine = FleetEngine::new(
+        &lm,
+        &gt,
+        planner,
+        plan,
+        SourceMux::new(dyn_sources(streams)),
+        duration_s,
+        &cfg,
+    );
+    let t0 = std::time::Instant::now();
+    engine.run(duration_s);
+    let outcome = engine.finish();
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(Arm { label, sample_n: if trace_cap == 0 { 0 } else { trace_sample }, outcome, wall_s })
+}
+
+/// The three arms, in fixed order: off, sampled (1/1024), full (1/1).
+pub fn arms(nodes: usize, duration_s: f64, seed: u64) -> crate::error::Result<Vec<Arm>> {
+    Ok(vec![
+        compute("off", 0, 1, nodes, duration_s, seed)?,
+        compute("sampled", TRACE_CAP, 1024, nodes, duration_s, seed)?,
+        compute("full", TRACE_CAP, 1, nodes, duration_s, seed)?,
+    ])
+}
+
+fn events_per_s(a: &Arm) -> f64 {
+    if a.wall_s > 0.0 {
+        a.outcome.events_processed as f64 / a.wall_s
+    } else {
+        0.0
+    }
+}
+
+/// Does the trace ledger agree with the fleet's own counters? (Always
+/// vacuously true for the untraced arm.)
+pub fn ledger_reconciles(out: &FleetOutcome) -> bool {
+    if out.timeline.is_empty() {
+        return true;
+    }
+    let tl = &out.timeline;
+    let (served, dropped) = out.served_dropped();
+    tl.count(EventKind::Deal) == out.offered.iter().sum::<u64>()
+        && tl.count(EventKind::Arrival) == out.offered.iter().sum::<u64>()
+        && tl.count(EventKind::Shed) == out.shed.iter().sum::<u64>()
+        && tl.count(EventKind::Degrade) == out.degraded.iter().sum::<u64>()
+        && tl.count(EventKind::BatchDone) == served.iter().sum::<u64>()
+        && tl.count(EventKind::Drop) + tl.count(EventKind::Timeout)
+            == dropped.iter().sum::<u64>()
+        && tl.count(EventKind::Lost) == out.lost_to_failure().iter().sum::<u64>()
+}
+
+/// Serving results must be identical whatever the tracer does.
+pub fn results_identical(arms: &[Arm]) -> bool {
+    arms.windows(2).all(|w| {
+        w[0].outcome.report.to_json().to_string() == w[1].outcome.report.to_json().to_string()
+            && w[0].outcome.offered == w[1].outcome.offered
+            && w[0].outcome.demand == w[1].outcome.demand
+    })
+}
+
+/// Wall overhead of `arm` relative to the first (off) arm, in percent.
+fn overhead_pct(arms: &[Arm], idx: usize) -> f64 {
+    let base = arms[0].wall_s;
+    if base > 0.0 {
+        100.0 * (arms[idx].wall_s - base) / base
+    } else {
+        0.0
+    }
+}
+
+pub fn render(arms: &[Arm]) -> String {
+    let mut s = format!(
+        "# trace_overhead: identical {NODES}-node fleet run ({DURATION_S:.0} s) at three \
+         telemetry settings\n\
+         arm       sample   events/s     wall_s   trace_events   dropped   reconciled\n",
+    );
+    for a in arms {
+        let sample = if a.sample_n == 0 { "-".to_string() } else { format!("1/{}", a.sample_n) };
+        s.push_str(&format!(
+            "{:<9} {:>6} {:>10.0} {:>10.3} {:>14} {:>9} {:>12}\n",
+            a.label,
+            sample,
+            events_per_s(a),
+            a.wall_s,
+            a.outcome.timeline.events.len(),
+            a.outcome.timeline.dropped_events,
+            if ledger_reconciles(&a.outcome) { "yes" } else { "NO" },
+        ));
+    }
+    s.push_str(&format!(
+        "overhead vs off: sampled {:+.1}%, full {:+.1}% wall\n\
+         results identical across arms: {}\n",
+        overhead_pct(arms, 1),
+        overhead_pct(arms, 2),
+        if results_identical(arms) { "yes" } else { "NO" },
+    ));
+    s
+}
+
+fn arm_json(a: &Arm) -> Json {
+    obj(vec![
+        ("arm", Json::Str(a.label.into())),
+        ("sample_n", Json::Num(a.sample_n as f64)),
+        ("wall_s", Json::Num(a.wall_s)),
+        ("events_per_s", Json::Num(events_per_s(a))),
+        ("events_processed", Json::Num(a.outcome.events_processed as f64)),
+        ("trace_events", Json::Num(a.outcome.timeline.events.len() as f64)),
+        ("dropped_events", Json::Num(a.outcome.timeline.dropped_events as f64)),
+        ("ledger_reconciles", Json::Bool(ledger_reconciles(&a.outcome))),
+    ])
+}
+
+/// Text + JSON for the CLI / bench harness.
+pub fn report() -> RunOutput {
+    let arms = arms(NODES, DURATION_S, 42).expect("equal scenario is plannable");
+    RunOutput {
+        text: render(&arms),
+        payload: obj(vec![
+            ("figure", Json::Str("trace_overhead".into())),
+            ("overhead_sampled_pct", Json::Num(overhead_pct(&arms, 1))),
+            ("overhead_full_pct", Json::Num(overhead_pct(&arms, 2))),
+            ("results_identical", Json::Bool(results_identical(&arms))),
+            ("arms", Json::Arr(arms.iter().map(arm_json).collect())),
+        ]),
+    }
+}
+
+/// Tracing overhead as a CLI/bench-drivable experiment.
+pub struct Experiment;
+
+impl Runnable for Experiment {
+    fn name(&self) -> &'static str {
+        "trace_overhead"
+    }
+    fn title(&self) -> &'static str {
+        "telemetry cost: off vs sampled vs full-capture tracing"
+    }
+    fn bench_file(&self) -> &'static str {
+        "BENCH_trace_overhead.json"
+    }
+    fn run(&self) -> RunOutput {
+        report()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracing_never_perturbs_results_and_ledger_reconciles() {
+        // A 1-node 30 s slice keeps the test quick; the full-size run
+        // is the bench / CLI target.
+        let arms = arms(1, 30.0, 7).unwrap();
+        assert_eq!(arms.len(), 3);
+        assert!(results_identical(&arms), "tracing changed the serving outcome");
+        for a in &arms {
+            assert!(a.outcome.conserved(), "arm {} lost requests", a.label);
+            assert!(ledger_reconciles(&a.outcome), "arm {} ledger mismatch", a.label);
+        }
+        // The off arm records nothing; the traced arms record the same
+        // exact ledger (sampling only thins the event stream).
+        assert!(arms[0].outcome.timeline.is_empty());
+        assert_eq!(arms[1].outcome.timeline.counts, arms[2].outcome.timeline.counts);
+        assert!(
+            arms[1].outcome.timeline.events.len() <= arms[2].outcome.timeline.events.len(),
+            "sampled arm recorded more events than full capture"
+        );
+        assert!(arms[2].outcome.timeline.count(EventKind::Deal) > 1_000);
+    }
+}

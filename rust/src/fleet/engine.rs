@@ -86,6 +86,7 @@ use crate::metrics::{CounterSnapshot, Report, WindowReport};
 use crate::models::ModelId;
 use crate::perfmodel::{LatencyModel, RateMonitor};
 use crate::simclock::{ms_to_us, SimTimeUs};
+use crate::telemetry::{EventKind, NodeGauges, Timeline, Tracer, WindowGauges, NO_NODE};
 use crate::util::par;
 use crate::workload::{Arrival, DynSourceMux, FaultKind, FaultPlan};
 
@@ -106,6 +107,14 @@ pub struct FleetConfig {
     pub ewma_alpha: f64,
     /// Rate-change threshold that triggers a re-plan.
     pub change_threshold: f64,
+    /// Telemetry ring capacity per tracer (router/fleet plus one per
+    /// node). 0 disables tracing entirely — every hook is a single
+    /// predictable branch and [`FleetOutcome::timeline`] stays empty.
+    pub trace_cap: usize,
+    /// Request-span sampling modulus: keep spans whose id hashes to
+    /// `0 mod trace_sample` (1 = keep everything). Batch, fault and
+    /// plan events are always kept; the event ledger is always exact.
+    pub trace_sample: u64,
 }
 
 impl Default for FleetConfig {
@@ -116,6 +125,8 @@ impl Default for FleetConfig {
             rebalance: true,
             ewma_alpha: 0.6,
             change_threshold: 0.10,
+            trace_cap: 0,
+            trace_sample: 1,
         }
     }
 }
@@ -178,6 +189,12 @@ pub struct FleetOutcome {
     /// High-water mark of router-staged arrivals awaiting a lockstep
     /// advance.
     pub peak_routed: usize,
+    /// The run's merged telemetry: time-ordered lifecycle events, the
+    /// exact event ledger, and the per-window gauge series. Empty when
+    /// `FleetConfig::trace_cap` is 0. Not part of the serving result —
+    /// the report/counter fields above are byte-identical with tracing
+    /// on or off.
+    pub timeline: Timeline,
 }
 
 impl FleetOutcome {
@@ -258,6 +275,12 @@ pub struct FleetEngine<'a> {
     /// placements by it).
     alive: Vec<bool>,
     replan_failures: u64,
+    /// Fleet-scope telemetry recorder (fault and re-plan marks).
+    tracer: Tracer,
+    /// Accumulating gauge windows; per-source events merge in at
+    /// `finish` (fleet, then router, then nodes ascending — a fixed
+    /// serial order, so the result is thread-count invariant).
+    timeline: Timeline,
 }
 
 impl<'a> FleetEngine<'a> {
@@ -281,12 +304,23 @@ impl<'a> FleetEngine<'a> {
             "plan/planner node counts must match (rebalance re-plans at the \
              planner's node count)"
         );
-        let nodes: Vec<ServingEngine<'a>> = plan
+        let mut nodes: Vec<ServingEngine<'a>> = plan
             .schedules
             .iter()
             .map(|s| ServingEngine::new(lm, gt, s.clone(), window_s, &cfg.sim))
             .collect();
-        let router = Router::new(source, &plan.node_rates);
+        let mut router = Router::new(source, &plan.node_rates);
+        let mut timeline = Timeline::default();
+        let mut tracer = Tracer::off();
+        if cfg.trace_cap > 0 {
+            let sample = cfg.trace_sample.max(1);
+            timeline.sample_n = sample;
+            tracer = Tracer::new(NO_NODE, cfg.trace_cap, sample);
+            router.set_tracer(Tracer::new(NO_NODE, cfg.trace_cap, sample));
+            for (ni, eng) in nodes.iter_mut().enumerate() {
+                eng.set_tracer(Tracer::new(ni as u32, cfg.trace_cap, sample));
+            }
+        }
         let n = nodes.len();
         let mut last_planned = [0.0; 5];
         for m in ModelId::ALL {
@@ -309,6 +343,8 @@ impl<'a> FleetEngine<'a> {
             fault_pos: 0,
             alive: vec![true; n],
             replan_failures: 0,
+            tracer,
+            timeline,
         }
     }
 
@@ -391,8 +427,10 @@ impl<'a> FleetEngine<'a> {
     /// routing, and re-plan the survivors for the demand the current
     /// plan was made for. Up: unmask and re-plan the full fleet. A
     /// failed re-plan keeps the stale plan serving (the dead node
-    /// still takes no new arrivals) and is counted + logged.
+    /// still takes no new arrivals) and is counted + traced
+    /// (`replan-failed`) — no stderr chatter; `--trace` captures it.
     fn apply_faults(&mut self, t_s: f64) {
+        let t_us = ms_to_us(t_s * 1000.0);
         while self.fault_pos < self.faults.events().len()
             && self.faults.events()[self.fault_pos].at_s <= t_s
         {
@@ -406,6 +444,7 @@ impl<'a> FleetEngine<'a> {
                     self.nodes[ev.node].fail();
                     self.alive[ev.node] = false;
                     self.router.set_alive(ev.node, false);
+                    self.tracer.mark(t_us, EventKind::NodeDown, 0, ev.node as u64, 1);
                 }
                 FaultKind::Up => {
                     if self.alive[ev.node] {
@@ -413,18 +452,15 @@ impl<'a> FleetEngine<'a> {
                     }
                     self.alive[ev.node] = true;
                     self.router.set_alive(ev.node, true);
+                    self.tracer.mark(t_us, EventKind::NodeUp, 0, ev.node as u64, 1);
                 }
             }
             let target = self.last_planned;
             match self.planner.plan_masked(&target, &self.alive) {
                 Ok(next) => self.install_plan(next),
-                Err(e) => {
+                Err(_) => {
                     self.replan_failures += 1;
-                    eprintln!(
-                        "fleet: node {} {:?} at {:.1}s — re-plan infeasible, keeping \
-                         current plan: {e}",
-                        ev.node, ev.kind, ev.at_s
-                    );
+                    self.tracer.mark(t_us, EventKind::ReplanFailed, 0, ev.node as u64, 1);
                 }
             }
         }
@@ -483,6 +519,17 @@ impl<'a> FleetEngine<'a> {
             peak += eng.peak_live_events();
             per_node.push(eng.report().clone());
         }
+        // Merge the per-source rings in a fixed serial order (fleet,
+        // router, nodes ascending), then stable-sort by timestamp: the
+        // merged stream is a pure function of (seed, plan, faults) —
+        // byte-identical for any worker-thread count.
+        let mut timeline = self.timeline;
+        self.tracer.drain_into(&mut timeline);
+        self.router.tracer_mut().drain_into(&mut timeline);
+        for eng in &mut self.nodes {
+            eng.tracer_mut().drain_into(&mut timeline);
+        }
+        timeline.sort_events();
         let mut report = Report::new(per_node.first().map_or(0.0, |r| r.window_s));
         for r in &per_node {
             report.merge(r);
@@ -498,6 +545,15 @@ impl<'a> FleetEngine<'a> {
                 report.model_mut(m, self.lm.slo_ms(m)).shed += shed[m.index()];
             }
         }
+        // Degradations likewise happen at the gate, under the original
+        // model — fold them in so the report's table/JSON show the same
+        // per-model counts as `FleetOutcome::degraded`.
+        let degraded = self.router.degraded_per_model();
+        for m in ModelId::ALL {
+            if degraded[m.index()] > 0 {
+                report.model_mut(m, self.lm.slo_ms(m)).degraded += degraded[m.index()];
+            }
+        }
         FleetOutcome {
             report,
             per_node,
@@ -505,13 +561,14 @@ impl<'a> FleetEngine<'a> {
             offered: self.router.offered_per_model(),
             demand: self.router.demand_per_model(),
             shed,
-            degraded: self.router.degraded_per_model(),
+            degraded,
             unplaced: self.router.unplaced_per_model(),
             rebalances: self.rebalances,
             replan_failures: self.replan_failures,
             events_processed: events,
             peak_live_events: peak,
             peak_routed: self.router.peak_buffered(),
+            timeline,
         }
     }
 
@@ -591,18 +648,18 @@ impl<'a> FleetEngine<'a> {
             // infeasible so a hopeless load doesn't re-plan every
             // window.
             let target = headroomed(&observed);
+            let boundary_us = ms_to_us((t_start_s + window_s) * 1000.0);
             match self.rebalance(&target) {
-                Ok(()) => rebalanced = true,
-                Err(e) => {
+                Ok(()) => {
+                    rebalanced = true;
+                    self.tracer.mark(boundary_us, EventKind::Rebalance, 0, 0, 1);
+                }
+                Err(_) => {
                     // The observed load outgrew the fleet: keep the
                     // stale plan serving, but never silently — count
-                    // it and say so.
+                    // it and trace it (`replan-failed`).
                     self.replan_failures += 1;
-                    eprintln!(
-                        "fleet: re-plan at {:.1}s infeasible, keeping current \
-                         plan: {e}",
-                        t_start_s + window_s
-                    );
+                    self.tracer.mark(boundary_us, EventKind::ReplanFailed, 0, 0, 1);
                 }
             }
             // The baseline tracks the *observed* rates either way, so
@@ -617,6 +674,30 @@ impl<'a> FleetEngine<'a> {
             capacity[m.index()] = self.plan.total_share(m);
         }
         self.router.update_admission(&observed, &capacity);
+        if self.tracer.enabled() {
+            // Gauge snapshot at the lockstep boundary: every node's
+            // queue depths / in-flight state observed at the same
+            // instant, in node order (deterministic).
+            let mut gauges = WindowGauges {
+                t_s: t_start_s + window_s,
+                alive: self.alive.iter().filter(|&&a| a).count() as u32,
+                deals: offered,
+                admit_frac: self.router.admit_fractions(),
+                nodes: Vec::with_capacity(self.nodes.len()),
+            };
+            for (ni, eng) in self.nodes.iter().enumerate() {
+                let mut ng = NodeGauges {
+                    node: ni as u32,
+                    alive: self.alive[ni],
+                    in_flight: eng.in_flight_batches(),
+                    util: eng.busy_fraction(),
+                    queues: Vec::new(),
+                };
+                eng.queue_gauges(&mut ng.queues);
+                gauges.nodes.push(ng);
+            }
+            self.timeline.windows.push(gauges);
+        }
         self.windows.push(FleetWindowStats {
             t_start_s,
             window_s,

@@ -50,6 +50,7 @@
 use crate::error::{Error, Result};
 use crate::models::ModelId;
 use crate::simclock::{ms_to_us, SimTimeUs};
+use crate::telemetry::{EventKind, TraceEvent, Tracer, NO_LET};
 use crate::workload::{Arrival, DynSourceMux};
 
 /// What the admission gate does with an over-quota arrival.
@@ -165,6 +166,10 @@ pub struct Router {
     /// Lifetime degraded counts per *original* model (diagnostic; the
     /// offered/served accounting lives under the fallback model).
     degraded: [u64; 5],
+    /// Telemetry recorder (router scope: gate verdicts and deals).
+    /// Span ids are the mux-assigned `Arrival::id` — a deterministic
+    /// function of (stream, seq) — so sampling is reproducible.
+    tracer: Tracer,
 }
 
 impl Router {
@@ -197,9 +202,28 @@ impl Router {
             shed: [0; 5],
             shed_window: [0; 5],
             degraded: [0; 5],
+            tracer: Tracer::off(),
         };
         r.retarget(node_rates);
         r
+    }
+
+    /// Install a telemetry recorder (default: disabled). Gate verdicts
+    /// (admit/shed/degrade) and deals are recorded at router scope;
+    /// `Deal` events carry the *target* node in their node field.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
+    }
+
+    /// The router's telemetry recorder (ledger access).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Mutable recorder access — the fleet drains the router ring
+    /// through this at merge points.
+    pub fn tracer_mut(&mut self) -> &mut Tracer {
+        &mut self.tracer
     }
 
     /// Install an admission policy (default: [`AdmissionMode::Off`]).
@@ -336,7 +360,9 @@ impl Router {
     pub fn deal_until(&mut self, t_us: SimTimeUs) {
         while self.mux.peek_time_ms().is_some_and(|t| ms_to_us(t) <= t_us) {
             let mut a = self.mux.pull().expect("peeked arrival vanished");
+            let at = ms_to_us(a.time_ms);
             let orig = a.model.index();
+            let orig_model = a.model;
             self.demand[orig] += 1;
             self.demand_window[orig] += 1;
             if self.admission.mode != AdmissionMode::Off {
@@ -349,15 +375,20 @@ impl Router {
                     (self.gate_seen[orig] as f64 * self.admit_frac[orig]).ceil() as u64;
                 if self.gate_admitted[orig] < quota {
                     self.gate_admitted[orig] += 1;
+                    self.tracer.span(at, EventKind::Admit, NO_LET, orig_model, 0, a.id);
                 } else {
                     match self.admission.fallback_for(a.model) {
                         Some(fb) if self.admission.mode == AdmissionMode::Degrade => {
                             a.model = fb;
                             self.degraded[orig] += 1;
+                            // The follow-up Deal (same id) carries the
+                            // fallback model the request continues as.
+                            self.tracer.span(at, EventKind::Degrade, NO_LET, orig_model, 0, a.id);
                         }
                         _ => {
                             self.shed[orig] += 1;
                             self.shed_window[orig] += 1;
+                            self.tracer.span(at, EventKind::Shed, NO_LET, orig_model, 0, a.id);
                             continue;
                         }
                     }
@@ -372,6 +403,16 @@ impl Router {
             if !self.placed[mi] {
                 self.unplaced[mi] += 1;
             }
+            self.tracer.emit(TraceEvent {
+                t_us: at,
+                kind: EventKind::Deal,
+                node: ni as u32,
+                let_idx: NO_LET,
+                model: mi as u8,
+                epoch: 0,
+                id: a.id,
+                n: 1,
+            });
             self.buffers[ni].push(a);
         }
         let buffered: usize = self.buffers.iter().map(Vec::len).sum();

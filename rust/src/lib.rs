@@ -49,6 +49,7 @@ pub mod perfmodel;
 pub mod runtime;
 pub mod sched;
 pub mod simclock;
+pub mod telemetry;
 pub mod util;
 pub mod workload;
 

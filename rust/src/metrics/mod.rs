@@ -16,6 +16,13 @@ pub struct ModelMetrics {
     pub dropped: u64,
     /// Requests refused at the admission gate (never dealt to a node).
     pub shed: u64,
+    /// Requests rewritten to a cheaper fallback model at the admission
+    /// gate, counted under the *original* model. Diagnostic only: the
+    /// serving outcome (served/dropped/lost) is accounted under the
+    /// fallback model, so `degraded` is not a conservation term and is
+    /// excluded from [`ModelMetrics::total`] and
+    /// [`ModelMetrics::admitted`].
+    pub degraded: u64,
     /// Requests destroyed by a node failure: queued backlog, in-flight
     /// batches, and staged arrivals on the node at the instant it died.
     pub lost_to_failure: u64,
@@ -31,6 +38,7 @@ impl ModelMetrics {
             violations: 0,
             dropped: 0,
             shed: 0,
+            degraded: 0,
             lost_to_failure: 0,
             hist: Histogram::new(0.5, 2000),
         }
@@ -56,6 +64,12 @@ impl ModelMetrics {
     /// against the SLO attainment of admitted traffic.
     pub fn record_shed(&mut self) {
         self.shed += 1;
+    }
+
+    /// Record a request rewritten to its fallback model at the gate
+    /// (counted under the original model; see the field doc).
+    pub fn record_degraded(&mut self) {
+        self.degraded += 1;
     }
 
     /// Record a request destroyed by a node failure (queued, staged, or
@@ -141,6 +155,7 @@ impl ModelMetrics {
         self.violations += other.violations;
         self.dropped += other.dropped;
         self.shed += other.shed;
+        self.degraded += other.degraded;
         self.lost_to_failure += other.lost_to_failure;
         self.hist.merge(&other.hist);
         // lint: end-no-alloc
@@ -262,25 +277,36 @@ impl Report {
                 .models
                 .iter()
                 .map(|(m, mm)| {
-                    (*m, (mm.served, mm.violations, mm.dropped, mm.shed, mm.lost_to_failure))
+                    (
+                        *m,
+                        (
+                            mm.served,
+                            mm.violations,
+                            mm.dropped,
+                            mm.shed,
+                            mm.degraded,
+                            mm.lost_to_failure,
+                        ),
+                    )
                 })
                 .collect(),
         }
     }
 
     /// The per-window delta view since `prev` (a snapshot taken at the
-    /// window start): served/violations/dropped/shed/lost per model
-    /// over the last `window_s` seconds.
+    /// window start): served/violations/dropped/shed/degraded/lost per
+    /// model over the last `window_s` seconds.
     pub fn snapshot_window(&self, prev: &CounterSnapshot, window_s: f64) -> WindowReport {
         let mut w = WindowReport { window_s, ..WindowReport::default() };
         for (m, mm) in &self.models {
-            let (ps, pv, pd, psh, pl) =
-                prev.rows.get(m).copied().unwrap_or((0, 0, 0, 0, 0));
+            let (ps, pv, pd, psh, pdg, pl) =
+                prev.rows.get(m).copied().unwrap_or((0, 0, 0, 0, 0, 0));
             let i = m.index();
             w.served[i] = mm.served - ps;
             w.violations[i] = mm.violations - pv;
             w.dropped[i] = mm.dropped - pd;
             w.shed[i] = mm.shed - psh;
+            w.degraded[i] = mm.degraded - pdg;
             w.lost[i] = mm.lost_to_failure - pl;
         }
         w
@@ -299,6 +325,7 @@ impl Report {
                     ("violations", Json::Num(mm.violations as f64)),
                     ("dropped", Json::Num(mm.dropped as f64)),
                     ("shed", Json::Num(mm.shed as f64)),
+                    ("degraded", Json::Num(mm.degraded as f64)),
                     ("lost_to_failure", Json::Num(mm.lost_to_failure as f64)),
                     ("p50_ms", Json::Num(mm.p50_ms())),
                     ("p99_ms", Json::Num(mm.p99_ms())),
@@ -317,18 +344,22 @@ impl Report {
         ])
     }
 
-    /// Pretty per-model table (used by the CLI and examples).
+    /// Pretty per-model table (used by the CLI and examples). Renders
+    /// the same counters as [`Report::to_json`] — shed, degraded, and
+    /// lost-to-failure included — so the text output of `gpulets fleet`
+    /// reconciles column-for-column with the JSON ledger.
     pub fn table(&self) -> String {
         let mut s = String::from(
-            "model           served  dropped   shed   lost  viol%   p50ms   p99ms    max\n",
+            "model           served  dropped   shed   degr   lost  viol%   p50ms   p99ms    max\n",
         );
         for (m, mm) in &self.models {
             s.push_str(&format!(
-                "{:<15} {:>6} {:>8} {:>6} {:>6} {:>6.2} {:>7.1} {:>7.1} {:>6.1}\n",
+                "{:<15} {:>6} {:>8} {:>6} {:>6} {:>6} {:>6.2} {:>7.1} {:>7.1} {:>6.1}\n",
                 m.name(),
                 mm.served,
                 mm.dropped,
                 mm.shed,
+                mm.degraded,
                 mm.lost_to_failure,
                 mm.violation_rate() * 100.0,
                 mm.p50_ms(),
@@ -345,9 +376,9 @@ impl Report {
 /// continuously-running engine.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct CounterSnapshot {
-    /// Per-model (served, violations, dropped, shed, lost_to_failure)
-    /// at snapshot time.
-    rows: BTreeMap<ModelId, (u64, u64, u64, u64, u64)>,
+    /// Per-model (served, violations, dropped, shed, degraded,
+    /// lost_to_failure) at snapshot time.
+    rows: BTreeMap<ModelId, (u64, u64, u64, u64, u64, u64)>,
 }
 
 /// One window's worth of serving outcomes (deltas between two
@@ -359,6 +390,10 @@ pub struct WindowReport {
     pub violations: [u64; 5],
     pub dropped: [u64; 5],
     pub shed: [u64; 5],
+    /// Gate degradations per *original* model (diagnostic — the
+    /// outcome is accounted under the fallback, so this is not part of
+    /// [`WindowReport::total`]).
+    pub degraded: [u64; 5],
     pub lost: [u64; 5],
 }
 
@@ -551,9 +586,13 @@ mod tests {
         mm.record_shed();
         mm.record_shed();
         mm.record_lost();
-        // Conservation total counts everything; admitted excludes shed.
+        mm.record_degraded();
+        // Conservation total counts everything; admitted excludes
+        // shed, and degraded is diagnostic-only (outcome accounted
+        // under the fallback model).
         assert_eq!(mm.total(), 6);
         assert_eq!(mm.admitted(), 4);
+        assert_eq!(mm.degraded, 1);
         // Violation rate is over admitted traffic: 1 violation + 1 drop
         // + 1 lost out of 4 admitted.
         assert!((mm.violation_rate() - 3.0 / 4.0).abs() < 1e-12);
@@ -564,16 +603,20 @@ mod tests {
         let mm = r.model_mut(ModelId::Lenet, 5.0);
         mm.record_shed();
         mm.record_lost();
+        mm.record_degraded();
         let w = r.snapshot_window(&snap, 10.0);
         assert_eq!(w.shed[ModelId::Lenet.index()], 1);
         assert_eq!(w.lost[ModelId::Lenet.index()], 1);
+        assert_eq!(w.degraded[ModelId::Lenet.index()], 1);
         let mut merged = Report::new(10.0);
         merged.merge(&r);
         let mm = merged.model(ModelId::Lenet).unwrap();
         assert_eq!(mm.shed, 3);
         assert_eq!(mm.lost_to_failure, 2);
+        assert_eq!(mm.degraded, 2);
         let j = merged.to_json().to_string();
         assert!(j.contains("\"shed\""));
+        assert!(j.contains("\"degraded\""));
         assert!(j.contains("\"lost_to_failure\""));
         assert!(j.contains("\"admitted_slo_attainment\""));
     }
@@ -584,6 +627,10 @@ mod tests {
         r.model_mut(ModelId::Lenet, 5.0).record(1.0);
         let t = r.table();
         assert!(t.contains("lenet"));
+        // The header carries every ledger counter the JSON does.
+        assert!(t.contains("degr"));
+        assert!(t.contains("shed"));
+        assert!(t.contains("lost"));
         assert!(t.lines().count() >= 2);
     }
 }

@@ -1,0 +1,521 @@
+//! Timeline exporters: Chrome trace-event JSON (`chrome://tracing` /
+//! Perfetto loadable), the tidy per-window gauge CSV, and the text
+//! summary behind `gpulets timeline`.
+//!
+//! Export runs once, after the sim — formatting here may allocate
+//! freely; the hot-path constraints live in [`super::Tracer`].
+//!
+//! Chrome mapping: one *process* per node (`pid = node + 1`; the
+//! router/fleet scope is `pid = 0`), one *thread* per gpu-let
+//! (`tid = let + 1`; node/fleet-scoped markers land on `tid = 0`).
+//! Batch executions become complete (`"ph":"X"`) slices by pairing
+//! each `batch-start` with the next `batch-done` on the same
+//! (node, gpu-let, model) — the engines retire batches FIFO per
+//! assignment, so the pairing is exact. Everything else becomes an
+//! instant (`"ph":"i"`). The exact event ledger, the sampling modulus
+//! and the gauge windows ride along as extra top-level keys, which
+//! Chrome ignores and `gpulets timeline` reads back.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::models::ModelId;
+use crate::util::json::{obj, Json};
+
+use super::{EventKind, Timeline, TraceEvent, WindowGauges, KINDS, NO_LET, NO_MODEL, NO_NODE};
+
+fn model_name(idx: u8) -> &'static str {
+    if (idx as usize) < ModelId::ALL.len() {
+        ModelId::from_index(idx as usize).name()
+    } else {
+        "-"
+    }
+}
+
+/// One event as a flat JSON object (the JSONL wire form). Sentinel
+/// fields are omitted.
+pub fn event_json(ev: &TraceEvent) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("t_us", Json::Num(ev.t_us as f64)),
+        ("kind", Json::Str(ev.kind.name().to_string())),
+        ("epoch", Json::Num(ev.epoch as f64)),
+        ("id", Json::Num(ev.id as f64)),
+        ("n", Json::Num(ev.n as f64)),
+    ];
+    if ev.node != NO_NODE {
+        fields.push(("node", Json::Num(ev.node as f64)));
+    }
+    if ev.let_idx != NO_LET {
+        fields.push(("let", Json::Num(ev.let_idx as f64)));
+    }
+    if ev.model != NO_MODEL {
+        fields.push(("model", Json::Str(model_name(ev.model).to_string())));
+    }
+    obj(fields)
+}
+
+/// The exact event ledger as a JSON object (kind name → count).
+pub fn ledger_json(counts: &[u64; KINDS]) -> Json {
+    obj(EventKind::ALL
+        .iter()
+        .map(|k| (k.name(), Json::Num(counts[*k as usize] as f64)))
+        .collect())
+}
+
+fn pid_of(node: u32) -> f64 {
+    if node == NO_NODE {
+        0.0
+    } else {
+        node as f64 + 1.0
+    }
+}
+
+fn tid_of(let_idx: u32) -> f64 {
+    if let_idx == NO_LET {
+        0.0
+    } else {
+        let_idx as f64 + 1.0
+    }
+}
+
+fn meta_event(pid: f64, tid: Option<f64>, what: &str, name: String) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(pid)),
+        ("name", Json::Str(what.to_string())),
+        ("args", obj(vec![("name", Json::Str(name))])),
+    ];
+    if let Some(tid) = tid {
+        fields.push(("tid", Json::Num(tid)));
+    }
+    obj(fields)
+}
+
+fn instant(ev: &TraceEvent) -> Json {
+    obj(vec![
+        ("name", Json::Str(ev.kind.name().to_string())),
+        ("cat", Json::Str(category(ev.kind).to_string())),
+        ("ph", Json::Str("i".to_string())),
+        ("s", Json::Str("p".to_string())),
+        ("ts", Json::Num(ev.t_us as f64)),
+        ("pid", Json::Num(pid_of(ev.node))),
+        ("tid", Json::Num(tid_of(ev.let_idx))),
+        ("args", instant_args(ev)),
+    ])
+}
+
+fn instant_args(ev: &TraceEvent) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("epoch", Json::Num(ev.epoch as f64)),
+        ("n", Json::Num(ev.n as f64)),
+    ];
+    match ev.kind {
+        EventKind::NodeDown | EventKind::NodeUp | EventKind::Rebalance | EventKind::ReplanFailed => {
+            fields.push(("node", Json::Num(ev.id as f64)));
+        }
+        _ => {
+            if ev.model != NO_MODEL {
+                fields.push(("model", Json::Str(model_name(ev.model).to_string())));
+            }
+            fields.push(("id", Json::Num(ev.id as f64)));
+        }
+    }
+    obj(fields)
+}
+
+fn category(kind: EventKind) -> &'static str {
+    match kind {
+        EventKind::Arrival | EventKind::Admit | EventKind::Shed | EventKind::Degrade | EventKind::Deal => "gate",
+        EventKind::Enqueue | EventKind::Drop | EventKind::Timeout => "queue",
+        EventKind::BatchForm | EventKind::BatchStart | EventKind::BatchDone => "batch",
+        EventKind::Lost | EventKind::NodeDown | EventKind::NodeUp => "fault",
+        EventKind::Swap | EventKind::ReplanFailed | EventKind::Rebalance => "plan",
+    }
+}
+
+/// Render a [`Timeline`] as a Chrome trace-event JSON document.
+pub fn chrome_trace(tl: &Timeline) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+
+    // Track naming: every (pid) and (pid, tid) seen in the stream.
+    let mut pids: BTreeMap<u64, ()> = BTreeMap::new();
+    let mut tids: BTreeMap<(u64, u64), ()> = BTreeMap::new();
+    for ev in &tl.events {
+        pids.insert(pid_of(ev.node) as u64, ());
+        tids.insert((pid_of(ev.node) as u64, tid_of(ev.let_idx) as u64), ());
+    }
+    for pid in pids.keys() {
+        let name = if *pid == 0 { "fleet/router".to_string() } else { format!("node {}", pid - 1) };
+        events.push(meta_event(*pid as f64, None, "process_name", name));
+    }
+    for (pid, tid) in tids.keys() {
+        let name = if *tid == 0 { "control".to_string() } else { format!("gpu-let {}", tid - 1) };
+        events.push(meta_event(*pid as f64, Some(*tid as f64), "thread_name", name));
+    }
+
+    // FIFO pairing of batch-start → batch-done per (node, let, model).
+    let mut open: BTreeMap<(u32, u32, u8), Vec<&TraceEvent>> = BTreeMap::new();
+    let mut slice = |start: &TraceEvent, end_us: u64, closed: bool| -> Json {
+        obj(vec![
+            ("name", Json::Str(format!("{}\u{00d7}{}", model_name(start.model), start.n))),
+            ("cat", Json::Str("batch".to_string())),
+            ("ph", Json::Str("X".to_string())),
+            ("ts", Json::Num(start.t_us as f64)),
+            ("dur", Json::Num(end_us.saturating_sub(start.t_us) as f64)),
+            ("pid", Json::Num(pid_of(start.node))),
+            ("tid", Json::Num(tid_of(start.let_idx))),
+            ("args", obj(vec![
+                ("model", Json::Str(model_name(start.model).to_string())),
+                ("size", Json::Num(start.n as f64)),
+                ("epoch", Json::Num(start.epoch as f64)),
+                ("closed", Json::Bool(closed)),
+            ])),
+        ])
+    };
+    let mut last_t = 0u64;
+    for ev in &tl.events {
+        last_t = last_t.max(ev.t_us);
+        let key = (ev.node, ev.let_idx, ev.model);
+        match ev.kind {
+            EventKind::BatchStart => open.entry(key).or_default().push(ev),
+            EventKind::BatchDone => {
+                let started = open.get_mut(&key).filter(|q| !q.is_empty()).map(|q| q.remove(0));
+                match started {
+                    Some(start) => events.push(slice(start, ev.t_us, true)),
+                    // A done without a start (ring overwrote it):
+                    // keep it visible as an instant.
+                    None => events.push(instant(ev)),
+                }
+            }
+            _ => events.push(instant(ev)),
+        }
+    }
+    // Batches still open at the end of the trace (lost to a node
+    // failure, or cut off by the horizon): zero-length open slices.
+    for starts in open.values() {
+        for start in starts {
+            events.push(slice(start, last_t, false));
+        }
+    }
+
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        ("ledger", ledger_json(&tl.counts)),
+        ("sample_n", Json::Num(tl.sample_n.max(1) as f64)),
+        ("dropped_events", Json::Num(tl.dropped_events as f64)),
+        ("gauges", Json::Arr(tl.windows.iter().map(window_json).collect())),
+    ])
+}
+
+fn window_json(w: &WindowGauges) -> Json {
+    let nodes: Vec<Json> = w
+        .nodes
+        .iter()
+        .map(|n| {
+            let queues: Vec<Json> = n
+                .queues
+                .iter()
+                .map(|q| {
+                    obj(vec![
+                        ("let", Json::Num(q.let_idx as f64)),
+                        ("model", Json::Str(model_name(q.model).to_string())),
+                        ("depth", Json::Num(q.depth as f64)),
+                    ])
+                })
+                .collect();
+            obj(vec![
+                ("node", Json::Num(n.node as f64)),
+                ("alive", Json::Bool(n.alive)),
+                ("in_flight", Json::Num(n.in_flight as f64)),
+                ("util", Json::Num(n.util)),
+                ("queues", Json::Arr(queues)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("t_s", Json::Num(w.t_s)),
+        ("alive", Json::Num(w.alive as f64)),
+        ("deals", Json::Arr(w.deals.iter().map(|&d| Json::Num(d as f64)).collect())),
+        ("admit_frac", Json::Arr(w.admit_frac.iter().map(|&f| Json::Num(f)).collect())),
+        ("nodes", Json::Arr(nodes)),
+    ])
+}
+
+/// Tidy (long-format) CSV of the per-window gauge series:
+/// `t_s,gauge,node,let,model,value` — one observation per row, empty
+/// fields where a dimension does not apply.
+pub fn gauges_csv(tl: &Timeline) -> String {
+    let mut out = String::from("t_s,gauge,node,let,model,value\n");
+    for w in &tl.windows {
+        let _ = writeln!(out, "{:.3},alive_nodes,,,,{}", w.t_s, w.alive);
+        for m in ModelId::ALL {
+            let i = m.index();
+            let _ = writeln!(out, "{:.3},deals,,,{},{}", w.t_s, m.name(), w.deals[i]);
+            let _ = writeln!(out, "{:.3},admit_frac,,,{},{:.6}", w.t_s, m.name(), w.admit_frac[i]);
+        }
+        for n in &w.nodes {
+            let _ = writeln!(out, "{:.3},in_flight,{},,,{}", w.t_s, n.node, n.in_flight);
+            let _ = writeln!(out, "{:.3},util,{},,,{:.6}", w.t_s, n.node, n.util);
+            for q in &n.queues {
+                let _ = writeln!(
+                    out,
+                    "{:.3},queue_depth,{},{},{},{}",
+                    w.t_s,
+                    n.node,
+                    q.let_idx,
+                    model_name(q.model),
+                    q.depth
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Replay a saved Chrome-trace document (the [`chrome_trace`] shape)
+/// into a text summary: the event ledger, per-track batch statistics,
+/// and the fault/plan marker timeline. This is `gpulets timeline`.
+pub fn summarize(doc: &Json) -> crate::error::Result<String> {
+    let events = doc
+        .get("traceEvents")
+        .map_err(|_| crate::error::Error::parse("not a trace file: no traceEvents key"))?
+        .as_arr()?;
+    let mut out = String::new();
+
+    // Ledger first — the exact counts, independent of sampling.
+    if let Some(ledger) = doc.opt("ledger") {
+        out.push_str("event ledger (exact, pre-sampling):\n");
+        for k in EventKind::ALL {
+            if let Some(c) = ledger.opt(k.name()).and_then(|v| v.as_f64().ok()) {
+                if c > 0.0 {
+                    let _ = writeln!(out, "  {:<16} {:>10}", k.name(), c as u64);
+                }
+            }
+        }
+    }
+    if let Some(n) = doc.opt("sample_n").and_then(|v| v.as_f64().ok()) {
+        let _ = writeln!(out, "span sampling: 1/{}", n as u64);
+    }
+    if let Some(d) = doc.opt("dropped_events").and_then(|v| v.as_f64().ok()) {
+        if d > 0.0 {
+            let _ = writeln!(out, "WARNING: ring overflow dropped {} events", d as u64);
+        }
+    }
+
+    // Per-track batch stats and the marker timeline.
+    #[derive(Default)]
+    struct Track {
+        batches: u64,
+        reqs: u64,
+        busy_us: f64,
+        t_max: f64,
+    }
+    let mut names: BTreeMap<(u64, u64), String> = BTreeMap::new();
+    let mut procs: BTreeMap<u64, String> = BTreeMap::new();
+    let mut tracks: BTreeMap<(u64, u64), Track> = BTreeMap::new();
+    let mut markers: Vec<(f64, String)> = Vec::new();
+    let mut instants = 0u64;
+    for ev in events {
+        let ph = ev.opt("ph").and_then(|p| p.as_str().ok()).unwrap_or("");
+        let pid = ev.opt("pid").and_then(|p| p.as_f64().ok()).unwrap_or(0.0) as u64;
+        let tid = ev.opt("tid").and_then(|p| p.as_f64().ok()).unwrap_or(0.0) as u64;
+        let name = ev.opt("name").and_then(|p| p.as_str().ok()).unwrap_or("");
+        match ph {
+            "M" => {
+                let label = ev
+                    .opt("args")
+                    .and_then(|a| a.opt("name"))
+                    .and_then(|n| n.as_str().ok())
+                    .unwrap_or("")
+                    .to_string();
+                if name == "process_name" {
+                    procs.insert(pid, label);
+                } else if name == "thread_name" {
+                    names.insert((pid, tid), label);
+                }
+            }
+            "X" => {
+                let ts = ev.opt("ts").and_then(|p| p.as_f64().ok()).unwrap_or(0.0);
+                let dur = ev.opt("dur").and_then(|p| p.as_f64().ok()).unwrap_or(0.0);
+                let size = ev
+                    .opt("args")
+                    .and_then(|a| a.opt("size"))
+                    .and_then(|s| s.as_f64().ok())
+                    .unwrap_or(0.0);
+                let t = tracks.entry((pid, tid)).or_default();
+                t.batches += 1;
+                t.reqs += size as u64;
+                t.busy_us += dur;
+                t.t_max = t.t_max.max(ts + dur);
+            }
+            "i" => {
+                instants += 1;
+                let cat = ev.opt("cat").and_then(|c| c.as_str().ok()).unwrap_or("");
+                if cat == "fault" || cat == "plan" {
+                    let ts = ev.opt("ts").and_then(|p| p.as_f64().ok()).unwrap_or(0.0);
+                    let node = ev
+                        .opt("args")
+                        .and_then(|a| a.opt("node"))
+                        .and_then(|n| n.as_f64().ok());
+                    let who = match node {
+                        Some(n) => format!("{name} node {}", n as u64),
+                        None => name.to_string(),
+                    };
+                    markers.push((ts, who));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    if !tracks.is_empty() {
+        out.push_str("\nper-track batch execution:\n");
+        let _ = writeln!(
+            out,
+            "  {:<14} {:<10} {:>8} {:>10} {:>12} {:>7}",
+            "process", "track", "batches", "requests", "busy ms", "busy%"
+        );
+        for ((pid, tid), t) in &tracks {
+            let pname = procs.get(pid).cloned().unwrap_or_else(|| format!("pid {pid}"));
+            let tname = names.get(&(*pid, *tid)).cloned().unwrap_or_else(|| format!("tid {tid}"));
+            let busy_pct = if t.t_max > 0.0 { 100.0 * t.busy_us / t.t_max } else { 0.0 };
+            let _ = writeln!(
+                out,
+                "  {:<14} {:<10} {:>8} {:>10} {:>12.1} {:>6.1}%",
+                pname,
+                tname,
+                t.batches,
+                t.reqs,
+                t.busy_us / 1000.0,
+                busy_pct
+            );
+        }
+    }
+    let _ = writeln!(out, "\n{} instant event(s) in the stream", instants);
+
+    markers.sort_by(|a, b| a.0.total_cmp(&b.0));
+    if !markers.is_empty() {
+        out.push_str("fault / plan timeline:\n");
+        for (ts, who) in &markers {
+            let _ = writeln!(out, "  {:>10.1} ms  {}", ts / 1000.0, who);
+        }
+    }
+    if let Some(gauges) = doc.opt("gauges").and_then(|g| g.as_arr().ok()) {
+        let _ = writeln!(out, "{} gauge window(s) recorded (export CSV with --gauges)", gauges.len());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Tracer;
+
+    fn demo_timeline() -> Timeline {
+        let mut t = Tracer::new(0, 1 << 10, 1);
+        t.span(100, EventKind::Enqueue, 2, ModelId::Resnet, 1, 7);
+        t.batch(200, EventKind::BatchStart, 2, ModelId::Resnet, 1, 0, 8);
+        t.batch(900, EventKind::BatchDone, 2, ModelId::Resnet, 1, 0, 8);
+        t.batch(950, EventKind::BatchStart, 2, ModelId::Resnet, 1, 1, 4);
+        t.mark(1000, EventKind::NodeDown, 1, 0, 1);
+        let mut f = Tracer::new(NO_NODE, 1 << 10, 1);
+        f.mark(1500, EventKind::Rebalance, 2, 0, 1);
+        let mut tl = Timeline { sample_n: 1, ..Default::default() };
+        f.drain_into(&mut tl);
+        t.drain_into(&mut tl);
+        tl.sort_events();
+        tl.windows.push(WindowGauges {
+            t_s: 2.0,
+            alive: 1,
+            deals: [3, 0, 5, 0, 0],
+            admit_frac: [1.0; 5],
+            nodes: vec![super::super::NodeGauges {
+                node: 0,
+                alive: true,
+                in_flight: 1,
+                util: 0.5,
+                queues: vec![super::super::LetQueueGauge { let_idx: 2, model: 2, depth: 4 }],
+            }],
+        });
+        tl
+    }
+
+    #[test]
+    fn chrome_trace_pairs_batches_and_parses_back() {
+        let tl = demo_timeline();
+        let doc = chrome_trace(&tl);
+        let parsed = Json::parse(&doc.to_string()).expect("chrome doc parses");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // One closed X slice (200..900) and one open X slice.
+        let slices: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.opt("ph").and_then(|p| p.as_str().ok()) == Some("X"))
+            .collect();
+        assert_eq!(slices.len(), 2, "{doc}");
+        let closed = slices
+            .iter()
+            .find(|s| {
+                s.opt("args").and_then(|a| a.opt("closed")).and_then(|c| c.as_bool().ok())
+                    == Some(true)
+            })
+            .expect("closed slice");
+        assert_eq!(closed.get("ts").unwrap().as_f64().unwrap(), 200.0);
+        assert_eq!(closed.get("dur").unwrap().as_f64().unwrap(), 700.0);
+        // Ledger rode along and reconciles with the tracer counts.
+        let ledger = parsed.get("ledger").unwrap();
+        assert_eq!(ledger.get("enqueue").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(ledger.get("batch-done").unwrap().as_f64().unwrap(), 8.0);
+        // Process/thread naming metadata present.
+        assert!(doc.to_string().contains("gpu-let 2"));
+        assert!(doc.to_string().contains("fleet/router"));
+    }
+
+    #[test]
+    fn summary_reads_its_own_export() {
+        let tl = demo_timeline();
+        let doc = chrome_trace(&tl);
+        let text = summarize(&doc).expect("summarize own export");
+        assert!(text.contains("event ledger"), "{text}");
+        assert!(text.contains("node-down"), "{text}");
+        assert!(text.contains("rebalance"), "{text}");
+        assert!(text.contains("batches"), "{text}");
+        assert!(text.contains("1 gauge window"), "{text}");
+        // Not a trace file → proper error, not a panic.
+        assert!(summarize(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn gauge_csv_is_tidy_and_complete() {
+        let tl = demo_timeline();
+        let csv = gauges_csv(&tl);
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some("t_s,gauge,node,let,model,value"));
+        assert!(csv.contains("2.000,alive_nodes,,,,1"), "{csv}");
+        assert!(csv.contains("2.000,queue_depth,0,2,resnet,4"), "{csv}");
+        assert!(csv.contains("2.000,deals,,,lenet,3"), "{csv}");
+        assert!(csv.contains("2.000,in_flight,0,,,1"), "{csv}");
+        // Every row has exactly 5 commas (6 columns).
+        for line in csv.lines() {
+            assert_eq!(line.matches(',').count(), 5, "{line}");
+        }
+    }
+
+    #[test]
+    fn event_json_omits_sentinels() {
+        let ev = TraceEvent {
+            t_us: 9,
+            kind: EventKind::Swap,
+            node: 3,
+            let_idx: NO_LET,
+            model: NO_MODEL,
+            epoch: 2,
+            id: 0,
+            n: 1,
+        };
+        let s = event_json(&ev).to_string();
+        assert!(s.contains("\"node\""), "{s}");
+        assert!(!s.contains("\"let\""), "{s}");
+        assert!(!s.contains("\"model\""), "{s}");
+    }
+}

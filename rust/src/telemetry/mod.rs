@@ -1,0 +1,607 @@
+//! Deterministic, sim-time-stamped telemetry (DESIGN.md §13).
+//!
+//! The serving stack's central claim — bounded latency under SLO
+//! constraints while gpu-lets are repartitioned — is only debuggable
+//! with per-request and per-window visibility. This module is that
+//! layer: typed lifecycle events ([`TraceEvent`]) recorded through a
+//! [`TraceSink`] by the engines (`coordinator::engine`,
+//! `fleet::router`, `fleet::engine`), per-window gauge series
+//! ([`WindowGauges`]) snapshotted at lockstep boundaries, and a merged
+//! [`Timeline`] appended to `FleetOutcome` that the exporters in
+//! [`export`] turn into a Chrome-trace JSON or a tidy gauge CSV.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Sim time only.** Every timestamp is the integer-µs sim clock
+//!    (`simclock::SimTimeUs`). Wall clocks are banned from the serving
+//!    layers by the `no-wall-clock` lint rule, so telemetry can never
+//!    silently drift from the clock the SLO accounting uses.
+//! 2. **Free when off.** A disabled [`Tracer`] costs one predictable
+//!    branch per hook and allocates nothing — the PR 7 `// lint:
+//!    no-alloc` hot-loop regions hold with the hooks inlined, and
+//!    `benches/trace_overhead.rs` pins the throughput claim.
+//! 3. **Deterministic across thread counts.** Each node engine records
+//!    into its *own* ring; the fleet merges the per-node buffers in
+//!    node order and stable-sorts by timestamp, so the merged event
+//!    stream is a pure function of (seed, plan, fault script) — byte
+//!    identical for any `util::par` worker count.
+//! 4. **Sampling without RNG.** Request spans are kept when
+//!    `splitmix64(request id) % sample_n == 0`. The id is assigned by
+//!    the arrival mux in merged order (a deterministic function of the
+//!    per-stream draws), so the sampled subset is the same on every
+//!    run and every thread count — no RNG state, no coordination.
+//!
+//! Ledger invariant: [`Tracer::emit`] counts every *logical* event
+//! (weight `n`) before sampling drops any span, so
+//! [`Timeline::counts`] reconciles exactly with the run's
+//! `FleetOutcome` counters even under heavy sampling; only the
+//! materialized event list thins out.
+
+pub mod export;
+
+use crate::models::ModelId;
+use crate::simclock::SimTimeUs;
+
+/// Sentinel: event not attributed to a node (router / fleet scope).
+pub const NO_NODE: u32 = u32::MAX;
+/// Sentinel: event not attributed to a gpu-let.
+pub const NO_LET: u32 = u32::MAX;
+/// Sentinel: event not attributed to a model.
+pub const NO_MODEL: u8 = u8::MAX;
+
+/// Number of event kinds (the size of a ledger array).
+pub const KINDS: usize = 17;
+
+/// Typed lifecycle event kinds — the full catalog (DESIGN.md §13).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum EventKind {
+    /// A request entered the system (router demand, or engine injection
+    /// when no router is in front).
+    Arrival = 0,
+    /// Admission gate verdict: admitted as-is.
+    Admit,
+    /// Admission gate verdict: shed (rejected up front).
+    Shed,
+    /// Admission gate verdict: degraded to a cheaper fallback model
+    /// (`model` is the original; the follow-up `Deal` with the same id
+    /// carries the fallback).
+    Degrade,
+    /// Router dealt the request to `node`.
+    Deal,
+    /// Engine accepted the request into a (gpu-let, model) queue.
+    Enqueue,
+    /// A batch was formed from queue heads (`n` = batch size).
+    BatchForm,
+    /// A batch began executing on its gpu-let (`n` = batch size).
+    BatchStart,
+    /// A batch retired (`n` = batch size).
+    BatchDone,
+    /// A request was dropped (no route for its model, or engine close).
+    Drop,
+    /// A request was dropped because its deadline became hopeless.
+    Timeout,
+    /// Work destroyed by a node failure (`n` = requests lost).
+    Lost,
+    /// An epoch-tagged schedule swap on a node (`epoch` = new epoch).
+    Swap,
+    /// A node was killed at a lockstep boundary.
+    NodeDown,
+    /// A node recovered at a lockstep boundary.
+    NodeUp,
+    /// A failover / rebalance re-plan came back infeasible; the fleet
+    /// kept the current plan (was an `eprintln!` before PR 10).
+    ReplanFailed,
+    /// The fleet re-planned from observed rates and retargeted routing.
+    Rebalance,
+}
+
+impl EventKind {
+    /// Every kind, in ledger order.
+    pub const ALL: [EventKind; KINDS] = [
+        EventKind::Arrival,
+        EventKind::Admit,
+        EventKind::Shed,
+        EventKind::Degrade,
+        EventKind::Deal,
+        EventKind::Enqueue,
+        EventKind::BatchForm,
+        EventKind::BatchStart,
+        EventKind::BatchDone,
+        EventKind::Drop,
+        EventKind::Timeout,
+        EventKind::Lost,
+        EventKind::Swap,
+        EventKind::NodeDown,
+        EventKind::NodeUp,
+        EventKind::ReplanFailed,
+        EventKind::Rebalance,
+    ];
+
+    /// Stable wire name (ledger keys, Chrome-trace `name`/`cat`).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Arrival => "arrival",
+            EventKind::Admit => "admit",
+            EventKind::Shed => "shed",
+            EventKind::Degrade => "degrade",
+            EventKind::Deal => "deal",
+            EventKind::Enqueue => "enqueue",
+            EventKind::BatchForm => "batch-form",
+            EventKind::BatchStart => "batch-start",
+            EventKind::BatchDone => "batch-done",
+            EventKind::Drop => "drop",
+            EventKind::Timeout => "timeout",
+            EventKind::Lost => "lost_to_failure",
+            EventKind::Swap => "swap",
+            EventKind::NodeDown => "node-down",
+            EventKind::NodeUp => "node-up",
+            EventKind::ReplanFailed => "replan-failed",
+            EventKind::Rebalance => "rebalance",
+        }
+    }
+
+    /// Per-request span events — the kinds the deterministic sampler
+    /// may thin out. Batch, fault and plan events are always kept
+    /// (their volume is bounded by batches/windows, not requests).
+    pub fn per_request(self) -> bool {
+        matches!(
+            self,
+            EventKind::Arrival
+                | EventKind::Admit
+                | EventKind::Shed
+                | EventKind::Degrade
+                | EventKind::Deal
+                | EventKind::Enqueue
+                | EventKind::Drop
+                | EventKind::Timeout
+        )
+    }
+}
+
+/// One telemetry event: fixed-size, `Copy`, allocation-free to record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Integer-µs sim time.
+    pub t_us: SimTimeUs,
+    pub kind: EventKind,
+    /// Node index, or [`NO_NODE`] for router/fleet scope.
+    pub node: u32,
+    /// Gpu-let index on the node, or [`NO_LET`].
+    pub let_idx: u32,
+    /// `ModelId::index()`, or [`NO_MODEL`].
+    pub model: u8,
+    /// Schedule epoch the event happened under.
+    pub epoch: u32,
+    /// Request id for span events (the sampling key); batch/fault
+    /// events use it for the secondary subject (a batch's head request,
+    /// the node a fault hits). A degraded request keeps its id, so the
+    /// Degrade event (original model) and the follow-up Deal (fallback
+    /// model) correlate.
+    pub id: u64,
+    /// Event weight: batch size, requests lost, or 1.
+    pub n: u32,
+}
+
+/// splitmix64 finalizer — the sampling hash. Stateless and exact, so
+/// span selection is a pure function of the request id.
+#[inline]
+pub fn hash64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x
+}
+
+/// Keep the span for `id` at sampling modulus `sample_n`?
+/// `sample_n <= 1` keeps everything.
+#[inline]
+pub fn span_sampled(id: u64, sample_n: u64) -> bool {
+    sample_n <= 1 || hash64(id) % sample_n == 0
+}
+
+/// Where recorded events go. The engines hold a concrete
+/// [`Tracer`]-over-[`RingSink`] (hot path); export-time consumers
+/// implement the trait to stream a finished timeline elsewhere
+/// ([`JsonLinesSink`]).
+pub trait TraceSink {
+    fn record(&mut self, ev: &TraceEvent);
+}
+
+/// Bounded ring-buffer sink. Grows lazily up to `cap`, then overwrites
+/// the oldest event (and counts the overwrites), so a runaway trace
+/// degrades to "most recent window" instead of unbounded memory.
+#[derive(Clone, Debug, Default)]
+pub struct RingSink {
+    buf: Vec<TraceEvent>,
+    cap: usize,
+    /// Next overwrite position once full (oldest event).
+    head: usize,
+    overwritten: u64,
+}
+
+impl RingSink {
+    pub fn new(cap: usize) -> RingSink {
+        RingSink { buf: Vec::new(), cap, head: 0, overwritten: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events this ring discarded (overwrote) after filling up.
+    pub fn overwritten(&self) -> u64 {
+        self.overwritten
+    }
+
+    /// Append the ring's events, oldest first, to `out`, leaving the
+    /// ring empty.
+    pub fn drain_ordered(&mut self, out: &mut Vec<TraceEvent>) {
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        self.buf.clear();
+        self.head = 0;
+    }
+}
+
+impl TraceSink for RingSink {
+    #[inline]
+    fn record(&mut self, ev: &TraceEvent) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(*ev);
+        } else {
+            self.buf[self.head] = *ev;
+            self.head += 1;
+            if self.head == self.cap {
+                self.head = 0;
+            }
+            self.overwritten += 1;
+        }
+    }
+}
+
+/// Streaming sink: one compact JSON object per event per line
+/// (JSONL). Used at export time (`Timeline::stream_to`), never on the
+/// sim hot path — formatting allocates.
+pub struct JsonLinesSink<W: std::io::Write> {
+    w: W,
+    pub errored: bool,
+}
+
+impl<W: std::io::Write> JsonLinesSink<W> {
+    pub fn new(w: W) -> Self {
+        JsonLinesSink { w, errored: false }
+    }
+
+    pub fn into_inner(self) -> W {
+        self.w
+    }
+}
+
+impl<W: std::io::Write> TraceSink for JsonLinesSink<W> {
+    fn record(&mut self, ev: &TraceEvent) {
+        if self.errored {
+            return;
+        }
+        if writeln!(self.w, "{}", export::event_json(ev)).is_err() {
+            self.errored = true;
+        }
+    }
+}
+
+/// The recorder the engines own: enabled flag + deterministic span
+/// sampler + exact ledger + bounded ring. All owned data (`Send`), one
+/// per node so parallel advance never shares a sink.
+#[derive(Clone, Debug, Default)]
+pub struct Tracer {
+    enabled: bool,
+    /// Span-sampling modulus (1 = keep every span).
+    sample_n: u64,
+    /// Node index stamped on every event ([`NO_NODE`] for fleet scope).
+    node: u32,
+    /// Exact per-kind ledger, weighted by `TraceEvent::n`, counted
+    /// before sampling.
+    counts: [u64; KINDS],
+    ring: RingSink,
+}
+
+impl Tracer {
+    /// A disabled tracer: every hook is a single-branch no-op and
+    /// nothing is ever allocated. This is the engines' default.
+    pub fn off() -> Tracer {
+        Tracer { enabled: false, sample_n: 1, node: NO_NODE, counts: [0; KINDS], ring: RingSink::new(0) }
+    }
+
+    /// An enabled tracer recording up to `cap` events for `node`,
+    /// keeping request spans at modulus `sample_n`.
+    pub fn new(node: u32, cap: usize, sample_n: u64) -> Tracer {
+        Tracer {
+            enabled: true,
+            sample_n: sample_n.max(1),
+            node,
+            counts: [0; KINDS],
+            ring: RingSink::new(cap),
+        }
+    }
+
+    /// A fresh tracer with this tracer's configuration (same
+    /// enabled/node/sampling, empty ring and ledger) — what an engine
+    /// `reset` re-arms so a reset run records from scratch.
+    pub fn fresh(&self) -> Tracer {
+        if self.enabled {
+            Tracer::new(self.node, self.ring.cap, self.sample_n)
+        } else {
+            Tracer::off()
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn node(&self) -> u32 {
+        self.node
+    }
+
+    pub fn sample_n(&self) -> u64 {
+        self.sample_n
+    }
+
+    /// Exact ledger count for one kind (pre-sampling, `n`-weighted).
+    pub fn count(&self, kind: EventKind) -> u64 {
+        self.counts[kind as usize]
+    }
+
+    /// Record one event. Counts it exactly, then keeps or thins it by
+    /// the span sampler. The disabled path is the first branch.
+    #[inline]
+    pub fn emit(&mut self, ev: TraceEvent) {
+        if !self.enabled {
+            return;
+        }
+        self.counts[ev.kind as usize] += ev.n as u64;
+        if ev.kind.per_request() && !span_sampled(ev.id, self.sample_n) {
+            return;
+        }
+        self.ring.record(&ev);
+    }
+
+    /// Hook: per-request span event (weight 1).
+    #[inline]
+    pub fn span(&mut self, t_us: SimTimeUs, kind: EventKind, let_idx: u32, model: ModelId, epoch: u32, id: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.emit(TraceEvent { t_us, kind, node: self.node, let_idx, model: model.index() as u8, epoch, id, n: 1 });
+    }
+
+    /// Hook: batch-scoped event (`n` = batch size / request count).
+    #[inline]
+    pub fn batch(&mut self, t_us: SimTimeUs, kind: EventKind, let_idx: u32, model: ModelId, epoch: u32, id: u64, n: u32) {
+        if !self.enabled {
+            return;
+        }
+        self.emit(TraceEvent { t_us, kind, node: self.node, let_idx, model: model.index() as u8, epoch, id, n });
+    }
+
+    /// Hook: node/fleet-scoped marker (swap, fault, re-plan).
+    #[inline]
+    pub fn mark(&mut self, t_us: SimTimeUs, kind: EventKind, epoch: u32, id: u64, n: u32) {
+        if !self.enabled {
+            return;
+        }
+        self.emit(TraceEvent { t_us, kind, node: self.node, let_idx: NO_LET, model: NO_MODEL, epoch, id, n });
+    }
+
+    /// Move this tracer's events and counts into `tl`, leaving the
+    /// tracer empty (but still enabled). Called serially at merge
+    /// points, in node order, so the result is thread-count invariant.
+    pub fn drain_into(&mut self, tl: &mut Timeline) {
+        if !self.enabled {
+            return;
+        }
+        tl.dropped_events += self.ring.overwritten;
+        self.ring.overwritten = 0;
+        self.ring.drain_ordered(&mut tl.events);
+        for k in 0..KINDS {
+            tl.counts[k] += self.counts[k];
+            self.counts[k] = 0;
+        }
+    }
+}
+
+/// Queue depth of one (gpu-let, model) pair at a window boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LetQueueGauge {
+    pub let_idx: u32,
+    /// `ModelId::index()` of the queue's model.
+    pub model: u8,
+    pub depth: u32,
+}
+
+/// One node's gauges at a window boundary.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NodeGauges {
+    pub node: u32,
+    pub alive: bool,
+    /// Batches currently executing on the node.
+    pub in_flight: u64,
+    /// Share of assignments mid-batch — the duty-cycle utilization
+    /// proxy at the boundary instant.
+    pub util: f64,
+    /// Per-(gpu-let, model) queue depths (every assignment, zero
+    /// included, in arena order — deterministic).
+    pub queues: Vec<LetQueueGauge>,
+}
+
+/// Fleet-wide gauges snapshotted at one lockstep boundary.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WindowGauges {
+    /// Window end (s).
+    pub t_s: f64,
+    /// Nodes alive at the boundary.
+    pub alive: u32,
+    /// Router deals this window, per model.
+    pub deals: [u64; 5],
+    /// Admission-gate admitted fraction this window, per model
+    /// (1.0 when the gate is off or the model saw no demand).
+    pub admit_frac: [f64; 5],
+    pub nodes: Vec<NodeGauges>,
+}
+
+/// The merged observability record of one run: time-ordered events,
+/// the exact event ledger, and the per-window gauge series. Appended
+/// to `FleetOutcome`; exporters live in [`export`].
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    /// Merged events, stable-sorted by `t_us` (per-source order kept).
+    pub events: Vec<TraceEvent>,
+    /// Exact per-kind ledger (pre-sampling, `n`-weighted).
+    pub counts: [u64; KINDS],
+    pub windows: Vec<WindowGauges>,
+    /// Events the bounded rings overwrote (0 = the event list is
+    /// complete at the configured sampling).
+    pub dropped_events: u64,
+    /// Span-sampling modulus the run recorded at.
+    pub sample_n: u64,
+}
+
+impl Timeline {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.windows.is_empty() && self.counts == [0; KINDS]
+    }
+
+    pub fn count(&self, kind: EventKind) -> u64 {
+        self.counts[kind as usize]
+    }
+
+    /// Stable-sort the merged events by timestamp. Sources are drained
+    /// in a fixed order (router first, then nodes ascending), so ties
+    /// resolve deterministically regardless of worker threads.
+    pub fn sort_events(&mut self) {
+        self.events.sort_by_key(|e| e.t_us);
+    }
+
+    /// Replay every event into a sink (e.g. a [`JsonLinesSink`]).
+    pub fn stream_to(&self, sink: &mut dyn TraceSink) {
+        for ev in &self.events {
+            sink.record(ev);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t_us: u64, kind: EventKind, id: u64) -> TraceEvent {
+        TraceEvent { t_us, kind, node: 0, let_idx: 1, model: 0, epoch: 0, id, n: 1 }
+    }
+
+    #[test]
+    fn disabled_tracer_records_and_counts_nothing() {
+        let mut t = Tracer::off();
+        assert!(!t.enabled());
+        t.span(5, EventKind::Arrival, NO_LET, ModelId::Lenet, 0, 1);
+        t.mark(6, EventKind::Swap, 1, 0, 1);
+        let mut tl = Timeline::default();
+        t.drain_into(&mut tl);
+        assert!(tl.is_empty());
+    }
+
+    #[test]
+    fn ledger_counts_are_exact_under_sampling() {
+        // Heavy sampling: spans thin out, the ledger does not.
+        let mut t = Tracer::new(0, 1 << 12, 64);
+        for id in 0..1000u64 {
+            t.span(id, EventKind::Enqueue, 0, ModelId::Resnet, 0, id);
+        }
+        t.batch(2000, EventKind::BatchDone, 0, ModelId::Resnet, 0, 0, 32);
+        assert_eq!(t.count(EventKind::Enqueue), 1000);
+        assert_eq!(t.count(EventKind::BatchDone), 32);
+        let mut tl = Timeline::default();
+        t.drain_into(&mut tl);
+        assert_eq!(tl.count(EventKind::Enqueue), 1000);
+        let kept = tl.events.iter().filter(|e| e.kind == EventKind::Enqueue).count();
+        assert!(kept < 1000, "sampling must thin the span list");
+        let expected = (0..1000u64).filter(|&id| span_sampled(id, 64)).count();
+        assert_eq!(kept, expected, "sampler must be the pure hash-mod rule");
+        // Batch events are never sampled away.
+        assert_eq!(tl.events.iter().filter(|e| e.kind == EventKind::BatchDone).count(), 1);
+    }
+
+    #[test]
+    fn ring_bounds_memory_and_keeps_newest() {
+        let mut r = RingSink::new(4);
+        for i in 0..10u64 {
+            r.record(&ev(i, EventKind::Arrival, i));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.overwritten(), 6);
+        let mut out = Vec::new();
+        r.drain_ordered(&mut out);
+        let ids: Vec<u64> = out.iter().map(|e| e.id).collect();
+        assert_eq!(ids, [6, 7, 8, 9], "oldest-first, newest kept");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn sampler_is_deterministic_and_unclustered() {
+        // Pure function: same answers on every call.
+        for id in 0..256u64 {
+            assert_eq!(span_sampled(id, 16), span_sampled(id, 16));
+        }
+        // The hash decorrelates sequential ids: modulus 16 keeps
+        // roughly 1/16 of a sequential id range, not a prefix.
+        let kept: Vec<u64> = (0..4096u64).filter(|&id| span_sampled(id, 16)).collect();
+        assert!(kept.len() > 128 && kept.len() < 512, "kept {}", kept.len());
+        assert!(kept.windows(2).any(|w| w[1] - w[0] > 16), "not a strided pick");
+        // Modulus 1 and 0 keep everything.
+        assert!((0..100u64).all(|id| span_sampled(id, 1)));
+        assert!((0..100u64).all(|id| span_sampled(id, 0)));
+    }
+
+    #[test]
+    fn timeline_merge_is_source_order_stable() {
+        let mut a = Tracer::new(0, 64, 1);
+        let mut b = Tracer::new(1, 64, 1);
+        a.batch(10, EventKind::BatchStart, 0, ModelId::Lenet, 0, 1, 4);
+        b.batch(10, EventKind::BatchStart, 0, ModelId::Lenet, 0, 2, 4);
+        a.batch(5, EventKind::BatchStart, 0, ModelId::Lenet, 0, 3, 4);
+        let mut tl = Timeline::default();
+        a.drain_into(&mut tl);
+        b.drain_into(&mut tl);
+        tl.sort_events();
+        let order: Vec<(u64, u32)> = tl.events.iter().map(|e| (e.t_us, e.node)).collect();
+        assert_eq!(order, [(5, 0), (10, 0), (10, 1)], "stable: node 0 before node 1 at t=10");
+        assert_eq!(tl.count(EventKind::BatchStart), 12);
+    }
+
+    #[test]
+    fn jsonl_sink_streams_one_object_per_line() {
+        let mut tl = Timeline::default();
+        tl.events.push(ev(42, EventKind::BatchDone, 7));
+        tl.events.push(ev(43, EventKind::Drop, 8));
+        let mut sink = JsonLinesSink::new(Vec::new());
+        tl.stream_to(&mut sink);
+        let text = String::from_utf8(sink.into_inner()).expect("utf8");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let doc = crate::util::json::Json::parse(line).expect("each line parses");
+            assert!(doc.get("kind").is_ok());
+        }
+        assert!(text.contains("batch-done"));
+    }
+}

@@ -67,6 +67,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            other => Err(Error::parse(format!("expected bool, got {other:?}"))),
+        }
+    }
+
     pub fn as_usize(&self) -> Result<usize> {
         let n = self.as_f64()?;
         if n < 0.0 || n.fract() != 0.0 {

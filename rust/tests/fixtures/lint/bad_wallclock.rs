@@ -1,0 +1,28 @@
+//! Fixture: wall-clock time sources in library code are flagged
+//! (expected findings: lines 4, 8 and 12; the doc prose, the
+//! `instantaneous` identifier, and the `#[cfg(test)]` use must not fire).
+use std::time::Instant;
+
+/// Doc prose naming SystemTime or Instant is not a finding.
+pub fn wall_time<F: FnOnce()>(f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    let elapsed = t0.elapsed().as_secs_f64();
+    // A second time source on the same path:
+    let _epoch = std::time::SystemTime::now();
+    elapsed
+}
+
+pub fn instantaneous_rate() -> u64 {
+    // `Instantiate` / `instantaneous` are different words.
+    let instantaneous = 7;
+    instantaneous
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn timing_in_tests_is_fine() {
+        let _ = std::time::Instant::now();
+    }
+}

@@ -5,7 +5,7 @@
 //! missing finding rather than a silently weaker gate.
 //!
 //! Pinned here (tier-1, `cargo test`):
-//! * each of the six rules fires on its bad fixture at the exact
+//! * each of the seven rules fires on its bad fixture at the exact
 //!   expected `file:line` spans, and respects its path scope;
 //! * the clean fixture — strings, doc comments, `self.expect(..)`,
 //!   SAFETY'd unsafe, `#[cfg(test)]` regions — produces zero findings
@@ -24,6 +24,7 @@ const BAD_SORT: &str = include_str!("fixtures/lint/bad_sort.rs");
 const BAD_UNSAFE: &str = include_str!("fixtures/lint/bad_unsafe.rs");
 const BAD_UNWRAP: &str = include_str!("fixtures/lint/bad_unwrap.rs");
 const BAD_ALLOC: &str = include_str!("fixtures/lint/bad_alloc.rs");
+const BAD_WALLCLOCK: &str = include_str!("fixtures/lint/bad_wallclock.rs");
 const CLEAN: &str = include_str!("fixtures/lint/clean.rs");
 const REG_CONFIG: &str = include_str!("fixtures/lint/registry_config.rs");
 const REG_SCHED: &str = include_str!("fixtures/lint/registry_sched.rs");
@@ -82,6 +83,30 @@ fn no_alloc_region_fires_on_allocating_call() {
     assert_eq!(rules_of(&found), ["no-alloc-region"]);
     assert_eq!(spans(&found), ["src/fleet/bad_alloc.rs:6"]);
     assert!(found[0].message.contains(".collect()"), "message names the call: {found:?}");
+}
+
+#[test]
+fn no_wall_clock_fires_outside_benches_and_the_worker_pool() {
+    let found = analysis::lint_source("src/telemetry/bad_wallclock.rs", BAD_WALLCLOCK);
+    assert_eq!(rules_of(&found), ["no-wall-clock"; 3]);
+    // Line 4 (the `use`), line 8 (`Instant::now()`), line 12
+    // (`SystemTime::now()`); the doc-comment prose, the `instantaneous`
+    // identifier and the `#[cfg(test)]` use must not appear.
+    assert_eq!(
+        spans(&found),
+        [
+            "src/telemetry/bad_wallclock.rs:4",
+            "src/telemetry/bad_wallclock.rs:8",
+            "src/telemetry/bad_wallclock.rs:12"
+        ]
+    );
+    assert!(found[0].message.contains("simclock"), "message points at sim time: {found:?}");
+    // Exempt scopes: the worker pool (real OS threads need real time
+    // for parking) and anything outside src/ (benches, tests).
+    let pool = analysis::lint_source("src/util/par.rs", BAD_WALLCLOCK);
+    assert!(pool.is_empty(), "src/util/par.rs is out of scope: {pool:?}");
+    let bench = analysis::lint_source("benches/bad_wallclock.rs", BAD_WALLCLOCK);
+    assert!(bench.is_empty(), "benches/ is out of scope: {bench:?}");
 }
 
 #[test]

@@ -1,0 +1,268 @@
+//! The PR 10 telemetry battery: the merged [`Timeline`] on
+//! `FleetOutcome` must be a *sound* record of a faulted fleet run, not
+//! a best-effort log.
+//!
+//! Pinned here (tier-1, `cargo test`):
+//! * the exact event ledger reconciles with every `FleetOutcome`
+//!   counter — deal/arrival vs offered, shed vs shed, batch-done vs
+//!   served, drop+timeout vs dropped, lost vs lost_to_failure — on a
+//!   run that sheds, kills a node mid-flash and recovers it;
+//! * batch weight-matching per (node, gpu-let): no batch finishes that
+//!   never started, and every unmatched start is covered by lost or
+//!   dropped work on the same gpu-let;
+//! * the fault markers bracket a genuinely silent node: zero events
+//!   carry the dead node's index strictly between its `node-down` and
+//!   `node-up` marks, and the node traces again after recovery;
+//! * swap epochs are strictly monotone per node;
+//! * the per-window gauge series sums to the routing totals and
+//!   observes the outage (alive dips by one, then recovers);
+//! * the serialized Chrome-trace export — full capture *and* span-
+//!   sampled — is byte-identical across worker counts {1, 2, 5}, and
+//!   sampling thins only the event list, never the ledger.
+//!
+//! Thread settings are process-global; see `fleet_equivalence.rs` for
+//! why racing `set_threads` calls are benign here.
+
+use std::collections::BTreeMap;
+
+use gpulets::fleet::{AdmissionMode, AdmissionSpec, FleetConfig, FleetEngine, FleetPlanner};
+use gpulets::interference::GroundTruth;
+use gpulets::models::ModelId;
+use gpulets::perfmodel::LatencyModel;
+use gpulets::sched::{ElasticPartitioning, SchedCtx};
+use gpulets::telemetry::{export, EventKind, Timeline, NO_NODE};
+use gpulets::workload::{
+    dyn_sources, poisson_streams, DynSourceMux, FaultEvent, FaultKind, FaultPlan, SourceMux,
+};
+
+const TRACE_CAP: usize = 1 << 18;
+const DEAD_NODE: usize = 1;
+
+fn mux_for(pairs: &[(ModelId, f64)], duration_s: f64, seed: u64) -> DynSourceMux {
+    SourceMux::new(dyn_sources(poisson_streams(pairs, duration_s, seed).unwrap()))
+}
+
+/// One faulted, gated, traced fleet run: 4 nodes, node 1 down at 2 s
+/// and back at 4 s, shed gate armed, auto-rebalance on.
+fn traced_run(sample_n: u64) -> gpulets::fleet::FleetOutcome {
+    let lm = LatencyModel::new();
+    let gt = GroundTruth::default();
+    let ctx = SchedCtx::new(4, None);
+    let scheduler = ElasticPartitioning::gpulet();
+    let rates = [300.0, 0.0, 90.0, 0.0, 60.0];
+    let pairs = [
+        (ModelId::Lenet, 300.0),
+        (ModelId::Resnet, 90.0),
+        (ModelId::Vgg, 60.0),
+    ];
+    let duration = 6.0;
+    let planner = FleetPlanner::new(&ctx, &scheduler, 4);
+    let plan = planner.plan(&rates).unwrap();
+    let cfg = FleetConfig {
+        window_s: 1.0,
+        rebalance: true,
+        trace_cap: TRACE_CAP,
+        trace_sample: sample_n,
+        ..Default::default()
+    };
+    let mut fleet = FleetEngine::new(
+        &lm,
+        &gt,
+        planner,
+        plan,
+        mux_for(&pairs, duration, 23),
+        duration,
+        &cfg,
+    );
+    fleet
+        .set_fault_plan(
+            FaultPlan::new(vec![
+                FaultEvent { at_s: 2.0, node: DEAD_NODE, kind: FaultKind::Down },
+                FaultEvent { at_s: 4.0, node: DEAD_NODE, kind: FaultKind::Up },
+            ])
+            .unwrap(),
+        )
+        .unwrap();
+    // Headroom well under the offered load so the gate demonstrably
+    // sheds (capacity == the planned rates; demand tracks the full
+    // rates, so 0.6 * capacity is always exceeded once the gate arms).
+    fleet.set_admission(AdmissionSpec {
+        mode: AdmissionMode::Shed,
+        headroom: 0.6,
+        ..AdmissionSpec::default()
+    });
+    fleet.run(duration);
+    fleet.finish()
+}
+
+fn sum(xs: &[u64; 5]) -> u64 {
+    xs.iter().sum()
+}
+
+#[test]
+fn fault_timeline_reconciles_and_respects_the_outage() {
+    let out = traced_run(1);
+    let tl = &out.timeline;
+    assert!(!tl.is_empty(), "tracing was armed, the timeline must not be empty");
+    assert_eq!(tl.dropped_events, 0, "the ring must not overflow at this scale");
+    assert_eq!(tl.sample_n, 1);
+
+    // --- Ledger reconciliation: the exact (pre-sampling, n-weighted)
+    // event counts against the independently-maintained outcome
+    // counters. Every identity is exact, not approximate.
+    let (served, dropped) = out.served_dropped();
+    assert_eq!(tl.count(EventKind::Deal), sum(&out.offered), "deal vs dealt");
+    assert_eq!(tl.count(EventKind::Arrival), sum(&out.offered), "arrival vs dealt");
+    assert_eq!(tl.count(EventKind::Admit), sum(&out.offered), "admit vs dealt (shed gate)");
+    assert_eq!(tl.count(EventKind::Shed), sum(&out.shed), "shed vs shed");
+    assert!(sum(&out.shed) > 0, "the flash crowd over a dead node must shed something");
+    assert_eq!(tl.count(EventKind::Degrade), 0, "shed mode never degrades");
+    assert_eq!(tl.count(EventKind::BatchDone), sum(&served), "batch-done vs served");
+    assert_eq!(
+        tl.count(EventKind::Drop) + tl.count(EventKind::Timeout),
+        sum(&dropped),
+        "drop + timeout vs dropped"
+    );
+    let lost = out.lost_to_failure();
+    assert_eq!(tl.count(EventKind::Lost), sum(&lost), "lost vs lost_to_failure");
+    assert!(sum(&lost) > 0, "the outage must destroy queued/in-flight work");
+    assert_eq!(
+        tl.count(EventKind::BatchForm),
+        tl.count(EventKind::BatchStart),
+        "every formed batch starts"
+    );
+
+    // --- Batch weight-matching per (node, gpu-let): done never exceeds
+    // started, and unmatched starts are covered by lost / dropped work
+    // on the same gpu-let (in-flight batches destroyed by the failure).
+    let mut per_let: BTreeMap<(u32, u32), [u64; 4]> = BTreeMap::new();
+    for ev in &tl.events {
+        let slot = match ev.kind {
+            EventKind::BatchStart => 0,
+            EventKind::BatchDone => 1,
+            EventKind::Lost => 2,
+            EventKind::Drop => 3,
+            _ => continue,
+        };
+        per_let.entry((ev.node, ev.let_idx)).or_insert([0; 4])[slot] += ev.n as u64;
+    }
+    let mut started_total = 0u64;
+    for (&(node, let_idx), &[started, done, lost, drop]) in &per_let {
+        started_total += started;
+        assert!(
+            done <= started,
+            "node {node} let {let_idx}: {done} done > {started} started"
+        );
+        assert!(
+            started <= done + lost + drop,
+            "node {node} let {let_idx}: {} unmatched starts exceed lost {lost} + drop {drop}",
+            started - done
+        );
+    }
+    assert!(started_total > 0, "the run must trace batches");
+
+    // --- The fault markers bracket a silent node: the down/up marks
+    // exist (fleet scope, the node in `id`), and *no* event carries the
+    // dead node's index strictly inside the outage.
+    let marks: Vec<(u64, EventKind)> = tl
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::NodeDown | EventKind::NodeUp))
+        .map(|e| {
+            assert_eq!(e.node, NO_NODE, "fault marks are fleet-scoped");
+            assert_eq!(e.id, DEAD_NODE as u64, "only node 1 faults in this script");
+            (e.t_us, e.kind)
+        })
+        .collect();
+    assert_eq!(marks.len(), 2, "exactly one down and one up mark: {marks:?}");
+    let (down_t, up_t) = (marks[0].0, marks[1].0);
+    assert_eq!(marks[0].1, EventKind::NodeDown);
+    assert_eq!(marks[1].1, EventKind::NodeUp);
+    assert!(down_t < up_t, "down must precede up");
+    let node = DEAD_NODE as u32;
+    let inside: Vec<_> = tl
+        .events
+        .iter()
+        .filter(|e| e.node == node && e.t_us > down_t && e.t_us < up_t)
+        .collect();
+    assert!(inside.is_empty(), "dead node traced during its outage: {inside:?}");
+    assert!(
+        tl.events.iter().any(|e| e.node == node && e.t_us < down_t),
+        "node 1 must trace before the failure"
+    );
+    assert!(
+        tl.events.iter().any(|e| e.node == node && e.t_us > up_t),
+        "node 1 must trace again after recovery"
+    );
+
+    // --- Swap epochs strictly monotone per node: each swap installs a
+    // strictly newer epoch (failures bump the epoch without a swap
+    // mark, so gaps are fine — regressions are not).
+    let mut last_epoch: BTreeMap<u32, u32> = BTreeMap::new();
+    for ev in tl.events.iter().filter(|e| e.kind == EventKind::Swap) {
+        if let Some(&prev) = last_epoch.get(&ev.node) {
+            assert!(
+                ev.epoch > prev,
+                "node {}: swap epoch {} after {} at t={}",
+                ev.node,
+                ev.epoch,
+                prev,
+                ev.t_us
+            );
+        }
+        last_epoch.insert(ev.node, ev.epoch);
+    }
+    assert!(!last_epoch.is_empty(), "the recovery re-plan must swap schedules");
+
+    // --- The gauge series observed the outage and sums to the routing
+    // totals (the catch-up window keeps the sum exact past the nominal
+    // end).
+    assert!(tl.windows.len() >= 6, "one gauge snapshot per lockstep window");
+    assert!(tl.windows.iter().all(|w| w.nodes.len() == 4));
+    let min_alive = tl.windows.iter().map(|w| w.alive).min().unwrap();
+    assert_eq!(min_alive, 3, "the outage window must gauge 3/4 alive");
+    assert_eq!(tl.windows.last().unwrap().alive, 4, "recovered by the end");
+    for m in ModelId::ALL {
+        let i = m.index();
+        let dealt: u64 = tl.windows.iter().map(|w| w.deals[i]).sum();
+        assert_eq!(dealt, out.offered[i], "{m}: window deals must sum to offered");
+    }
+}
+
+/// The determinism bar for the whole telemetry layer: the *serialized
+/// exports* — Chrome-trace JSON and the gauge CSV — are byte-identical
+/// across worker-thread counts, at full capture and under span
+/// sampling; and sampling thins only the event list, never the exact
+/// ledger.
+#[test]
+fn traces_are_byte_identical_across_thread_counts() {
+    let export_bytes = |threads: usize, sample_n: u64| {
+        gpulets::util::par::set_threads(threads);
+        let out = traced_run(sample_n);
+        let tl: &Timeline = &out.timeline;
+        let mut s = export::chrome_trace(tl).to_string();
+        s.push('\n');
+        s.push_str(&export::gauges_csv(tl));
+        (s, tl.counts, tl.events.len())
+    };
+
+    let (full, full_counts, full_events) = export_bytes(1, 1);
+    let (sampled, sampled_counts, sampled_events) = export_bytes(1, 64);
+    assert_eq!(
+        full_counts, sampled_counts,
+        "sampling must never touch the exact ledger"
+    );
+    assert!(
+        sampled_events < full_events,
+        "1/64 sampling must thin the event list ({sampled_events} vs {full_events})"
+    );
+    assert_ne!(full, sampled, "the sampled export records its own modulus");
+
+    for threads in [2usize, 5] {
+        let (f, _, _) = export_bytes(threads, 1);
+        assert_eq!(full, f, "full trace diverged between 1 and {threads} workers");
+        let (s, _, _) = export_bytes(threads, 64);
+        assert_eq!(sampled, s, "sampled trace diverged between 1 and {threads} workers");
+    }
+    gpulets::util::par::set_threads(0);
+}
